@@ -1,0 +1,32 @@
+//! End-to-end driver (paper Fig. 2 + Fig. 8b/e): the EC2-profile
+//! experiment on the full 11760×9216 STL-10-like workload across 70
+//! straggling workers, comparing uncoded / 2-replication / MDS / LT and
+//! reporting the paper's headline metric (LT ≈ 3× faster than uncoded,
+//! ≈ 2× faster than MDS, near-ideal load balance).
+//!
+//! ```sh
+//! cargo run --release --example ec2_loadbalance            # full size
+//! cargo run --release --example ec2_loadbalance -- --scale 0.25 --time-scale 0.25
+//! ```
+
+use rateless::cli::Args;
+use rateless::figures;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.f64("scale", 1.0);
+    let time_scale = args.f64("time-scale", 1.0);
+    let seed = args.u64("seed", 42);
+    print!("{}", figures::fig2(scale, time_scale, seed)?);
+    print!(
+        "{}",
+        figures::fig8(
+            figures::Env::Ec2,
+            scale,
+            args.usize("trials", 5),
+            time_scale,
+            seed
+        )?
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Failure-robustness scenario (paper Fig. 12 / Appendix F): kill 0..4 of
+//! 10 workers mid-job and measure which strategies still recover b = A·x.
+//! Uncoded fails with any death; 2-replication survives only non-co-group
+//! deaths; MDS(k=5) survives up to 5; LT(α=2) survives up to p−1.
+//!
+//! ```sh
+//! cargo run --release --example failure_resilience -- --scale 0.2 --trials 3
+//! ```
+
+use rateless::cli::Args;
+use rateless::figures;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    print!(
+        "{}",
+        figures::fig12(
+            args.f64("scale", 1.0),
+            args.usize("trials", 5),
+            args.f64("time-scale", 1.0),
+            args.u64("seed", 42),
+        )?
+    );
+    Ok(())
+}

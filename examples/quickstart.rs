@@ -1,0 +1,54 @@
+//! Quickstart: encode a matrix with a rateless LT code, multiply it
+//! against a vector on a straggling 8-worker cluster, and verify the
+//! decoded product — using the AOT-compiled PJRT artifacts for the worker
+//! compute when `make artifacts` has been run (native fallback otherwise).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rateless::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 2048×1024 fits the 128×1024 / 512×1024 AOT artifact shapes exactly.
+    let (m, n, p) = (2048usize, 1024usize, 8usize);
+    // Integer data (like the paper's experiments): keeps every f32 op
+    // exact, so the LT decode is bit-perfect at any scale.
+    let a = Matrix::random_ints(m, n, 3, 1);
+    let x = Matrix::random_int_vector(n, 1, 2);
+
+    let engine = Engine::auto(std::path::Path::new("artifacts"));
+    println!("compute engine: {}", engine.name());
+
+    let cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 20.0 }, // ~50 ms initial delays
+        tau: 1e-5,                          // 10 µs per row-product
+        real_sleep: true,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        engine,
+        &a,
+    )?;
+
+    let result = coord.multiply(&x)?;
+    let want = a.matvec(&x);
+    let err = Matrix::max_abs_diff(&result.b, &want);
+
+    println!(
+        "T = {:.4}s (virtual) | C = {} row-products for m = {m} | M' = {} symbols | err = {err:.2e}",
+        result.latency, result.computations, result.symbols_used
+    );
+    for (w, st) in result.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w}: X_i = {:.3}s, rows = {:>4}, busy until {:.3}s",
+            st.initial_delay, st.rows_done, st.busy_until
+        );
+    }
+    anyhow::ensure!(err == 0.0, "verification failed (integer data must decode exactly)");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+use rateless::coding::lt::{LtCode, LtParams};
+use rateless::coding::peeling::PeelingDecoder;
+use rateless::matrix::Matrix;
+use rateless::util::rng::Rng;
+fn main() {
+    for (m, n) in [(2048usize, 64usize), (8192, 64)] {
+        // integer 0/1 data: all f32 arithmetic exact below 2^24
+        let mut rng = Rng::new(9);
+        let a = Matrix::from_vec(m, n, (0..m*n).map(|_| (rng.gen_range(2)) as f32).collect());
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_range(2) as f32).collect();
+        let b = a.matvec(&x);
+        let code = LtCode::new(m, LtParams::with_alpha(2.0), 42);
+        let enc = code.encode(&a);
+        let be = enc.matvec(&x);
+        let mut dec = PeelingDecoder::new(m, 1);
+        let mut idx = Vec::new();
+        for row in 0..enc.rows() {
+            code.row_indices(row as u64, &mut idx);
+            dec.add_symbol(&idx, &be[row..row+1]);
+            if dec.is_complete() { break; }
+        }
+        if !dec.is_complete() { println!("m={m}: INCOMPLETE"); continue; }
+        let got = dec.into_values();
+        let err = Matrix::max_abs_diff(&got, &b);
+        println!("m={m} n={n} INTEGER data: max err = {err}");
+    }
+}

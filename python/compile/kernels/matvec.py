@@ -1,0 +1,79 @@
+"""L1: Pallas blocked matrix-vector product kernel.
+
+The compute hot spot of the paper is the encoded row-block x vector
+product ``A_e_chunk @ x`` that every worker executes repeatedly. This
+kernel expresses the HBM->VMEM schedule with a ``BlockSpec`` grid over row
+blocks:
+
+* the encoded chunk ``a`` is streamed one ``(block_rows, n)`` tile per grid
+  step (one tile resident in VMEM at a time),
+* the vector ``x`` is held fully resident in VMEM across the whole grid
+  (it is reused by every tile -- the classic matvec locality trick), and
+* each grid step emits a ``(block_rows, 1)`` slab of the output.
+
+On a real TPU each tile product maps onto MXU passes over the
+``(block_rows, n) x (n, 1)`` contraction. ``interpret=True`` is mandatory
+here: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret-mode lowers the kernel to plain HLO so the AOT artifact runs on
+the Rust CPU client (see /opt/xla-example/README.md).
+
+VMEM accounting (f32, per grid step):
+    tile  = block_rows * n * 4 bytes
+    x     = n * 4
+    out   = block_rows * 4
+With the default block_rows=128 and n=10240: 5.24 MB + 41 KB -- well under
+a 16 MiB VMEM budget, leaving headroom for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block height. 128 rows keeps the f32 tile under ~5 MB for
+# n <= 10240 and is a multiple of the 8-row f32 sublane tiling.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One grid step: o = a_tile @ x  ((bm, n) @ (n, 1) -> (bm, 1))."""
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def block_matvec(a, x, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Blocked matvec ``a @ x`` via a Pallas kernel.
+
+    Args:
+      a: ``(m, n)`` matrix; ``m`` must be divisible by ``block_rows``
+         (callers pad -- see ``model.chunk_matvec``).
+      x: ``(n,)`` or ``(n, 1)`` vector.
+      block_rows: row-tile height.
+
+    Returns:
+      ``(m,)`` product vector.
+    """
+    m, n = a.shape
+    if m % block_rows != 0:
+        raise ValueError(f"m={m} not divisible by block_rows={block_rows}")
+    x2 = x.reshape(n, 1)
+    grid = (m // block_rows,)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, x2)
+    return out[:, 0]
+
+
+def vmem_bytes(block_rows, n, dtype_bytes=4):
+    """Estimated VMEM residency of one grid step (tile + x + out)."""
+    return dtype_bytes * (block_rows * n + n + block_rows)

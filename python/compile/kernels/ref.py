@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 graph.
+
+Every kernel and model function is validated against these in
+``python/tests`` (pytest + hypothesis). Keeping the oracle trivially
+readable is the point -- no blocking, no padding, no pallas.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x):
+    """Reference ``a @ x`` for a ``(m, n)`` matrix and ``(n,)`` vector."""
+    return a @ x.reshape(a.shape[1])
+
+
+def encode_rows_ref(a, indices, valid):
+    """Reference LT row encoding.
+
+    Args:
+      a: ``(m, n)`` source matrix.
+      indices: ``(e, dmax)`` int32 row indices, padded arbitrarily where
+        ``valid`` is False.
+      valid: ``(e, dmax)`` bool mask of real members.
+
+    Returns:
+      ``(e, n)`` encoded rows: ``out[j] = sum_{k: valid[j,k]} a[indices[j,k]]``.
+    """
+    gathered = a[indices]                      # (e, dmax, n)
+    mask = valid[..., None].astype(a.dtype)    # (e, dmax, 1)
+    return (gathered * mask).sum(axis=1)

@@ -1,0 +1,73 @@
+"""L2: the JAX compute graph around the Pallas kernel.
+
+Two build-time graphs are defined here:
+
+* ``chunk_matvec`` -- the worker hot path: an encoded row-chunk times the
+  broadcast vector, with row padding so arbitrary chunk heights map onto
+  the fixed-shape AOT artifact grid. This is what ``aot.py`` lowers to
+  HLO text for the Rust runtime.
+* ``encode_rows`` -- the master's preprocessing step (paper SS3.2): LT
+  encoding as a gather+masked-sum over source rows. It is also lowered so
+  the whole pipeline *could* run via PJRT, though the Rust coordinator
+  encodes natively by default (encoding is off the latency path).
+
+Python never runs at request time: these functions exist to be lowered
+once (``make artifacts``) and loaded by ``rust/src/runtime``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matvec import DEFAULT_BLOCK_ROWS, block_matvec
+
+
+def chunk_matvec(a_chunk, x, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Product of one encoded chunk with x: ``(R, C) @ (C,) -> (R,)``.
+
+    ``R`` must be a multiple of ``block_rows`` (the AOT shape grid only
+    contains such shapes; the Rust runtime pads rows with zeros and
+    truncates the result).
+    """
+    return block_matvec(a_chunk, x, block_rows=block_rows)
+
+
+def encode_rows(a, indices, valid):
+    """LT-encode rows of ``a``: gather ``indices`` and masked-sum.
+
+    Args:
+      a: ``(m, n)`` source matrix.
+      indices: ``(e, dmax)`` int32, row ids, padded where ``valid`` False.
+      valid: ``(e, dmax)`` bool.
+
+    Returns:
+      ``(e, n)`` encoded rows.
+    """
+    gathered = jnp.take(a, indices, axis=0)     # (e, dmax, n)
+    mask = valid[..., None].astype(a.dtype)
+    return (gathered * mask).sum(axis=1)
+
+
+def lower_chunk_matvec(rows, cols, dtype=jnp.float32):
+    """Return the jax ``Lowered`` for a fixed-shape chunk matvec."""
+    a_spec = jax.ShapeDtypeStruct((rows, cols), dtype)
+    x_spec = jax.ShapeDtypeStruct((cols,), dtype)
+    block = min(DEFAULT_BLOCK_ROWS, rows)
+    if rows % block != 0:
+        raise ValueError(f"rows={rows} not a multiple of block {block}")
+
+    def fn(a, x):
+        return (chunk_matvec(a, x, block_rows=block),)
+
+    return jax.jit(fn).lower(a_spec, x_spec)
+
+
+def lower_encode_rows(m, n, e, dmax, dtype=jnp.float32):
+    """Return the jax ``Lowered`` for a fixed-shape encode step."""
+    a_spec = jax.ShapeDtypeStruct((m, n), dtype)
+    idx_spec = jax.ShapeDtypeStruct((e, dmax), jnp.int32)
+    valid_spec = jax.ShapeDtypeStruct((e, dmax), jnp.bool_)
+
+    def fn(a, idx, valid):
+        return (encode_rows(a, idx, valid),)
+
+    return jax.jit(fn).lower(a_spec, idx_spec, valid_spec)

@@ -1,0 +1,40 @@
+"""AOT pipeline smoke tests: HLO text artifacts + manifest."""
+
+import pathlib
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # tiny shape set to keep the test fast
+    aot.build(out, shapes=[(8, 16), (16, 32)], encode_shape=(8, 4, 16, 3))
+    return out
+
+
+def test_manifest_lists_all_artifacts(built):
+    manifest = (built / "manifest.txt").read_text().strip().splitlines()
+    assert "matvec 8 16 matvec_8x16.hlo.txt" in manifest
+    assert "matvec 16 32 matvec_16x32.hlo.txt" in manifest
+    assert any(line.startswith("encode 8 4 16 3 ") for line in manifest)
+    for line in manifest:
+        fname = line.split()[-1]
+        assert (built / fname).exists(), fname
+
+
+def test_hlo_is_text_with_entry(built):
+    text = (built / "matvec_8x16.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # must contain the dot op of the kernel and f32 shapes
+    assert "dot(" in text or "dot.1" in text or "dot" in text
+    assert "f32[8,16]" in text
+
+
+def test_output_is_tuple(built):
+    # lowered with return_tuple=True -> rust side unwraps to_tuple1()
+    text = (built / "matvec_8x16.hlo.txt").read_text()
+    assert "(f32[8]" in text.replace("ROOT", ""), "entry root should be a tuple"

@@ -1,0 +1,84 @@
+"""L1 correctness: the Pallas matvec kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+``ref.matvec_ref``. This is the core correctness signal for the kernel
+that ends up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matvec import block_matvec, vmem_bytes
+from compile.kernels.ref import matvec_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    block_rows=st.sampled_from([1, 2, 8, 16]),
+    n=st.integers(min_value=1, max_value=130),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_matches_ref_f32(blocks, block_rows, n, seed):
+    m = blocks * block_rows
+    a = _rand((m, n), jnp.float32, seed)
+    x = _rand((n,), jnp.float32, seed + 1)
+    got = block_matvec(a, x, block_rows=block_rows)
+    want = matvec_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_matches_ref_bf16(blocks, n, seed):
+    m = blocks * 8
+    a = _rand((m, n), jnp.bfloat16, seed)
+    x = _rand((n,), jnp.bfloat16, seed + 1)
+    got = block_matvec(a, x, block_rows=8).astype(jnp.float32)
+    want = (a.astype(jnp.float32) @ x.astype(jnp.float32))
+    # bf16 accumulation tolerance scales with n
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05 * np.sqrt(n))
+
+
+def test_x_column_vector_accepted():
+    a = _rand((16, 8), jnp.float32, 0)
+    x = _rand((8, 1), jnp.float32, 1)
+    got = block_matvec(a, x, block_rows=8)
+    np.testing.assert_allclose(got, matvec_ref(a, x), rtol=1e-4, atol=1e-5)
+
+
+def test_rejects_indivisible_rows():
+    a = _rand((10, 4), jnp.float32, 0)
+    x = _rand((4,), jnp.float32, 1)
+    with pytest.raises(ValueError, match="not divisible"):
+        block_matvec(a, x, block_rows=4)
+
+
+def test_default_block_shape_runs():
+    a = _rand((256, 64), jnp.float32, 2)
+    x = _rand((64,), jnp.float32, 3)
+    got = block_matvec(a, x)  # default 128-row blocks
+    np.testing.assert_allclose(got, matvec_ref(a, x), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_of_artifact_shapes():
+    # every AOT shape's per-step residency stays under a 16 MiB VMEM budget
+    from compile.aot import SHAPE_GRID
+
+    for rows, cols in SHAPE_GRID:
+        block = min(128, rows)
+        assert vmem_bytes(block, cols) < 16 * 2**20, (rows, cols)

@@ -1,0 +1,107 @@
+//! Micro-benchmarks of the coding layer hot paths: LT encode throughput,
+//! peeling-decode throughput and scaling (the paper's O(m log m) claim),
+//! Robust Soliton sampling, MDS encode/decode.
+//!
+//! `cargo bench --bench coding`
+
+use rateless::coding::lt::{LtCode, LtParams};
+use rateless::coding::mds::MdsCode;
+use rateless::coding::peeling::PeelingDecoder;
+use rateless::coding::raptor::{RaptorCode, RaptorParams};
+use rateless::coding::soliton::RobustSoliton;
+use rateless::matrix::Matrix;
+use rateless::util::rng::Rng;
+use rateless::util::timing::{self, human_rate};
+
+fn main() {
+    // Soliton sampling
+    let rs = RobustSoliton::with_defaults(10_000);
+    let mut rng = Rng::new(1);
+    let r = timing::bench(100, 10, 1.0, || {
+        let mut acc = 0usize;
+        for _ in 0..100_000 {
+            acc += rs.sample(&mut rng);
+        }
+        acc
+    });
+    println!(
+        "soliton sample:        {} ({})",
+        r.summary(),
+        human_rate(100_000.0 / r.mean(), "samples")
+    );
+
+    // LT encode (m=10000, n=1024, α=2)
+    let m = 10_000;
+    let n = 1024;
+    let a = Matrix::random(m, n, 2);
+    let code = LtCode::new(m, LtParams::with_alpha(2.0), 3);
+    let r = timing::bench(0, 3, 10.0, || code.encode_range(&a, 0, 2000));
+    let rows_per_sec = 2000.0 / r.mean();
+    println!(
+        "LT encode (n={n}):     {} ({})",
+        r.summary(),
+        human_rate(rows_per_sec, "rows")
+    );
+
+    // Peeling decode throughput + scaling slope (expect ~O(m log m))
+    for m in [5_000usize, 10_000, 20_000, 40_000] {
+        let code = LtCode::new(m, LtParams::with_alpha(2.0), 4);
+        let symbols: Vec<Vec<usize>> = (0..(m as f64 * 1.4) as u64)
+            .map(|row| {
+                let mut idx = Vec::new();
+                code.row_indices(row, &mut idx);
+                idx
+            })
+            .collect();
+        let r = timing::bench(1, 3, 5.0, || {
+            let mut dec = PeelingDecoder::new(m, 1);
+            for idx in &symbols {
+                dec.add_symbol(idx, &[1.0]);
+                if dec.is_complete() {
+                    break;
+                }
+            }
+            dec.is_complete()
+        });
+        println!(
+            "peeling decode m={m:>6}: {} ({})",
+            r.summary(),
+            human_rate(m as f64 / r.mean(), "symbols")
+        );
+    }
+
+    // Raptor decode (inactivation path)
+    let m = 10_000;
+    let code = RaptorCode::new(m, RaptorParams::default(), 5);
+    let symbols: Vec<Vec<usize>> = (0..(m as f64 * 1.4) as u64)
+        .map(|row| {
+            let mut idx = Vec::new();
+            code.row_indices(row, &mut idx);
+            idx
+        })
+        .collect();
+    let r = timing::bench(0, 3, 10.0, || {
+        let mut dec = code.decoder(1);
+        for idx in &symbols {
+            dec.add_symbol(idx, &[1.0]);
+            if code.maybe_inactivate(&mut dec) {
+                break;
+            }
+        }
+        assert!(dec.is_complete());
+        dec.received_count()
+    });
+    println!("raptor decode m={m}:   {}", r.summary());
+
+    // MDS encode + decode
+    let a = Matrix::random(10_000, 256, 6);
+    let x = Matrix::random_vector(256, 7);
+    let mds = MdsCode::new(10_000, 12, 10, 8);
+    let r = timing::bench(0, 3, 10.0, || mds.encode(&a));
+    println!("MDS encode (k=10):     {}", r.summary());
+    let blocks = mds.encode(&a);
+    let results: Vec<(usize, Vec<f32>)> =
+        (2..12).map(|w| (w, blocks[w].matvec(&x))).collect();
+    let r = timing::bench(1, 5, 5.0, || mds.decode(&results).unwrap());
+    println!("MDS decode (k=10):     {}", r.summary());
+}

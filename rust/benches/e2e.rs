@@ -1,0 +1,72 @@
+//! Bench: end-to-end coordinator latency per strategy (the Fig. 8
+//! measurement loop at reduced scale) plus master decode-CPU accounting.
+//! Reports virtual latency T, computations C and master decode time.
+//!
+//! `cargo bench --bench e2e` (RATELESS_BENCH_SCALE to resize).
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::{Coordinator, JobOptions, Strategy};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::dist::DelayDist;
+use rateless::util::stats::OnlineStats;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::var("RATELESS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.2);
+    let m = ((10_000.0 * scale) as usize).max(500);
+    let n = ((10_000.0 * scale) as usize).max(500);
+    let p = 10usize;
+    let trials = 5usize;
+    let a = Matrix::random(m, n, 1);
+    let cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 10.0 },
+        tau: 1e-4,
+        block_fraction: 0.1,
+        seed: 42,
+        real_sleep: true,
+        time_scale: 1.0,
+        symbol_width: 1,
+    };
+    println!("e2e coordinator bench: {m}x{n}, p={p}, {trials} trials, exp(10) delays, τ=1e-4");
+    println!("{:<10} {:>10} {:>12} {:>12} {:>12}", "strategy", "E[T] (s)", "E[C]", "E[C]/m", "decode ms");
+    for strategy in [
+        Strategy::Uncoded,
+        Strategy::Replication { r: 2 },
+        Strategy::Mds { k: 8 },
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Strategy::SystematicLt(LtParams::with_alpha(2.0)),
+        Strategy::Raptor(Default::default()),
+    ] {
+        let name = strategy.name();
+        let coord = Coordinator::new(cluster.clone(), strategy, Engine::Native, &a)?;
+        let mut lat = OnlineStats::new();
+        let mut comp = OnlineStats::new();
+        let mut dec = OnlineStats::new();
+        for t in 0..trials {
+            let x = Matrix::random_vector(n, 100 + t as u64);
+            let res = coord.multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(1000 + t as u64),
+                    profile: None,
+                },
+            )?;
+            lat.push(res.latency);
+            comp.push(res.computations as f64);
+            dec.push(res.decode_cpu * 1e3);
+        }
+        println!(
+            "{name:<10} {:>10.4} {:>12.0} {:>12.3} {:>12.2}",
+            lat.mean(),
+            comp.mean(),
+            comp.mean() / m as f64,
+            dec.mean()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate every paper figure at a reduced-but-faithful scale
+//! (full-scale regeneration is `rateless figures --fig all` +
+//! `rateless loadbalance|experiment|failures`). One figure per section so
+//! `cargo bench --bench figures` exercises the whole harness.
+//!
+//! Scale knobs: RATELESS_BENCH_TRIALS (default 200), RATELESS_BENCH_SCALE
+//! (default 0.1 for cluster figures).
+
+fn main() -> anyhow::Result<()> {
+    let trials: usize = std::env::var("RATELESS_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let scale: f64 = std::env::var("RATELESS_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+    let seed = 42;
+    let (m, p) = (10_000usize, 10usize);
+
+    println!("== analytic figures (m={m}, p={p}, {trials} trials) ==");
+    print!("{}", rateless::figures::fig1(m, p, trials, seed)?);
+    print!("{}", rateless::figures::fig7(m, p, trials, seed)?);
+    print!("{}", rateless::figures::fig9(m, seed)?);
+    print!("{}", rateless::figures::fig11(m, p, trials, seed)?);
+    print!("{}", rateless::figures::theory(m, p, trials, seed)?);
+
+    println!("== cluster figures (scale={scale}) ==");
+    print!("{}", rateless::figures::fig2(scale, scale, seed)?);
+    for env in [
+        rateless::figures::Env::Parallel,
+        rateless::figures::Env::Ec2,
+        rateless::figures::Env::Lambda,
+    ] {
+        print!(
+            "{}",
+            rateless::figures::fig8(env, scale, 3, scale, seed)?
+        );
+    }
+    print!("{}", rateless::figures::fig12(scale, 3, scale, seed)?);
+    Ok(())
+}

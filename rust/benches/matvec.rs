@@ -1,0 +1,71 @@
+//! Bench: worker chunk-matvec hot path — native Rust kernel vs the
+//! AOT-compiled PJRT artifact (requires `make artifacts`).
+//!
+//! `cargo bench --bench matvec`
+
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::timing::{self, human_rate};
+
+fn bench_engine(engine: &Engine, rows: usize, cols: usize) {
+    let block = Matrix::random(rows, cols, 1);
+    let x = Matrix::random_vector(cols, 2);
+    let r = timing::bench(3, 10, 3.0, || {
+        engine
+            .matvec_chunk(block.data(), rows, cols, &x)
+            .expect("matvec")
+    });
+    let flops = 2.0 * rows as f64 * cols as f64;
+    println!(
+        "  {}x{}: {} ({})",
+        rows,
+        cols,
+        r.summary(),
+        human_rate(flops / r.mean(), "flop")
+    );
+}
+
+/// Naive single-accumulator dot — the baseline the shipped 4-lane kernel
+/// is measured against (§Perf).
+fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn bench_naive(rows: usize, cols: usize) {
+    let block = Matrix::random(rows, cols, 1);
+    let x = Matrix::random_vector(cols, 2);
+    let r = timing::bench(3, 10, 3.0, || {
+        (0..rows)
+            .map(|i| naive_dot(block.row(i), &x))
+            .sum::<f32>()
+    });
+    let flops = 2.0 * rows as f64 * cols as f64;
+    println!(
+        "  {}x{}: {} ({})",
+        rows,
+        cols,
+        r.summary(),
+        human_rate(flops / r.mean(), "flop")
+    );
+}
+
+fn main() {
+    let shapes = [(128usize, 1024usize), (128, 10240), (512, 10240)];
+    println!("naive dot baseline:");
+    for &(r, c) in &shapes {
+        bench_naive(r, c);
+    }
+    println!("native engine (4-lane unrolled kernel):");
+    for &(r, c) in &shapes {
+        bench_engine(&Engine::Native, r, c);
+    }
+    match Engine::pjrt(std::path::Path::new("artifacts")) {
+        Ok(engine) => {
+            println!("pjrt engine (AOT artifacts, incl. channel + padding overhead):");
+            for &(r, c) in &shapes {
+                bench_engine(&engine, r, c);
+            }
+        }
+        Err(e) => println!("pjrt engine unavailable ({e}); run `make artifacts`"),
+    }
+}

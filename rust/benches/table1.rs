@@ -1,0 +1,55 @@
+//! Bench: regenerate Table 1 (latency / computations / complexity per
+//! strategy) — formula vs Monte-Carlo measurement at the paper's setting.
+//!
+//! `cargo bench --bench table1` (set RATELESS_BENCH_TRIALS to override).
+
+fn main() -> anyhow::Result<()> {
+    let trials: usize = std::env::var("RATELESS_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    println!("=== Table 1 (m=10000, p=10, μ=1, τ=0.001; {trials} trials) ===");
+    print!("{}", rateless::figures::table1(10_000, 10, trials, 42)?);
+    println!("\ncomplexity column (measured decode wall time, m=10000):");
+    // LT decode complexity measurement: O(m log m) peeling
+    use rateless::coding::lt::{LtCode, LtParams};
+    use rateless::coding::peeling::PeelingDecoder;
+    use rateless::util::timing;
+    let m = 10_000;
+    let code = LtCode::new(m, LtParams::with_alpha(2.0), 7);
+    let symbols: Vec<Vec<usize>> = (0..code.num_encoded() as u64)
+        .map(|r| {
+            let mut idx = Vec::new();
+            code.row_indices(r, &mut idx);
+            idx
+        })
+        .collect();
+    let r = timing::bench(1, 5, 2.0, || {
+        let mut dec = PeelingDecoder::new(m, 1);
+        for idx in &symbols {
+            dec.add_symbol(idx, &[1.0]);
+            if dec.is_complete() {
+                break;
+            }
+        }
+        assert!(dec.is_complete());
+    });
+    println!("  LT peeling decode (m=10000): {}", r.summary());
+    // MDS decode complexity: O(mk + k^3)
+    use rateless::coding::mds::MdsCode;
+    use rateless::matrix::Matrix;
+    let a = Matrix::random(m, 16, 1);
+    let x = Matrix::random_vector(16, 2);
+    for k in [8usize, 50] {
+        let mds = MdsCode::new(m, k + 2, k, 3);
+        let blocks = mds.encode(&a);
+        let results: Vec<(usize, Vec<f32>)> = (2..k + 2) // skip systematic to force a solve
+            .map(|w| (w, blocks[w].matvec(&x)))
+            .collect();
+        let r = timing::bench(1, 3, 2.0, || {
+            mds.decode(&results).unwrap();
+        });
+        println!("  MDS decode (m=10000, k={k}): {}", r.summary());
+    }
+    Ok(())
+}

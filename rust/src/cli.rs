@@ -1,0 +1,133 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `rateless <subcommand> [--key value]... [--flag]... [positional]...`
+//! `--key=value` is also accepted. Flags are boolean if no value follows.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.options.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.options
+            .get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        // note: a bare `--name` followed by a non-option token takes the
+        // token as its value, so flags go last or use `--key=value` form
+        let a = parse(&[
+            "figures", "--fig", "fig1", "--trials=20", "extra", "--verbose",
+        ]);
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.str("fig", ""), "fig1");
+        assert_eq!(a.usize("trials", 1), 20);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_numbers() {
+        let a = parse(&["run", "--alpha", "1.5"]);
+        assert!((a.f64("alpha", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(a.usize("workers", 10), 10);
+        assert_eq!(a.u64("seed", 7), 7);
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["run", "--quiet"]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt_str("quiet"), None);
+    }
+}

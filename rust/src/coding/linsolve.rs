@@ -1,0 +1,226 @@
+//! Dense LU factorization with partial pivoting — the decode substrate for
+//! the (p,k) MDS baseline (paper §4.4: decoding an MDS code is an O(k³)
+//! solve plus O(k²·m/k) back-substitution, which is exactly why the paper
+//! argues MDS decoding is unacceptable at large scale).
+
+/// LU factorization error.
+#[derive(Debug, thiserror::Error)]
+pub enum SolveError {
+    #[error("matrix is singular at pivot {0} (|pivot| = {1:.3e})")]
+    Singular(usize, f64),
+}
+
+/// In-place LU with partial pivoting on a row-major `n×n` matrix.
+/// Returns the pivot permutation: row `i` of the factored matrix came from
+/// original row `piv[i]`.
+pub fn lu_factor(a: &mut [f64], n: usize) -> Result<Vec<usize>, SolveError> {
+    assert_eq!(a.len(), n * n);
+    let mut piv: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // pivot search
+        let mut best = col;
+        let mut best_abs = a[col * n + col].abs();
+        for r in col + 1..n {
+            let v = a[r * n + col].abs();
+            if v > best_abs {
+                best = r;
+                best_abs = v;
+            }
+        }
+        if best_abs < 1e-12 {
+            return Err(SolveError::Singular(col, best_abs));
+        }
+        if best != col {
+            piv.swap(col, best);
+            for c in 0..n {
+                a.swap(col * n + c, best * n + c);
+            }
+        }
+        let pivot = a[col * n + col];
+        for r in col + 1..n {
+            let factor = a[r * n + col] / pivot;
+            a[r * n + col] = factor;
+            for c in col + 1..n {
+                a[r * n + c] -= factor * a[col * n + c];
+            }
+        }
+    }
+    Ok(piv)
+}
+
+/// Solve `A·X = B` for `X` given the LU factors: `B` is `n × w` row-major
+/// (each of the n equations has a width-w right-hand side). Solves all
+/// `w` systems simultaneously. Overwrites `b` with the solution.
+pub fn lu_solve(lu: &[f64], n: usize, piv: &[usize], b: &mut [f64], w: usize) {
+    assert_eq!(lu.len(), n * n);
+    assert_eq!(b.len(), n * w);
+    // apply permutation
+    let mut pb = vec![0.0; n * w];
+    for i in 0..n {
+        pb[i * w..(i + 1) * w].copy_from_slice(&b[piv[i] * w..(piv[i] + 1) * w]);
+    }
+    // forward substitution (L has unit diagonal)
+    for i in 0..n {
+        for j in 0..i {
+            let l = lu[i * n + j];
+            if l != 0.0 {
+                for c in 0..w {
+                    pb[i * w + c] -= l * pb[j * w + c];
+                }
+            }
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        for j in i + 1..n {
+            let u = lu[i * n + j];
+            if u != 0.0 {
+                for c in 0..w {
+                    pb[i * w + c] -= u * pb[j * w + c];
+                }
+            }
+        }
+        let d = lu[i * n + i];
+        for c in 0..w {
+            pb[i * w + c] /= d;
+        }
+    }
+    b.copy_from_slice(&pb);
+}
+
+/// Solve a (possibly overdetermined) rectangular system `A·X = B` by
+/// Gaussian elimination with partial pivoting: `A` is `neq × nunk`
+/// row-major (destroyed), `B` is `neq × w` (destroyed). Returns the
+/// `nunk × w` solution if `A` has full column rank, else `None`.
+///
+/// Used by inactivation decoding (`peeling::try_inactivation`), where the
+/// residual system is small and 0/1-structured.
+pub fn gauss_rect_solve(
+    a: &mut [f64],
+    neq: usize,
+    nunk: usize,
+    b: &mut [f64],
+    w: usize,
+) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), neq * nunk);
+    assert_eq!(b.len(), neq * w);
+    if neq < nunk {
+        return None;
+    }
+    for col in 0..nunk {
+        // pivot search over rows col..neq
+        let mut best = col;
+        let mut best_abs = a[col * nunk + col].abs();
+        for r in col + 1..neq {
+            let v = a[r * nunk + col].abs();
+            if v > best_abs {
+                best = r;
+                best_abs = v;
+            }
+        }
+        if best_abs < 1e-9 {
+            return None; // rank-deficient in this column
+        }
+        if best != col {
+            for c in 0..nunk {
+                a.swap(col * nunk + c, best * nunk + c);
+            }
+            for c in 0..w {
+                b.swap(col * w + c, best * w + c);
+            }
+        }
+        let pivot = a[col * nunk + col];
+        for r in col + 1..neq {
+            let factor = a[r * nunk + col] / pivot;
+            if factor == 0.0 {
+                continue;
+            }
+            a[r * nunk + col] = 0.0;
+            for c in col + 1..nunk {
+                a[r * nunk + c] -= factor * a[col * nunk + c];
+            }
+            for c in 0..w {
+                b[r * w + c] -= factor * b[col * w + c];
+            }
+        }
+    }
+    // back substitution over the top nunk×nunk triangle
+    let mut x = vec![0.0f64; nunk * w];
+    for i in (0..nunk).rev() {
+        for c in 0..w {
+            let mut v = b[i * w + c];
+            for j in i + 1..nunk {
+                v -= a[i * nunk + j] * x[j * w + c];
+            }
+            x[i * w + c] = v / a[i * nunk + i];
+        }
+    }
+    Some(x)
+}
+
+/// Convenience: solve `A·X = B` destructively on copies.
+pub fn solve(a: &[f64], n: usize, b: &[f64], w: usize) -> Result<Vec<f64>, SolveError> {
+    let mut lu = a.to_vec();
+    let piv = lu_factor(&mut lu, n)?;
+    let mut x = b.to_vec();
+    lu_solve(&lu, n, &piv, &mut x, w);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::dist::{Sample, StdNormal};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let a = [2.0, 1.0, 1.0, 3.0];
+        let b = [5.0, 10.0];
+        let x = solve(&a, 2, &b, 1).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_rhs() {
+        // identity-ish with permuted pivoting need: A = [[0,1],[1,0]]
+        let a = [0.0, 1.0, 1.0, 0.0];
+        let b = [1.0, 2.0, 3.0, 4.0]; // rows: [1,2], [3,4]
+        let x = solve(&a, 2, &b, 2).unwrap();
+        // A swaps rows: x = [[3,4],[1,2]]
+        assert_eq!(x, vec![3.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn random_systems_residual_small() {
+        let mut rng = Rng::new(17);
+        for n in [1usize, 2, 5, 20, 50] {
+            let a: Vec<f64> = (0..n * n).map(|_| StdNormal.sample(&mut rng)).collect();
+            let xtrue: Vec<f64> = (0..n).map(|_| StdNormal.sample(&mut rng)).collect();
+            let mut b = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a[i * n + j] * xtrue[j];
+                }
+            }
+            let x = solve(&a, n, &b, 1).unwrap();
+            for i in 0..n {
+                assert!(
+                    (x[i] - xtrue[i]).abs() < 1e-6 * xtrue[i].abs().max(1.0),
+                    "n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn detects_singularity() {
+        let a = [1.0, 2.0, 2.0, 4.0]; // rank 1
+        assert!(matches!(
+            solve(&a, 2, &[1.0, 2.0], 1),
+            Err(SolveError::Singular(..))
+        ));
+    }
+}

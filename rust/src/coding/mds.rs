@@ -1,0 +1,284 @@
+//! (p, k) MDS-coded matrix-vector multiplication baseline (paper §2.3,
+//! §4.4).
+//!
+//! `A` is split along rows into `k` submatrices `A_1..A_k` (m/k rows each;
+//! `m` is zero-padded up to a multiple of `k` if needed). Worker `i` stores
+//! `A_{e,i} = Σ_j g_{ij} A_j`. The generator is **systematic**: workers
+//! `0..k` hold `A_1..A_k` verbatim; workers `k..p` hold i.i.d. N(0,1)/√k
+//! combinations. Over the reals a Gaussian generator is MDS with
+//! probability 1 (every k×k minor is a.s. nonsingular), matching the
+//! paper's use of real-valued MDS codes.
+//!
+//! Decoding from any `k` finished workers solves a k×k system once
+//! (O(k³)) and back-substitutes all m/k payload columns (O(k²·m/k)) —
+//! the complexity row "O(mk + k³)" of the paper's Table 1.
+
+use super::linsolve;
+use crate::matrix::{ops, Matrix};
+use crate::util::dist::{Sample, StdNormal};
+use crate::util::rng::{derive_seed, Rng};
+
+/// A (p, k) MDS code over matrix row-blocks.
+#[derive(Clone, Debug)]
+pub struct MdsCode {
+    p: usize,
+    k: usize,
+    m: usize,
+    /// rows per block = ceil(m/k)
+    block_rows: usize,
+    seed: u64,
+}
+
+/// Error from MDS decoding.
+#[derive(Debug, thiserror::Error)]
+pub enum MdsError {
+    #[error("need {need} distinct worker results, got {got}")]
+    NotEnough { need: usize, got: usize },
+    #[error("duplicate worker id {0}")]
+    Duplicate(usize),
+    #[error("worker id {0} out of range")]
+    BadWorker(usize),
+    #[error("payload length {got} != block length {want}")]
+    BadPayload { got: usize, want: usize },
+    #[error("singular decode system: {0}")]
+    Singular(#[from] linsolve::SolveError),
+}
+
+impl MdsCode {
+    pub fn new(m: usize, p: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1 && k <= p, "need 1 <= k <= p");
+        assert!(m >= k, "need at least k rows");
+        let block_rows = m.div_ceil(k);
+        Self {
+            p,
+            k,
+            m,
+            block_rows,
+            seed,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Rows held (and computed) by each worker.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Generator row for worker `i`: coefficients `g_{i,0..k}`.
+    pub fn coefficients(&self, worker: usize) -> Vec<f64> {
+        assert!(worker < self.p);
+        if worker < self.k {
+            let mut g = vec![0.0; self.k];
+            g[worker] = 1.0;
+            g
+        } else {
+            let mut rng = Rng::new(derive_seed(self.seed, worker as u64));
+            let scale = 1.0 / (self.k as f64).sqrt();
+            (0..self.k)
+                .map(|_| StdNormal.sample(&mut rng) * scale)
+                .collect()
+        }
+    }
+
+    /// Encode: produce the p worker submatrices (each `block_rows × n`).
+    pub fn encode(&self, a: &Matrix) -> Vec<Matrix> {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let br = self.block_rows;
+        // zero-pad A to k*br rows conceptually
+        let padded_rows = self.k * br;
+        (0..self.p)
+            .map(|w| {
+                let g = self.coefficients(w);
+                let mut out = Matrix::zeros(br, n);
+                for (j, &c) in g.iter().enumerate() {
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let src_start = j * br;
+                    let src_end = ((j + 1) * br).min(self.m);
+                    if src_start >= self.m {
+                        continue;
+                    }
+                    for r in src_start..src_end {
+                        ops::axpy(out.row_mut(r - src_start), c as f32, a.row(r));
+                    }
+                }
+                debug_assert!(padded_rows >= self.m);
+                out
+            })
+            .collect()
+    }
+
+    /// Decode `b = A·x` (length m) from any `k` distinct workers' block
+    /// products (each of length `block_rows`).
+    pub fn decode(&self, results: &[(usize, Vec<f32>)]) -> Result<Vec<f32>, MdsError> {
+        if results.len() < self.k {
+            return Err(MdsError::NotEnough {
+                need: self.k,
+                got: results.len(),
+            });
+        }
+        let chosen = &results[..self.k];
+        let mut seen = vec![false; self.p];
+        for &(w, ref payload) in chosen {
+            if w >= self.p {
+                return Err(MdsError::BadWorker(w));
+            }
+            if seen[w] {
+                return Err(MdsError::Duplicate(w));
+            }
+            seen[w] = true;
+            if payload.len() != self.block_rows {
+                return Err(MdsError::BadPayload {
+                    got: payload.len(),
+                    want: self.block_rows,
+                });
+            }
+        }
+        // coefficient matrix k×k and RHS k×block_rows
+        let k = self.k;
+        let br = self.block_rows;
+        let mut g = vec![0.0f64; k * k];
+        let mut rhs = vec![0.0f64; k * br];
+        for (row, &(w, ref payload)) in chosen.iter().enumerate() {
+            g[row * k..(row + 1) * k].copy_from_slice(&self.coefficients(w));
+            for c in 0..br {
+                rhs[row * br + c] = payload[c] as f64;
+            }
+        }
+        let x = linsolve::solve(&g, k, &rhs, br)?;
+        // unpad: block j supplies rows j*br .. min((j+1)*br, m)
+        let mut b = vec![0.0f32; self.m];
+        for j in 0..k {
+            let start = j * br;
+            let end = ((j + 1) * br).min(self.m);
+            for r in start..end {
+                b[r] = x[j * br + (r - start)] as f32;
+            }
+        }
+        Ok(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_roundtrip(m: usize, n: usize, p: usize, k: usize, skip: &[usize]) {
+        let a = Matrix::random(m, n, 0xBEEF);
+        let x = Matrix::random_vector(n, 0xF00D);
+        let want = a.matvec(&x);
+        let code = MdsCode::new(m, p, k, 77);
+        let blocks = code.encode(&a);
+        assert_eq!(blocks.len(), p);
+        let mut results = Vec::new();
+        for w in 0..p {
+            if skip.contains(&w) {
+                continue;
+            }
+            results.push((w, blocks[w].matvec(&x)));
+            if results.len() == k {
+                break;
+            }
+        }
+        let got = code.decode(&results).unwrap();
+        for i in 0..m {
+            assert!(
+                (got[i] - want[i]).abs() < 2e-2 * want[i].abs().max(1.0),
+                "m={m} p={p} k={k} i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn systematic_fast_path() {
+        // first k workers: identity — decoding must be exact concatenation
+        run_roundtrip(60, 8, 5, 3, &[]);
+    }
+
+    #[test]
+    fn survives_stragglers_any_k_subset() {
+        // skip systematic workers, forcing a real solve
+        run_roundtrip(60, 8, 5, 3, &[0, 1]);
+        // skip two including a parity worker: leaves {1, 3, 4} (= k)
+        run_roundtrip(60, 8, 5, 3, &[0, 2]);
+    }
+
+    #[test]
+    fn uneven_m_padding() {
+        // m=61 not divisible by k=4
+        run_roundtrip(61, 8, 6, 4, &[1]);
+    }
+
+    #[test]
+    fn error_cases() {
+        let code = MdsCode::new(10, 4, 2, 1);
+        let a = Matrix::random(10, 3, 2);
+        let x = Matrix::random_vector(3, 3);
+        let blocks = code.encode(&a);
+        let r0 = (0usize, blocks[0].matvec(&x));
+        assert!(matches!(
+            code.decode(&[r0.clone()]),
+            Err(MdsError::NotEnough { .. })
+        ));
+        assert!(matches!(
+            code.decode(&[r0.clone(), r0.clone()]),
+            Err(MdsError::Duplicate(0))
+        ));
+        assert!(matches!(
+            code.decode(&[r0.clone(), (9, vec![0.0; code.block_rows()])]),
+            Err(MdsError::BadWorker(9))
+        ));
+        assert!(matches!(
+            code.decode(&[r0, (1, vec![0.0; 1])]),
+            Err(MdsError::BadPayload { .. })
+        ));
+    }
+
+    /// Property sweep: every k-subset of workers decodes (Gaussian
+    /// generator is MDS w.p. 1).
+    #[test]
+    fn property_all_k_subsets_decode() {
+        let m = 24;
+        let (p, k) = (5usize, 3usize);
+        let a = Matrix::random(m, 4, 11);
+        let x = Matrix::random_vector(4, 12);
+        let want = a.matvec(&x);
+        let code = MdsCode::new(m, p, k, 13);
+        let blocks = code.encode(&a);
+        let products: Vec<Vec<f32>> = blocks.iter().map(|b| b.matvec(&x)).collect();
+        // all C(5,3)=10 subsets
+        for i in 0..p {
+            for j in i + 1..p {
+                for l in j + 1..p {
+                    let results = vec![
+                        (i, products[i].clone()),
+                        (j, products[j].clone()),
+                        (l, products[l].clone()),
+                    ];
+                    let got = code.decode(&results).unwrap();
+                    for r in 0..m {
+                        assert!(
+                            (got[r] - want[r]).abs() < 5e-2 * want[r].abs().max(1.0),
+                            "subset ({i},{j},{l}) row {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

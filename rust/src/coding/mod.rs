@@ -1,0 +1,23 @@
+//! Erasure-coding layer: the paper's rateless LT code (with systematic and
+//! Raptor-style variants) and the fixed-rate baselines it is compared
+//! against (real-valued MDS, r-replication).
+//!
+//! | module        | paper section | role |
+//! |---------------|---------------|------|
+//! | `soliton`     | §3.1 eq. (4)  | Robust Soliton degree distribution |
+//! | `lt`          | §3.1–3.2      | rateless LT encoder |
+//! | `peeling`     | §3.1, Fig. 5b | online iterative peeling decoder |
+//! | `systematic`  | §3.2 mod. (3) | systematic LT variant |
+//! | `raptor`      | §3.2 mod. (2) | precode + weakened LT (Raptor-style) |
+//! | `mds`         | §2.3, §4.4    | (p,k) MDS baseline over the reals |
+//! | `replication` | §2.3, §4.5    | r-replication / uncoded baseline |
+//! | `linsolve`    | §4.4          | LU solver substrate for MDS decode |
+
+pub mod linsolve;
+pub mod lt;
+pub mod mds;
+pub mod peeling;
+pub mod raptor;
+pub mod replication;
+pub mod soliton;
+pub mod systematic;

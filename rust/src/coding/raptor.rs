@@ -1,0 +1,302 @@
+//! Raptor-style code: sparse precode + weakened LT (paper §3.2,
+//! modification (2); Shokrollahi 2006).
+//!
+//! The paper notes LT codes pay an `M'−m` overhead that Raptor codes
+//! remove: decode `m` sources from `m(1+ε)` symbols for *constant* ε even
+//! at finite m. We implement the classic construction:
+//!
+//! 1. **Precode**: append `s` parity symbols forming a regular-LDPC-style
+//!    code: every source symbol belongs to exactly `c_per_source` checks,
+//!    so no source can be left uncovered (the failure mode of a purely
+//!    random precode). We *negate* each parity (`z_{m+j} = −Σ_{i∈S_j} a_i`)
+//!    so the relation `Σ_{i∈S_j} z_i + z_{m+j} = 0` is a pure sum — it
+//!    enters the standard peeling decoder as a **zero-payload symbol**
+//!    known upfront.
+//! 2. **LT phase**: LT encoding over the `m+s` intermediate symbols with
+//!    Shokrollahi's capped output distribution
+//!    `Ω_D(x) = (μx + Σ_{i=2}^{D} x^i/(i(i−1)) + x^{D+1}/D)/(μ+1)` with
+//!    `μ = ε/2 + (ε/2)²`, `D = ⌈4(1+ε)/ε⌉` — constant mean degree (unlike
+//!    the Robust Soliton's `O(log m)`), with the precode mopping up the
+//!    constant fraction of intermediates the weak LT phase leaves
+//!    uncovered.
+//!
+//! Decoding watches only the first `m` intermediates (the true sources) —
+//! see [`PeelingDecoder::with_watch`].
+
+use super::peeling::PeelingDecoder;
+
+use crate::matrix::{ops, Matrix};
+use crate::util::dist::Alias;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Raptor code parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RaptorParams {
+    /// Redundancy α = m_e/m.
+    pub alpha: f64,
+    /// Precode rate: s = ceil(precode_overhead · m) parity symbols.
+    pub precode_overhead: f64,
+    /// Number of parity checks each source symbol joins.
+    pub c_per_source: usize,
+    /// Design overhead ε of Shokrollahi's output distribution Ω_D.
+    pub epsilon: f64,
+}
+
+impl Default for RaptorParams {
+    fn default() -> Self {
+        Self {
+            alpha: 2.0,
+            precode_overhead: 0.10,
+            c_per_source: 3,
+            epsilon: 0.3,
+        }
+    }
+}
+
+/// Shokrollahi's Raptor output degree weights over `1..=D+1`
+/// (unnormalized; index 0 unused).
+fn raptor_weights(epsilon: f64) -> Vec<f64> {
+    assert!(epsilon > 0.0 && epsilon < 2.0);
+    let d_cap = (4.0 * (1.0 + epsilon) / epsilon).ceil() as usize;
+    let mu = epsilon / 2.0 + (epsilon / 2.0).powi(2);
+    let mut w = vec![0.0; d_cap + 2];
+    w[1] = mu;
+    for i in 2..=d_cap {
+        w[i] = 1.0 / (i as f64 * (i - 1) as f64);
+    }
+    w[d_cap + 1] = 1.0 / d_cap as f64;
+    w
+}
+
+/// Raptor-style rateless code over `m` source rows.
+#[derive(Clone, Debug)]
+pub struct RaptorCode {
+    m: usize,
+    s: usize,
+    params: RaptorParams,
+    seed: u64,
+    lt_sampler: Alias,
+    /// Parity-check membership: `checks[j]` = sorted source ids of check j.
+    checks: Vec<Vec<usize>>,
+}
+
+impl RaptorCode {
+    pub fn new(m: usize, params: RaptorParams, seed: u64) -> Self {
+        assert!(m >= 8);
+        assert!(params.alpha >= 1.0);
+        assert!(params.c_per_source >= 1);
+        let s = ((params.precode_overhead * m as f64).ceil() as usize).max(2);
+        let total = m + s;
+        let weights = raptor_weights(params.epsilon);
+        let cap = (weights.len() - 1).min(total);
+        let lt_sampler = Alias::new(&weights[1..=cap]);
+        // Regular-LDPC membership: source i joins c_per distinct checks.
+        let c_per = params.c_per_source.min(s);
+        let mut checks: Vec<Vec<usize>> = vec![Vec::new(); s];
+        let mut rng = Rng::new(derive_seed(seed ^ 0x5052_4543, 0));
+        let mut pick = Vec::new();
+        for i in 0..m {
+            rng.sample_distinct(s, c_per, &mut pick);
+            for &j in &pick {
+                checks[j].push(i);
+            }
+        }
+        Self {
+            m,
+            s,
+            params,
+            seed,
+            lt_sampler,
+            checks,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Number of precode parity symbols.
+    pub fn parity_count(&self) -> usize {
+        self.s
+    }
+
+    /// Total intermediate symbols m+s.
+    pub fn intermediate_count(&self) -> usize {
+        self.m + self.s
+    }
+
+    pub fn num_encoded(&self) -> usize {
+        (self.params.alpha * self.m as f64).ceil() as usize
+    }
+
+    /// Source members of parity check `j` (deterministic in seed).
+    pub fn parity_members(&self, j: usize, out: &mut Vec<usize>) {
+        assert!(j < self.s);
+        out.clear();
+        out.extend_from_slice(&self.checks[j]);
+    }
+
+    /// Intermediate-symbol indices of LT-encoded row `row_id`.
+    pub fn row_indices(&self, row_id: u64, out: &mut Vec<usize>) {
+        let mut rng = Rng::new(derive_seed(self.seed, row_id));
+        let d = self.lt_sampler.sample(&mut rng) + 1;
+        rng.sample_distinct(self.intermediate_count(), d, out);
+    }
+
+    /// Materialize the intermediate matrix: source rows then negated
+    /// parity rows.
+    pub fn intermediate(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.m);
+        let mut z = Matrix::zeros(self.intermediate_count(), a.cols());
+        for i in 0..self.m {
+            z.row_mut(i).copy_from_slice(a.row(i));
+        }
+        let mut members = Vec::new();
+        for j in 0..self.s {
+            self.parity_members(j, &mut members);
+            // z_{m+j} = -sum of members
+            let mut acc = vec![0.0f32; a.cols()];
+            for &i in &members {
+                ops::add_assign(&mut acc, a.row(i));
+            }
+            for v in acc.iter_mut() {
+                *v = -*v;
+            }
+            z.row_mut(self.m + j).copy_from_slice(&acc);
+        }
+        z
+    }
+
+    /// Encode: LT phase over the intermediate matrix.
+    pub fn encode(&self, a: &Matrix) -> Matrix {
+        let z = self.intermediate(a);
+        let me = self.num_encoded();
+        let mut out = Matrix::zeros(me, a.cols());
+        let mut idx = Vec::new();
+        for row in 0..me as u64 {
+            self.row_indices(row, &mut idx);
+            let dst = out.row_mut(row as usize);
+            for &i in &idx {
+                ops::add_assign(dst, z.row(i));
+            }
+        }
+        out
+    }
+
+    /// Received-symbol count at which inactivation decoding is first
+    /// attempted: the Ω_D design point `(1+ε/4)·m` plus the `s` precode
+    /// constraints that are pre-seeded into the decoder.
+    pub fn inactivation_start(&self) -> usize {
+        ((1.0 + self.params.epsilon / 4.0) * self.m as f64).ceil() as usize + self.s
+    }
+
+    /// Retry cadence for inactivation attempts (received symbols).
+    pub fn inactivation_step(&self) -> usize {
+        (self.m / 100).max(8)
+    }
+
+    /// Run the Raptor completion policy on `dec`: peeling is free; once
+    /// enough symbols have arrived, periodically attempt inactivation
+    /// decoding (dense GE on the stalled residual — what real Raptor
+    /// decoders do, RFC 6330 §5.4.2). Returns completion state.
+    pub fn maybe_inactivate(&self, dec: &mut PeelingDecoder) -> bool {
+        if dec.is_complete() {
+            return true;
+        }
+        let r = dec.received_count();
+        let start = self.inactivation_start();
+        if r < start || (r - start) % self.inactivation_step() != 0 {
+            return false;
+        }
+        // GE is O(nunk³): only attempt once peeling has shrunk the
+        // residual to a cheap size; otherwise wait for more symbols
+        // (each arrival peels further). Without this gate the decoder
+        // burns seconds on doomed large-residual eliminations (§Perf).
+        let cap = (self.m / 16).max(512) + self.s.min(64);
+        dec.try_inactivation(cap)
+    }
+
+    /// Fresh decoder pre-seeded with the `s` parity constraints
+    /// (zero-payload symbols). Payload width `w`.
+    pub fn decoder(&self, w: usize) -> PeelingDecoder {
+        let mut dec = PeelingDecoder::with_watch(self.intermediate_count(), w, self.m);
+        let mut members = Vec::new();
+        let zero = vec![0.0f32; w];
+        for j in 0..self.s {
+            self.parity_members(j, &mut members);
+            let mut idx = members.clone();
+            idx.push(self.m + j);
+            dec.add_symbol(&idx, &zero);
+        }
+        dec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intermediate_parity_relation_holds() {
+        let m = 64;
+        let a = Matrix::random(m, 4, 1);
+        let code = RaptorCode::new(m, RaptorParams::default(), 2);
+        let z = code.intermediate(&a);
+        let mut members = Vec::new();
+        for j in 0..code.parity_count() {
+            code.parity_members(j, &mut members);
+            for c in 0..4 {
+                let total: f32 = members.iter().map(|&i| z.row(i)[c]).sum::<f32>()
+                    + z.row(m + j)[c];
+                assert!(total.abs() < 1e-4, "parity {j} col {c}: {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn decodes_product_with_constant_overhead() {
+        let m = 256;
+        let a = Matrix::random(m, 8, 3);
+        let x = Matrix::random_vector(8, 4);
+        let b = a.matvec(&x);
+        let code = RaptorCode::new(m, RaptorParams::default(), 5);
+        let enc = code.encode(&a);
+        let be = enc.matvec(&x);
+        let mut dec = code.decoder(1);
+        let mut idx = Vec::new();
+        let mut used = 0;
+        for row in 0..enc.rows() {
+            code.row_indices(row as u64, &mut idx);
+            dec.add_symbol(&idx, &be[row..row + 1]);
+            used = row + 1;
+            if code.maybe_inactivate(&mut dec) {
+                break;
+            }
+        }
+        assert!(dec.is_complete(), "raptor failed to decode from {used} symbols");
+        let overhead = used as f64 / m as f64 - 1.0;
+        assert!(overhead < 0.25, "overhead {overhead} too large");
+        let got = dec.into_values();
+        for i in 0..m {
+            assert!(
+                (got[i] - b[i]).abs() < 2e-2 * b[i].abs().max(1.0),
+                "i={i}: {} vs {}",
+                got[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_mappings() {
+        let code = RaptorCode::new(100, RaptorParams::default(), 7);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        code.row_indices(12, &mut a);
+        code.row_indices(12, &mut b);
+        assert_eq!(a, b);
+        code.parity_members(3, &mut a);
+        code.parity_members(3, &mut b);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+    }
+}

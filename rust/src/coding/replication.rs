@@ -1,0 +1,157 @@
+//! r-Replication and uncoded baselines (paper §2.3, §4.5).
+//!
+//! `A` is split along rows into `p/r` submatrices of `r·m/p` rows each;
+//! every submatrix is stored at `r` distinct workers and the master takes
+//! the first finished copy of each group. `r = 1` is the naive uncoded
+//! strategy.
+
+use crate::matrix::Matrix;
+
+/// An r-replication assignment over p workers.
+#[derive(Clone, Debug)]
+pub struct RepCode {
+    m: usize,
+    p: usize,
+    r: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RepError {
+    #[error("group {0} has no finished worker")]
+    MissingGroup(usize),
+    #[error("payload length {got} != group rows {want}")]
+    BadPayload { got: usize, want: usize },
+}
+
+impl RepCode {
+    /// `r` must divide `p`.
+    pub fn new(m: usize, p: usize, r: usize) -> Self {
+        assert!(r >= 1 && p >= r && p % r == 0, "r must divide p");
+        assert!(m >= p / r, "need at least one row per group");
+        Self { m, p, r }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Number of distinct submatrices (groups).
+    pub fn groups(&self) -> usize {
+        self.p / self.r
+    }
+
+    /// Row range `[start, end)` of group `g` (balanced split of m rows).
+    pub fn group_rows(&self, g: usize) -> (usize, usize) {
+        assert!(g < self.groups());
+        let groups = self.groups();
+        let base = self.m / groups;
+        let extra = self.m % groups;
+        // first `extra` groups get one extra row
+        let start = g * base + g.min(extra);
+        let len = base + usize::from(g < extra);
+        (start, start + len)
+    }
+
+    /// Group served by worker `w` (workers `g·r .. (g+1)·r` serve group g).
+    pub fn worker_group(&self, w: usize) -> usize {
+        assert!(w < self.p);
+        w / self.r
+    }
+
+    /// Encode = split: submatrix stored at worker `w`.
+    pub fn encode_worker(&self, a: &Matrix, w: usize) -> Matrix {
+        assert_eq!(a.rows(), self.m);
+        let (start, end) = self.group_rows(self.worker_group(w));
+        a.slice_rows(start, end)
+    }
+
+    /// Assemble `b` from one finished payload per group:
+    /// `results[g] = Some(product of group g's submatrix)`.
+    pub fn decode(&self, results: &[Option<Vec<f32>>]) -> Result<Vec<f32>, RepError> {
+        assert_eq!(results.len(), self.groups());
+        let mut b = vec![0.0f32; self.m];
+        for g in 0..self.groups() {
+            let (start, end) = self.group_rows(g);
+            let payload = results[g].as_ref().ok_or(RepError::MissingGroup(g))?;
+            if payload.len() != end - start {
+                return Err(RepError::BadPayload {
+                    got: payload.len(),
+                    want: end - start,
+                });
+            }
+            b[start..end].copy_from_slice(payload);
+        }
+        Ok(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_rows_partition_m() {
+        for &(m, p, r) in &[(100usize, 10usize, 2usize), (103, 12, 3), (7, 4, 2)] {
+            let code = RepCode::new(m, p, r);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for g in 0..code.groups() {
+                let (s, e) = code.group_rows(g);
+                assert_eq!(s, prev_end, "groups must tile");
+                assert!(e > s);
+                covered += e - s;
+                prev_end = e;
+            }
+            assert_eq!(covered, m);
+        }
+    }
+
+    #[test]
+    fn worker_assignment() {
+        let code = RepCode::new(100, 6, 2);
+        assert_eq!(code.groups(), 3);
+        assert_eq!(code.worker_group(0), 0);
+        assert_eq!(code.worker_group(1), 0);
+        assert_eq!(code.worker_group(5), 2);
+    }
+
+    #[test]
+    fn roundtrip_uncoded_and_replicated() {
+        for r in [1usize, 2] {
+            let m = 50;
+            let a = Matrix::random(m, 6, 21);
+            let x = Matrix::random_vector(6, 22);
+            let want = a.matvec(&x);
+            let code = RepCode::new(m, 4 * r, r);
+            // compute with the *last* replica of each group (any copy works)
+            let results: Vec<Option<Vec<f32>>> = (0..code.groups())
+                .map(|g| {
+                    let w = g * r + (r - 1);
+                    Some(code.encode_worker(&a, w).matvec(&x))
+                })
+                .collect();
+            assert_eq!(code.decode(&results).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn missing_group_detected() {
+        let code = RepCode::new(10, 4, 2);
+        let r = code.decode(&[None, Some(vec![0.0; 5])]);
+        assert!(matches!(r, Err(RepError::MissingGroup(0))));
+    }
+
+    #[test]
+    #[should_panic(expected = "r must divide p")]
+    fn r_must_divide_p() {
+        RepCode::new(10, 5, 2);
+    }
+}

@@ -1,0 +1,139 @@
+//! Systematic LT variant (paper §3.2, modification (3)).
+//!
+//! The first `m` encoded rows are the source rows themselves; rows
+//! `m..m_e` are ordinary LT-coded rows. Workers compute the systematic
+//! rows first, so if there is no/little straggling the master assembles
+//! `b` directly and no peeling is needed at all.
+
+use super::lt::{LtCode, LtParams};
+use crate::matrix::Matrix;
+
+/// Systematic LT code: identity prefix + LT suffix.
+#[derive(Clone, Debug)]
+pub struct SystematicLt {
+    inner: LtCode,
+}
+
+impl SystematicLt {
+    pub fn new(m: usize, params: LtParams, seed: u64) -> Self {
+        assert!(params.alpha > 1.0, "systematic LT needs alpha > 1");
+        Self {
+            inner: LtCode::new(m, params, seed),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    pub fn num_encoded(&self) -> usize {
+        self.inner.num_encoded()
+    }
+
+    pub fn params(&self) -> LtParams {
+        self.inner.params()
+    }
+
+    /// Is encoded row `row_id` one of the systematic (identity) rows?
+    pub fn is_systematic(&self, row_id: u64) -> bool {
+        (row_id as usize) < self.m()
+    }
+
+    /// Source indices of encoded row `row_id`.
+    pub fn row_indices(&self, row_id: u64, out: &mut Vec<usize>) {
+        if self.is_systematic(row_id) {
+            out.clear();
+            out.push(row_id as usize);
+        } else {
+            // offset the stream so suffix rows differ from a plain LtCode
+            self.inner.row_indices(row_id, out);
+        }
+    }
+
+    /// Materialize the encoded matrix.
+    pub fn encode(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.m());
+        let me = self.num_encoded();
+        let mut out = Matrix::zeros(me, a.cols());
+        let mut scratch = Vec::new();
+        for row in 0..me as u64 {
+            if self.is_systematic(row) {
+                out.row_mut(row as usize).copy_from_slice(a.row(row as usize));
+            } else {
+                self.inner
+                    .encode_row(a, row, out.row_mut(row as usize), &mut scratch);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::peeling::PeelingDecoder;
+
+    #[test]
+    fn prefix_is_identity() {
+        let m = 30;
+        let a = Matrix::random(m, 5, 1);
+        let code = SystematicLt::new(m, LtParams::with_alpha(2.0), 2);
+        let enc = code.encode(&a);
+        for i in 0..m {
+            assert_eq!(enc.row(i), a.row(i), "systematic row {i}");
+        }
+        let mut idx = Vec::new();
+        code.row_indices(3, &mut idx);
+        assert_eq!(idx, vec![3]);
+    }
+
+    #[test]
+    fn no_straggling_needs_exactly_m_symbols() {
+        let m = 40;
+        let a = Matrix::random(m, 5, 3);
+        let x = Matrix::random_vector(5, 4);
+        let b = a.matvec(&x);
+        let code = SystematicLt::new(m, LtParams::with_alpha(2.0), 5);
+        let enc = code.encode(&a);
+        let be = enc.matvec(&x);
+        let mut dec = PeelingDecoder::new(m, 1);
+        let mut idx = Vec::new();
+        for row in 0..m as u64 {
+            code.row_indices(row, &mut idx);
+            dec.add_symbol(&idx, &be[row as usize..row as usize + 1]);
+        }
+        assert!(dec.is_complete());
+        assert_eq!(dec.completed_at(), Some(m));
+        assert_eq!(dec.into_values(), b);
+    }
+
+    #[test]
+    fn decodes_from_suffix_when_systematic_rows_straggle() {
+        // drop a block of systematic rows; LT suffix must fill the gap
+        let m = 128;
+        let a = Matrix::random(m, 6, 7);
+        let x = Matrix::random_vector(6, 8);
+        let b = a.matvec(&x);
+        let code = SystematicLt::new(m, LtParams::with_alpha(3.0), 9);
+        let enc = code.encode(&a);
+        let be = enc.matvec(&x);
+        let mut dec = PeelingDecoder::new(m, 1);
+        let mut idx = Vec::new();
+        for row in 0..code.num_encoded() as u64 {
+            // lose systematic rows 0..32 (a straggling worker's shard)
+            if row < 32 {
+                continue;
+            }
+            code.row_indices(row, &mut idx);
+            dec.add_symbol(&idx, &be[row as usize..row as usize + 1]);
+            if dec.is_complete() {
+                break;
+            }
+        }
+        assert!(dec.is_complete());
+        let got = dec.into_values();
+        for i in 0..m {
+            assert!((got[i] - b[i]).abs() < 2e-2 * b[i].abs().max(1.0), "i={i}");
+        }
+    }
+}

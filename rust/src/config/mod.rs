@@ -1,0 +1,243 @@
+//! Configuration system: a TOML-subset parser plus typed experiment
+//! configuration structs.
+//!
+//! No `serde`/`toml` crates are available offline, so we parse a
+//! pragmatic TOML subset ourselves — exactly what the configs under
+//! `configs/` use:
+//!
+//! * `[section]` headers
+//! * `key = value` with value ∈ integer | float | bool | "string" |
+//!   `[scalar, scalar, ...]`
+//! * `#` comments, blank lines
+//!
+//! Typed getters convert with clear error messages; unknown keys are
+//! tolerated (forward compatibility) but can be listed for linting.
+
+mod parser;
+pub use parser::{parse, ParseError, Value};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::dist::DelayDist;
+
+/// A parsed config document: section name → key → value.
+/// Keys before any `[section]` live in the `""` section.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn from_str(text: &str) -> Result<Self, ParseError> {
+        parse(text)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.as_ref().display()))?;
+        Ok(Self::from_str(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            None => default,
+            Some(v) => panic!("config {section}.{key}: expected number, got {v:?}"),
+        }
+    }
+
+    pub fn usize(&self, section: &str, key: &str, default: usize) -> usize {
+        match self.get(section, key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as usize,
+            None => default,
+            Some(v) => panic!("config {section}.{key}: expected non-negative int, got {v:?}"),
+        }
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            None => default,
+            Some(v) => panic!("config {section}.{key}: expected bool, got {v:?}"),
+        }
+    }
+
+    pub fn str(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s.clone(),
+            None => default.to_string(),
+            Some(v) => panic!("config {section}.{key}: expected string, got {v:?}"),
+        }
+    }
+
+    pub fn f64_list(&self, section: &str, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(section, key) {
+            Some(Value::List(vs)) => vs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(x) => *x,
+                    Value::Int(i) => *i as f64,
+                    other => panic!("config {section}.{key}: non-numeric list item {other:?}"),
+                })
+                .collect(),
+            None => default.to_vec(),
+            Some(v) => panic!("config {section}.{key}: expected list, got {v:?}"),
+        }
+    }
+}
+
+/// Cluster-level configuration shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of worker nodes `p`.
+    pub workers: usize,
+    /// Initial-delay distribution of the delay model (eq. 5).
+    pub delay: DelayDist,
+    /// Per-row-product time `τ` in (virtual) seconds.
+    pub tau: f64,
+    /// Fraction of a worker's rows per result message (paper §3.2 uses ~10%).
+    pub block_fraction: f64,
+    /// Master RNG seed; every worker/trial derives its own stream.
+    pub seed: u64,
+    /// If true, workers sleep in real time scaled by `time_scale`;
+    /// otherwise delays are tracked in virtual time only.
+    pub real_sleep: bool,
+    /// Real-sleep scale factor: virtual seconds × scale = wall seconds.
+    pub time_scale: f64,
+    /// Rows per encoded symbol for rateless strategies (paper §6.3: the
+    /// Lambda experiment encodes over blocks of 10 rows). 1 = row-level.
+    pub symbol_width: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 10,
+            delay: DelayDist::Exp { mu: 1.0 },
+            tau: 0.001,
+            block_fraction: 0.1,
+            seed: 42,
+            real_sleep: false,
+            time_scale: 1.0,
+            symbol_width: 1,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Read a `[cluster]` section; missing keys fall back to defaults.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        let delay = match doc.str("cluster", "delay", "exp").as_str() {
+            "exp" => DelayDist::Exp {
+                mu: doc.f64("cluster", "mu", 1.0),
+            },
+            "pareto" => DelayDist::Pareto {
+                scale: doc.f64("cluster", "pareto_scale", 1.0),
+                shape: doc.f64("cluster", "pareto_shape", 3.0),
+            },
+            "none" => DelayDist::None,
+            other => panic!("config cluster.delay: unknown distribution {other:?}"),
+        };
+        Self {
+            workers: doc.usize("cluster", "workers", d.workers),
+            delay,
+            tau: doc.f64("cluster", "tau", d.tau),
+            block_fraction: doc.f64("cluster", "block_fraction", d.block_fraction),
+            seed: doc.usize("cluster", "seed", d.seed as usize) as u64,
+            real_sleep: doc.bool("cluster", "real_sleep", d.real_sleep),
+            time_scale: doc.f64("cluster", "time_scale", d.time_scale),
+            symbol_width: doc.usize("cluster", "symbol_width", d.symbol_width),
+        }
+    }
+}
+
+/// Workload (matrix/vector) configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of independent vectors to multiply (paper's EC2 run uses 5).
+    pub vectors: usize,
+    /// Number of trials for error bars.
+    pub trials: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            rows: 10000,
+            cols: 10000,
+            vectors: 1,
+            trials: 10,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        Self {
+            rows: doc.usize("workload", "rows", d.rows),
+            cols: doc.usize("workload", "cols", d.cols),
+            vectors: doc.usize("workload", "vectors", d.vectors),
+            trials: doc.usize("workload", "trials", d.trials),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[cluster]
+workers = 70
+delay = "exp"
+mu = 1.0
+tau = 0.001
+block_fraction = 0.1
+real_sleep = false
+
+[workload]
+rows = 11760
+cols = 9216
+vectors = 5
+
+[lt]
+alpha = 2.0
+alphas = [1.25, 2.0]
+"#;
+
+    #[test]
+    fn typed_getters() {
+        let doc = Doc::from_str(SAMPLE).unwrap();
+        let cluster = ClusterConfig::from_doc(&doc);
+        assert_eq!(cluster.workers, 70);
+        assert_eq!(cluster.delay, DelayDist::Exp { mu: 1.0 });
+        assert!((cluster.tau - 0.001).abs() < 1e-12);
+        assert!(!cluster.real_sleep);
+        let w = WorkloadConfig::from_doc(&doc);
+        assert_eq!((w.rows, w.cols, w.vectors), (11760, 9216, 5));
+        assert_eq!(doc.f64_list("lt", "alphas", &[]), vec![1.25, 2.0]);
+        // defaults for absent keys
+        assert_eq!(doc.usize("workload", "trials", 10), 10);
+    }
+
+    #[test]
+    fn pareto_delay_parse() {
+        let doc = Doc::from_str("[cluster]\ndelay = \"pareto\"\npareto_shape = 3\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(
+            c.delay,
+            DelayDist::Pareto { scale: 1.0, shape: 3.0 }
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Hand-rolled parser for the TOML subset described in [`super`].
+
+
+/// A scalar or list value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a document. See module docs for the accepted grammar.
+pub fn parse(text: &str) -> Result<super::Doc, ParseError> {
+    let mut doc = super::Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let name = stripped
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected `key = value`, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Remove a `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated list"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_list(trimmed) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value {s:?}")))
+}
+
+/// Split a list body on commas outside quotes (no nested lists needed).
+fn split_list(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let doc = parse("a = 1\nb = 2.5\nc = true\nd = \"hi\"\n").unwrap();
+        let top = &doc.sections[""];
+        assert_eq!(top["a"], Value::Int(1));
+        assert_eq!(top["b"], Value::Float(2.5));
+        assert_eq!(top["c"], Value::Bool(true));
+        assert_eq!(top["d"], Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn sections_and_lists() {
+        let doc = parse("[s1]\nxs = [1, 2.5, \"a,b\"]\n[s2]\ny = -3\n").unwrap();
+        assert_eq!(
+            doc.sections["s1"]["xs"],
+            Value::List(vec![
+                Value::Int(1),
+                Value::Float(2.5),
+                Value::Str("a,b".into())
+            ])
+        );
+        assert_eq!(doc.sections["s2"]["y"], Value::Int(-3));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = parse("# top\n\na = 1 # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc.sections[""]["a"], Value::Int(1));
+        assert_eq!(
+            doc.sections[""]["b"],
+            Value::Str("x # not a comment".into())
+        );
+    }
+
+    #[test]
+    fn empty_list() {
+        let doc = parse("xs = []\n").unwrap();
+        assert_eq!(doc.sections[""]["xs"], Value::List(vec![]));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("a = \"oops\n").is_err());
+        assert!(parse("a = [1, 2\n").is_err());
+        assert!(parse("a = what\n").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let doc = parse("[s]\na = 1\na = 2\n").unwrap();
+        assert_eq!(doc.sections["s"]["a"], Value::Int(2));
+    }
+}

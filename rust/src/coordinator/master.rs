@@ -1,0 +1,346 @@
+//! Master-side collection + decode loop for one job.
+//!
+//! The master receives blockwise [`WorkerEvent`]s, feeds a
+//! strategy-specific decode state, and — the moment `b = A·x` is
+//! recoverable — broadcasts the *done* signal (paper §3.2) so workers stop
+//! computing. It then drains the remaining `Done` events to account the
+//! total computations `C` (paper Definition 2) and per-worker load.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::messages::{ChunkMsg, WorkerEvent};
+use super::rateless::RatelessCode;
+use crate::coding::mds::MdsCode;
+use crate::coding::peeling::PeelingDecoder;
+use crate::coding::replication::RepCode;
+
+/// Per-worker load statistics (paper Fig. 2 bars).
+#[derive(Clone, Debug)]
+pub struct WorkerStat {
+    /// Injected initial delay X_i.
+    pub initial_delay: f64,
+    /// Rows computed until finish/cancel/failure (B_i).
+    pub rows_done: usize,
+    /// Worker's final virtual clock X_i + τ·B_i.
+    pub busy_until: f64,
+    pub failed: bool,
+}
+
+/// Result of one distributed multiply.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// The decoded product b = A·x.
+    pub b: Vec<f32>,
+    /// Latency T in virtual seconds (paper Definition 1).
+    pub latency: f64,
+    /// Total computations C across workers (paper Definition 2).
+    pub computations: usize,
+    /// Encoded products actually consumed by the master before decode
+    /// completed (LT: the empirical M′; fixed-rate: rows used).
+    pub symbols_used: usize,
+    /// Wall-clock seconds the master spent in decode bookkeeping.
+    pub decode_cpu: f64,
+    pub per_worker: Vec<WorkerStat>,
+}
+
+/// Why a job failed.
+#[derive(Debug, thiserror::Error)]
+pub enum JobError {
+    #[error("undecodable: all workers finished but b is not recoverable ({detail})")]
+    Undecodable { detail: String },
+    #[error("decode error: {0}")]
+    Decode(String),
+    #[error("worker channel closed unexpectedly")]
+    ChannelClosed,
+}
+
+/// Strategy-specific decode state.
+pub enum DecodeState {
+    Rateless {
+        code: RatelessCode,
+        decoder: PeelingDecoder,
+        /// Global encoded-symbol offset of each worker's shard (in
+        /// super-row units when `width > 1`).
+        starts: Vec<usize>,
+        /// Rows per encoded symbol (paper §6.3 block encoding).
+        width: usize,
+        /// True output length m (before zero padding to width multiples).
+        out_len: usize,
+    },
+    Mds {
+        code: MdsCode,
+        /// Per-worker accumulated block products.
+        buffers: Vec<Vec<f32>>,
+        filled: Vec<usize>,
+        /// Workers whose full block product has arrived, with completion v.
+        complete: Vec<(usize, f64)>,
+    },
+    Rep {
+        code: RepCode,
+        buffers: Vec<Vec<f32>>,
+        filled: Vec<usize>,
+        /// Per group: (worker, completion v) of the first finisher.
+        group_done: Vec<Option<(usize, f64)>>,
+    },
+}
+
+impl DecodeState {
+    /// Returns true once `b` is recoverable.
+    fn complete(&self) -> bool {
+        match self {
+            DecodeState::Rateless { decoder, .. } => decoder.is_complete(),
+            DecodeState::Mds { code, complete, .. } => complete.len() >= code.k(),
+            DecodeState::Rep { group_done, .. } => group_done.iter().all(|g| g.is_some()),
+        }
+    }
+
+    /// Ingest one chunk. Returns the number of products consumed.
+    fn ingest(&mut self, msg: &ChunkMsg, scratch: &mut Vec<usize>) -> usize {
+        match self {
+            DecodeState::Rateless {
+                code,
+                decoder,
+                starts,
+                width,
+                ..
+            } => {
+                let w = *width;
+                debug_assert_eq!(msg.start_row % w, 0, "chunks must align to symbol width");
+                debug_assert_eq!(msg.products.len() % w, 0);
+                let base = starts[msg.worker] + msg.start_row / w;
+                let mut used = 0;
+                for (i, payload) in msg.products.chunks_exact(w).enumerate() {
+                    if decoder.is_complete() {
+                        break;
+                    }
+                    code.row_indices((base + i) as u64, scratch);
+                    decoder.add_symbol(scratch, payload);
+                    code.maybe_finish(decoder);
+                    used += 1;
+                }
+                used * w
+            }
+            DecodeState::Mds {
+                code,
+                buffers,
+                filled,
+                complete,
+            } => {
+                let w = msg.worker;
+                let buf = &mut buffers[w];
+                let end = msg.start_row + msg.products.len();
+                buf[msg.start_row..end].copy_from_slice(&msg.products);
+                filled[w] = filled[w].max(end);
+                if filled[w] == code.block_rows() && !complete.iter().any(|&(cw, _)| cw == w) {
+                    complete.push((w, msg.virtual_time));
+                }
+                msg.products.len()
+            }
+            DecodeState::Rep {
+                code,
+                buffers,
+                filled,
+                group_done,
+            } => {
+                let w = msg.worker;
+                let g = code.worker_group(w);
+                if group_done[g].is_some() {
+                    return 0; // group already served; discard (paper)
+                }
+                let buf = &mut buffers[w];
+                let end = msg.start_row + msg.products.len();
+                buf[msg.start_row..end].copy_from_slice(&msg.products);
+                filled[w] = filled[w].max(end);
+                let (gs, ge) = code.group_rows(g);
+                if filled[w] == ge - gs {
+                    group_done[g] = Some((w, msg.virtual_time));
+                }
+                msg.products.len()
+            }
+        }
+    }
+
+    /// Latency of the completed job: the virtual time of the message that
+    /// completed recovery (fixed-rate: max over the used workers' finish
+    /// clocks; rateless: the completing chunk's clock, passed in).
+    fn latency(&self, completing_v: f64) -> f64 {
+        match self {
+            DecodeState::Rateless { .. } => completing_v,
+            DecodeState::Mds { code, complete, .. } => complete[..code.k()]
+                .iter()
+                .map(|&(_, v)| v)
+                .fold(f64::MIN, f64::max),
+            DecodeState::Rep { group_done, .. } => group_done
+                .iter()
+                .map(|g| g.expect("complete").1)
+                .fold(f64::MIN, f64::max),
+        }
+    }
+
+    /// Produce b after completion.
+    fn finish(self) -> Result<Vec<f32>, JobError> {
+        match self {
+            DecodeState::Rateless {
+                code,
+                decoder,
+                out_len,
+                ..
+            } => Ok(code.extract(decoder, out_len)),
+            DecodeState::Mds {
+                code,
+                mut buffers,
+                complete,
+                ..
+            } => {
+                let results: Vec<(usize, Vec<f32>)> = complete[..code.k()]
+                    .iter()
+                    .map(|&(w, _)| (w, std::mem::take(&mut buffers[w])))
+                    .collect();
+                code.decode(&results)
+                    .map_err(|e| JobError::Decode(e.to_string()))
+            }
+            DecodeState::Rep {
+                code,
+                mut buffers,
+                group_done,
+                ..
+            } => {
+                let results: Vec<Option<Vec<f32>>> = group_done
+                    .iter()
+                    .map(|g| g.map(|(w, _)| std::mem::take(&mut buffers[w])))
+                    .collect();
+                code.decode(&results)
+                    .map_err(|e| JobError::Decode(e.to_string()))
+            }
+        }
+    }
+
+    /// Diagnostic for undecodable jobs.
+    fn detail(&self) -> String {
+        match self {
+            DecodeState::Rateless { decoder, .. } => format!(
+                "rateless: {}/{} sources decoded from {} symbols",
+                decoder.watched_decoded_count(),
+                decoder.m().min(decoder.received_count().max(decoder.m())),
+                decoder.received_count()
+            ),
+            DecodeState::Mds { code, complete, .. } => {
+                format!("mds: {}/{} workers complete", complete.len(), code.k())
+            }
+            DecodeState::Rep { group_done, .. } => format!(
+                "rep: {}/{} groups served",
+                group_done.iter().filter(|g| g.is_some()).count(),
+                group_done.len()
+            ),
+        }
+    }
+}
+
+/// Run the master loop: collect events from `rx` for `p` workers, cancel
+/// on completion, account C, and return the job result. `tau` is the
+/// per-row virtual cost, needed to clamp C at the completion time T
+/// (paper Definition 2 counts work done *until* b is decodable; work
+/// finished in the cancellation window is excluded from C but still
+/// visible in `per_worker.rows_done`).
+pub fn collect(
+    mut state: DecodeState,
+    rx: &Receiver<WorkerEvent>,
+    cancel: &Arc<AtomicBool>,
+    p: usize,
+    initial_delays: &[f64],
+    tau: f64,
+) -> Result<JobResult, JobError> {
+    let mut per_worker: Vec<WorkerStat> = initial_delays
+        .iter()
+        .map(|&x| WorkerStat {
+            initial_delay: x,
+            rows_done: 0,
+            busy_until: x,
+            failed: false,
+        })
+        .collect();
+    let mut done_workers = 0usize;
+    let mut symbols_used = 0usize;
+    let mut completing_v = f64::MIN;
+    let mut decode_cpu = 0.0f64;
+    let mut scratch = Vec::new();
+    let mut finished: Option<(f64, DecodeState)> = None;
+
+    while done_workers < p {
+        let ev = rx.recv().map_err(|_| JobError::ChannelClosed)?;
+        match ev {
+            WorkerEvent::Chunk(msg) => {
+                if finished.is_some() {
+                    continue; // post-cancel stragglers
+                }
+                let t0 = Instant::now();
+                let used = state.ingest(&msg, &mut scratch);
+                decode_cpu += t0.elapsed().as_secs_f64();
+                symbols_used += used;
+                if used > 0 {
+                    completing_v = completing_v.max(msg.virtual_time);
+                }
+                if state.complete() {
+                    let latency = state.latency(completing_v);
+                    cancel.store(true, Ordering::Relaxed);
+                    // move the state out; keep draining Done events
+                    let placeholder = DecodeState::Rep {
+                        code: RepCode::new(1, 1, 1),
+                        buffers: vec![],
+                        filled: vec![],
+                        group_done: vec![Some((0, 0.0))],
+                    };
+                    finished = Some((latency, std::mem::replace(&mut state, placeholder)));
+                }
+            }
+            WorkerEvent::Done {
+                worker,
+                rows_done,
+                virtual_time,
+                failed,
+            } => {
+                let stat = &mut per_worker[worker];
+                stat.rows_done = rows_done;
+                stat.busy_until = virtual_time;
+                stat.failed = failed;
+                done_workers += 1;
+            }
+        }
+    }
+
+    match finished {
+        Some((latency, st)) => {
+            let t0 = Instant::now();
+            let b = st.finish()?;
+            decode_cpu += t0.elapsed().as_secs_f64();
+            // C (Definition 2): rows finished by time T under the delay
+            // model — clamp each worker's count at floor((T − X_i)/τ).
+            let computations = per_worker
+                .iter()
+                .map(|s| {
+                    let by_t = if latency > s.initial_delay {
+                        // +1e-9 guards fp error at exact task boundaries
+                        ((latency - s.initial_delay) / tau + 1e-9).floor() as usize
+                    } else {
+                        0
+                    };
+                    s.rows_done.min(by_t)
+                })
+                .sum();
+            Ok(JobResult {
+                b,
+                latency,
+                computations,
+                symbols_used,
+                decode_cpu,
+                per_worker,
+            })
+        }
+        None => Err(JobError::Undecodable {
+            detail: state.detail(),
+        }),
+    }
+}

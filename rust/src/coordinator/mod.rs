@@ -1,0 +1,487 @@
+//! The distributed master/worker coordinator — the paper's system
+//! contribution as a running artifact.
+//!
+//! A [`Coordinator`] encodes a matrix once under a chosen [`Strategy`]
+//! (paper §2.3/§3), distributes the encoded shards to `p` worker threads,
+//! and serves multiply jobs: broadcast `x`, collect blockwise partial
+//! products, decode online, cancel leftover work the moment `b = A·x` is
+//! recoverable. Worker straggling follows the paper's delay model via
+//! [`straggler::StragglerProfile`] (threads really sleep, so message
+//! ordering, partial work and cancellation behave like the paper's EC2
+//! cluster — see DESIGN.md substitutions).
+
+pub mod master;
+pub mod messages;
+pub mod rateless;
+pub mod straggler;
+pub mod stream;
+pub mod worker;
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use master::{JobError, JobResult, WorkerStat};
+use rateless::RatelessCode;
+use straggler::StragglerProfile;
+
+use crate::coding::lt::{LtCode, LtParams};
+use crate::coding::mds::MdsCode;
+use crate::coding::raptor::{RaptorCode, RaptorParams};
+use crate::coding::replication::RepCode;
+use crate::coding::systematic::SystematicLt;
+use crate::config::ClusterConfig;
+use crate::matrix::Matrix;
+use crate::runtime::Engine;
+
+/// Coding strategy for a coordinator instance.
+#[derive(Clone, Debug)]
+pub enum Strategy {
+    /// Naive split, no redundancy (replication with r = 1).
+    Uncoded,
+    /// r-replication (paper §2.3).
+    Replication { r: usize },
+    /// (p, k) MDS coding (paper §4.4).
+    Mds { k: usize },
+    /// Rateless LT (the paper's contribution, §3).
+    Lt(LtParams),
+    /// Systematic LT (paper §3.2 modification 3).
+    SystematicLt(LtParams),
+    /// Raptor-style precode + LT (paper §3.2 modification 2).
+    Raptor(RaptorParams),
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Uncoded => "uncoded".into(),
+            Strategy::Replication { r } => format!("rep{r}"),
+            Strategy::Mds { k } => format!("mds{k}"),
+            Strategy::Lt(p) => format!("lt{:.2}", p.alpha),
+            Strategy::SystematicLt(p) => format!("syslt{:.2}", p.alpha),
+            Strategy::Raptor(p) => format!("raptor{:.2}", p.alpha),
+        }
+    }
+}
+
+/// Encoded shards + decode recipe, fixed at `Coordinator::new`.
+enum Assignment {
+    Rateless {
+        code: RatelessCode,
+        /// Per-worker shard offsets in encoded-symbol (super-row) units.
+        starts: Vec<usize>,
+        /// Rows per encoded symbol.
+        width: usize,
+    },
+    Mds {
+        code: MdsCode,
+    },
+    Rep {
+        code: RepCode,
+    },
+}
+
+/// Per-job knobs.
+#[derive(Clone, Debug, Default)]
+pub struct JobOptions {
+    /// Seed for this job's delay draws (0 ⇒ use the coordinator's
+    /// running counter).
+    pub seed: Option<u64>,
+    /// Override the cluster's straggler profile for this job.
+    pub profile: Option<StragglerProfile>,
+}
+
+/// The master node: owns encoded shards and serves multiply jobs.
+pub struct Coordinator {
+    cluster: ClusterConfig,
+    strategy: Strategy,
+    engine: Engine,
+    assignment: Assignment,
+    shards: Vec<Arc<Matrix>>,
+    profile: StragglerProfile,
+    m: usize,
+    n: usize,
+    jobs_served: std::cell::Cell<u64>,
+}
+
+impl Coordinator {
+    /// Encode `a` under `strategy` and distribute shards across
+    /// `cluster.workers` workers. Encoding is the preprocessing step of
+    /// paper §3.2 — performed once, off the latency path.
+    pub fn new(
+        cluster: ClusterConfig,
+        strategy: Strategy,
+        engine: Engine,
+        a: &Matrix,
+    ) -> anyhow::Result<Self> {
+        let p = cluster.workers;
+        anyhow::ensure!(p >= 1, "need at least one worker");
+        anyhow::ensure!(cluster.symbol_width >= 1, "symbol_width must be >= 1");
+        let seed = cluster.seed;
+        let width = cluster.symbol_width;
+        let (assignment, shards) = match &strategy {
+            Strategy::Uncoded => {
+                let code = RepCode::new(a.rows(), p, 1);
+                let shards = (0..p)
+                    .map(|w| Arc::new(code.encode_worker(a, w)))
+                    .collect();
+                (Assignment::Rep { code }, shards)
+            }
+            Strategy::Replication { r } => {
+                let code = RepCode::new(a.rows(), p, *r);
+                let shards = (0..p)
+                    .map(|w| Arc::new(code.encode_worker(a, w)))
+                    .collect();
+                (Assignment::Rep { code }, shards)
+            }
+            Strategy::Mds { k } => {
+                let code = MdsCode::new(a.rows(), p, *k, seed);
+                let shards = code.encode(a).into_iter().map(Arc::new).collect();
+                (Assignment::Mds { code }, shards)
+            }
+            Strategy::Lt(params) => {
+                let (sup, sm) = superpose(a, width);
+                let code = RatelessCode::Lt(LtCode::new(sm, *params, seed));
+                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
+                (Assignment::Rateless { code, starts, width }, shards)
+            }
+            Strategy::SystematicLt(params) => {
+                let (sup, sm) = superpose(a, width);
+                let code = RatelessCode::Systematic(SystematicLt::new(sm, *params, seed));
+                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
+                (Assignment::Rateless { code, starts, width }, shards)
+            }
+            Strategy::Raptor(params) => {
+                let (sup, sm) = superpose(a, width);
+                let code = RatelessCode::Raptor(RaptorCode::new(sm, *params, seed));
+                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
+                (Assignment::Rateless { code, starts, width }, shards)
+            }
+        };
+        let profile = StragglerProfile::new(cluster.delay);
+        Ok(Self {
+            m: a.rows(),
+            n: a.cols(),
+            cluster,
+            strategy,
+            engine,
+            assignment,
+            shards,
+            profile,
+            jobs_served: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn strategy(&self) -> &Strategy {
+        &self.strategy
+    }
+
+    pub fn cluster(&self) -> &ClusterConfig {
+        &self.cluster
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Total encoded rows held across all workers.
+    pub fn encoded_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.rows()).sum()
+    }
+
+    /// Multiply with default per-job options.
+    pub fn multiply(&self, x: &[f32]) -> Result<JobResult, JobError> {
+        self.multiply_opts(x, &JobOptions::default())
+    }
+
+    /// Multiply `A · x` across the worker fleet.
+    pub fn multiply_opts(&self, x: &[f32], opts: &JobOptions) -> Result<JobResult, JobError> {
+        assert_eq!(x.len(), self.n, "vector length mismatch");
+        let p = self.cluster.workers;
+        let job_idx = self.jobs_served.get();
+        self.jobs_served.set(job_idx + 1);
+        let seed = opts
+            .seed
+            .unwrap_or_else(|| crate::util::rng::derive_seed(self.cluster.seed, 1000 + job_idx));
+        let profile = opts.profile.as_ref().unwrap_or(&self.profile);
+        let plans = profile.draw(p, seed);
+
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel();
+        let x_arc = Arc::new(x.to_vec());
+        let start = Instant::now();
+        let mut handles = Vec::with_capacity(p);
+        let width = match &self.assignment {
+            Assignment::Rateless { width, .. } => *width,
+            _ => 1,
+        };
+        for w in 0..p {
+            let shard = Arc::clone(&self.shards[w]);
+            let mut block_rows = ((shard.rows() as f64 * self.cluster.block_fraction).round()
+                as usize)
+                .clamp(1, shard.rows().max(1));
+            // align result messages to encoded-symbol boundaries
+            block_rows = block_rows.div_ceil(width) * width;
+            let task = worker::WorkerTask {
+                worker: w,
+                shard,
+                x: Arc::clone(&x_arc),
+                engine: self.engine.clone(),
+                plan: plans[w],
+                tau: self.cluster.tau,
+                block_rows,
+                time_scale: if self.cluster.real_sleep {
+                    self.cluster.time_scale
+                } else {
+                    0.0
+                },
+                tx: tx.clone(),
+                cancel: Arc::clone(&cancel),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || worker::run_worker(task, start))
+                    .expect("spawn worker"),
+            );
+        }
+        drop(tx);
+
+        let state = self.decode_state();
+        let delays: Vec<f64> = plans.iter().map(|pl| pl.initial_delay).collect();
+        let result = master::collect(state, &rx, &cancel, p, &delays, self.cluster.tau);
+        // ensure all threads are joined before returning (no leaks)
+        cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in handles {
+            let _ = h.join();
+        }
+        result
+    }
+
+    /// Build the per-job decode state for the configured strategy.
+    fn decode_state(&self) -> master::DecodeState {
+        match &self.assignment {
+            Assignment::Rateless { code, starts, width } => master::DecodeState::Rateless {
+                code: code.clone(),
+                decoder: code.new_decoder(*width),
+                starts: starts.clone(),
+                width: *width,
+                out_len: self.m,
+            },
+            Assignment::Mds { code } => master::DecodeState::Mds {
+                code: code.clone(),
+                buffers: self.shards.iter().map(|s| vec![0.0; s.rows()]).collect(),
+                filled: vec![0; self.cluster.workers],
+                complete: Vec::new(),
+            },
+            Assignment::Rep { code } => master::DecodeState::Rep {
+                code: code.clone(),
+                buffers: self.shards.iter().map(|s| vec![0.0; s.rows()]).collect(),
+                filled: vec![0; self.cluster.workers],
+                group_done: vec![None; code.groups()],
+            },
+        }
+    }
+}
+
+/// Reshape `a` into super-rows of `width` rows each (zero-padded), the
+/// source symbols of a block-encoded rateless code (paper §6.3). Returns
+/// the reshaped matrix and the super-row count. `width == 1` is the
+/// identity reshape (cheap: one copy).
+fn superpose(a: &Matrix, width: usize) -> (Matrix, usize) {
+    let sm = a.rows().div_ceil(width);
+    if a.rows() == sm * width {
+        // reinterpret rows without changing the buffer layout
+        let reshaped = Matrix::from_vec(sm, width * a.cols(), a.data().to_vec());
+        return (reshaped, sm);
+    }
+    let mut data = a.data().to_vec();
+    data.resize(sm * width * a.cols(), 0.0);
+    (Matrix::from_vec(sm, width * a.cols(), data), sm)
+}
+
+/// Split the encoded matrix of a rateless code into p contiguous shards.
+/// Encoding happens in super-row space (`sup` is the reshaped source
+/// matrix); shards are re-expressed as `(rows × n)` matrices so workers
+/// compute ordinary row products. `starts` are in super-row units.
+fn shard_rateless(
+    code: &RatelessCode,
+    sup: &Matrix,
+    p: usize,
+    width: usize,
+    n: usize,
+) -> (Vec<usize>, Vec<Arc<Matrix>>) {
+    let enc = code.encode(sup); // (m_e_super × width·n)
+    let me = enc.rows();
+    let mut starts = Vec::with_capacity(p);
+    let mut shards = Vec::with_capacity(p);
+    for w in 0..p {
+        let s = w * me / p;
+        let e = (w + 1) * me / p;
+        starts.push(s);
+        // row-major (count, width·n) == (count·width, n): same buffer
+        let count = e - s;
+        let slice = enc.row_block(s, count).to_vec();
+        shards.push(Arc::new(Matrix::from_vec(count * width, n, slice)));
+    }
+    (starts, shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::dist::DelayDist;
+
+    fn fast_cluster(p: usize) -> ClusterConfig {
+        ClusterConfig {
+            workers: p,
+            delay: DelayDist::Exp { mu: 2000.0 }, // ~0.5 ms initial delays
+            tau: 2e-5,
+            block_fraction: 0.25,
+            seed: 7,
+            real_sleep: true,
+            time_scale: 1.0,
+            symbol_width: 1,
+        }
+    }
+
+    fn check_strategy(strategy: Strategy, m: usize, p: usize) {
+        let a = Matrix::random(m, 12, 100);
+        let x = Matrix::random_vector(12, 101);
+        let want = a.matvec(&x);
+        let coord = Coordinator::new(fast_cluster(p), strategy.clone(), Engine::Native, &a)
+            .expect("coordinator");
+        let out = coord.multiply(&x).expect("multiply");
+        assert_eq!(out.b.len(), m, "{}", strategy.name());
+        for i in 0..m {
+            assert!(
+                (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                "{} row {i}: {} vs {}",
+                strategy.name(),
+                out.b[i],
+                want[i]
+            );
+        }
+        assert!(out.latency > 0.0);
+        assert!(out.computations >= m.min(out.symbols_used));
+        assert_eq!(out.per_worker.len(), p);
+    }
+
+    #[test]
+    fn uncoded_decodes() {
+        check_strategy(Strategy::Uncoded, 64, 4);
+    }
+
+    #[test]
+    fn replication_decodes() {
+        check_strategy(Strategy::Replication { r: 2 }, 64, 4);
+    }
+
+    #[test]
+    fn mds_decodes() {
+        check_strategy(Strategy::Mds { k: 3 }, 66, 4);
+    }
+
+    #[test]
+    fn lt_decodes() {
+        check_strategy(Strategy::Lt(LtParams::with_alpha(3.0)), 128, 4);
+    }
+
+    #[test]
+    fn systematic_lt_decodes() {
+        check_strategy(Strategy::SystematicLt(LtParams::with_alpha(3.0)), 128, 4);
+    }
+
+    #[test]
+    fn raptor_decodes() {
+        check_strategy(Strategy::Raptor(RaptorParams::default()), 128, 4);
+    }
+
+    #[test]
+    fn straggler_increases_latency_but_lt_still_decodes() {
+        let m = 256;
+        let a = Matrix::random(m, 8, 1);
+        let x = Matrix::random_vector(8, 2);
+        let want = a.matvec(&x);
+        let mut cluster = fast_cluster(4);
+        cluster.delay = DelayDist::None;
+        let coord = Coordinator::new(
+            cluster,
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        // one worker delayed 50 ms (huge vs τ·shard = 128·2e-5 ≈ 2.6 ms)
+        let profile = StragglerProfile::none();
+        let mut opts = JobOptions {
+            seed: Some(1),
+            profile: Some(profile),
+        };
+        let fast = coord.multiply_opts(&x, &opts).unwrap();
+        opts.profile = Some(StragglerProfile::new(DelayDist::Exp { mu: 20.0 }));
+        let slow = coord.multiply_opts(&x, &opts).unwrap();
+        assert!(slow.latency > fast.latency);
+        for i in 0..m {
+            assert!((slow.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0));
+        }
+        // the straggled run must NOT have waited for every worker: the
+        // fastest workers carried more of the load
+        let loads: Vec<usize> = slow.per_worker.iter().map(|s| s.rows_done).collect();
+        let min = *loads.iter().min().unwrap();
+        let max = *loads.iter().max().unwrap();
+        assert!(max > min, "LT should load-balance: loads {loads:?}");
+    }
+
+    #[test]
+    fn uncoded_fails_on_worker_failure_but_lt_survives() {
+        let m = 128;
+        let a = Matrix::random(m, 8, 3);
+        let x = Matrix::random_vector(8, 4);
+        let mut cluster = fast_cluster(4);
+        cluster.delay = DelayDist::None;
+        let opts = JobOptions {
+            seed: Some(2),
+            profile: Some(StragglerProfile::none().with_failures(vec![1], 0)),
+        };
+        let unc = Coordinator::new(cluster.clone(), Strategy::Uncoded, Engine::Native, &a)
+            .unwrap();
+        match unc.multiply_opts(&x, &opts) {
+            Err(JobError::Undecodable { .. }) => {}
+            other => panic!("uncoded must fail on a dead worker, got {other:?}"),
+        }
+        let lt = Coordinator::new(
+            cluster,
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        let out = lt.multiply_opts(&x, &opts).unwrap();
+        let want = a.matvec(&x);
+        for i in 0..m {
+            assert!((out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0));
+        }
+        assert!(out.per_worker[1].failed);
+    }
+
+    #[test]
+    fn computations_accounting() {
+        // MDS with heavy redundancy performs more computations than m
+        let m = 120;
+        let a = Matrix::random(m, 8, 5);
+        let x = Matrix::random_vector(8, 6);
+        let mut cluster = fast_cluster(4);
+        cluster.delay = DelayDist::None;
+        let coord =
+            Coordinator::new(cluster, Strategy::Mds { k: 2 }, Engine::Native, &a).unwrap();
+        let out = coord.multiply(&x).unwrap();
+        // k=2, p=4: worst case C = 4·m/2 = 2m; no straggling ⇒ near it
+        assert!(
+            out.computations > m,
+            "C = {} should exceed m = {m}",
+            out.computations
+        );
+    }
+}

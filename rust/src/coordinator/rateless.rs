@@ -1,0 +1,134 @@
+//! Unified facade over the three rateless code variants the coordinator
+//! can run (plain LT, systematic LT, Raptor-style), so the master's decode
+//! loop is variant-agnostic.
+
+use crate::coding::lt::LtCode;
+use crate::coding::peeling::PeelingDecoder;
+use crate::coding::raptor::RaptorCode;
+use crate::coding::systematic::SystematicLt;
+use crate::matrix::Matrix;
+
+/// A rateless code usable by the coordinator.
+#[derive(Clone, Debug)]
+pub enum RatelessCode {
+    Lt(LtCode),
+    Systematic(SystematicLt),
+    Raptor(RaptorCode),
+}
+
+impl RatelessCode {
+    /// Source row count m.
+    pub fn m(&self) -> usize {
+        match self {
+            RatelessCode::Lt(c) => c.m(),
+            RatelessCode::Systematic(c) => c.m(),
+            RatelessCode::Raptor(c) => c.m(),
+        }
+    }
+
+    /// Encoded row count m_e.
+    pub fn num_encoded(&self) -> usize {
+        match self {
+            RatelessCode::Lt(c) => c.num_encoded(),
+            RatelessCode::Systematic(c) => c.num_encoded(),
+            RatelessCode::Raptor(c) => c.num_encoded(),
+        }
+    }
+
+    /// Materialize the encoded matrix A_e.
+    pub fn encode(&self, a: &Matrix) -> Matrix {
+        match self {
+            RatelessCode::Lt(c) => c.encode(a),
+            RatelessCode::Systematic(c) => c.encode(a),
+            RatelessCode::Raptor(c) => c.encode(a),
+        }
+    }
+
+    /// Source-index set of encoded row `row_id` (Raptor: indices are over
+    /// the intermediate symbols — consistent with its decoder).
+    pub fn row_indices(&self, row_id: u64, out: &mut Vec<usize>) {
+        match self {
+            RatelessCode::Lt(c) => c.row_indices(row_id, out),
+            RatelessCode::Systematic(c) => c.row_indices(row_id, out),
+            RatelessCode::Raptor(c) => c.row_indices(row_id, out),
+        }
+    }
+
+    /// Fresh decoder for one matvec job with payload width `w` (w > 1 for
+    /// block encoding, paper §6.3).
+    pub fn new_decoder(&self, w: usize) -> PeelingDecoder {
+        match self {
+            RatelessCode::Lt(c) => PeelingDecoder::new(c.m(), w),
+            RatelessCode::Systematic(c) => PeelingDecoder::new(c.m(), w),
+            RatelessCode::Raptor(c) => c.decoder(w),
+        }
+    }
+
+    /// Post-symbol completion hook: Raptor runs its inactivation-decoding
+    /// policy; plain/systematic LT rely on pure peeling (paper fidelity).
+    /// Returns completion state.
+    pub fn maybe_finish(&self, dec: &mut PeelingDecoder) -> bool {
+        match self {
+            RatelessCode::Raptor(c) => c.maybe_inactivate(dec) || dec.is_complete(),
+            _ => dec.is_complete(),
+        }
+    }
+
+    /// Extract `b` (length `out_len`) from a completed decoder: for
+    /// Raptor the parity tail is dropped; for block encoding (`w > 1`)
+    /// zero padding beyond the true row count is trimmed.
+    pub fn extract(&self, decoder: PeelingDecoder, out_len: usize) -> Vec<f32> {
+        let w = decoder.width();
+        let mut values = decoder.into_values();
+        values.truncate(self.m() * w); // Raptor: drop the parity tail
+        values.truncate(out_len);
+        values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::lt::LtParams;
+    use crate::coding::raptor::RaptorParams;
+
+    fn roundtrip(name: &str, code: &RatelessCode) {
+        let m = code.m();
+        let a = Matrix::random(m, 6, 5);
+        let x = Matrix::random_vector(6, 6);
+        let b = a.matvec(&x);
+        let enc = code.encode(&a);
+        let be = enc.matvec(&x);
+        let mut dec = code.new_decoder(1);
+        let mut idx = Vec::new();
+        for row in 0..enc.rows() {
+            code.row_indices(row as u64, &mut idx);
+            dec.add_symbol(&idx, &be[row..row + 1]);
+            if code.maybe_finish(&mut dec) {
+                break;
+            }
+        }
+        assert!(dec.is_complete(), "{name} failed to decode from m_e symbols");
+        let got = code.extract(dec, m);
+        assert_eq!(got.len(), m);
+        for i in 0..m {
+            assert!((got[i] - b[i]).abs() < 2e-2 * b[i].abs().max(1.0), "i={i}");
+        }
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        // Small-m LT needs generous α: the paper's ε→0 is asymptotic in m,
+        // and at m≈100 the decoding threshold routinely exceeds 2m.
+        let small_m = LtParams::with_alpha(3.5);
+        roundtrip("lt", &RatelessCode::Lt(LtCode::new(96, small_m, 1)));
+        roundtrip(
+            "systematic",
+            &RatelessCode::Systematic(SystematicLt::new(96, small_m, 2)),
+        );
+        roundtrip(
+            "raptor",
+            &RatelessCode::Raptor(RaptorCode::new(96, RaptorParams::default(), 3)),
+        );
+    }
+}

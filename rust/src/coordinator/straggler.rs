@@ -1,0 +1,111 @@
+//! Straggler injection (DESIGN.md substitution: cloud nodes → threads).
+//!
+//! The paper's delay model (eq. 5) reduces a worker node to an initial
+//! delay `X_i` plus `τ` per row-product. Worker threads *actually sleep*
+//! these amounts (scaled by `time_scale`), so message arrival order at the
+//! master — and therefore cancellation, partial work and load balancing —
+//! behaves like the paper's clusters. Failure injection (paper Fig. 12 /
+//! Appendix F) marks workers that silently die partway through.
+
+use crate::util::dist::DelayDist;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Straggling behaviour of the simulated cluster for one job.
+#[derive(Clone, Debug)]
+pub struct StragglerProfile {
+    /// Initial-delay distribution for `X_i`.
+    pub delay: DelayDist,
+    /// Worker ids that fail this job: they compute `fail_after_rows` rows
+    /// then die silently (no further messages).
+    pub failures: Vec<usize>,
+    /// Rows a failing worker completes before dying.
+    pub fail_after_rows: usize,
+}
+
+impl StragglerProfile {
+    pub fn new(delay: DelayDist) -> Self {
+        Self {
+            delay,
+            failures: Vec::new(),
+            fail_after_rows: 0,
+        }
+    }
+
+    /// Shifted-exponential initial delays (paper §4): `X ~ exp(mu)`.
+    pub fn shifted_exp(mu: f64) -> Self {
+        Self::new(DelayDist::Exp { mu })
+    }
+
+    /// Pareto initial delays (paper Appendix F): `X ~ Pareto(scale, shape)`.
+    pub fn pareto(scale: f64, shape: f64) -> Self {
+        Self::new(DelayDist::Pareto { scale, shape })
+    }
+
+    /// No straggling (control).
+    pub fn none() -> Self {
+        Self::new(DelayDist::None)
+    }
+
+    /// Mark `workers` as failing after `rows` computed rows.
+    pub fn with_failures(mut self, workers: Vec<usize>, rows: usize) -> Self {
+        self.failures = workers;
+        self.fail_after_rows = rows;
+        self
+    }
+
+    /// Draw the per-worker plan for one job: `(X_i, fail_after)` where
+    /// `fail_after = None` means the worker is healthy.
+    pub fn draw(&self, p: usize, seed: u64) -> Vec<WorkerPlan> {
+        (0..p)
+            .map(|w| {
+                let mut rng = Rng::new(derive_seed(seed, w as u64));
+                WorkerPlan {
+                    initial_delay: self.delay.sample(&mut rng),
+                    fail_after: self
+                        .failures
+                        .contains(&w)
+                        .then_some(self.fail_after_rows),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One worker's injected behaviour for one job.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPlan {
+    /// Initial delay `X_i` in virtual seconds.
+    pub initial_delay: f64,
+    /// Die after this many rows (None = healthy).
+    pub fail_after: Option<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_deterministic_per_seed() {
+        let prof = StragglerProfile::shifted_exp(1.0);
+        let a = prof.draw(5, 42);
+        let b = prof.draw(5, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.initial_delay, y.initial_delay);
+        }
+        let c = prof.draw(5, 43);
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.initial_delay != y.initial_delay));
+    }
+
+    #[test]
+    fn failures_marked() {
+        let prof = StragglerProfile::none().with_failures(vec![1, 3], 10);
+        let plan = prof.draw(4, 1);
+        assert_eq!(plan[0].fail_after, None);
+        assert_eq!(plan[1].fail_after, Some(10));
+        assert_eq!(plan[3].fail_after, Some(10));
+        assert_eq!(plan[0].initial_delay, 0.0);
+    }
+}

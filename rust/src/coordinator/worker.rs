@@ -1,0 +1,254 @@
+//! Worker thread: computes its shard's row-products blockwise, paced by
+//! the injected delay model, until finished, cancelled or failed.
+//!
+//! The worker keeps a **virtual clock** `v = X_i + τ·rows_done` (the
+//! paper's eq. 5) and sleeps so that wall-clock time tracks
+//! `v · time_scale` — unless the real chunk computation (PJRT/native) is
+//! slower, in which case real time wins, exactly like a real overloaded
+//! node. Cancellation is checked between sleep slices and between chunks.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::messages::{ChunkMsg, WorkerEvent};
+use super::straggler::WorkerPlan;
+use crate::matrix::Matrix;
+use crate::runtime::Engine;
+
+/// Everything a worker thread needs for one job.
+pub struct WorkerTask {
+    pub worker: usize,
+    /// This worker's encoded shard (rows × n).
+    pub shard: Arc<Matrix>,
+    /// The broadcast vector.
+    pub x: Arc<Vec<f32>>,
+    pub engine: Engine,
+    pub plan: WorkerPlan,
+    /// Seconds of virtual time per row-product (τ).
+    pub tau: f64,
+    /// Rows per result message (≥ 1).
+    pub block_rows: usize,
+    /// wall seconds = virtual seconds × time_scale (0 ⇒ no pacing).
+    pub time_scale: f64,
+    pub tx: Sender<WorkerEvent>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// Sleep until `deadline`, slicing so cancellation is honoured within
+/// ~2 ms. Returns false if cancelled.
+fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) -> bool {
+    const SLICE: Duration = Duration::from_millis(2);
+    loop {
+        if cancel.load(Ordering::Relaxed) {
+            return false;
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let remaining = deadline - elapsed;
+        if remaining <= 0.0 {
+            return true;
+        }
+        std::thread::sleep(SLICE.min(Duration::from_secs_f64(remaining)));
+    }
+}
+
+/// Run one worker to completion. `start` is the job's wall-clock origin
+/// (shared across workers so virtual clocks are comparable).
+pub fn run_worker(task: WorkerTask, start: Instant) {
+    let WorkerTask {
+        worker,
+        shard,
+        x,
+        engine,
+        plan,
+        tau,
+        block_rows,
+        time_scale,
+        tx,
+        cancel,
+    } = task;
+    let rows = shard.rows();
+    let cols = shard.cols();
+    let mut rows_done = 0usize;
+    let mut v = plan.initial_delay;
+    let mut failed = false;
+
+    // initial delay X_i
+    let alive = time_scale <= 0.0 || sleep_until(start, v * time_scale, &cancel);
+
+    if alive {
+        let mut r = 0usize;
+        while r < rows {
+            if cancel.load(Ordering::Relaxed) {
+                break;
+            }
+            // injected failure: die silently mid-shard
+            if let Some(fail_after) = plan.fail_after {
+                if rows_done >= fail_after {
+                    failed = true;
+                    break;
+                }
+            }
+            let mut len = block_rows.min(rows - r);
+            if let Some(fail_after) = plan.fail_after {
+                // fail exactly at the boundary so rows_done == fail_after
+                len = len.min(fail_after - rows_done.min(fail_after)).max(0);
+                if len == 0 {
+                    failed = true;
+                    break;
+                }
+            }
+            let block = shard.row_block(r, len);
+            let products = match engine.matvec_chunk(block, len, cols, &x) {
+                Ok(p) => p,
+                Err(e) => {
+                    crate::warn_!("worker {worker}: engine error: {e}; dying");
+                    failed = true;
+                    break;
+                }
+            };
+            rows_done += len;
+            v = plan.initial_delay + tau * rows_done as f64;
+            // pace to the virtual clock (cancellable)
+            if time_scale > 0.0 && !sleep_until(start, v * time_scale, &cancel) {
+                // cancelled mid-block: the block was computed; report it as
+                // done work but don't bother sending the products
+                break;
+            }
+            let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
+                worker,
+                start_row: r,
+                products,
+                virtual_time: v,
+            }));
+            r += len;
+        }
+    }
+
+    let _ = tx.send(WorkerEvent::Done {
+        worker,
+        rows_done,
+        virtual_time: v,
+        failed,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::straggler::WorkerPlan;
+    use std::sync::mpsc::channel;
+
+    fn plan(x: f64) -> WorkerPlan {
+        WorkerPlan {
+            initial_delay: x,
+            fail_after: None,
+        }
+    }
+
+    fn spawn(task: WorkerTask) {
+        let start = Instant::now();
+        std::thread::spawn(move || run_worker(task, start));
+    }
+
+    fn base_task(rows: usize, tx: Sender<WorkerEvent>, cancel: Arc<AtomicBool>) -> WorkerTask {
+        let shard = Arc::new(Matrix::random(rows, 4, 1));
+        WorkerTask {
+            worker: 0,
+            shard,
+            x: Arc::new(vec![1.0; 4]),
+            engine: Engine::Native,
+            plan: plan(0.0),
+            tau: 1e-6,
+            block_rows: 3,
+            time_scale: 0.0,
+            tx,
+            cancel,
+        }
+    }
+
+    #[test]
+    fn sends_all_chunks_then_done() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let task = base_task(10, tx, cancel);
+        let shard = Arc::clone(&task.shard);
+        let x = Arc::clone(&task.x);
+        spawn(task);
+        let mut got = vec![f32::NAN; 10];
+        let mut done = false;
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                WorkerEvent::Chunk(c) => {
+                    for (i, p) in c.products.iter().enumerate() {
+                        got[c.start_row + i] = *p;
+                    }
+                    assert!(c.virtual_time > 0.0);
+                }
+                WorkerEvent::Done {
+                    rows_done, failed, ..
+                } => {
+                    assert_eq!(rows_done, 10);
+                    assert!(!failed);
+                    done = true;
+                    break;
+                }
+            }
+        }
+        assert!(done);
+        let want = shard.matvec(&x);
+        for i in 0..10 {
+            assert!((got[i] - want[i]).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn failure_stops_at_boundary() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut task = base_task(10, tx, cancel);
+        task.plan = WorkerPlan {
+            initial_delay: 0.0,
+            fail_after: Some(4),
+        };
+        spawn(task);
+        let mut rows_received = 0;
+        loop {
+            match rx.recv().unwrap() {
+                WorkerEvent::Chunk(c) => rows_received += c.products.len(),
+                WorkerEvent::Done {
+                    rows_done, failed, ..
+                } => {
+                    assert!(failed);
+                    assert_eq!(rows_done, 4);
+                    break;
+                }
+            }
+        }
+        assert_eq!(rows_received, 4);
+    }
+
+    #[test]
+    fn cancellation_interrupts_sleep() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut task = base_task(1000, tx, Arc::clone(&cancel));
+        task.plan = plan(100.0); // would sleep 100 virtual seconds
+        task.time_scale = 1.0;
+        spawn(task);
+        std::thread::sleep(Duration::from_millis(30));
+        cancel.store(true, Ordering::Relaxed);
+        let t0 = Instant::now();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                WorkerEvent::Done { rows_done, .. } => {
+                    assert_eq!(rows_done, 0);
+                    break;
+                }
+                _ => panic!("no chunks expected"),
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1), "cancel must be fast");
+    }
+}

@@ -1,0 +1,13 @@
+//! Figure/table regeneration harness — one function per paper artifact.
+//!
+//! Every function writes a machine-readable CSV under `results/` and
+//! returns an ASCII rendering of the plot/table so the reproduced shape is
+//! visible on stdout. The experiment index in DESIGN.md §3 maps each
+//! figure to its parameters; sizes are arguments so tests and the bench
+//! harness can run scaled-down variants.
+
+mod analytic;
+mod cluster;
+
+pub use analytic::{fig1, fig7, fig9, fig11, table1, theory};
+pub use cluster::{fig12, fig2, fig8, Env};

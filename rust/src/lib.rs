@@ -1,0 +1,45 @@
+//! # rateless — LT-coded distributed matrix-vector multiplication
+//!
+//! A production-grade reproduction of *Mallick, Chaudhari, Sheth,
+//! Palanikumar, Joshi — "Rateless Codes for Near-Perfect Load Balancing in
+//! Distributed Matrix-Vector Multiplication"* (Proc. ACM Meas. Anal.
+//! Comput. Syst. 3(3), 2019).
+//!
+//! The crate is the Layer-3 (Rust) part of a three-layer stack:
+//!
+//! * **L1 (Pallas)** — `python/compile/kernels/matvec.py`: the blocked
+//!   row-block × vector kernel, validated against a pure-jnp oracle.
+//! * **L2 (JAX)** — `python/compile/model.py`: the chunked encoded-matvec
+//!   graph, AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3 (this crate)** — coding (`coding/`), delay-model + queueing
+//!   simulators (`sim/`), the master/worker coordinator (`coordinator/`)
+//!   and the PJRT runtime (`runtime/`) that executes the AOT artifacts on
+//!   the worker hot path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure and table of the paper onto modules and benches.
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod matrix;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coding::lt::{LtCode, LtParams};
+    pub use crate::coding::mds::MdsCode;
+    pub use crate::coding::peeling::PeelingDecoder;
+    pub use crate::coding::soliton::RobustSoliton;
+    pub use crate::config::{ClusterConfig, WorkloadConfig};
+    pub use crate::coordinator::straggler::StragglerProfile;
+    pub use crate::coordinator::{Coordinator, JobResult, Strategy};
+    pub use crate::matrix::Matrix;
+    pub use crate::runtime::Engine;
+    pub use crate::util::dist::DelayDist;
+    pub use crate::util::rng::Rng;
+}

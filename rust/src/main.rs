@@ -1,0 +1,232 @@
+//! `rateless` — launcher CLI for the LT-coded distributed matvec system.
+//!
+//! ```text
+//! rateless quickstart                          end-to-end smoke on a small matrix
+//! rateless run --config configs/ec2.toml      config-driven coordinator run
+//! rateless figures --fig fig1|fig7|fig9|fig11|table1|theory|all
+//! rateless loadbalance [--scale 1.0]          Fig 2 per-worker bars
+//! rateless experiment --env parallel|ec2|lambda [--trials N]   Fig 8
+//! rateless failures [--trials N]              Fig 12
+//! rateless stream --lambda 0.3 --jobs 100     §5 queueing on the live coordinator
+//! ```
+//!
+//! Figure outputs land in `results/` (override with `RATELESS_RESULTS`).
+
+use rateless::cli::Args;
+use rateless::coding::lt::LtParams;
+use rateless::config::{ClusterConfig, Doc, WorkloadConfig};
+use rateless::coordinator::{stream, Coordinator, Strategy};
+use rateless::figures;
+use rateless::matrix::{dataset, Matrix};
+use rateless::runtime::Engine;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64("seed", 42);
+    match args.subcommand.as_deref() {
+        Some("quickstart") => quickstart(args),
+        Some("run") => config_run(args),
+        Some("figures") => {
+            let trials = args.usize("trials", 500);
+            let m = args.usize("m", 10_000);
+            let p = args.usize("p", 10);
+            let which = args.str("fig", "all");
+            let all = which == "all";
+            if all || which == "fig1" {
+                print!("{}", figures::fig1(m, p, trials, seed)?);
+            }
+            if all || which == "fig7" {
+                print!("{}", figures::fig7(m, p, trials, seed)?);
+            }
+            if all || which == "fig9" {
+                print!("{}", figures::fig9(m, seed)?);
+            }
+            if all || which == "fig11" {
+                print!("{}", figures::fig11(m, p, trials, seed)?);
+            }
+            if all || which == "table1" {
+                print!("{}", figures::table1(m, p, trials, seed)?);
+            }
+            if all || which == "theory" {
+                print!("{}", figures::theory(m, p, trials, seed)?);
+            }
+            Ok(())
+        }
+        Some("loadbalance") => {
+            let scale = args.f64("scale", 1.0);
+            let time_scale = args.f64("time-scale", 1.0);
+            print!("{}", figures::fig2(scale, time_scale, seed)?);
+            Ok(())
+        }
+        Some("experiment") => {
+            let env = figures::Env::parse(&args.str("env", "ec2"))
+                .ok_or_else(|| anyhow::anyhow!("--env must be parallel|ec2|lambda"))?;
+            let scale = args.f64("scale", 1.0);
+            let trials = args.usize("trials", 10);
+            let time_scale = args.f64("time-scale", 1.0);
+            print!("{}", figures::fig8(env, scale, trials, time_scale, seed)?);
+            Ok(())
+        }
+        Some("failures") => {
+            let scale = args.f64("scale", 1.0);
+            let trials = args.usize("trials", 5);
+            let time_scale = args.f64("time-scale", 1.0);
+            print!("{}", figures::fig12(scale, trials, time_scale, seed)?);
+            Ok(())
+        }
+        Some("stream") => stream_cmd(args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}; see README"),
+        None => {
+            println!(
+                "rateless — LT-coded distributed matrix-vector multiplication\n\
+                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Small end-to-end smoke run using PJRT artifacts when available.
+fn quickstart(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize("m", 2048);
+    let n = args.usize("n", 1024);
+    let p = args.usize("p", 8);
+    let engine = Engine::auto(std::path::Path::new(&args.str("artifacts", "artifacts")));
+    println!("engine: {}", engine.name());
+    // integer data keeps f32 arithmetic exact under rateless decode
+    let a = Matrix::random_ints(m, n, 3, 1);
+    let x = Matrix::random_int_vector(n, 1, 2);
+    let cluster = ClusterConfig {
+        workers: p,
+        tau: 1e-5,
+        real_sleep: true,
+        time_scale: 1.0,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(cluster, Strategy::Lt(LtParams::with_alpha(2.0)), engine, &a)?;
+    let res = coord.multiply(&x)?;
+    let want = a.matvec(&x);
+    let err = Matrix::max_abs_diff(&res.b, &want);
+    println!(
+        "decoded {m}-row product: T = {:.4}s (virtual), C = {} (m = {m}), M' = {}, max err = {err:.3e}",
+        res.latency, res.computations, res.symbols_used
+    );
+    anyhow::ensure!(err < 1e-1, "verification failed");
+    println!("quickstart OK");
+    Ok(())
+}
+
+/// Run the coordinator from a TOML config (see `configs/`).
+fn config_run(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .opt_str("config")
+        .ok_or_else(|| anyhow::anyhow!("run requires --config <file>"))?;
+    let doc = Doc::from_file(&path)?;
+    let cluster = ClusterConfig::from_doc(&doc);
+    let workload = WorkloadConfig::from_doc(&doc);
+    let strategy = parse_strategy(&doc)?;
+    let engine = match doc.str("run", "engine", "auto").as_str() {
+        "native" => Engine::Native,
+        "pjrt" => Engine::pjrt(std::path::Path::new(&doc.str("run", "artifacts", "artifacts")))?,
+        _ => Engine::auto(std::path::Path::new(&doc.str("run", "artifacts", "artifacts"))),
+    };
+    let dataset_kind = doc.str("workload", "dataset", "random");
+    let a = match dataset_kind.as_str() {
+        "features" => dataset::feature_matrix(workload.rows, workload.cols, cluster.seed),
+        "identity" => Matrix::identity(workload.rows),
+        // integer data: exact f32 arithmetic under rateless decode
+        _ => Matrix::random_ints(workload.rows, workload.cols, 3, cluster.seed),
+    };
+    println!(
+        "run: {}×{} {dataset_kind} matrix, p={}, strategy={}, engine={}",
+        workload.rows,
+        workload.cols,
+        cluster.workers,
+        strategy.name(),
+        engine.name()
+    );
+    let coord = Coordinator::new(cluster, strategy, engine, &a)?;
+    for v in 0..workload.vectors.max(1) {
+        let x = Matrix::random_int_vector(workload.cols, 1, 90_000 + v as u64);
+        let res = coord.multiply(&x)?;
+        let want = a.matvec(&x);
+        let err = Matrix::max_abs_diff(&res.b, &want);
+        println!(
+            "vector {v}: T = {:.4}s, C = {}, M' = {}, decode_cpu = {:.1}ms, max err = {err:.2e}",
+            res.latency,
+            res.computations,
+            res.symbols_used,
+            res.decode_cpu * 1e3
+        );
+    }
+    Ok(())
+}
+
+/// Streaming-arrivals demo (§5) on the live coordinator.
+fn stream_cmd(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize("m", 4096);
+    let n = args.usize("n", 512);
+    let p = args.usize("p", 10);
+    let lambda = args.f64("lambda", 0.3);
+    let jobs = args.usize("jobs", 100);
+    let a = Matrix::random_ints(m, n, 3, 3);
+    let cluster = ClusterConfig {
+        workers: p,
+        tau: 1e-4,
+        real_sleep: true,
+        time_scale: args.f64("time-scale", 1.0),
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )?;
+    let out = stream::run_stream(&coord, n, lambda, jobs, args.u64("seed", 4))?;
+    println!(
+        "stream: λ={lambda}, jobs={jobs}: E[Z] = {:.4}s, E[T] = {:.4}s, ρ = {:.3}",
+        out.mean_response, out.mean_service, out.utilization
+    );
+    Ok(())
+}
+
+/// Parse `[strategy]` from a config doc.
+fn parse_strategy(doc: &Doc) -> anyhow::Result<Strategy> {
+    let kind = doc.str("strategy", "kind", "lt");
+    Ok(match kind.as_str() {
+        "uncoded" => Strategy::Uncoded,
+        "replication" => Strategy::Replication {
+            r: doc.usize("strategy", "r", 2),
+        },
+        "mds" => Strategy::Mds {
+            k: doc.usize("strategy", "k", 8),
+        },
+        "lt" => Strategy::Lt(LtParams {
+            alpha: doc.f64("strategy", "alpha", 2.0),
+            c: doc.f64("strategy", "c", 0.03),
+            delta: doc.f64("strategy", "delta", 0.5),
+        }),
+        "systematic_lt" => Strategy::SystematicLt(LtParams {
+            alpha: doc.f64("strategy", "alpha", 2.0),
+            c: doc.f64("strategy", "c", 0.03),
+            delta: doc.f64("strategy", "delta", 0.5),
+        }),
+        "raptor" => Strategy::Raptor(rateless::coding::raptor::RaptorParams {
+            alpha: doc.f64("strategy", "alpha", 2.0),
+            ..Default::default()
+        }),
+        other => anyhow::bail!("strategy.kind {other:?} unknown"),
+    })
+}

@@ -1,0 +1,89 @@
+//! Synthetic dataset generator.
+//!
+//! The paper's EC2 experiment multiplies an 11760×9216 feature matrix
+//! extracted from STL-10 with vectors from the same dataset. STL-10 is not
+//! available offline, so we generate a deterministic surrogate with similar
+//! gross statistics: non-negative, sparse-ish "image feature" rows with
+//! block structure (features come in correlated groups).
+//!
+//! Values are **quantized to small integers** ({0..3} features, {0,1}
+//! probe vectors), mirroring the paper's integer/uint8 workloads. This is
+//! load-bearing for correctness, not merely cosmetic: real-valued LT
+//! peeling compounds wire rounding error across decode generations (see
+//! `Matrix::random_ints`), while integer data sized below 2²⁴ keeps every
+//! f32 operation exact — encoded entries ≤ 3·(m/R) ≈ 10³ and products
+//! ≤ 9216·10³ ≈ 10⁷ < 2²⁴ at the paper's full EC2 scale.
+
+use super::Matrix;
+use crate::util::dist::{Sample, StdNormal};
+use crate::util::rng::Rng;
+
+/// Shape of the paper's STL-10 feature matrix (Fig. 2 / Fig. 8b).
+pub const STL10_ROWS: usize = 11760;
+pub const STL10_COLS: usize = 9216;
+
+/// Maximum feature magnitude (2-bit quantization).
+pub const FEATURE_MAX: f32 = 3.0;
+
+/// Generate an STL-10-like feature matrix: ReLU(block-correlated Gaussian)
+/// quantized to {0,1,2,3} — non-negative, ~50% zeros, grouped columns.
+pub fn feature_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let group = 64.min(cols.max(1));
+    let mut m = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        // per-row gain models per-image brightness variation
+        let gain = 0.5 + rng.next_f64() as f32;
+        let row = m.row_mut(r);
+        let mut g = 0;
+        while g < cols {
+            // shared component per feature group (correlation within group)
+            let shared = StdNormal.sample(&mut rng) as f32 * 0.5;
+            let end = (g + group).min(cols);
+            for c in g..end {
+                let v = shared + StdNormal.sample(&mut rng) as f32;
+                row[c] = if v > 0.0 {
+                    (v * gain * 2.0).round().clamp(0.0, FEATURE_MAX)
+                } else {
+                    0.0
+                };
+            }
+            g = end;
+        }
+    }
+    m
+}
+
+/// Generate a binary probe vector (a thresholded "dataset row" — the
+/// paper multiplies with vectors from the same dataset).
+pub fn feature_vector(cols: usize, seed: u64) -> Vec<f32> {
+    let m = feature_matrix(1, cols, seed);
+    m.data().iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = feature_matrix(10, 32, 1);
+        let b = feature_matrix(10, 32, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn non_negative_with_zeros() {
+        let m = feature_matrix(20, 128, 2);
+        let zeros = m.data().iter().filter(|&&x| x == 0.0).count();
+        let total = m.data().len();
+        assert!(m.data().iter().all(|&x| x >= 0.0));
+        let frac = zeros as f64 / total as f64;
+        assert!((0.25..0.75).contains(&frac), "zero fraction {frac}");
+    }
+
+    #[test]
+    fn vector_shape() {
+        assert_eq!(feature_vector(100, 3).len(), 100);
+    }
+}

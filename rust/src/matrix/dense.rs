@@ -1,0 +1,210 @@
+//! Dense row-major `f32` matrix.
+//!
+//! `f32` matches the dtype of the AOT-compiled PJRT artifacts; all decoding
+//! arithmetic is done in `f64` where it matters (LU solves), but the bulk
+//! data is `f32` like the paper's float workloads.
+
+use crate::util::dist::{Sample, StdNormal};
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Construct from raw row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        Self { rows, cols, data }
+    }
+
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity (used by the paper's Fig. 12 failure experiment).
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Seeded standard-normal entries.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| StdNormal.sample(&mut rng) as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    /// Seeded random vector of length `n` (as a flat Vec).
+    pub fn random_vector(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| StdNormal.sample(&mut rng) as f32).collect()
+    }
+
+    /// Seeded random *integer-valued* matrix with entries uniform in
+    /// `[0, max]`, stored as f32.
+    ///
+    /// The paper's experiments multiply integer matrices ("random
+    /// integers" in §6.1; uint8 STL-10 pixels in §6.2) — and for good
+    /// reason: peeling-decoding real-valued LT symbols is ill-conditioned
+    /// (every decoded symbol's error is re-subtracted downstream, so wire
+    /// rounding error compounds per decode generation; measured blow-up
+    /// beyond m ≈ 10³ in f32). With integer data sized so that every
+    /// product stays below 2²⁴, all f32 arithmetic is **exact** and decode
+    /// is bit-perfect at any m — matching the paper's setup.
+    pub fn random_ints(rows: usize, cols: usize, max: u32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.gen_range(max as u64 + 1) as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    /// Seeded random integer-valued vector with entries in `[0, max]`.
+    pub fn random_int_vector(n: usize, max: u32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gen_range(max as u64 + 1) as f32).collect()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow a contiguous block of rows `[start, start+len)` as a flat slice.
+    pub fn row_block(&self, start: usize, len: usize) -> &[f32] {
+        debug_assert!(start + len <= self.rows);
+        &self.data[start * self.cols..(start + len) * self.cols]
+    }
+
+    /// Copy a subset of rows into a new matrix.
+    pub fn select_rows(&self, indices: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(indices.len(), self.cols);
+        for (dst, &src) in indices.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Vertical slice: rows `[start, end)`.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix::from_vec(
+            end - start,
+            self.cols,
+            self.data[start * self.cols..end * self.cols].to_vec(),
+        )
+    }
+
+    /// Dense matrix-vector product `A·x` (single-threaded reference).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "vector length != cols");
+        (0..self.rows)
+            .map(|i| ops::dot(self.row(i), x))
+            .collect()
+    }
+
+    /// Max |a-b| between two vectors — convenience for tests/examples.
+    pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+use super::ops;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.row_block(0, 2).len(), 6);
+    }
+
+    #[test]
+    fn identity_matvec_is_input() {
+        let m = Matrix::identity(5);
+        let x = vec![1., 2., 3., 4., 5.];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(m.matvec(&[1., 1.]), vec![3., 7.]);
+    }
+
+    #[test]
+    fn select_and_slice() {
+        let m = Matrix::from_vec(3, 2, vec![0., 1., 10., 11., 20., 21.]);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[20., 21.]);
+        assert_eq!(s.row(1), &[0., 1.]);
+        let sl = m.slice_rows(1, 3);
+        assert_eq!(sl.rows(), 2);
+        assert_eq!(sl.row(0), &[10., 11.]);
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let a = Matrix::random(4, 4, 7);
+        let b = Matrix::random(4, 4, 7);
+        let c = Matrix::random(4, 4, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    #[should_panic(expected = "vector length")]
+    fn matvec_shape_checked() {
+        Matrix::zeros(2, 3).matvec(&[1.0; 4]);
+    }
+}

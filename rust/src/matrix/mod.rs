@@ -1,0 +1,8 @@
+//! Dense row-major matrix/vector types and the synthetic dataset
+//! generator used in place of STL-10 (DESIGN.md substitution table).
+
+pub mod dataset;
+mod dense;
+pub mod ops;
+
+pub use dense::Matrix;

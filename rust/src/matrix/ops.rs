@@ -1,0 +1,106 @@
+//! Hot-path vector kernels. These are the native fallback for the PJRT
+//! artifacts and the reference the integration tests compare against.
+//!
+//! `dot` is written as 4 independent accumulator lanes so LLVM
+//! autovectorizes it; see EXPERIMENTS.md §Perf for measured impact.
+
+/// Dot product with 4-way unrolled independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..n {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `out[i] = block[i,:]·x` for a flat row-major `block` of `rows` rows.
+pub fn block_matvec(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(block.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for i in 0..rows {
+        out[i] = dot(&block[i * cols..(i + 1) * cols], x);
+    }
+}
+
+/// `acc += src` elementwise.
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += s;
+    }
+}
+
+/// `acc -= src` elementwise.
+#[inline]
+pub fn sub_assign(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a -= s;
+    }
+}
+
+/// `acc += c * src` elementwise (f64 coefficient, f32 data).
+#[inline]
+pub fn axpy(acc: &mut [f32], c: f32, src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += c * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        for n in 0..35 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (dot(&a, &b) - naive).abs() <= 1e-3 * naive.abs().max(1.0),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_matvec_matches_rowwise() {
+        let rows = 7;
+        let cols = 13;
+        let block: Vec<f32> = (0..rows * cols).map(|i| (i % 11) as f32 - 5.0).collect();
+        let x: Vec<f32> = (0..cols).map(|i| i as f32 * 0.25).collect();
+        let mut out = vec![0.0; rows];
+        block_matvec(&block, rows, cols, &x, &mut out);
+        for i in 0..rows {
+            let expect = dot(&block[i * cols..(i + 1) * cols], &x);
+            assert_eq!(out[i], expect);
+        }
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut acc = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut acc, &[1.0, 1.0, 1.0]);
+        assert_eq!(acc, vec![2.0, 3.0, 4.0]);
+        sub_assign(&mut acc, &[1.0, 1.0, 1.0]);
+        assert_eq!(acc, vec![1.0, 2.0, 3.0]);
+        axpy(&mut acc, 2.0, &[1.0, 0.0, -1.0]);
+        assert_eq!(acc, vec![3.0, 2.0, 1.0]);
+    }
+}

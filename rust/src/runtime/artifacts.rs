@@ -1,0 +1,118 @@
+//! AOT artifact manifest: discovery and shape-matching.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` with one line per HLO
+//! artifact: `matvec <rows> <cols> <file>` (plus `encode ...` lines the
+//! runtime currently ignores on the hot path). Worker chunks of arbitrary
+//! shape are padded up to the smallest artifact shape that fits — zero
+//! rows/columns contribute zeros to the products, so padding is exact.
+
+use std::path::{Path, PathBuf};
+
+/// One `matvec` artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatvecShape {
+    pub rows: usize,
+    pub cols: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub matvec: Vec<MatvecShape>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`. Errors if missing or malformed.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let mut matvec = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.first() {
+                Some(&"matvec") => {
+                    if fields.len() != 4 {
+                        anyhow::bail!("manifest line {}: want `matvec R C file`", lineno + 1);
+                    }
+                    matvec.push(MatvecShape {
+                        rows: fields[1].parse()?,
+                        cols: fields[2].parse()?,
+                        path: dir.join(fields[3]),
+                    });
+                }
+                Some(&"encode") => {} // known, not used on the hot path
+                Some(other) => {
+                    anyhow::bail!("manifest line {}: unknown kind {other:?}", lineno + 1)
+                }
+                None => {}
+            }
+        }
+        if matvec.is_empty() {
+            anyhow::bail!("manifest has no matvec artifacts");
+        }
+        // sort by area so best_fit finds the cheapest shape first
+        matvec.sort_by_key(|s| s.rows * s.cols);
+        Ok(Self {
+            matvec,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Smallest artifact shape with `rows' >= rows` and `cols' >= cols`.
+    pub fn best_fit(&self, rows: usize, cols: usize) -> Option<&MatvecShape> {
+        self.matvec
+            .iter()
+            .find(|s| s.rows >= rows && s.cols >= cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+matvec 32 1024 matvec_32x1024.hlo.txt
+matvec 128 1024 matvec_128x1024.hlo.txt
+matvec 128 10240 matvec_128x10240.hlo.txt
+encode 1024 1024 2048 16 encode.hlo.txt
+";
+
+    #[test]
+    fn parses_and_sorts() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.matvec.len(), 3);
+        assert!(m.matvec.windows(2).all(|w| w[0].rows * w[0].cols <= w[1].rows * w[1].cols));
+        assert_eq!(m.matvec[0].path, PathBuf::from("/a/matvec_32x1024.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_containing_shape() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let s = m.best_fit(30, 1000).unwrap();
+        assert_eq!((s.rows, s.cols), (32, 1024));
+        let s = m.best_fit(33, 1000).unwrap();
+        assert_eq!((s.rows, s.cols), (128, 1024));
+        let s = m.best_fit(100, 9216).unwrap();
+        assert_eq!((s.rows, s.cols), (128, 10240));
+        assert!(m.best_fit(129, 10240).is_none());
+        assert!(m.best_fit(1, 20000).is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("matvec 1 2\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("frobnicate 1 2 3\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+    }
+}

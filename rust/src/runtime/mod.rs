@@ -1,0 +1,118 @@
+//! Execution runtime for the worker hot path.
+//!
+//! Two engines compute chunk products `A_chunk · x`:
+//!
+//! * [`Engine::Native`] — the autovectorized Rust kernel
+//!   (`matrix::ops::block_matvec`), always available.
+//! * [`Engine::Pjrt`] — AOT-compiled HLO artifacts executed on the PJRT
+//!   CPU client (the `xla` crate), proving the Python-authored L1/L2
+//!   layers run under the Rust coordinator with Python out of the loop.
+//!
+//! [`Engine::auto`] picks PJRT when artifacts are present and usable,
+//! falling back to native otherwise (e.g. `make artifacts` not yet run).
+
+pub mod artifacts;
+pub mod pjrt;
+
+use std::path::Path;
+use std::sync::Arc;
+
+pub use artifacts::Manifest;
+pub use pjrt::{PjrtHandle, PjrtService};
+
+use crate::matrix::ops;
+
+/// A chunk-matvec execution engine, cloneable across worker threads.
+#[derive(Clone)]
+pub enum Engine {
+    /// Pure-Rust blocked matvec.
+    Native,
+    /// PJRT compute service (shared, reference-counted so the service
+    /// thread lives as long as any worker handle).
+    Pjrt {
+        service: Arc<PjrtService>,
+        handle: PjrtHandle,
+    },
+}
+
+impl Engine {
+    /// Prefer PJRT artifacts under `dir`; fall back to native.
+    pub fn auto(dir: &Path) -> Engine {
+        match PjrtService::start(dir) {
+            Ok(service) => {
+                let handle = service.handle();
+                crate::info!("engine: PJRT artifacts from {}", dir.display());
+                Engine::Pjrt {
+                    service: Arc::new(service),
+                    handle,
+                }
+            }
+            Err(e) => {
+                crate::warn_!("engine: PJRT unavailable ({e}); using native kernel");
+                Engine::Native
+            }
+        }
+    }
+
+    /// Force the PJRT engine (error if artifacts are unusable).
+    pub fn pjrt(dir: &Path) -> anyhow::Result<Engine> {
+        let service = PjrtService::start(dir)?;
+        let handle = service.handle();
+        Ok(Engine::Pjrt {
+            service: Arc::new(service),
+            handle,
+        })
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, Engine::Pjrt { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Compute `block (rows×cols) · x`.
+    pub fn matvec_chunk(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Engine::Native => {
+                let mut out = vec![0.0f32; rows];
+                ops::block_matvec(block, rows, cols, x, &mut out);
+                Ok(out)
+            }
+            Engine::Pjrt { handle, .. } => handle.matvec_chunk(block, rows, cols, x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_matches_reference() {
+        let e = Engine::Native;
+        let block: Vec<f32> = (0..6).map(|i| i as f32).collect(); // 2x3
+        let x = vec![1.0, 0.5, 2.0];
+        let out = e.matvec_chunk(&block, 2, 3, &x).unwrap();
+        // rows: [0,1,2]·x = 4.5 ; [3,4,5]·x = 3 + 2 + 10 = 15
+        assert_eq!(out, vec![4.5, 15.0]);
+        assert_eq!(e.name(), "native");
+        assert!(!e.is_pjrt());
+    }
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let e = Engine::auto(Path::new("/definitely/not/a/dir"));
+        assert!(!e.is_pjrt());
+    }
+}

@@ -1,0 +1,117 @@
+//! Decode-progress ("avalanche") curves — paper Fig. 9 / Appendix A.
+//!
+//! Feeds LT symbols into the peeling decoder one at a time and records how
+//! many source symbols are decoded after each arrival. Only the bipartite
+//! graph matters for progress, so payloads are zeros. The expected shape:
+//! almost nothing decodes until ≈ m symbols arrive, then an avalanche
+//! completes decoding within a few hundred more.
+
+use crate::coding::lt::{LtCode, LtParams};
+use crate::coding::peeling::PeelingDecoder;
+
+/// Decode-progress curve: `decoded[r]` = sources decoded after `r+1`
+/// received symbols; `threshold` = empirical M′.
+#[derive(Clone, Debug)]
+pub struct DecodingCurve {
+    pub m: usize,
+    pub c: f64,
+    pub delta: f64,
+    pub decoded: Vec<usize>,
+    pub threshold: usize,
+}
+
+/// Simulate one decode of `m` sources with Robust Soliton `(c, δ)`.
+/// Symbols stream until complete (cap at `max_factor·m` for safety).
+pub fn decode_progress(m: usize, c: f64, delta: f64, seed: u64, max_factor: f64) -> DecodingCurve {
+    let params = LtParams {
+        alpha: max_factor,
+        c,
+        delta,
+    };
+    let code = LtCode::new(m, params, seed);
+    let mut dec = PeelingDecoder::new(m, 1);
+    let mut idx = Vec::new();
+    let mut decoded = Vec::new();
+    let cap = (max_factor * m as f64).ceil() as u64;
+    for row in 0..cap {
+        code.row_indices(row, &mut idx);
+        dec.add_symbol(&idx, &[0.0]);
+        decoded.push(dec.decoded_count());
+        if dec.is_complete() {
+            break;
+        }
+    }
+    let threshold = dec.completed_at().unwrap_or(decoded.len());
+    DecodingCurve {
+        m,
+        c,
+        delta,
+        decoded,
+        threshold,
+    }
+}
+
+/// Empirical decoding-threshold distribution across seeds: returns the
+/// observed M′ values. Used to pick the `decode_target` the simulators
+/// and the master use (paper: "a value of M′ … that ensures recovery with
+/// > 99% probability").
+pub fn threshold_samples(m: usize, c: f64, delta: f64, trials: usize, base_seed: u64) -> Vec<usize> {
+    (0..trials)
+        .map(|t| decode_progress(m, c, delta, base_seed + t as u64, 3.0).threshold)
+        .collect()
+}
+
+/// The 99th-percentile decode target for `m` sources (paper §6 uses
+/// 12500 for m = 11760).
+pub fn decode_target_p99(m: usize, c: f64, delta: f64, trials: usize, seed: u64) -> usize {
+    let mut samples = threshold_samples(m, c, delta, trials, seed);
+    samples.sort_unstable();
+    let idx = ((samples.len() as f64) * 0.99).ceil() as usize - 1;
+    samples[idx.min(samples.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avalanche_shape() {
+        let curve = decode_progress(2000, 0.03, 0.5, 7, 3.0);
+        assert_eq!(*curve.decoded.last().unwrap(), 2000);
+        // before m/2 symbols arrive, fewer than 30% decoded (flat region)
+        let early = curve.decoded[curve.m / 2 - 1];
+        assert!(
+            (early as f64) < 0.3 * curve.m as f64,
+            "early decode too fast: {early}"
+        );
+        // threshold is m(1+ε) with small-ish ε at this size
+        let eps = curve.threshold as f64 / curve.m as f64 - 1.0;
+        assert!((0.0..0.6).contains(&eps), "ε = {eps}");
+        // progress is monotone
+        assert!(curve.decoded.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn overhead_shrinks_with_m() {
+        let avg = |m: usize| {
+            let s = threshold_samples(m, 0.03, 0.5, 5, 11);
+            s.iter().sum::<usize>() as f64 / (5.0 * m as f64) - 1.0
+        };
+        let eps_small = avg(500);
+        let eps_large = avg(4000);
+        assert!(
+            eps_large < eps_small,
+            "ε must decay: ε(500)={eps_small:.3} ε(4000)={eps_large:.3}"
+        );
+    }
+
+    #[test]
+    fn p99_target_is_conservative() {
+        let m = 1000;
+        let target = decode_target_p99(m, 0.03, 0.5, 20, 3);
+        let samples = threshold_samples(m, 0.03, 0.5, 20, 3);
+        let over = samples.iter().filter(|&&s| s > target).count();
+        assert!(over <= 1, "at most 1 of 20 samples may exceed the p99 target");
+        assert!(target >= m);
+    }
+}

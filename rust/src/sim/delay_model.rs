@@ -1,0 +1,136 @@
+//! The paper's worker delay model (eq. 5): worker `i` needs
+//! `Y_i = X_i + τ·B_i` seconds to finish `B_i` row-vector products.
+
+use crate::util::dist::DelayDist;
+use crate::util::rng::Rng;
+
+/// Parameters of the delay model shared by all strategy simulators.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayModel {
+    /// Number of workers `p`.
+    pub p: usize,
+    /// Seconds per row-vector product `τ`.
+    pub tau: f64,
+    /// Distribution of the initial delays `X_i`.
+    pub dist: DelayDist,
+}
+
+impl DelayModel {
+    pub fn new(p: usize, tau: f64, dist: DelayDist) -> Self {
+        assert!(p >= 1 && tau > 0.0);
+        Self { p, tau, dist }
+    }
+
+    /// Paper's headline simulation setting: p=10, τ=0.001, X~exp(1).
+    pub fn paper_default() -> Self {
+        Self::new(10, 0.001, DelayDist::Exp { mu: 1.0 })
+    }
+
+    /// Draw one realization of the initial delays.
+    pub fn draw_delays(&self, rng: &mut Rng) -> Vec<f64> {
+        (0..self.p).map(|_| self.dist.sample(rng)).collect()
+    }
+
+    /// Tasks finished by a worker with initial delay `x` at time `t`,
+    /// subject to a cap (its assigned shard size).
+    #[inline]
+    pub fn tasks_done(&self, x: f64, t: f64, cap: usize) -> usize {
+        if t <= x {
+            return 0;
+        }
+        let done = ((t - x) / self.tau).floor() as usize;
+        done.min(cap)
+    }
+
+    /// Total tasks finished across all workers at time `t`.
+    pub fn total_done(&self, xs: &[f64], t: f64, cap: usize) -> usize {
+        xs.iter().map(|&x| self.tasks_done(x, t, cap)).sum()
+    }
+
+    /// Earliest time at which the workers (each capped at `cap` tasks)
+    /// have collectively finished `target` tasks. Returns `None` if
+    /// `p·cap < target` (infeasible). Binary search on continuous time,
+    /// then snapped to the generating completion epoch.
+    pub fn time_to_complete(&self, xs: &[f64], cap: usize, target: usize) -> Option<f64> {
+        assert_eq!(xs.len(), self.p);
+        if self.p * cap < target || target == 0 {
+            return if target == 0 { Some(0.0) } else { None };
+        }
+        let xmin = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let xmax = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut lo = xmin;
+        let mut hi = xmax + self.tau * target as f64;
+        debug_assert!(self.total_done(xs, hi, cap) >= target);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.total_done(xs, mid, cap) >= target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+            if hi - lo < 1e-12 * hi.abs().max(1.0) {
+                break;
+            }
+        }
+        Some(hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(p: usize, tau: f64) -> DelayModel {
+        DelayModel::new(p, tau, DelayDist::None)
+    }
+
+    #[test]
+    fn tasks_done_basics() {
+        let m = model(1, 0.5);
+        assert_eq!(m.tasks_done(1.0, 0.9, 100), 0);
+        assert_eq!(m.tasks_done(1.0, 1.0, 100), 0);
+        assert_eq!(m.tasks_done(1.0, 1.5, 100), 1);
+        assert_eq!(m.tasks_done(1.0, 3.0, 100), 4);
+        assert_eq!(m.tasks_done(1.0, 100.0, 7), 7); // cap
+    }
+
+    #[test]
+    fn time_to_complete_uniform_workers() {
+        // p=4, tau=1, all X=0: m tasks take ceil(m/4) seconds
+        let m = model(4, 1.0);
+        let xs = vec![0.0; 4];
+        let t = m.time_to_complete(&xs, usize::MAX / 4, 8).unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        let t = m.time_to_complete(&xs, usize::MAX / 4, 9).unwrap();
+        assert!((t - 3.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn time_to_complete_with_straggler() {
+        // one worker starts at 0, one at 10; 10 tasks, tau=1:
+        // fast worker alone does all 10 by t=10 (straggler contributes 0)
+        let m = model(2, 1.0);
+        let xs = vec![0.0, 10.0];
+        let t = m.time_to_complete(&xs, 100, 10).unwrap();
+        assert!((t - 10.0).abs() < 1e-9, "t={t}");
+        // with cap 5 per worker the straggler must do 5: t = 10 + 5
+        let t = m.time_to_complete(&xs, 5, 10).unwrap();
+        assert!((t - 15.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let m = model(2, 1.0);
+        assert!(m.time_to_complete(&[0.0, 0.0], 3, 7).is_none());
+        assert_eq!(m.time_to_complete(&[0.0, 0.0], 3, 0), Some(0.0));
+    }
+
+    #[test]
+    fn draw_delays_respects_dist() {
+        let m = DelayModel::paper_default();
+        let mut rng = Rng::new(1);
+        let xs = m.draw_delays(&mut rng);
+        assert_eq!(xs.len(), 10);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+}

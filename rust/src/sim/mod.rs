@@ -1,0 +1,17 @@
+//! Delay-model simulators (paper §4, §5, Appendices E–F).
+//!
+//! These are *virtual-time* simulators built directly on the paper's delay
+//! model `Y_i = X_i + τ·B_i` (eq. 5): given one draw of the initial delays
+//! `X_1..X_p`, latency `T` and computations `C` of every strategy are
+//! deterministic and computed in closed form — no threads involved. The
+//! thread-based coordinator (`crate::coordinator`) exercises the same
+//! strategies as a real system; the simulators regenerate the paper's
+//! analytical figures (1, 7, 9, 11) and Table 1 at scale.
+
+pub mod decoding_curve;
+pub mod delay_model;
+pub mod queueing;
+pub mod strategies;
+
+pub use delay_model::DelayModel;
+pub use strategies::{Outcome, SimStrategy};

@@ -1,0 +1,351 @@
+//! Closed-form latency/computation evaluation of every strategy under the
+//! delay model (paper §4.2–4.5): given one draw of initial delays, each
+//! strategy's `T` and `C` are deterministic.
+
+use super::delay_model::DelayModel;
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+
+/// Outcome of one strategy evaluation on one delay draw.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Latency `T` (Definition 1). `f64::INFINITY` if the strategy cannot
+    /// finish on this draw (e.g. LT with too little redundancy).
+    pub latency: f64,
+    /// Computations `C` (Definition 2): total row-products done by all
+    /// workers up to `T` (including redundant/cancelled work).
+    pub computations: usize,
+    /// Per-worker completed tasks at time `T` (for load-balance plots).
+    pub per_worker: Vec<usize>,
+}
+
+/// A strategy the virtual-time simulator can evaluate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimStrategy {
+    /// Central-queue dynamic assignment (paper §2.3 "Ideal").
+    Ideal,
+    /// Rateless LT: workers share `m_e = ⌈α·m⌉` encoded rows equally; the
+    /// master needs `decode_target` finished products (the decoding
+    /// threshold M′, paper Definition 3).
+    Lt { alpha: f64, decode_target: usize },
+    /// (p,k) MDS (paper §4.4): fastest k workers each finish m/k rows.
+    Mds { k: usize },
+    /// r-replication (paper §4.5). r=1 is uncoded.
+    Rep { r: usize },
+}
+
+impl SimStrategy {
+    pub fn name(&self) -> String {
+        match self {
+            SimStrategy::Ideal => "ideal".into(),
+            SimStrategy::Lt { alpha, .. } => format!("lt_a{alpha:.2}"),
+            SimStrategy::Mds { k } => format!("mds_k{k}"),
+            SimStrategy::Rep { r } if *r == 1 => "uncoded".into(),
+            SimStrategy::Rep { r } => format!("rep_r{r}"),
+        }
+    }
+
+    /// Evaluate on one draw of initial delays `xs` for an `m`-row matrix.
+    pub fn evaluate(&self, model: &DelayModel, m: usize, xs: &[f64]) -> Outcome {
+        assert_eq!(xs.len(), model.p);
+        match *self {
+            SimStrategy::Ideal => eval_capped_collective(model, xs, usize::MAX / model.p, m),
+            SimStrategy::Lt {
+                alpha,
+                decode_target,
+            } => {
+                let me = (alpha * m as f64).ceil() as usize;
+                let cap = me / model.p; // paper: m_e/p rows per worker
+                eval_capped_collective(model, xs, cap, decode_target)
+            }
+            SimStrategy::Mds { k } => eval_mds(model, m, k, xs),
+            SimStrategy::Rep { r } => eval_rep(model, m, r, xs),
+        }
+    }
+}
+
+/// Shared evaluator for Ideal/LT: workers greedily take tasks from their
+/// own shard (cap per worker); done when `target` tasks finished in total.
+/// For Ideal the cap is unbounded — equivalent to the central queue,
+/// because only the collective count matters under constant τ.
+fn eval_capped_collective(
+    model: &DelayModel,
+    xs: &[f64],
+    cap: usize,
+    target: usize,
+) -> Outcome {
+    match model.time_to_complete(xs, cap, target) {
+        Some(t) => {
+            let mut per_worker: Vec<usize> =
+                xs.iter().map(|&x| model.tasks_done(x, t, cap)).collect();
+            // The collective count can overshoot `target` when several
+            // workers finish a task at exactly time T; clamp bookkeeping so
+            // C matches the number the master actually uses.
+            let mut total: usize = per_worker.iter().sum();
+            let mut i = 0;
+            while total > target && i < per_worker.len() {
+                let excess = (total - target).min(per_worker[i]);
+                per_worker[i] -= excess;
+                total -= excess;
+                i += 1;
+            }
+            Outcome {
+                latency: t,
+                computations: total,
+                per_worker,
+            }
+        }
+        None => Outcome {
+            latency: f64::INFINITY,
+            computations: xs
+                .iter()
+                .map(|&x| model.tasks_done(x, f64::INFINITY, cap))
+                .sum(),
+            per_worker: vec![cap; xs.len()],
+        },
+    }
+}
+
+/// MDS (paper Lemma 3): `T = X_{k:p} + τ·⌈m/k⌉`; all workers keep
+/// computing (capped at ⌈m/k⌉) until T, then are cancelled.
+fn eval_mds(model: &DelayModel, m: usize, k: usize, xs: &[f64]) -> Outcome {
+    assert!(k >= 1 && k <= model.p);
+    let rows_per_worker = m.div_ceil(k);
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let x_k = sorted[k - 1];
+    let t = x_k + model.tau * rows_per_worker as f64;
+    let per_worker: Vec<usize> = xs
+        .iter()
+        .map(|&x| model.tasks_done(x, t, rows_per_worker))
+        .collect();
+    Outcome {
+        latency: t,
+        computations: per_worker.iter().sum(),
+        per_worker,
+    }
+}
+
+/// r-replication (paper Lemma 5): group i finishes at
+/// `min(X in group) + τ·(m·r/p)`; overall T is the max over groups; all
+/// workers compute (capped) until T.
+fn eval_rep(model: &DelayModel, m: usize, r: usize, xs: &[f64]) -> Outcome {
+    let p = model.p;
+    assert!(r >= 1 && p % r == 0, "r must divide p");
+    let groups = p / r;
+    let rows_per_worker = m.div_ceil(groups);
+    let mut t = f64::NEG_INFINITY;
+    for g in 0..groups {
+        let xmin = xs[g * r..(g + 1) * r]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        t = t.max(xmin + model.tau * rows_per_worker as f64);
+    }
+    let per_worker: Vec<usize> = xs
+        .iter()
+        .map(|&x| model.tasks_done(x, t, rows_per_worker))
+        .collect();
+    Outcome {
+        latency: t,
+        computations: per_worker.iter().sum(),
+        per_worker,
+    }
+}
+
+/// Monte-Carlo summary over `trials` independent delay draws.
+#[derive(Clone, Debug)]
+pub struct MonteCarlo {
+    pub latency: OnlineStats,
+    pub computations: OnlineStats,
+    pub latency_samples: Vec<f64>,
+    pub computation_samples: Vec<f64>,
+    /// Fraction of draws where the strategy could not finish.
+    pub infeasible_frac: f64,
+}
+
+/// Run `trials` draws of a strategy.
+pub fn monte_carlo(
+    strategy: SimStrategy,
+    model: &DelayModel,
+    m: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> MonteCarlo {
+    let mut latency = OnlineStats::new();
+    let mut computations = OnlineStats::new();
+    let mut latency_samples = Vec::with_capacity(trials);
+    let mut computation_samples = Vec::with_capacity(trials);
+    let mut infeasible = 0usize;
+    for _ in 0..trials {
+        let xs = model.draw_delays(rng);
+        let out = strategy.evaluate(model, m, &xs);
+        if out.latency.is_finite() {
+            latency.push(out.latency);
+            computations.push(out.computations as f64);
+            latency_samples.push(out.latency);
+            computation_samples.push(out.computations as f64);
+        } else {
+            infeasible += 1;
+        }
+    }
+    MonteCarlo {
+        latency,
+        computations,
+        latency_samples,
+        computation_samples,
+        infeasible_frac: infeasible as f64 / trials.max(1) as f64,
+    }
+}
+
+/// Paper Table 1 closed-form approximations (exp(μ) delays), for
+/// paper-vs-measured comparisons.
+pub mod formulas {
+    use crate::util::stats::harmonic;
+
+    /// Ideal: τm/p + 1/μ (upper-bound flavour of Corollary 1).
+    pub fn ideal(m: usize, p: usize, mu: f64, tau: f64) -> f64 {
+        tau * m as f64 / p as f64 + 1.0 / mu
+    }
+
+    /// LT (large α): τ·M′/p + 1/μ.
+    pub fn lt(decode_target: usize, p: usize, mu: f64, tau: f64) -> f64 {
+        tau * decode_target as f64 / p as f64 + 1.0 / mu
+    }
+
+    /// MDS (Corollary 3): τm/k + (H_p − H_{p−k})/μ.
+    pub fn mds(m: usize, p: usize, k: usize, mu: f64, tau: f64) -> f64 {
+        tau * m as f64 / k as f64 + (harmonic(p) - harmonic(p - k)) / mu
+    }
+
+    /// Replication (Corollary 4): τmr/p + H_{p/r}/(rμ).
+    pub fn rep(m: usize, p: usize, r: usize, mu: f64, tau: f64) -> f64 {
+        tau * m as f64 * r as f64 / p as f64 + harmonic(p / r) / (r as f64 * mu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::dist::DelayDist;
+
+    fn fixed_model(p: usize) -> DelayModel {
+        DelayModel::new(p, 0.001, DelayDist::None)
+    }
+
+    #[test]
+    fn ideal_no_delays_is_tau_m_over_p() {
+        let model = fixed_model(10);
+        let xs = vec![0.0; 10];
+        let out = SimStrategy::Ideal.evaluate(&model, 10_000, &xs);
+        assert!((out.latency - 1.0).abs() < 1e-6, "T={}", out.latency);
+        assert_eq!(out.computations, 10_000);
+        assert_eq!(out.per_worker.iter().sum::<usize>(), 10_000);
+    }
+
+    #[test]
+    fn lt_matches_ideal_without_straggling() {
+        let model = fixed_model(10);
+        let xs = vec![0.0; 10];
+        let ideal = SimStrategy::Ideal.evaluate(&model, 10_000, &xs);
+        let lt = SimStrategy::Lt {
+            alpha: 2.0,
+            decode_target: 10_000,
+        }
+        .evaluate(&model, 10_000, &xs);
+        assert!((lt.latency - ideal.latency).abs() < 1e-9);
+        assert_eq!(lt.computations, ideal.computations);
+    }
+
+    #[test]
+    fn lt_runs_out_of_rows_when_alpha_too_small() {
+        // one fast worker, nine stalled forever-ish: α=1.01 gives the fast
+        // worker only ~m/10 rows, so it idles and T_LT > T_ideal
+        let model = DelayModel::new(10, 0.001, DelayDist::None);
+        let mut xs = vec![1000.0; 10];
+        xs[0] = 0.0;
+        let m = 10_000;
+        let lt = SimStrategy::Lt {
+            alpha: 1.01,
+            decode_target: m,
+        }
+        .evaluate(&model, m, &xs);
+        let ideal = SimStrategy::Ideal.evaluate(&model, m, &xs);
+        assert!(lt.latency > ideal.latency);
+        // with α=2 the situation needs 10000 of the 20000 rows; the fast
+        // worker holds 2000 — still must wait for stragglers, but gets
+        // closer; with α=10.0 the fast worker can carry the full load
+        let lt10 = SimStrategy::Lt {
+            alpha: 10.0,
+            decode_target: m,
+        }
+        .evaluate(&model, m, &xs);
+        assert!((lt10.latency - ideal.latency).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mds_formula_exact_on_draw() {
+        let model = fixed_model(4);
+        let xs = vec![0.3, 0.1, 0.4, 0.2];
+        let out = SimStrategy::Mds { k: 2 }.evaluate(&model, 1000, &xs);
+        // X_{2:4} = 0.2; T = 0.2 + 0.001*500
+        assert!((out.latency - 0.7).abs() < 1e-9);
+        // all 4 workers work until T (capped at 500)
+        assert!(out.computations > 1000, "C={} must exceed m", out.computations);
+    }
+
+    #[test]
+    fn rep_and_uncoded() {
+        let model = fixed_model(4);
+        let xs = vec![0.1, 0.5, 0.2, 0.3];
+        // uncoded: every worker does m/p rows; T = max X + τ m/p
+        let out = SimStrategy::Rep { r: 1 }.evaluate(&model, 1000, &xs);
+        assert!((out.latency - (0.5 + 0.25)).abs() < 1e-9);
+        assert_eq!(out.computations, 1000);
+        // r=2: groups {0,1}, {2,3}; group mins .1, .2; T = .2 + .001*500
+        let out = SimStrategy::Rep { r: 2 }.evaluate(&model, 1000, &xs);
+        assert!((out.latency - 0.7).abs() < 1e-9);
+        assert!(out.computations > 1000);
+    }
+
+    #[test]
+    fn monte_carlo_ordering_matches_paper() {
+        // Fig 1 / Fig 7 qualitative shape: E[T_ideal] <= E[T_LT(α=2)] <
+        // E[T_MDS(k=8)] < E[T_rep(2)], and C_LT << C_MDS.
+        let model = DelayModel::paper_default();
+        let m = 10_000;
+        let mut rng = Rng::new(42);
+        let trials = 300;
+        let ideal = monte_carlo(SimStrategy::Ideal, &model, m, trials, &mut rng);
+        let lt = monte_carlo(
+            SimStrategy::Lt {
+                alpha: 2.0,
+                decode_target: (m as f64 * 1.03) as usize,
+            },
+            &model,
+            m,
+            trials,
+            &mut rng,
+        );
+        let mds = monte_carlo(SimStrategy::Mds { k: 8 }, &model, m, trials, &mut rng);
+        let rep = monte_carlo(SimStrategy::Rep { r: 2 }, &model, m, trials, &mut rng);
+        assert!(ideal.latency.mean() <= lt.latency.mean() + 1e-9);
+        assert!(lt.latency.mean() < mds.latency.mean(), "LT should beat MDS");
+        assert!(mds.latency.mean() < rep.latency.mean(), "MDS should beat 2-rep");
+        assert!(
+            lt.computations.mean() < mds.computations.mean(),
+            "LT does fewer computations than MDS"
+        );
+        assert_eq!(lt.infeasible_frac, 0.0);
+    }
+
+    #[test]
+    fn formulas_are_sane() {
+        let (m, p, mu, tau) = (10_000, 10, 1.0, 0.001);
+        let ideal = formulas::ideal(m, p, mu, tau);
+        let mds = formulas::mds(m, p, 8, mu, tau);
+        let rep = formulas::rep(m, p, 2, mu, tau);
+        assert!(ideal < mds && mds < rep * 2.0);
+        assert!((formulas::lt(m, p, mu, tau) - ideal).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,284 @@
+//! Probability distributions used by the delay model, the queueing
+//! simulator and the code constructions.
+//!
+//! The paper's delay model (eq. 5) is `Y_i = X_i + τ·B_i` with the initial
+//! delay `X_i` either shifted-exponential (`exp(μ)`, §4) or Pareto(1,3)
+//! (Appendix F). Arrivals in §5 are Poisson(λ). The Robust Soliton degree
+//! distribution is discrete and is sampled through [`Alias`].
+
+use super::rng::Rng;
+
+/// A continuous distribution that can be sampled with an [`Rng`].
+pub trait Sample {
+    fn sample(&self, rng: &mut Rng) -> f64;
+}
+
+/// Exponential distribution with rate `mu` (mean `1/mu`).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "exponential rate must be positive");
+        Self { rate }
+    }
+}
+
+impl Sample for Exponential {
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        -rng.next_f64_open().ln() / self.rate
+    }
+}
+
+/// Pareto distribution with scale `x_m` and shape `a`:
+/// `Pr(X > x) = (x_m/x)^a` for `x >= x_m`. The paper uses Pareto(1,3).
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    pub scale: f64,
+    pub shape: f64,
+}
+
+impl Pareto {
+    pub fn new(scale: f64, shape: f64) -> Self {
+        assert!(scale > 0.0 && shape > 0.0);
+        Self { scale, shape }
+    }
+}
+
+impl Sample for Pareto {
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.scale / rng.next_f64_open().powf(1.0 / self.shape)
+    }
+}
+
+/// Degenerate (constant) distribution — useful for no-straggling controls.
+#[derive(Clone, Copy, Debug)]
+pub struct Constant(pub f64);
+
+impl Sample for Constant {
+    #[inline]
+    fn sample(&self, _rng: &mut Rng) -> f64 {
+        self.0
+    }
+}
+
+/// Standard normal via Box–Muller (used for Gaussian MDS generator
+/// matrices and synthetic data).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdNormal;
+
+impl Sample for StdNormal {
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let u1 = rng.next_f64_open();
+        let u2 = rng.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// Initial-delay distribution of the paper's delay model: a tagged enum so
+/// configs can choose it at runtime.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayDist {
+    /// `X_i ~ exp(mu)` (paper §4).
+    Exp { mu: f64 },
+    /// `X_i ~ Pareto(scale, shape)` (paper Appendix F uses (1,3)).
+    Pareto { scale: f64, shape: f64 },
+    /// No initial delay (control).
+    None,
+}
+
+impl DelayDist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            DelayDist::Exp { mu } => Exponential::new(mu).sample(rng),
+            DelayDist::Pareto { scale, shape } => Pareto::new(scale, shape).sample(rng),
+            DelayDist::None => 0.0,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            DelayDist::Exp { mu } => 1.0 / mu,
+            DelayDist::Pareto { scale, shape } => {
+                if shape > 1.0 {
+                    shape * scale / (shape - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            DelayDist::None => 0.0,
+        }
+    }
+}
+
+/// Poisson-process arrival generator with rate `lambda`; yields successive
+/// absolute arrival times.
+#[derive(Clone, Debug)]
+pub struct PoissonArrivals {
+    exp: Exponential,
+    t: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(lambda: f64) -> Self {
+        Self {
+            exp: Exponential::new(lambda),
+            t: 0.0,
+        }
+    }
+
+    pub fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        self.t += self.exp.sample(rng);
+        self.t
+    }
+}
+
+/// Vose's alias method for O(1) sampling from a fixed discrete
+/// distribution. Probabilities are indices `0..n` with weights `w[i]`.
+#[derive(Clone, Debug)]
+pub struct Alias {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl Alias {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "weights must sum to a positive finite value");
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        let mut prob = vec![1.0; n];
+        let mut alias = vec![0usize; n];
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // whatever is left has prob 1 (modulo fp error)
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.gen_index(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_of(d: &impl Sample, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let d = Exponential::new(2.0);
+        let m = mean_of(&d, 200_000, 1);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn pareto_mean_matches_formula() {
+        // mean of Pareto(1,3) = 3*1/(3-1) = 1.5
+        let d = Pareto::new(1.0, 3.0);
+        let m = mean_of(&d, 400_000, 2);
+        assert!((m - 1.5).abs() < 0.05, "mean {m}");
+        // support check
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(d.sample(&mut rng) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn normal_mean_zero_var_one() {
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = StdNormal.sample(&mut rng);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn poisson_arrivals_rate() {
+        let mut rng = Rng::new(5);
+        let mut arr = PoissonArrivals::new(0.5);
+        let mut last = 0.0;
+        let n = 100_000;
+        for _ in 0..n {
+            let t = arr.next_arrival(&mut rng);
+            assert!(t > last);
+            last = t;
+        }
+        let rate = n as f64 / last;
+        assert!((rate - 0.5).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let weights = [0.1, 0.2, 0.3, 0.4];
+        let alias = Alias::new(&weights);
+        let mut rng = Rng::new(6);
+        let n = 400_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[alias.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / n as f64;
+            assert!((p - weights[i]).abs() < 0.005, "idx {i}: {p} vs {}", weights[i]);
+        }
+    }
+
+    #[test]
+    fn alias_single_and_skewed() {
+        let a = Alias::new(&[1.0]);
+        let mut rng = Rng::new(7);
+        assert_eq!(a.sample(&mut rng), 0);
+        let skew = Alias::new(&[1e-9, 1.0]);
+        let hits = (0..10_000).filter(|_| skew.sample(&mut rng) == 1).count();
+        assert!(hits > 9_900);
+    }
+
+    #[test]
+    fn delay_dist_means() {
+        assert!((DelayDist::Exp { mu: 2.0 }.mean() - 0.5).abs() < 1e-12);
+        assert!((DelayDist::Pareto { scale: 1.0, shape: 3.0 }.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(DelayDist::None.mean(), 0.0);
+    }
+}

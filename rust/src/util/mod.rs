@@ -1,0 +1,15 @@
+//! Substrate utilities: PRNG, distributions, statistics, CSV/ASCII output,
+//! thread pool, logging, timing.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `criterion`, `serde`,
+//! `tokio`, `clap`) are unavailable — each capability this crate needs is
+//! implemented here from scratch (see DESIGN.md §2, rows 15–19).
+
+pub mod dist;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timing;

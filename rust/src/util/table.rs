@@ -1,0 +1,210 @@
+//! CSV output + ASCII rendering for the figure/table harness.
+//!
+//! Every experiment binary writes machine-readable CSVs under `results/`
+//! (one per paper figure/table) and an ASCII rendering to stdout so the
+//! shape of each reproduced plot is visible in a terminal.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A simple CSV writer: header + rows of f64/string cells.
+pub struct Csv {
+    path: PathBuf,
+    buf: String,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        Self {
+            path: path.as_ref().to_path_buf(),
+            buf,
+            cols: header.len(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[CsvCell]) {
+        assert_eq!(cells.len(), self.cols, "row width != header width");
+        let line: Vec<String> = cells.iter().map(|c| c.render()).collect();
+        self.buf.push_str(&line.join(","));
+        self.buf.push('\n');
+    }
+
+    /// Write the accumulated rows to disk, creating parent directories.
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// One CSV cell.
+pub enum CsvCell {
+    F(f64),
+    I(i64),
+    S(String),
+}
+
+impl CsvCell {
+    fn render(&self) -> String {
+        match self {
+            CsvCell::F(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{x:.1}")
+                } else {
+                    format!("{x:.6}")
+                }
+            }
+            CsvCell::I(i) => i.to_string(),
+            CsvCell::S(s) => s.replace(',', ";"),
+        }
+    }
+}
+
+/// Convenience macro-free constructors.
+pub fn f(x: f64) -> CsvCell {
+    CsvCell::F(x)
+}
+pub fn i(x: i64) -> CsvCell {
+    CsvCell::I(x)
+}
+pub fn s<T: Into<String>>(x: T) -> CsvCell {
+    CsvCell::S(x.into())
+}
+
+/// Render a horizontal ASCII bar chart: one labelled bar per entry.
+/// Used for the paper's bar plots (Figs. 2, 8, 12).
+pub fn ascii_bars(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("── {title}\n");
+    let max = entries.iter().map(|e| e.1).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = entries.iter().map(|e| e.0.len()).max().unwrap_or(0);
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:>label_w$} │{} {v:.4}\n",
+            "█".repeat(n)
+        ));
+    }
+    out
+}
+
+/// Render an (x, y-per-series) ASCII line plot on a character grid.
+/// Used for tail curves and sweep plots (Figs. 1, 7, 9, 11).
+pub fn ascii_plot(
+    title: &str,
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut xs_min = f64::INFINITY;
+    let mut xs_max = f64::NEG_INFINITY;
+    let mut ys_min = f64::INFINITY;
+    let mut ys_max = f64::NEG_INFINITY;
+    for (_, pts) in series {
+        for &(x, y) in pts.iter() {
+            xs_min = xs_min.min(x);
+            xs_max = xs_max.max(x);
+            ys_min = ys_min.min(y);
+            ys_max = ys_max.max(y);
+        }
+    }
+    if !xs_min.is_finite() {
+        return format!("── {title} (no data)\n");
+    }
+    let xr = (xs_max - xs_min).max(1e-12);
+    let yr = (ys_max - ys_min).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in pts.iter() {
+            let cx = (((x - xs_min) / xr) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ys_min) / yr) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = mark;
+        }
+    }
+    let mut out = format!("── {title}   [y: {ys_min:.4} … {ys_max:.4}]\n");
+    for row in grid {
+        out.push('│');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('└');
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("  x: {xs_min:.4} … {xs_max:.4}   "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", MARKS[si % MARKS.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Results directory resolver: `$RATELESS_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("RATELESS_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Global lock for tests that redirect `RATELESS_RESULTS` (env vars are
+/// process-wide; parallel tests must serialize around it).
+pub fn results_env_lock() -> &'static std::sync::Mutex<()> {
+    static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("rateless_test_csv");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&path, &["a", "b", "c"]);
+        c.row(&[f(1.5), i(2), s("x,y")]);
+        c.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b,c\n1.500000,2,x;y\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn csv_width_checked() {
+        let mut c = Csv::new("/tmp/unused.csv", &["a", "b"]);
+        c.row(&[f(1.0)]);
+    }
+
+    #[test]
+    fn bars_render() {
+        let out = ascii_bars(
+            "test",
+            &[("w0".into(), 1.0), ("w1".into(), 2.0)],
+            10,
+        );
+        assert!(out.contains("w0"));
+        assert!(out.contains("██████████")); // the max bar is full width
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let a: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, (10 - i) as f64)).collect();
+        let out = ascii_plot("t", &[("up", &a), ("down", &b)], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+        assert!(out.contains("up"));
+    }
+}

@@ -1,0 +1,138 @@
+//! A small fixed-size thread pool.
+//!
+//! The offline build has no `tokio` (only the `xla` crate closure is
+//! vendored), so the coordinator's worker fabric and the data-parallel
+//! helpers are built on `std::thread` + `std::sync::mpsc`. This module
+//! provides the generic pool; `coordinator/` owns its own long-lived
+//! worker threads with richer state.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of threads executing boxed closures.
+pub struct ThreadPool {
+    tx: Sender<Message>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Message::Run(job)) => job(),
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool thread")
+            })
+            .collect();
+        Self { tx, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .send(Message::Run(Box::new(job)))
+            .expect("pool thread hung up");
+    }
+
+    /// Map `f` over `items` in parallel, preserving order of results.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let r = f(item);
+                // receiver may have been dropped on panic elsewhere; ignore
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker panicked");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..1000).collect::<Vec<i64>>(), |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,114 @@
+//! Wall-clock timing helpers shared by the coordinator and the bench
+//! harness (the environment has no `criterion`; see `rust/benches/`).
+
+use std::time::Instant;
+
+use super::stats::OnlineStats;
+
+/// Time a closure once, returning `(result, seconds)`.
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeatedly time `f` with warmup, returning timing statistics.
+/// `min_iters` iterations are always run; iterations stop early once
+/// `max_seconds` of measurement time has accumulated (but never before
+/// `min_iters`).
+pub fn bench<R>(
+    warmup: usize,
+    min_iters: usize,
+    max_seconds: f64,
+    mut f: impl FnMut() -> R,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = OnlineStats::new();
+    let mut total = 0.0;
+    let mut iters = 0usize;
+    while iters < min_iters || (total < max_seconds && iters < 1_000_000) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        stats.push(dt);
+        total += dt;
+        iters += 1;
+        if iters >= min_iters && total >= max_seconds {
+            break;
+        }
+    }
+    BenchResult { stats }
+}
+
+/// Result of a [`bench`] run.
+pub struct BenchResult {
+    pub stats: OnlineStats,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    /// Format as `mean ± ci95 (n=N)` with human units.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ± {} (n={})",
+            human_time(self.stats.mean()),
+            human_time(self.stats.ci95()),
+            self.stats.count()
+        )
+    }
+}
+
+/// Human-readable seconds: ns/µs/ms/s.
+pub fn human_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Human-readable throughput.
+pub fn human_rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G {unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M {unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}k {unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} {unit}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let r = bench(1, 5, 0.0, || 1 + 1);
+        assert!(r.stats.count() >= 5);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_time(2.5e-9).contains("ns"));
+        assert!(human_time(2.5e-6).contains("µs"));
+        assert!(human_time(2.5e-3).contains("ms"));
+        assert!(human_time(2.5).contains('s'));
+        assert!(human_rate(2.5e6, "rows").contains("M rows/s"));
+    }
+}

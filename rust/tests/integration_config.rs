@@ -1,0 +1,44 @@
+//! Integration: the shipped configs parse into valid cluster/workload/
+//! strategy combinations (guards against config drift).
+
+use rateless::config::{ClusterConfig, Doc, WorkloadConfig};
+
+fn load(name: &str) -> Doc {
+    Doc::from_file(format!("configs/{name}")).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn shipped_configs_parse() {
+    for name in ["ec2.toml", "parallel.toml", "lambda.toml", "mds_baseline.toml"] {
+        let doc = load(name);
+        let cluster = ClusterConfig::from_doc(&doc);
+        let workload = WorkloadConfig::from_doc(&doc);
+        assert!(cluster.workers >= 10, "{name}");
+        assert!(cluster.tau > 0.0, "{name}");
+        assert!(workload.rows >= 1000, "{name}");
+        assert!(!doc.str("strategy", "kind", "").is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn ec2_config_values() {
+    let doc = load("ec2.toml");
+    let cluster = ClusterConfig::from_doc(&doc);
+    let workload = WorkloadConfig::from_doc(&doc);
+    assert_eq!(cluster.workers, 70);
+    assert_eq!((workload.rows, workload.cols), (11760, 9216));
+    assert_eq!(workload.vectors, 5);
+    assert_eq!(doc.str("strategy", "kind", ""), "lt");
+    assert!((doc.f64("strategy", "alpha", 0.0) - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn lambda_config_block_width() {
+    let doc = load("lambda.toml");
+    let cluster = ClusterConfig::from_doc(&doc);
+    assert_eq!(cluster.symbol_width, 10);
+    assert!(matches!(
+        cluster.delay,
+        rateless::util::dist::DelayDist::Pareto { .. }
+    ));
+}

@@ -1,0 +1,109 @@
+//! Integration: PJRT artifacts round-trip — load HLO text produced by
+//! `python/compile/aot.py`, compile on the PJRT CPU client, execute, and
+//! compare numerics against the native kernel. Skipped (with a loud
+//! message) when `make artifacts` has not been run.
+
+use rateless::matrix::Matrix;
+use rateless::runtime::{Engine, Manifest};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_has_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    assert!(!manifest.matvec.is_empty());
+    assert!(manifest.best_fit(100, 1024).is_some());
+}
+
+#[test]
+fn pjrt_matches_native_exact_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::pjrt(&dir).expect("pjrt engine");
+    assert!(engine.is_pjrt());
+    // exact artifact shape: 128×1024
+    let block = Matrix::random(128, 1024, 1);
+    let x = Matrix::random_vector(1024, 2);
+    let got = engine.matvec_chunk(block.data(), 128, 1024, &x).unwrap();
+    let want = Engine::Native
+        .matvec_chunk(block.data(), 128, 1024, &x)
+        .unwrap();
+    assert_eq!(got.len(), want.len());
+    for i in 0..want.len() {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-2 * want[i].abs().max(1.0),
+            "row {i}: pjrt {} vs native {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_pads_odd_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::pjrt(&dir).expect("pjrt engine");
+    // odd chunk: 37 rows × 900 cols → padded to 128×1024 internally
+    let block = Matrix::random(37, 900, 3);
+    let x = Matrix::random_vector(900, 4);
+    let got = engine.matvec_chunk(block.data(), 37, 900, &x).unwrap();
+    let want = Engine::Native
+        .matvec_chunk(block.data(), 37, 900, &x)
+        .unwrap();
+    assert_eq!(got.len(), 37);
+    for i in 0..37 {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-2 * want[i].abs().max(1.0),
+            "row {i}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_oversized_chunk_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::pjrt(&dir).expect("pjrt engine");
+    let block = Matrix::random(4, 20_000, 5); // wider than any artifact
+    let x = Matrix::random_vector(20_000, 6);
+    assert!(engine.matvec_chunk(block.data(), 4, 20_000, &x).is_err());
+}
+
+#[test]
+fn end_to_end_lt_multiply_on_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    use rateless::coding::lt::LtParams;
+    use rateless::config::ClusterConfig;
+    use rateless::coordinator::{Coordinator, Strategy};
+    let engine = Engine::pjrt(&dir).expect("pjrt engine");
+    let (m, n) = (512usize, 1024usize);
+    let a = Matrix::random(m, n, 7);
+    let x = Matrix::random_vector(n, 8);
+    let cluster = ClusterConfig {
+        workers: 4,
+        tau: 1e-5,
+        real_sleep: true,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(3.0)),
+        engine,
+        &a,
+    )
+    .unwrap();
+    let res = coord.multiply(&x).expect("multiply over pjrt");
+    let want = a.matvec(&x);
+    let err = Matrix::max_abs_diff(&res.b, &want);
+    // b entries are O(√n) ≈ 32 and LT decode chains f32 subtractions, so
+    // bound the error relative to the product's scale
+    let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+    assert!(err < 5e-2 * scale, "max err {err} vs scale {scale}");
+}

@@ -1,0 +1,97 @@
+//! Bench: batched-serving throughput — one batch-`b` job vs `b`
+//! independent single-vector jobs on the same straggling fleet.
+//!
+//! Under the delay model, τ is a per-encoded-row cost: a row of `A_e` is
+//! streamed from memory once per job whatever the batch width, so a
+//! batch-`b` job finishes in roughly the wall time of ONE single-vector
+//! job while serving `b` vectors — jobs/sec at width `b` should approach
+//! `b ×` the single-vector rate. The assert at the bottom makes the bench
+//! self-checking for the widths the acceptance criteria name (8, 32).
+//!
+//! `cargo bench --bench throughput` (RATELESS_BENCH_TIME_SCALE to resize
+//! the virtual→wall scaling, default 0.02).
+
+use rateless::coordinator::JobOptions;
+use rateless::prelude::*;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let time_scale: f64 = std::env::var("RATELESS_BENCH_TIME_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let (m, n, p) = (4096usize, 256usize, 8usize);
+    let jobs = 4usize;
+    let a = Matrix::random_ints(m, n, 3, 1);
+    let cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 1.0 }, // the default straggler profile
+        tau: 2e-5,
+        block_fraction: 0.1,
+        seed: 42,
+        real_sleep: true,
+        time_scale,
+        symbol_width: 1,
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )?;
+
+    // warm the pool + verify the batched path once (integer data ⇒ exact)
+    {
+        let xs = Matrix::random_ints(n, 4, 1, 7);
+        let res = coord.multiply_batch(&xs)?;
+        for j in 0..4 {
+            let xj: Vec<f32> = (0..n).map(|c| xs.row(c)[j]).collect();
+            let want = a.matvec(&xj);
+            for i in 0..m {
+                assert_eq!(res.b[i * 4 + j], want[i], "warmup row {i} col {j}");
+            }
+        }
+    }
+
+    println!(
+        "throughput bench: {m}x{n}, p={p}, LT α=2, exp(1) delays, τ=2e-5, \
+         time_scale={time_scale}, {jobs} jobs per width"
+    );
+    println!(
+        "{:>6} {:>12} {:>14} {:>16}",
+        "batch", "jobs/s", "vectors/s", "vs single-vector"
+    );
+    let mut single_vps = 0.0f64;
+    for &b in &[1usize, 8, 32, 128] {
+        let t0 = Instant::now();
+        for j in 0..jobs {
+            // same per-job seeds across widths ⇒ identical straggler draws
+            let xs = Matrix::random_ints(n, b, 1, 100 + j as u64);
+            let res = coord.multiply_batch_opts(
+                &xs,
+                &JobOptions {
+                    seed: Some(1000 + j as u64),
+                    profile: None,
+                },
+            )?;
+            assert_eq!(res.b.len(), m * b);
+            assert_eq!(res.batch, b);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let jps = jobs as f64 / wall;
+        let vps = (jobs * b) as f64 / wall;
+        if b == 1 {
+            single_vps = vps;
+        }
+        let speedup = vps / single_vps;
+        println!("{b:>6} {jps:>12.2} {vps:>14.2} {speedup:>15.2}x");
+        // acceptance: a batch-b job beats b independent single-vector jobs
+        if b == 8 || b == 32 {
+            assert!(
+                speedup > 1.0,
+                "batch {b} served {vps:.1} vectors/s but {b} single jobs would serve {single_vps:.1}"
+            );
+        }
+    }
+    Ok(())
+}

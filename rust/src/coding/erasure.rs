@@ -1,0 +1,535 @@
+//! The unified erasure-coding abstraction the coordinator is built on.
+//!
+//! Every coding strategy — rateless LT and its systematic/Raptor variants
+//! (paper §3), the (p,k) MDS baseline (§4.4) and r-replication (§4.5) —
+//! implements [`ErasureCode`]: encode a matrix into per-worker shards,
+//! expose the encoded-symbol → source-row mapping, and mint per-job
+//! [`ErasureDecoder`]s. The coordinator holds a `Box<dyn ErasureCode>` and
+//! never matches on the strategy again: new codes plug in without touching
+//! `coordinator/`.
+//!
+//! Decoders are **batch-aware**: a job multiplies the encoded matrix
+//! against `batch ≥ 1` query vectors at once (the matrix-matrix regime of
+//! coded-computing follow-ups to the paper), so every payload row carries
+//! `batch` values and the decoded output is `out_rows × batch` row-major.
+//! For the peeling decoder this is just a wider payload: block encoding
+//! over `width` rows and batching over `batch` vectors compose into one
+//! payload of `width · batch` values per encoded symbol.
+//!
+//! The three rateless variants share all of their shard/decode plumbing:
+//! they implement the narrower [`Fountain`] trait (symbol budget, degree
+//! mapping, peeler factory, completion policy), and their [`ErasureCode`]
+//! impls below are one-line delegations into the shared
+//! [`fountain_shards`]/[`fountain_decoder`] machinery. (A blanket
+//! `impl<C: Fountain> ErasureCode for C` would conflict with the direct
+//! `MdsCode`/`RepCode` impls under Rust's coherence rules, so the
+//! delegation is spelled out per type.)
+
+use std::sync::Arc;
+
+use super::peeling::PeelingDecoder;
+use crate::matrix::Matrix;
+
+/// Geometry of an encoded shard assignment, fixed at encode time and
+/// shared by every job's decoder.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// Per-worker shard offsets in encoded-symbol units (super-row units
+    /// when `width > 1`).
+    pub starts: Vec<usize>,
+    /// Per-worker shard heights in matrix-row units.
+    pub shard_rows: Vec<usize>,
+    /// Rows per encoded symbol (paper §6.3 block encoding; 1 = row-level).
+    pub width: usize,
+    /// True output length m, before any zero padding to width multiples.
+    pub out_rows: usize,
+}
+
+/// Result of encoding a matrix for a worker fleet.
+pub struct EncodedShards {
+    /// One `rows × n` matrix per worker.
+    pub shards: Vec<Arc<Matrix>>,
+    pub layout: ShardLayout,
+}
+
+/// A coding strategy usable by the coordinator: encode shards, map encoded
+/// symbols back to source rows, and mint per-job decoders.
+pub trait ErasureCode: Send + Sync {
+    /// Human-readable code name (diagnostics).
+    fn name(&self) -> String;
+
+    /// Encode `a` under this code and split it into `p` worker shards.
+    /// `width` is the block-encoding symbol width (each encoded symbol
+    /// covers `width` matrix rows); fixed-rate codes require `width == 1`.
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards;
+
+    /// Source rows feeding global encoded symbol `id` (for rateless codes
+    /// the indices may range over an extended intermediate space, e.g.
+    /// Raptor precode parities).
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>);
+
+    /// Fresh decoder for one job over `layout` with `batch ≥ 1` vectors.
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder>;
+}
+
+/// Per-job decode state behind [`ErasureCode::new_decoder`].
+pub trait ErasureDecoder: Send {
+    /// Ingest one worker chunk: `products` holds `rows × batch` values
+    /// row-major for shard-local rows `start_row ..`. Returns the number
+    /// of row-products consumed (0 if the chunk was discarded).
+    fn ingest(
+        &mut self,
+        worker: usize,
+        start_row: usize,
+        products: &[f32],
+        virtual_time: f64,
+    ) -> usize;
+
+    /// True once `B = A·X` is recoverable.
+    fn is_complete(&self) -> bool;
+
+    /// Job latency given the virtual time of the chunk that completed
+    /// recovery: rateless codes use it directly; fixed-rate codes take the
+    /// max over their used workers' finish clocks.
+    fn latency(&self, completing_v: f64) -> f64;
+
+    /// Extract `B` (`out_rows × batch` row-major). Only called after
+    /// [`is_complete`](Self::is_complete).
+    fn finish(self: Box<Self>) -> Result<Vec<f32>, String>;
+
+    /// Human-readable progress diagnostic (for undecodable jobs).
+    fn detail(&self) -> String;
+}
+
+/// A rateless (fountain) code: encoded symbols are sums of random source
+/// subsets, decoded online by peeling. Implementors get their
+/// [`ErasureCode`] behaviour from [`fountain_shards`] and
+/// [`fountain_decoder`].
+pub trait Fountain: Clone + Send + Sync + 'static {
+    /// Display name.
+    fn fountain_name(&self) -> String;
+
+    /// Number of source symbols (super-rows) the code is built over.
+    fn source_symbols(&self) -> usize;
+
+    /// Encoded-symbol budget m_e.
+    fn encoded_symbols(&self) -> usize;
+
+    /// Source/intermediate indices of encoded symbol `id`.
+    fn sources_of(&self, id: u64, out: &mut Vec<usize>);
+
+    /// Materialize the encoded matrix from the (superposed) source matrix.
+    fn encode_source(&self, sup: &Matrix) -> Matrix;
+
+    /// Fresh peeling decoder with payload width `w`.
+    fn peeler(&self, w: usize) -> PeelingDecoder;
+
+    /// Per-symbol completion policy hook (Raptor runs its inactivation
+    /// schedule here). Returns completion state.
+    fn on_symbol(&self, dec: &mut PeelingDecoder) -> bool {
+        dec.is_complete()
+    }
+}
+
+/// Per-worker block-product accumulator shared by the fixed-rate (MDS,
+/// replication) decoders: buffers each worker's `rows × batch` panel and
+/// tracks its filled row prefix.
+pub(crate) struct BlockBuffers {
+    batch: usize,
+    buffers: Vec<Vec<f32>>,
+    filled: Vec<usize>,
+}
+
+impl BlockBuffers {
+    pub(crate) fn new(layout: &ShardLayout, batch: usize) -> Self {
+        assert!(batch >= 1);
+        Self {
+            batch,
+            buffers: layout
+                .shard_rows
+                .iter()
+                .map(|&r| vec![0.0; r * batch])
+                .collect(),
+            filled: vec![0; layout.shard_rows.len()],
+        }
+    }
+
+    pub(crate) fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Copy a chunk into `worker`'s panel. Returns `(rows_consumed,
+    /// filled_rows)` where `filled_rows` is the worker's contiguous-prefix
+    /// high-water mark.
+    pub(crate) fn fill(
+        &mut self,
+        worker: usize,
+        start_row: usize,
+        products: &[f32],
+    ) -> (usize, usize) {
+        let b = self.batch;
+        debug_assert_eq!(products.len() % b, 0);
+        let rows = products.len() / b;
+        let buf = &mut self.buffers[worker];
+        buf[start_row * b..(start_row + rows) * b].copy_from_slice(products);
+        self.filled[worker] = self.filled[worker].max(start_row + rows);
+        (rows, self.filled[worker])
+    }
+
+    /// Move a worker's finished panel out (leaves an empty Vec behind).
+    pub(crate) fn take(&mut self, worker: usize) -> Vec<f32> {
+        std::mem::take(&mut self.buffers[worker])
+    }
+}
+
+/// Reshape `a` into super-rows of `width` rows each (zero-padded), the
+/// source symbols of a block-encoded rateless code (paper §6.3). Returns
+/// the reshaped matrix and the super-row count. `width == 1` is the
+/// identity reshape (cheap: one copy).
+pub fn superpose(a: &Matrix, width: usize) -> (Matrix, usize) {
+    let sm = a.rows().div_ceil(width);
+    if a.rows() == sm * width {
+        // reinterpret rows without changing the buffer layout
+        let reshaped = Matrix::from_vec(sm, width * a.cols(), a.data().to_vec());
+        return (reshaped, sm);
+    }
+    let mut data = a.data().to_vec();
+    data.resize(sm * width * a.cols(), 0.0);
+    (Matrix::from_vec(sm, width * a.cols(), data), sm)
+}
+
+/// Shared [`ErasureCode::encode_shards`] for fountain codes: encode in
+/// super-row space and split the encoded matrix into `p` contiguous
+/// shards, re-expressed as `(rows × n)` matrices so workers compute
+/// ordinary row products.
+pub fn fountain_shards<C: Fountain>(
+    code: &C,
+    a: &Matrix,
+    p: usize,
+    width: usize,
+) -> EncodedShards {
+    assert!(p >= 1 && width >= 1);
+    let (sup, sm) = superpose(a, width);
+    assert_eq!(
+        sm,
+        code.source_symbols(),
+        "matrix shape does not match the code dimension"
+    );
+    let enc = code.encode_source(&sup); // (m_e × width·n)
+    let me = enc.rows();
+    let n = a.cols();
+    let mut starts = Vec::with_capacity(p);
+    let mut shard_rows = Vec::with_capacity(p);
+    let mut shards = Vec::with_capacity(p);
+    for w in 0..p {
+        let s = w * me / p;
+        let e = (w + 1) * me / p;
+        starts.push(s);
+        // row-major (count, width·n) == (count·width, n): same buffer
+        let count = e - s;
+        let slice = enc.row_block(s, count).to_vec();
+        shard_rows.push(count * width);
+        shards.push(Arc::new(Matrix::from_vec(count * width, n, slice)));
+    }
+    EncodedShards {
+        shards,
+        layout: ShardLayout {
+            starts,
+            shard_rows,
+            width,
+            out_rows: a.rows(),
+        },
+    }
+}
+
+/// Shared [`ErasureCode::new_decoder`] for fountain codes.
+pub fn fountain_decoder<C: Fountain>(
+    code: &C,
+    layout: &ShardLayout,
+    batch: usize,
+) -> Box<dyn ErasureDecoder> {
+    assert!(batch >= 1);
+    Box::new(FountainJobDecoder {
+        code: code.clone(),
+        peel: code.peeler(layout.width * batch),
+        starts: layout.starts.clone(),
+        width: layout.width,
+        batch,
+        out_rows: layout.out_rows,
+        scratch: Vec::new(),
+    })
+}
+
+impl ErasureCode for crate::coding::lt::LtCode {
+    fn name(&self) -> String {
+        self.fountain_name()
+    }
+
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+        fountain_shards(self, a, p, width)
+    }
+
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
+        self.sources_of(id, out)
+    }
+
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder> {
+        fountain_decoder(self, layout, batch)
+    }
+}
+
+impl ErasureCode for crate::coding::systematic::SystematicLt {
+    fn name(&self) -> String {
+        self.fountain_name()
+    }
+
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+        fountain_shards(self, a, p, width)
+    }
+
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
+        self.sources_of(id, out)
+    }
+
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder> {
+        fountain_decoder(self, layout, batch)
+    }
+}
+
+impl ErasureCode for crate::coding::raptor::RaptorCode {
+    fn name(&self) -> String {
+        self.fountain_name()
+    }
+
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+        fountain_shards(self, a, p, width)
+    }
+
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
+        self.sources_of(id, out)
+    }
+
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder> {
+        fountain_decoder(self, layout, batch)
+    }
+}
+
+/// Shared per-job decoder of the three rateless variants: feeds worker
+/// chunks symbol-by-symbol into the peeling decoder.
+struct FountainJobDecoder<C: Fountain> {
+    code: C,
+    peel: PeelingDecoder,
+    starts: Vec<usize>,
+    width: usize,
+    batch: usize,
+    out_rows: usize,
+    scratch: Vec<usize>,
+}
+
+impl<C: Fountain> ErasureDecoder for FountainJobDecoder<C> {
+    fn ingest(
+        &mut self,
+        worker: usize,
+        start_row: usize,
+        products: &[f32],
+        _virtual_time: f64,
+    ) -> usize {
+        let (w, b) = (self.width, self.batch);
+        debug_assert_eq!(start_row % w, 0, "chunks must align to symbol width");
+        debug_assert_eq!(products.len() % (w * b), 0);
+        let base = self.starts[worker] + start_row / w;
+        let mut used = 0;
+        for (i, payload) in products.chunks_exact(w * b).enumerate() {
+            if self.peel.is_complete() {
+                break;
+            }
+            self.code.sources_of((base + i) as u64, &mut self.scratch);
+            self.peel.add_symbol(&self.scratch, payload);
+            self.code.on_symbol(&mut self.peel);
+            used += 1;
+        }
+        used * w
+    }
+
+    fn is_complete(&self) -> bool {
+        self.peel.is_complete()
+    }
+
+    fn latency(&self, completing_v: f64) -> f64 {
+        completing_v
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>, String> {
+        let me = *self;
+        if !me.peel.is_complete() {
+            return Err(me.detail());
+        }
+        // m_sym × (width·batch) row-major == (padded_rows × batch): drop
+        // the Raptor parity tail, then the zero-padding rows.
+        let mut values = me.peel.into_values();
+        values.truncate(me.code.source_symbols() * me.width * me.batch);
+        values.truncate(me.out_rows * me.batch);
+        Ok(values)
+    }
+
+    fn detail(&self) -> String {
+        format!(
+            "rateless: {}/{} sources decoded from {} symbols",
+            self.peel.watched_decoded_count(),
+            self.peel.m(),
+            self.peel.received_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::lt::{LtCode, LtParams};
+    use crate::coding::mds::MdsCode;
+    use crate::coding::raptor::{RaptorCode, RaptorParams};
+    use crate::coding::replication::RepCode;
+    use crate::coding::systematic::SystematicLt;
+    use crate::matrix::ops;
+
+    /// Drive a code end-to-end through the trait: encode shards, compute
+    /// every worker's products for a batched X, feed chunks to a fresh
+    /// decoder in round-robin order, and verify the decoded `A·X`.
+    fn roundtrip(name: &str, code: &dyn ErasureCode, m: usize, p: usize, width: usize, batch: usize) {
+        let n = 6;
+        let a = Matrix::random_ints(m, n, 3, 5);
+        // X: n × batch row-major
+        let x: Vec<f32> = Matrix::random_ints(n, batch, 2, 6).data().to_vec();
+        // reference: want[i·batch + j] = A.row(i) · X[:, j]
+        let mut want = vec![0.0f32; m * batch];
+        ops::block_matmat(a.data(), m, n, &x, batch, &mut want);
+
+        let EncodedShards { shards, layout } = code.encode_shards(&a, p, width);
+        assert_eq!(shards.len(), p);
+        assert_eq!(layout.out_rows, m);
+        for (w, shard) in shards.iter().enumerate() {
+            assert_eq!(shard.rows(), layout.shard_rows[w], "{name} worker {w}");
+            assert_eq!(shard.cols(), n, "{name} worker {w}");
+        }
+
+        // per-worker products, chunked a few symbols at a time
+        let products: Vec<Vec<f32>> = shards
+            .iter()
+            .map(|s| {
+                let mut out = vec![0.0f32; s.rows() * batch];
+                ops::block_matmat(s.data(), s.rows(), n, &x, batch, &mut out);
+                out
+            })
+            .collect();
+
+        let mut dec = code.new_decoder(&layout, batch);
+        let chunk_rows = 2 * layout.width;
+        let mut offsets = vec![0usize; p];
+        let mut progressed = true;
+        let mut v = 0.0f64;
+        while !dec.is_complete() && progressed {
+            progressed = false;
+            for w in 0..p {
+                if dec.is_complete() {
+                    break;
+                }
+                let rows = shards[w].rows();
+                if offsets[w] >= rows {
+                    continue;
+                }
+                let len = chunk_rows.min(rows - offsets[w]);
+                v += 1.0;
+                dec.ingest(
+                    w,
+                    offsets[w],
+                    &products[w][offsets[w] * batch..(offsets[w] + len) * batch],
+                    v,
+                );
+                offsets[w] += len;
+                progressed = true;
+            }
+        }
+        assert!(dec.is_complete(), "{name}: not decodable from all shards");
+        assert!(dec.latency(v) > 0.0, "{name}");
+        let got = dec.finish().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(got.len(), m * batch, "{name}");
+        for i in 0..m * batch {
+            assert!(
+                (got[i] - want[i]).abs() < 2e-2 * want[i].abs().max(1.0),
+                "{name} flat index {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn all_five_codes_roundtrip_through_the_trait() {
+        // Small-m LT needs generous α: the paper's ε→0 is asymptotic in m.
+        let lt = LtParams::with_alpha(3.5);
+        for &batch in &[1usize, 4] {
+            roundtrip("lt", &LtCode::new(96, lt, 1), 96, 4, 1, batch);
+            roundtrip("syslt", &SystematicLt::new(96, lt, 2), 96, 4, 1, batch);
+            roundtrip(
+                "raptor",
+                &RaptorCode::new(96, RaptorParams::default(), 3),
+                96,
+                4,
+                1,
+                batch,
+            );
+            roundtrip("mds", &MdsCode::new(90, 4, 3, 4), 90, 4, 1, batch);
+            roundtrip("rep", &RepCode::new(90, 4, 2), 90, 4, 1, batch);
+            roundtrip("uncoded", &RepCode::new(90, 4, 1), 90, 4, 1, batch);
+        }
+    }
+
+    #[test]
+    fn block_encoding_with_batch_roundtrips() {
+        // width 4 over a non-divisible row count (padding), batched
+        let (m, width) = (102usize, 4usize);
+        let sm = m.div_ceil(width);
+        roundtrip(
+            "lt-block",
+            &LtCode::new(sm, LtParams::with_alpha(4.0), 7),
+            m,
+            3,
+            width,
+            3,
+        );
+    }
+
+    #[test]
+    fn symbol_sources_cover_all_codes() {
+        let mut out = Vec::new();
+        let lt = LtCode::new(64, LtParams::with_alpha(2.0), 1);
+        ErasureCode::symbol_sources(&lt, 5, &mut out);
+        assert!(!out.is_empty() && out.iter().all(|&i| i < 64));
+
+        let mds = MdsCode::new(60, 5, 3, 2);
+        // worker 0 is systematic: symbol r maps to source r
+        ErasureCode::symbol_sources(&mds, 3, &mut out);
+        assert_eq!(out, vec![3]);
+        // a parity worker's symbol touches one row of every block
+        ErasureCode::symbol_sources(&mds, (4 * mds.block_rows()) as u64, &mut out);
+        assert_eq!(out.len(), 3);
+
+        let rep = RepCode::new(60, 4, 2);
+        ErasureCode::symbol_sources(&rep, 17, &mut out);
+        assert_eq!(out, vec![17]);
+    }
+
+    #[test]
+    fn superpose_pads_and_reshapes() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let (sup, sm) = superpose(&a, 2);
+        assert_eq!(sm, 2);
+        assert_eq!(sup.rows(), 2);
+        assert_eq!(sup.cols(), 4);
+        assert_eq!(sup.row(0), &[1., 2., 3., 4.]);
+        assert_eq!(sup.row(1), &[5., 6., 0., 0.]);
+        let (id, sm1) = superpose(&a, 1);
+        assert_eq!(sm1, 3);
+        assert_eq!(id.data(), a.data());
+    }
+}

@@ -4,11 +4,23 @@
 //! argues MDS decoding is unacceptable at large scale).
 
 /// LU factorization error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SolveError {
-    #[error("matrix is singular at pivot {0} (|pivot| = {1:.3e})")]
+    /// Matrix is singular at the given pivot column (with |pivot|).
     Singular(usize, f64),
 }
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Singular(col, mag) => {
+                write!(f, "matrix is singular at pivot {col} (|pivot| = {mag:.3e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 /// In-place LU with partial pivoting on a row-major `n×n` matrix.
 /// Returns the pivot permutation: row `i` of the factored matrix came from

@@ -9,6 +9,8 @@
 //! how practical fountain systems (RFC 5053/6330) communicate only a
 //! symbol id + seed.
 
+use super::erasure::Fountain;
+use super::peeling::PeelingDecoder;
 use super::soliton::RobustSoliton;
 use crate::matrix::{ops, Matrix};
 use crate::util::rng::{derive_seed, Rng};
@@ -137,6 +139,32 @@ impl LtCode {
         assert_eq!(b.len(), self.m);
         self.row_indices(row_id, scratch);
         scratch.iter().map(|&i| b[i]).sum()
+    }
+}
+
+impl Fountain for LtCode {
+    fn fountain_name(&self) -> String {
+        format!("lt{:.2}", self.params.alpha)
+    }
+
+    fn source_symbols(&self) -> usize {
+        self.m
+    }
+
+    fn encoded_symbols(&self) -> usize {
+        self.num_encoded()
+    }
+
+    fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
+        self.row_indices(id, out)
+    }
+
+    fn encode_source(&self, sup: &Matrix) -> Matrix {
+        self.encode(sup)
+    }
+
+    fn peeler(&self, w: usize) -> PeelingDecoder {
+        PeelingDecoder::new(self.m, w)
     }
 }
 

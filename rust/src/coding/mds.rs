@@ -13,6 +13,9 @@
 //! (O(k³)) and back-substitutes all m/k payload columns (O(k²·m/k)) —
 //! the complexity row "O(mk + k³)" of the paper's Table 1.
 
+use std::sync::Arc;
+
+use super::erasure::{BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout};
 use super::linsolve;
 use crate::matrix::{ops, Matrix};
 use crate::util::dist::{Sample, StdNormal};
@@ -30,18 +33,44 @@ pub struct MdsCode {
 }
 
 /// Error from MDS decoding.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MdsError {
-    #[error("need {need} distinct worker results, got {got}")]
     NotEnough { need: usize, got: usize },
-    #[error("duplicate worker id {0}")]
     Duplicate(usize),
-    #[error("worker id {0} out of range")]
     BadWorker(usize),
-    #[error("payload length {got} != block length {want}")]
     BadPayload { got: usize, want: usize },
-    #[error("singular decode system: {0}")]
-    Singular(#[from] linsolve::SolveError),
+    Singular(linsolve::SolveError),
+}
+
+impl std::fmt::Display for MdsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MdsError::NotEnough { need, got } => {
+                write!(f, "need {need} distinct worker results, got {got}")
+            }
+            MdsError::Duplicate(w) => write!(f, "duplicate worker id {w}"),
+            MdsError::BadWorker(w) => write!(f, "worker id {w} out of range"),
+            MdsError::BadPayload { got, want } => {
+                write!(f, "payload length {got} != block length {want}")
+            }
+            MdsError::Singular(e) => write!(f, "singular decode system: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MdsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MdsError::Singular(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<linsolve::SolveError> for MdsError {
+    fn from(e: linsolve::SolveError) -> Self {
+        MdsError::Singular(e)
+    }
 }
 
 impl MdsCode {
@@ -124,6 +153,18 @@ impl MdsCode {
     /// Decode `b = A·x` (length m) from any `k` distinct workers' block
     /// products (each of length `block_rows`).
     pub fn decode(&self, results: &[(usize, Vec<f32>)]) -> Result<Vec<f32>, MdsError> {
+        self.decode_batch(results, 1)
+    }
+
+    /// Batched decode: each worker payload is `block_rows × batch`
+    /// row-major, the output is `m × batch` row-major. One k×k solve
+    /// back-substitutes all `block_rows · batch` right-hand sides.
+    pub fn decode_batch(
+        &self,
+        results: &[(usize, Vec<f32>)],
+        batch: usize,
+    ) -> Result<Vec<f32>, MdsError> {
+        assert!(batch >= 1);
         if results.len() < self.k {
             return Err(MdsError::NotEnough {
                 need: self.k,
@@ -140,35 +181,144 @@ impl MdsCode {
                 return Err(MdsError::Duplicate(w));
             }
             seen[w] = true;
-            if payload.len() != self.block_rows {
+            if payload.len() != self.block_rows * batch {
                 return Err(MdsError::BadPayload {
                     got: payload.len(),
-                    want: self.block_rows,
+                    want: self.block_rows * batch,
                 });
             }
         }
-        // coefficient matrix k×k and RHS k×block_rows
+        // coefficient matrix k×k and RHS k×(block_rows·batch)
         let k = self.k;
-        let br = self.block_rows;
+        let wpl = self.block_rows * batch;
         let mut g = vec![0.0f64; k * k];
-        let mut rhs = vec![0.0f64; k * br];
+        let mut rhs = vec![0.0f64; k * wpl];
         for (row, &(w, ref payload)) in chosen.iter().enumerate() {
             g[row * k..(row + 1) * k].copy_from_slice(&self.coefficients(w));
-            for c in 0..br {
-                rhs[row * br + c] = payload[c] as f64;
+            for c in 0..wpl {
+                rhs[row * wpl + c] = payload[c] as f64;
             }
         }
-        let x = linsolve::solve(&g, k, &rhs, br)?;
+        let x = linsolve::solve(&g, k, &rhs, wpl)?;
         // unpad: block j supplies rows j*br .. min((j+1)*br, m)
-        let mut b = vec![0.0f32; self.m];
+        let br = self.block_rows;
+        let mut b = vec![0.0f32; self.m * batch];
         for j in 0..k {
             let start = j * br;
             let end = ((j + 1) * br).min(self.m);
             for r in start..end {
-                b[r] = x[j * br + (r - start)] as f32;
+                for c in 0..batch {
+                    b[r * batch + c] = x[j * wpl + (r - start) * batch + c] as f32;
+                }
             }
         }
         Ok(b)
+    }
+}
+
+impl ErasureCode for MdsCode {
+    fn name(&self) -> String {
+        format!("mds{}", self.k)
+    }
+
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+        assert_eq!(p, self.p, "MDS code was built for p = {} workers", self.p);
+        assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
+        let shards: Vec<Arc<Matrix>> = self.encode(a).into_iter().map(Arc::new).collect();
+        let layout = ShardLayout {
+            starts: (0..p).map(|w| w * self.block_rows).collect(),
+            shard_rows: shards.iter().map(|s| s.rows()).collect(),
+            width: 1,
+            out_rows: self.m,
+        };
+        EncodedShards { shards, layout }
+    }
+
+    /// Encoded symbol `w·block_rows + r` combines row `r` of every source
+    /// block with a nonzero generator coefficient for worker `w`.
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
+        let id = id as usize;
+        let w = id / self.block_rows;
+        let r = id % self.block_rows;
+        out.clear();
+        for (j, &c) in self.coefficients(w).iter().enumerate() {
+            if c != 0.0 {
+                let src = j * self.block_rows + r;
+                if src < self.m {
+                    out.push(src);
+                }
+            }
+        }
+    }
+
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder> {
+        Box::new(MdsJobDecoder {
+            code: self.clone(),
+            bufs: BlockBuffers::new(layout, batch),
+            complete: Vec::new(),
+        })
+    }
+}
+
+/// Per-job MDS decode state: accumulate per-worker block products; once
+/// any `k` workers have delivered their full block, solve.
+struct MdsJobDecoder {
+    code: MdsCode,
+    bufs: BlockBuffers,
+    /// Workers whose full block product has arrived, with completion v.
+    complete: Vec<(usize, f64)>,
+}
+
+impl ErasureDecoder for MdsJobDecoder {
+    fn ingest(
+        &mut self,
+        worker: usize,
+        start_row: usize,
+        products: &[f32],
+        virtual_time: f64,
+    ) -> usize {
+        let (rows, filled) = self.bufs.fill(worker, start_row, products);
+        if filled == self.code.block_rows()
+            && !self.complete.iter().any(|&(cw, _)| cw == worker)
+        {
+            self.complete.push((worker, virtual_time));
+        }
+        rows
+    }
+
+    fn is_complete(&self) -> bool {
+        self.complete.len() >= self.code.k()
+    }
+
+    fn latency(&self, _completing_v: f64) -> f64 {
+        self.complete[..self.code.k()]
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::MIN, f64::max)
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>, String> {
+        let mut me = *self;
+        let k = me.code.k();
+        if me.complete.len() < k {
+            return Err(me.detail());
+        }
+        let results: Vec<(usize, Vec<f32>)> = me.complete[..k]
+            .iter()
+            .map(|&(w, _)| (w, me.bufs.take(w)))
+            .collect();
+        let batch = me.bufs.batch();
+        me.code
+            .decode_batch(&results, batch)
+            .map_err(|e| e.to_string())
+    }
+
+    fn detail(&self) -> String {
+        format!(
+            "mds: {}/{} workers complete",
+            self.complete.len(),
+            self.code.k()
+        )
     }
 }
 

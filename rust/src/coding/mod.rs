@@ -4,6 +4,7 @@
 //!
 //! | module        | paper section | role |
 //! |---------------|---------------|------|
+//! | `erasure`     | —             | unified [`ErasureCode`]/[`ErasureDecoder`] traits |
 //! | `soliton`     | §3.1 eq. (4)  | Robust Soliton degree distribution |
 //! | `lt`          | §3.1–3.2      | rateless LT encoder |
 //! | `peeling`     | §3.1, Fig. 5b | online iterative peeling decoder |
@@ -12,7 +13,12 @@
 //! | `mds`         | §2.3, §4.4    | (p,k) MDS baseline over the reals |
 //! | `replication` | §2.3, §4.5    | r-replication / uncoded baseline |
 //! | `linsolve`    | §4.4          | LU solver substrate for MDS decode |
+//!
+//! Every strategy implements [`ErasureCode`] (the three rateless variants
+//! share their plumbing via the [`Fountain`] helper trait), so the
+//! coordinator is a single generic loop over `Box<dyn ErasureCode>`.
 
+pub mod erasure;
 pub mod linsolve;
 pub mod lt;
 pub mod mds;
@@ -21,3 +27,5 @@ pub mod raptor;
 pub mod replication;
 pub mod soliton;
 pub mod systematic;
+
+pub use erasure::{EncodedShards, ErasureCode, ErasureDecoder, Fountain, ShardLayout};

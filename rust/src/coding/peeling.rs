@@ -391,6 +391,85 @@ mod tests {
         }
     }
 
+    /// Width > 1: duplicate symbols are consumed but reveal nothing new,
+    /// and the payload arithmetic stays exact.
+    #[test]
+    fn wide_duplicate_symbols_are_harmless() {
+        let w = 4;
+        let blocks: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..w).map(|c| (i * w + c) as f32 + 1.0).collect())
+            .collect();
+        let sum01: Vec<f32> = (0..w).map(|c| blocks[0][c] + blocks[1][c]).collect();
+        let mut dec = PeelingDecoder::new(3, w);
+        assert_eq!(dec.add_symbol(&[0, 1], &sum01), 0);
+        assert_eq!(dec.add_symbol(&[0, 1], &sum01), 0); // exact duplicate
+        assert_eq!(dec.add_symbol(&[2], &blocks[2]), 1);
+        assert_eq!(dec.add_symbol(&[2], &blocks[2]), 0); // duplicate of a decoded source
+        // singleton for source 0 cascades through the stored (0,1) symbol
+        assert_eq!(dec.add_symbol(&[0], &blocks[0]), 2);
+        assert!(dec.is_complete());
+        assert_eq!(dec.received_count(), 5);
+        let v = dec.into_values();
+        for i in 0..3 {
+            assert_eq!(&v[i * w..(i + 1) * w], &blocks[i][..], "block {i}");
+        }
+    }
+
+    /// Width > 1: delivery order must not matter — feed the same wide
+    /// symbol set forwards and backwards and get identical values.
+    #[test]
+    fn wide_out_of_order_delivery_decodes_identically() {
+        let (m, w) = (6usize, 3usize);
+        let vals: Vec<f32> = (0..m * w).map(|i| ((i * 13) % 31) as f32 - 15.0).collect();
+        let block = |i: usize| &vals[i * w..(i + 1) * w];
+        // chain system: singleton 0, then (i, i+1) pairs
+        let mut symbols: Vec<(Vec<usize>, Vec<f32>)> = vec![(vec![0], block(0).to_vec())];
+        for i in 0..m - 1 {
+            let sum: Vec<f32> = (0..w).map(|c| block(i)[c] + block(i + 1)[c]).collect();
+            symbols.push((vec![i, i + 1], sum));
+        }
+        let decode = |order: &[usize]| -> Vec<f32> {
+            let mut dec = PeelingDecoder::new(m, w);
+            for &s in order {
+                let (ref idx, ref payload) = symbols[s];
+                dec.add_symbol(idx, payload);
+            }
+            assert!(dec.is_complete());
+            dec.into_values()
+        };
+        let forward: Vec<usize> = (0..symbols.len()).collect();
+        let backward: Vec<usize> = (0..symbols.len()).rev().collect();
+        assert_eq!(decode(&forward), vals);
+        assert_eq!(decode(&backward), vals);
+    }
+
+    /// Width > 1: completion lands exactly at the threshold symbol —
+    /// `completed_at` equals the receive count of the completing symbol,
+    /// is_complete flips exactly then, and later symbols don't move it.
+    #[test]
+    fn wide_completion_exactly_at_threshold() {
+        let w = 2;
+        let b = [[1.0f32, 2.0], [30.0, 40.0], [500.0, 600.0]];
+        let mut dec = PeelingDecoder::new(3, w);
+        assert!(!dec.is_complete());
+        dec.add_symbol(&[0, 1], &[b[0][0] + b[1][0], b[0][1] + b[1][1]]);
+        dec.add_symbol(&[1, 2], &[b[1][0] + b[2][0], b[1][1] + b[2][1]]);
+        assert!(!dec.is_complete());
+        assert_eq!(dec.completed_at(), None);
+        // the third symbol is the exact threshold: one singleton unlocks all
+        assert_eq!(dec.add_symbol(&[1], &b[1]), 3);
+        assert!(dec.is_complete());
+        assert_eq!(dec.completed_at(), Some(3));
+        // a late symbol is ignored and does not disturb completed_at
+        assert_eq!(dec.add_symbol(&[0], &b[0]), 0);
+        assert_eq!(dec.completed_at(), Some(3));
+        assert_eq!(dec.received_count(), 4);
+        let v = dec.into_values();
+        for i in 0..3 {
+            assert_eq!(&v[i * w..(i + 1) * w], &b[i][..]);
+        }
+    }
+
     #[test]
     #[should_panic(expected = "incomplete")]
     fn into_values_requires_completion() {

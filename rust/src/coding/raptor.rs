@@ -23,6 +23,7 @@
 //! Decoding watches only the first `m` intermediates (the true sources) —
 //! see [`PeelingDecoder::with_watch`].
 
+use super::erasure::Fountain;
 use super::peeling::PeelingDecoder;
 
 use crate::matrix::{ops, Matrix};
@@ -229,6 +230,36 @@ impl RaptorCode {
             dec.add_symbol(&idx, &zero);
         }
         dec
+    }
+}
+
+impl Fountain for RaptorCode {
+    fn fountain_name(&self) -> String {
+        format!("raptor{:.2}", self.params.alpha)
+    }
+
+    fn source_symbols(&self) -> usize {
+        self.m
+    }
+
+    fn encoded_symbols(&self) -> usize {
+        self.num_encoded()
+    }
+
+    fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
+        self.row_indices(id, out)
+    }
+
+    fn encode_source(&self, sup: &Matrix) -> Matrix {
+        self.encode(sup)
+    }
+
+    fn peeler(&self, w: usize) -> PeelingDecoder {
+        self.decoder(w)
+    }
+
+    fn on_symbol(&self, dec: &mut PeelingDecoder) -> bool {
+        self.maybe_inactivate(dec) || dec.is_complete()
     }
 }
 

@@ -5,6 +5,9 @@
 //! the first finished copy of each group. `r = 1` is the naive uncoded
 //! strategy.
 
+use std::sync::Arc;
+
+use super::erasure::{BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout};
 use crate::matrix::Matrix;
 
 /// An r-replication assignment over p workers.
@@ -15,13 +18,24 @@ pub struct RepCode {
     r: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RepError {
-    #[error("group {0} has no finished worker")]
     MissingGroup(usize),
-    #[error("payload length {got} != group rows {want}")]
     BadPayload { got: usize, want: usize },
 }
+
+impl std::fmt::Display for RepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RepError::MissingGroup(g) => write!(f, "group {g} has no finished worker"),
+            RepError::BadPayload { got, want } => {
+                write!(f, "payload length {got} != group rows {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RepError {}
 
 impl RepCode {
     /// `r` must divide `p`.
@@ -76,20 +90,137 @@ impl RepCode {
     /// Assemble `b` from one finished payload per group:
     /// `results[g] = Some(product of group g's submatrix)`.
     pub fn decode(&self, results: &[Option<Vec<f32>>]) -> Result<Vec<f32>, RepError> {
+        self.decode_batch(results, 1)
+    }
+
+    /// Batched assembly: each group payload is `group_rows × batch`
+    /// row-major; the output is `m × batch` row-major.
+    pub fn decode_batch(
+        &self,
+        results: &[Option<Vec<f32>>],
+        batch: usize,
+    ) -> Result<Vec<f32>, RepError> {
+        assert!(batch >= 1);
         assert_eq!(results.len(), self.groups());
-        let mut b = vec![0.0f32; self.m];
+        let mut b = vec![0.0f32; self.m * batch];
         for g in 0..self.groups() {
             let (start, end) = self.group_rows(g);
             let payload = results[g].as_ref().ok_or(RepError::MissingGroup(g))?;
-            if payload.len() != end - start {
+            if payload.len() != (end - start) * batch {
                 return Err(RepError::BadPayload {
                     got: payload.len(),
-                    want: end - start,
+                    want: (end - start) * batch,
                 });
             }
-            b[start..end].copy_from_slice(payload);
+            b[start * batch..end * batch].copy_from_slice(payload);
         }
         Ok(b)
+    }
+}
+
+impl ErasureCode for RepCode {
+    fn name(&self) -> String {
+        if self.r == 1 {
+            "uncoded".into()
+        } else {
+            format!("rep{}", self.r)
+        }
+    }
+
+    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+        assert_eq!(p, self.p, "replication code was built for p = {} workers", self.p);
+        assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
+        let shards: Vec<Arc<Matrix>> = (0..p)
+            .map(|w| Arc::new(self.encode_worker(a, w)))
+            .collect();
+        let layout = ShardLayout {
+            // a replica's local row r is globally source row group_start + r
+            starts: (0..p)
+                .map(|w| self.group_rows(self.worker_group(w)).0)
+                .collect(),
+            shard_rows: shards.iter().map(|s| s.rows()).collect(),
+            width: 1,
+            out_rows: self.m,
+        };
+        EncodedShards { shards, layout }
+    }
+
+    /// Replication is systematic: encoded symbol `id` *is* source row `id`.
+    fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
+        debug_assert!((id as usize) < self.m);
+        out.clear();
+        out.push(id as usize);
+    }
+
+    fn new_decoder(&self, layout: &ShardLayout, batch: usize) -> Box<dyn ErasureDecoder> {
+        Box::new(RepJobDecoder {
+            code: self.clone(),
+            bufs: BlockBuffers::new(layout, batch),
+            group_done: vec![None; self.groups()],
+        })
+    }
+}
+
+/// Per-job replication decode state: first finished replica serves its
+/// group (paper §2.3); later copies are discarded.
+struct RepJobDecoder {
+    code: RepCode,
+    bufs: BlockBuffers,
+    /// Per group: (worker, completion v) of the first finisher.
+    group_done: Vec<Option<(usize, f64)>>,
+}
+
+impl ErasureDecoder for RepJobDecoder {
+    fn ingest(
+        &mut self,
+        worker: usize,
+        start_row: usize,
+        products: &[f32],
+        virtual_time: f64,
+    ) -> usize {
+        let g = self.code.worker_group(worker);
+        if self.group_done[g].is_some() {
+            return 0; // group already served; discard (paper)
+        }
+        let (rows, filled) = self.bufs.fill(worker, start_row, products);
+        let (gs, ge) = self.code.group_rows(g);
+        if filled == ge - gs {
+            self.group_done[g] = Some((worker, virtual_time));
+        }
+        rows
+    }
+
+    fn is_complete(&self) -> bool {
+        self.group_done.iter().all(|g| g.is_some())
+    }
+
+    fn latency(&self, _completing_v: f64) -> f64 {
+        self.group_done
+            .iter()
+            .map(|g| g.expect("complete").1)
+            .fold(f64::MIN, f64::max)
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>, String> {
+        let mut me = *self;
+        let results: Vec<Option<Vec<f32>>> = me
+            .group_done
+            .clone()
+            .iter()
+            .map(|g| g.map(|(w, _)| me.bufs.take(w)))
+            .collect();
+        let batch = me.bufs.batch();
+        me.code
+            .decode_batch(&results, batch)
+            .map_err(|e| e.to_string())
+    }
+
+    fn detail(&self) -> String {
+        format!(
+            "rep: {}/{} groups served",
+            self.group_done.iter().filter(|g| g.is_some()).count(),
+            self.group_done.len()
+        )
     }
 }
 

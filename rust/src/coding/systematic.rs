@@ -5,7 +5,9 @@
 //! rows first, so if there is no/little straggling the master assembles
 //! `b` directly and no peeling is needed at all.
 
+use super::erasure::Fountain;
 use super::lt::{LtCode, LtParams};
+use super::peeling::PeelingDecoder;
 use crate::matrix::Matrix;
 
 /// Systematic LT code: identity prefix + LT suffix.
@@ -65,6 +67,32 @@ impl SystematicLt {
             }
         }
         out
+    }
+}
+
+impl Fountain for SystematicLt {
+    fn fountain_name(&self) -> String {
+        format!("syslt{:.2}", self.params().alpha)
+    }
+
+    fn source_symbols(&self) -> usize {
+        self.m()
+    }
+
+    fn encoded_symbols(&self) -> usize {
+        self.num_encoded()
+    }
+
+    fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
+        self.row_indices(id, out)
+    }
+
+    fn encode_source(&self, sup: &Matrix) -> Matrix {
+        self.encode(sup)
+    }
+
+    fn peeler(&self, w: usize) -> PeelingDecoder {
+        PeelingDecoder::new(self.m(), w)
     }
 }
 

@@ -1,21 +1,23 @@
 //! Master-side collection + decode loop for one job.
 //!
-//! The master receives blockwise [`WorkerEvent`]s, feeds a
-//! strategy-specific decode state, and — the moment `b = A·x` is
-//! recoverable — broadcasts the *done* signal (paper §3.2) so workers stop
-//! computing. It then drains the remaining `Done` events to account the
-//! total computations `C` (paper Definition 2) and per-worker load.
+//! The master receives blockwise [`WorkerEvent`]s, feeds the job's
+//! [`ErasureDecoder`], and — the moment `B = A·X` is recoverable —
+//! broadcasts the *done* signal (paper §3.2) so workers stop computing. It
+//! then drains the remaining `Done` events to account the total
+//! computations `C` (paper Definition 2) and per-worker load.
+//!
+//! The loop is strategy-agnostic: all code-specific behaviour lives behind
+//! the [`ErasureDecoder`] trait object minted by the coordinator's
+//! [`ErasureCode`](crate::coding::ErasureCode).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::messages::{ChunkMsg, WorkerEvent};
-use super::rateless::RatelessCode;
-use crate::coding::mds::MdsCode;
-use crate::coding::peeling::PeelingDecoder;
-use crate::coding::replication::RepCode;
+use crate::coding::ErasureDecoder;
+
+use super::messages::WorkerEvent;
 
 /// Per-worker load statistics (paper Fig. 2 bars).
 #[derive(Clone, Debug)]
@@ -32,14 +34,20 @@ pub struct WorkerStat {
 /// Result of one distributed multiply.
 #[derive(Clone, Debug)]
 pub struct JobResult {
-    /// The decoded product b = A·x.
+    /// The decoded product `B = A·X`, `m × batch` row-major (row `i`'s
+    /// products for the whole batch are adjacent). For `batch == 1` this
+    /// is exactly the classic `b = A·x` vector.
     pub b: Vec<f32>,
+    /// Number of query vectors served by this job.
+    pub batch: usize,
     /// Latency T in virtual seconds (paper Definition 1).
     pub latency: f64,
-    /// Total computations C across workers (paper Definition 2).
+    /// Total encoded-row computations C across workers (paper Definition
+    /// 2). Counted in rows, not row×batch products: a batched row costs
+    /// one τ like a single-vector row (see `worker` docs).
     pub computations: usize,
-    /// Encoded products actually consumed by the master before decode
-    /// completed (LT: the empirical M′; fixed-rate: rows used).
+    /// Encoded rows actually consumed by the master before decode
+    /// completed (LT: the empirical M′·width; fixed-rate: rows used).
     pub symbols_used: usize,
     /// Wall-clock seconds the master spent in decode bookkeeping.
     pub decode_cpu: f64,
@@ -47,197 +55,27 @@ pub struct JobResult {
 }
 
 /// Why a job failed.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JobError {
-    #[error("undecodable: all workers finished but b is not recoverable ({detail})")]
     Undecodable { detail: String },
-    #[error("decode error: {0}")]
     Decode(String),
-    #[error("worker channel closed unexpectedly")]
     ChannelClosed,
 }
 
-/// Strategy-specific decode state.
-pub enum DecodeState {
-    Rateless {
-        code: RatelessCode,
-        decoder: PeelingDecoder,
-        /// Global encoded-symbol offset of each worker's shard (in
-        /// super-row units when `width > 1`).
-        starts: Vec<usize>,
-        /// Rows per encoded symbol (paper §6.3 block encoding).
-        width: usize,
-        /// True output length m (before zero padding to width multiples).
-        out_len: usize,
-    },
-    Mds {
-        code: MdsCode,
-        /// Per-worker accumulated block products.
-        buffers: Vec<Vec<f32>>,
-        filled: Vec<usize>,
-        /// Workers whose full block product has arrived, with completion v.
-        complete: Vec<(usize, f64)>,
-    },
-    Rep {
-        code: RepCode,
-        buffers: Vec<Vec<f32>>,
-        filled: Vec<usize>,
-        /// Per group: (worker, completion v) of the first finisher.
-        group_done: Vec<Option<(usize, f64)>>,
-    },
-}
-
-impl DecodeState {
-    /// Returns true once `b` is recoverable.
-    fn complete(&self) -> bool {
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            DecodeState::Rateless { decoder, .. } => decoder.is_complete(),
-            DecodeState::Mds { code, complete, .. } => complete.len() >= code.k(),
-            DecodeState::Rep { group_done, .. } => group_done.iter().all(|g| g.is_some()),
-        }
-    }
-
-    /// Ingest one chunk. Returns the number of products consumed.
-    fn ingest(&mut self, msg: &ChunkMsg, scratch: &mut Vec<usize>) -> usize {
-        match self {
-            DecodeState::Rateless {
-                code,
-                decoder,
-                starts,
-                width,
-                ..
-            } => {
-                let w = *width;
-                debug_assert_eq!(msg.start_row % w, 0, "chunks must align to symbol width");
-                debug_assert_eq!(msg.products.len() % w, 0);
-                let base = starts[msg.worker] + msg.start_row / w;
-                let mut used = 0;
-                for (i, payload) in msg.products.chunks_exact(w).enumerate() {
-                    if decoder.is_complete() {
-                        break;
-                    }
-                    code.row_indices((base + i) as u64, scratch);
-                    decoder.add_symbol(scratch, payload);
-                    code.maybe_finish(decoder);
-                    used += 1;
-                }
-                used * w
-            }
-            DecodeState::Mds {
-                code,
-                buffers,
-                filled,
-                complete,
-            } => {
-                let w = msg.worker;
-                let buf = &mut buffers[w];
-                let end = msg.start_row + msg.products.len();
-                buf[msg.start_row..end].copy_from_slice(&msg.products);
-                filled[w] = filled[w].max(end);
-                if filled[w] == code.block_rows() && !complete.iter().any(|&(cw, _)| cw == w) {
-                    complete.push((w, msg.virtual_time));
-                }
-                msg.products.len()
-            }
-            DecodeState::Rep {
-                code,
-                buffers,
-                filled,
-                group_done,
-            } => {
-                let w = msg.worker;
-                let g = code.worker_group(w);
-                if group_done[g].is_some() {
-                    return 0; // group already served; discard (paper)
-                }
-                let buf = &mut buffers[w];
-                let end = msg.start_row + msg.products.len();
-                buf[msg.start_row..end].copy_from_slice(&msg.products);
-                filled[w] = filled[w].max(end);
-                let (gs, ge) = code.group_rows(g);
-                if filled[w] == ge - gs {
-                    group_done[g] = Some((w, msg.virtual_time));
-                }
-                msg.products.len()
-            }
-        }
-    }
-
-    /// Latency of the completed job: the virtual time of the message that
-    /// completed recovery (fixed-rate: max over the used workers' finish
-    /// clocks; rateless: the completing chunk's clock, passed in).
-    fn latency(&self, completing_v: f64) -> f64 {
-        match self {
-            DecodeState::Rateless { .. } => completing_v,
-            DecodeState::Mds { code, complete, .. } => complete[..code.k()]
-                .iter()
-                .map(|&(_, v)| v)
-                .fold(f64::MIN, f64::max),
-            DecodeState::Rep { group_done, .. } => group_done
-                .iter()
-                .map(|g| g.expect("complete").1)
-                .fold(f64::MIN, f64::max),
-        }
-    }
-
-    /// Produce b after completion.
-    fn finish(self) -> Result<Vec<f32>, JobError> {
-        match self {
-            DecodeState::Rateless {
-                code,
-                decoder,
-                out_len,
-                ..
-            } => Ok(code.extract(decoder, out_len)),
-            DecodeState::Mds {
-                code,
-                mut buffers,
-                complete,
-                ..
-            } => {
-                let results: Vec<(usize, Vec<f32>)> = complete[..code.k()]
-                    .iter()
-                    .map(|&(w, _)| (w, std::mem::take(&mut buffers[w])))
-                    .collect();
-                code.decode(&results)
-                    .map_err(|e| JobError::Decode(e.to_string()))
-            }
-            DecodeState::Rep {
-                code,
-                mut buffers,
-                group_done,
-                ..
-            } => {
-                let results: Vec<Option<Vec<f32>>> = group_done
-                    .iter()
-                    .map(|g| g.map(|(w, _)| std::mem::take(&mut buffers[w])))
-                    .collect();
-                code.decode(&results)
-                    .map_err(|e| JobError::Decode(e.to_string()))
-            }
-        }
-    }
-
-    /// Diagnostic for undecodable jobs.
-    fn detail(&self) -> String {
-        match self {
-            DecodeState::Rateless { decoder, .. } => format!(
-                "rateless: {}/{} sources decoded from {} symbols",
-                decoder.watched_decoded_count(),
-                decoder.m().min(decoder.received_count().max(decoder.m())),
-                decoder.received_count()
+            JobError::Undecodable { detail } => write!(
+                f,
+                "undecodable: all workers finished but b is not recoverable ({detail})"
             ),
-            DecodeState::Mds { code, complete, .. } => {
-                format!("mds: {}/{} workers complete", complete.len(), code.k())
-            }
-            DecodeState::Rep { group_done, .. } => format!(
-                "rep: {}/{} groups served",
-                group_done.iter().filter(|g| g.is_some()).count(),
-                group_done.len()
-            ),
+            JobError::Decode(msg) => write!(f, "decode error: {msg}"),
+            JobError::ChannelClosed => write!(f, "worker channel closed unexpectedly"),
         }
     }
 }
+
+impl std::error::Error for JobError {}
 
 /// Run the master loop: collect events from `rx` for `p` workers, cancel
 /// on completion, account C, and return the job result. `tau` is the
@@ -246,12 +84,13 @@ impl DecodeState {
 /// finished in the cancellation window is excluded from C but still
 /// visible in `per_worker.rows_done`).
 pub fn collect(
-    mut state: DecodeState,
+    decoder: Box<dyn ErasureDecoder>,
     rx: &Receiver<WorkerEvent>,
     cancel: &Arc<AtomicBool>,
     p: usize,
     initial_delays: &[f64],
     tau: f64,
+    batch: usize,
 ) -> Result<JobResult, JobError> {
     let mut per_worker: Vec<WorkerStat> = initial_delays
         .iter()
@@ -266,34 +105,28 @@ pub fn collect(
     let mut symbols_used = 0usize;
     let mut completing_v = f64::MIN;
     let mut decode_cpu = 0.0f64;
-    let mut scratch = Vec::new();
-    let mut finished: Option<(f64, DecodeState)> = None;
+    let mut live: Option<Box<dyn ErasureDecoder>> = Some(decoder);
+    let mut finished: Option<(f64, Box<dyn ErasureDecoder>)> = None;
 
     while done_workers < p {
         let ev = rx.recv().map_err(|_| JobError::ChannelClosed)?;
         match ev {
             WorkerEvent::Chunk(msg) => {
-                if finished.is_some() {
+                let Some(dec) = live.as_mut() else {
                     continue; // post-cancel stragglers
-                }
+                };
                 let t0 = Instant::now();
-                let used = state.ingest(&msg, &mut scratch);
+                let used = dec.ingest(msg.worker, msg.start_row, &msg.products, msg.virtual_time);
                 decode_cpu += t0.elapsed().as_secs_f64();
                 symbols_used += used;
                 if used > 0 {
                     completing_v = completing_v.max(msg.virtual_time);
                 }
-                if state.complete() {
-                    let latency = state.latency(completing_v);
+                if dec.is_complete() {
+                    let latency = dec.latency(completing_v);
                     cancel.store(true, Ordering::Relaxed);
-                    // move the state out; keep draining Done events
-                    let placeholder = DecodeState::Rep {
-                        code: RepCode::new(1, 1, 1),
-                        buffers: vec![],
-                        filled: vec![],
-                        group_done: vec![Some((0, 0.0))],
-                    };
-                    finished = Some((latency, std::mem::replace(&mut state, placeholder)));
+                    // move the decoder out; keep draining Done events
+                    finished = Some((latency, live.take().expect("decoder live")));
                 }
             }
             WorkerEvent::Done {
@@ -312,9 +145,9 @@ pub fn collect(
     }
 
     match finished {
-        Some((latency, st)) => {
+        Some((latency, dec)) => {
             let t0 = Instant::now();
-            let b = st.finish()?;
+            let b = dec.finish().map_err(JobError::Decode)?;
             decode_cpu += t0.elapsed().as_secs_f64();
             // C (Definition 2): rows finished by time T under the delay
             // model — clamp each worker's count at floor((T − X_i)/τ).
@@ -332,6 +165,7 @@ pub fn collect(
                 .sum();
             Ok(JobResult {
                 b,
+                batch,
                 latency,
                 computations,
                 symbols_used,
@@ -340,7 +174,7 @@ pub fn collect(
             })
         }
         None => Err(JobError::Undecodable {
-            detail: state.detail(),
+            detail: live.map(|d| d.detail()).unwrap_or_default(),
         }),
     }
 }

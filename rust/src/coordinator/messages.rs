@@ -11,7 +11,9 @@ pub struct ChunkMsg {
     pub worker: usize,
     /// First row of this block, as an offset *within the worker's shard*.
     pub start_row: usize,
-    /// Products for rows `start_row .. start_row + products.len()`.
+    /// Products for rows `start_row .. start_row + products.len()/batch`,
+    /// row-major: each row contributes `batch` values (1 for plain
+    /// matvec jobs).
     pub products: Vec<f32>,
     /// Worker virtual clock when the block was finished:
     /// `X_i + τ · rows_done_so_far`.

@@ -1,29 +1,40 @@
 //! The distributed master/worker coordinator — the paper's system
-//! contribution as a running artifact.
+//! contribution as a running artifact, reworked for serving traffic.
 //!
 //! A [`Coordinator`] encodes a matrix once under a chosen [`Strategy`]
-//! (paper §2.3/§3), distributes the encoded shards to `p` worker threads,
-//! and serves multiply jobs: broadcast `x`, collect blockwise partial
-//! products, decode online, cancel leftover work the moment `b = A·x` is
+//! (paper §2.3/§3) through the unified
+//! [`ErasureCode`](crate::coding::ErasureCode) trait, distributes the
+//! encoded shards into a **persistent worker pool** (one long-lived thread
+//! per worker, shard resident across jobs — see [`pool`]), and serves
+//! multiply jobs: broadcast `X`, collect blockwise partial products,
+//! decode online, cancel leftover work the moment `B = A·X` is
 //! recoverable. Worker straggling follows the paper's delay model via
 //! [`straggler::StragglerProfile`] (threads really sleep, so message
 //! ordering, partial work and cancellation behave like the paper's EC2
 //! cluster — see DESIGN.md substitutions).
+//!
+//! Jobs are **batched**: [`Coordinator::multiply_batch`] multiplies the
+//! encoded matrix against `batch ≥ 1` query vectors in one pass over the
+//! shards (the matrix-matrix regime of the coded-computing literature),
+//! amortizing straggler padding, decode bookkeeping and master round
+//! trips across the whole batch. The coordinator is `Sync`: clients may
+//! submit jobs concurrently from many threads and they queue FCFS at the
+//! workers, the paper's §5 streaming setting.
 
 pub mod master;
 pub mod messages;
-pub mod rateless;
+pub mod pool;
 pub mod straggler;
 pub mod stream;
 pub mod worker;
 
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub use master::{JobError, JobResult, WorkerStat};
-use rateless::RatelessCode;
+use pool::WorkerPool;
 use straggler::StragglerProfile;
 
 use crate::coding::lt::{LtCode, LtParams};
@@ -31,6 +42,7 @@ use crate::coding::mds::MdsCode;
 use crate::coding::raptor::{RaptorCode, RaptorParams};
 use crate::coding::replication::RepCode;
 use crate::coding::systematic::SystematicLt;
+use crate::coding::{ErasureCode, ShardLayout};
 use crate::config::ClusterConfig;
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
@@ -63,23 +75,43 @@ impl Strategy {
             Strategy::Raptor(p) => format!("raptor{:.2}", p.alpha),
         }
     }
-}
 
-/// Encoded shards + decode recipe, fixed at `Coordinator::new`.
-enum Assignment {
-    Rateless {
-        code: RatelessCode,
-        /// Per-worker shard offsets in encoded-symbol (super-row) units.
-        starts: Vec<usize>,
-        /// Rows per encoded symbol.
-        width: usize,
-    },
-    Mds {
-        code: MdsCode,
-    },
-    Rep {
-        code: RepCode,
-    },
+    /// Construct the [`ErasureCode`] for a `rows`-row matrix on `p`
+    /// workers. Returns the code plus the effective symbol width: block
+    /// encoding (`symbol_width > 1`, paper §6.3) applies to the rateless
+    /// strategies only — fixed-rate codes always use width 1.
+    ///
+    /// This is the single construction point: everything downstream
+    /// (encoding, sharding, per-job decoding) goes through the trait
+    /// object, so adding a strategy means implementing `ErasureCode` (or
+    /// the narrower [`Fountain`](crate::coding::Fountain)) and one arm
+    /// here.
+    pub fn build(
+        &self,
+        rows: usize,
+        p: usize,
+        symbol_width: usize,
+        seed: u64,
+    ) -> (Box<dyn ErasureCode>, usize) {
+        let sw = symbol_width.max(1);
+        match self {
+            Strategy::Uncoded => (Box::new(RepCode::new(rows, p, 1)), 1),
+            Strategy::Replication { r } => (Box::new(RepCode::new(rows, p, *r)), 1),
+            Strategy::Mds { k } => (Box::new(MdsCode::new(rows, p, *k, seed)), 1),
+            Strategy::Lt(params) => (
+                Box::new(LtCode::new(rows.div_ceil(sw), *params, seed)),
+                sw,
+            ),
+            Strategy::SystematicLt(params) => (
+                Box::new(SystematicLt::new(rows.div_ceil(sw), *params, seed)),
+                sw,
+            ),
+            Strategy::Raptor(params) => (
+                Box::new(RaptorCode::new(rows.div_ceil(sw), *params, seed)),
+                sw,
+            ),
+        }
+    }
 }
 
 /// Per-job knobs.
@@ -92,23 +124,28 @@ pub struct JobOptions {
     pub profile: Option<StragglerProfile>,
 }
 
-/// The master node: owns encoded shards and serves multiply jobs.
+/// The master node: owns the encoded-shard layout and a persistent worker
+/// pool, and serves (possibly concurrent, possibly batched) multiply jobs.
 pub struct Coordinator {
     cluster: ClusterConfig,
     strategy: Strategy,
-    engine: Engine,
-    assignment: Assignment,
-    shards: Vec<Arc<Matrix>>,
+    code: Box<dyn ErasureCode>,
+    layout: ShardLayout,
+    pool: WorkerPool,
+    /// Per-worker rows per result message, aligned to the symbol width.
+    block_rows: Vec<usize>,
     profile: StragglerProfile,
     m: usize,
     n: usize,
-    jobs_served: std::cell::Cell<u64>,
+    encoded_rows: usize,
+    jobs_served: AtomicU64,
 }
 
 impl Coordinator {
-    /// Encode `a` under `strategy` and distribute shards across
-    /// `cluster.workers` workers. Encoding is the preprocessing step of
-    /// paper §3.2 — performed once, off the latency path.
+    /// Encode `a` under `strategy` and park the shards in a persistent
+    /// pool of `cluster.workers` worker threads. Encoding is the
+    /// preprocessing step of paper §3.2 — performed once, off the latency
+    /// path; the pool lives until the coordinator is dropped.
     pub fn new(
         cluster: ClusterConfig,
         strategy: Strategy,
@@ -118,58 +155,34 @@ impl Coordinator {
         let p = cluster.workers;
         anyhow::ensure!(p >= 1, "need at least one worker");
         anyhow::ensure!(cluster.symbol_width >= 1, "symbol_width must be >= 1");
-        let seed = cluster.seed;
-        let width = cluster.symbol_width;
-        let (assignment, shards) = match &strategy {
-            Strategy::Uncoded => {
-                let code = RepCode::new(a.rows(), p, 1);
-                let shards = (0..p)
-                    .map(|w| Arc::new(code.encode_worker(a, w)))
-                    .collect();
-                (Assignment::Rep { code }, shards)
-            }
-            Strategy::Replication { r } => {
-                let code = RepCode::new(a.rows(), p, *r);
-                let shards = (0..p)
-                    .map(|w| Arc::new(code.encode_worker(a, w)))
-                    .collect();
-                (Assignment::Rep { code }, shards)
-            }
-            Strategy::Mds { k } => {
-                let code = MdsCode::new(a.rows(), p, *k, seed);
-                let shards = code.encode(a).into_iter().map(Arc::new).collect();
-                (Assignment::Mds { code }, shards)
-            }
-            Strategy::Lt(params) => {
-                let (sup, sm) = superpose(a, width);
-                let code = RatelessCode::Lt(LtCode::new(sm, *params, seed));
-                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
-                (Assignment::Rateless { code, starts, width }, shards)
-            }
-            Strategy::SystematicLt(params) => {
-                let (sup, sm) = superpose(a, width);
-                let code = RatelessCode::Systematic(SystematicLt::new(sm, *params, seed));
-                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
-                (Assignment::Rateless { code, starts, width }, shards)
-            }
-            Strategy::Raptor(params) => {
-                let (sup, sm) = superpose(a, width);
-                let code = RatelessCode::Raptor(RaptorCode::new(sm, *params, seed));
-                let (starts, shards) = shard_rateless(&code, &sup, p, width, a.cols());
-                (Assignment::Rateless { code, starts, width }, shards)
-            }
-        };
+        let (code, width) = strategy.build(a.rows(), p, cluster.symbol_width, cluster.seed);
+        let encoded = code.encode_shards(a, p, width);
+        let layout = encoded.layout;
+        let encoded_rows = encoded.shards.iter().map(|s| s.rows()).sum();
+        let block_rows = encoded
+            .shards
+            .iter()
+            .map(|shard| {
+                let rows = ((shard.rows() as f64 * cluster.block_fraction).round() as usize)
+                    .clamp(1, shard.rows().max(1));
+                // align result messages to encoded-symbol boundaries
+                rows.div_ceil(layout.width) * layout.width
+            })
+            .collect();
+        let pool = WorkerPool::spawn(encoded.shards, &engine);
         let profile = StragglerProfile::new(cluster.delay);
         Ok(Self {
             m: a.rows(),
             n: a.cols(),
             cluster,
             strategy,
-            engine,
-            assignment,
-            shards,
+            code,
+            layout,
+            pool,
+            block_rows,
             profile,
-            jobs_served: std::cell::Cell::new(0),
+            encoded_rows,
+            jobs_served: AtomicU64::new(0),
         })
     }
 
@@ -187,10 +200,16 @@ impl Coordinator {
 
     /// Total encoded rows held across all workers.
     pub fn encoded_rows(&self) -> usize {
-        self.shards.iter().map(|s| s.rows()).sum()
+        self.encoded_rows
     }
 
-    /// Multiply with default per-job options.
+    /// Jobs served so far (monotone counter; also seeds per-job delay
+    /// draws when no explicit seed is given).
+    pub fn jobs_served(&self) -> u64 {
+        self.jobs_served.load(Ordering::Relaxed)
+    }
+
+    /// Multiply a single vector with default per-job options.
     pub fn multiply(&self, x: &[f32]) -> Result<JobResult, JobError> {
         self.multiply_opts(x, &JobOptions::default())
     }
@@ -198,9 +217,36 @@ impl Coordinator {
     /// Multiply `A · x` across the worker fleet.
     pub fn multiply_opts(&self, x: &[f32], opts: &JobOptions) -> Result<JobResult, JobError> {
         assert_eq!(x.len(), self.n, "vector length mismatch");
+        self.run_job(Arc::new(x.to_vec()), 1, opts)
+    }
+
+    /// Multiply a batch of query vectors in one job: `xs` is `n × batch`
+    /// row-major (column `j` is query vector `j`). Returns `B = A·X` as
+    /// `m × batch` row-major in [`JobResult::b`].
+    pub fn multiply_batch(&self, xs: &Matrix) -> Result<JobResult, JobError> {
+        self.multiply_batch_opts(xs, &JobOptions::default())
+    }
+
+    /// Batched multiply with per-job options.
+    pub fn multiply_batch_opts(
+        &self,
+        xs: &Matrix,
+        opts: &JobOptions,
+    ) -> Result<JobResult, JobError> {
+        assert_eq!(xs.rows(), self.n, "X row count must equal A's columns");
+        assert!(xs.cols() >= 1, "need at least one query vector");
+        self.run_job(Arc::new(xs.data().to_vec()), xs.cols(), opts)
+    }
+
+    /// Submit one job to the pool and run the master collect/decode loop.
+    fn run_job(
+        &self,
+        x: Arc<Vec<f32>>,
+        batch: usize,
+        opts: &JobOptions,
+    ) -> Result<JobResult, JobError> {
         let p = self.cluster.workers;
-        let job_idx = self.jobs_served.get();
-        self.jobs_served.set(job_idx + 1);
+        let job_idx = self.jobs_served.fetch_add(1, Ordering::Relaxed);
         let seed = opts
             .seed
             .unwrap_or_else(|| crate::util::rng::derive_seed(self.cluster.seed, 1000 + job_idx));
@@ -209,123 +255,43 @@ impl Coordinator {
 
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
-        let x_arc = Arc::new(x.to_vec());
         let start = Instant::now();
-        let mut handles = Vec::with_capacity(p);
-        let width = match &self.assignment {
-            Assignment::Rateless { width, .. } => *width,
-            _ => 1,
-        };
-        for w in 0..p {
-            let shard = Arc::clone(&self.shards[w]);
-            let mut block_rows = ((shard.rows() as f64 * self.cluster.block_fraction).round()
-                as usize)
-                .clamp(1, shard.rows().max(1));
-            // align result messages to encoded-symbol boundaries
-            block_rows = block_rows.div_ceil(width) * width;
-            let task = worker::WorkerTask {
-                worker: w,
-                shard,
-                x: Arc::clone(&x_arc),
-                engine: self.engine.clone(),
+        let orders = (0..p)
+            .map(|w| worker::JobOrder {
+                x: Arc::clone(&x),
+                batch,
                 plan: plans[w],
                 tau: self.cluster.tau,
-                block_rows,
+                block_rows: self.block_rows[w],
                 time_scale: if self.cluster.real_sleep {
                     self.cluster.time_scale
                 } else {
                     0.0
                 },
+                start,
                 tx: tx.clone(),
                 cancel: Arc::clone(&cancel),
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{w}"))
-                    .spawn(move || worker::run_worker(task, start))
-                    .expect("spawn worker"),
-            );
-        }
+            })
+            .collect();
+        // atomic w.r.t. other jobs: same arrival order on every worker
+        self.pool.broadcast(orders);
         drop(tx);
 
-        let state = self.decode_state();
+        let decoder = self.code.new_decoder(&self.layout, batch);
         let delays: Vec<f64> = plans.iter().map(|pl| pl.initial_delay).collect();
-        let result = master::collect(state, &rx, &cancel, p, &delays, self.cluster.tau);
-        // ensure all threads are joined before returning (no leaks)
-        cancel.store(true, std::sync::atomic::Ordering::Relaxed);
-        for h in handles {
-            let _ = h.join();
-        }
+        let result = master::collect(
+            decoder,
+            &rx,
+            &cancel,
+            p,
+            &delays,
+            self.cluster.tau,
+            batch,
+        );
+        // belt-and-braces: make sure no worker keeps computing for this job
+        cancel.store(true, Ordering::Relaxed);
         result
     }
-
-    /// Build the per-job decode state for the configured strategy.
-    fn decode_state(&self) -> master::DecodeState {
-        match &self.assignment {
-            Assignment::Rateless { code, starts, width } => master::DecodeState::Rateless {
-                code: code.clone(),
-                decoder: code.new_decoder(*width),
-                starts: starts.clone(),
-                width: *width,
-                out_len: self.m,
-            },
-            Assignment::Mds { code } => master::DecodeState::Mds {
-                code: code.clone(),
-                buffers: self.shards.iter().map(|s| vec![0.0; s.rows()]).collect(),
-                filled: vec![0; self.cluster.workers],
-                complete: Vec::new(),
-            },
-            Assignment::Rep { code } => master::DecodeState::Rep {
-                code: code.clone(),
-                buffers: self.shards.iter().map(|s| vec![0.0; s.rows()]).collect(),
-                filled: vec![0; self.cluster.workers],
-                group_done: vec![None; code.groups()],
-            },
-        }
-    }
-}
-
-/// Reshape `a` into super-rows of `width` rows each (zero-padded), the
-/// source symbols of a block-encoded rateless code (paper §6.3). Returns
-/// the reshaped matrix and the super-row count. `width == 1` is the
-/// identity reshape (cheap: one copy).
-fn superpose(a: &Matrix, width: usize) -> (Matrix, usize) {
-    let sm = a.rows().div_ceil(width);
-    if a.rows() == sm * width {
-        // reinterpret rows without changing the buffer layout
-        let reshaped = Matrix::from_vec(sm, width * a.cols(), a.data().to_vec());
-        return (reshaped, sm);
-    }
-    let mut data = a.data().to_vec();
-    data.resize(sm * width * a.cols(), 0.0);
-    (Matrix::from_vec(sm, width * a.cols(), data), sm)
-}
-
-/// Split the encoded matrix of a rateless code into p contiguous shards.
-/// Encoding happens in super-row space (`sup` is the reshaped source
-/// matrix); shards are re-expressed as `(rows × n)` matrices so workers
-/// compute ordinary row products. `starts` are in super-row units.
-fn shard_rateless(
-    code: &RatelessCode,
-    sup: &Matrix,
-    p: usize,
-    width: usize,
-    n: usize,
-) -> (Vec<usize>, Vec<Arc<Matrix>>) {
-    let enc = code.encode(sup); // (m_e_super × width·n)
-    let me = enc.rows();
-    let mut starts = Vec::with_capacity(p);
-    let mut shards = Vec::with_capacity(p);
-    for w in 0..p {
-        let s = w * me / p;
-        let e = (w + 1) * me / p;
-        starts.push(s);
-        // row-major (count, width·n) == (count·width, n): same buffer
-        let count = e - s;
-        let slice = enc.row_block(s, count).to_vec();
-        shards.push(Arc::new(Matrix::from_vec(count * width, n, slice)));
-    }
-    (starts, shards)
 }
 
 #[cfg(test)]
@@ -354,6 +320,7 @@ mod tests {
             .expect("coordinator");
         let out = coord.multiply(&x).expect("multiply");
         assert_eq!(out.b.len(), m, "{}", strategy.name());
+        assert_eq!(out.batch, 1);
         for i in 0..m {
             assert!(
                 (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
@@ -366,6 +333,29 @@ mod tests {
         assert!(out.latency > 0.0);
         assert!(out.computations >= m.min(out.symbols_used));
         assert_eq!(out.per_worker.len(), p);
+    }
+
+    fn check_strategy_batched(strategy: Strategy, m: usize, p: usize, batch: usize) {
+        let a = Matrix::random(m, 12, 200);
+        let xs = Matrix::random(12, batch, 201); // n × batch
+        let coord = Coordinator::new(fast_cluster(p), strategy.clone(), Engine::Native, &a)
+            .expect("coordinator");
+        let out = coord.multiply_batch(&xs).expect("multiply_batch");
+        assert_eq!(out.b.len(), m * batch, "{}", strategy.name());
+        assert_eq!(out.batch, batch);
+        for j in 0..batch {
+            let xj: Vec<f32> = (0..12).map(|c| xs.row(c)[j]).collect();
+            let want = a.matvec(&xj);
+            for i in 0..m {
+                assert!(
+                    (out.b[i * batch + j] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                    "{} row {i} col {j}: {} vs {}",
+                    strategy.name(),
+                    out.b[i * batch + j],
+                    want[i]
+                );
+            }
+        }
     }
 
     #[test]
@@ -396,6 +386,83 @@ mod tests {
     #[test]
     fn raptor_decodes() {
         check_strategy(Strategy::Raptor(RaptorParams::default()), 128, 4);
+    }
+
+    #[test]
+    fn all_strategies_decode_batched() {
+        check_strategy_batched(Strategy::Uncoded, 64, 4, 4);
+        check_strategy_batched(Strategy::Replication { r: 2 }, 64, 4, 4);
+        check_strategy_batched(Strategy::Mds { k: 3 }, 66, 4, 4);
+        check_strategy_batched(Strategy::Lt(LtParams::with_alpha(3.0)), 128, 4, 4);
+        check_strategy_batched(Strategy::SystematicLt(LtParams::with_alpha(3.0)), 128, 4, 4);
+        check_strategy_batched(Strategy::Raptor(RaptorParams::default()), 128, 4, 4);
+    }
+
+    #[test]
+    fn batched_block_encoding_decodes() {
+        let (m, batch) = (130usize, 3usize);
+        let a = Matrix::random(m, 10, 7);
+        let xs = Matrix::random(10, batch, 8);
+        let mut cluster = fast_cluster(4);
+        cluster.symbol_width = 4; // m = 130 needs padding to 33 super-rows
+        let coord = Coordinator::new(
+            cluster,
+            Strategy::Lt(LtParams::with_alpha(4.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        let out = coord.multiply_batch(&xs).expect("block batched multiply");
+        for j in 0..batch {
+            let xj: Vec<f32> = (0..10).map(|c| xs.row(c)[j]).collect();
+            let want = a.matvec(&xj);
+            for i in 0..m {
+                assert!(
+                    (out.b[i * batch + j] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                    "row {i} col {j}"
+                );
+            }
+        }
+    }
+
+    /// The coordinator is Sync: concurrent clients share it by reference
+    /// and their jobs queue FCFS at the persistent workers.
+    #[test]
+    fn concurrent_jobs_from_multiple_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Coordinator>();
+
+        let m = 96;
+        let a = Matrix::random(m, 8, 9);
+        let coord = Coordinator::new(
+            fast_cluster(4),
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        std::thread::scope(|s| {
+            let coord = &coord;
+            let a = &a;
+            let mut joins = Vec::new();
+            for t in 0..3u64 {
+                joins.push(s.spawn(move || {
+                    let x = Matrix::random_vector(8, 300 + t);
+                    let want = a.matvec(&x);
+                    let out = coord.multiply(&x).expect("concurrent multiply");
+                    for i in 0..a.rows() {
+                        assert!(
+                            (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                            "thread {t} row {i}"
+                        );
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().expect("client thread");
+            }
+        });
+        assert_eq!(coord.jobs_served(), 3);
     }
 
     #[test]

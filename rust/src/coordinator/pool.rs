@@ -1,0 +1,155 @@
+//! Persistent worker fleet: one long-lived thread per worker, each holding
+//! its encoded shard resident and serving [`JobOrder`]s off a FIFO queue.
+//!
+//! The original coordinator spawned `p` fresh threads per multiply job —
+//! fine for one-shot experiments, but under serving traffic the spawn +
+//! page-in cost dominates small jobs and the shards are re-shared per job.
+//! The pool moves both off the latency path: threads are created once in
+//! `Coordinator::new`, shards are moved into them, and a job is just `p`
+//! channel sends. Concurrent jobs (the coordinator is `Sync`) queue FCFS
+//! at each worker, which is exactly the M/G/1 reduction the paper's §5
+//! streaming analysis assumes.
+//!
+//! This builds on the same `std::thread` + `std::sync::mpsc` substrate as
+//! [`util::threadpool`](crate::util::threadpool); it is a separate type
+//! because pool workers own per-thread state (the shard) rather than
+//! pulling boxed closures from a shared queue.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::worker::{self, JobOrder};
+use crate::matrix::Matrix;
+use crate::runtime::Engine;
+
+/// A fleet of persistent worker threads, one per encoded shard.
+pub struct WorkerPool {
+    senders: Vec<Sender<JobOrder>>,
+    /// Serializes whole-fleet submission: concurrent jobs must land in the
+    /// same order on every worker's queue, or two jobs could interleave
+    /// (worker 0 runs A then B, worker 1 runs B then A) and each would
+    /// stall on the other — breaking the FCFS/M-G-1 queueing the §5
+    /// streaming model assumes.
+    submit_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn one thread per shard; each moves its shard in and serves its
+    /// job queue until the pool is dropped.
+    pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
+        let mut senders = Vec::with_capacity(shards.len());
+        let mut handles = Vec::with_capacity(shards.len());
+        for (w, shard) in shards.into_iter().enumerate() {
+            let (tx, rx) = channel::<JobOrder>();
+            let engine = engine.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        worker::run_job(w, &shard, &engine, job);
+                    }
+                })
+                .expect("spawn pool worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Self {
+            senders,
+            submit_lock: Mutex::new(()),
+            handles,
+        }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Enqueue one job per worker, atomically with respect to other
+    /// broadcasts (returns as soon as all queues have the job).
+    pub fn broadcast(&self, jobs: Vec<JobOrder>) {
+        assert_eq!(jobs.len(), self.senders.len(), "one order per worker");
+        let _fleet_order = self.submit_lock.lock().expect("pool submit lock");
+        for (tx, job) in self.senders.iter().zip(jobs) {
+            tx.send(job).expect("worker thread terminated unexpectedly");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the queues lets each worker finish in-flight jobs and exit
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::WorkerEvent;
+    use crate::coordinator::straggler::WorkerPlan;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc::channel as evchannel;
+    use std::time::Instant;
+
+    fn order(x: Arc<Vec<f32>>, tx: Sender<WorkerEvent>) -> JobOrder {
+        JobOrder {
+            x,
+            batch: 1,
+            plan: WorkerPlan {
+                initial_delay: 0.0,
+                fail_after: None,
+            },
+            tau: 1e-6,
+            block_rows: 4,
+            time_scale: 0.0,
+            start: Instant::now(),
+            tx,
+            cancel: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    #[test]
+    fn serves_sequential_jobs_with_resident_shards() {
+        let shards: Vec<Arc<Matrix>> = (0..3)
+            .map(|s| Arc::new(Matrix::random(8, 4, s as u64)))
+            .collect();
+        let pool = WorkerPool::spawn(shards.clone(), &Engine::Native);
+        assert_eq!(pool.size(), 3);
+        for job_round in 0..3u64 {
+            let x = Arc::new(Matrix::random_vector(4, 100 + job_round));
+            let (tx, rx) = evchannel();
+            let jobs = (0..3)
+                .map(|_| order(Arc::clone(&x), tx.clone()))
+                .collect();
+            pool.broadcast(jobs);
+            drop(tx);
+            let mut done = 0;
+            let mut rows = vec![0usize; 3];
+            while let Ok(ev) = rx.recv() {
+                match ev {
+                    WorkerEvent::Chunk(c) => {
+                        // verify products against the resident shard
+                        let want = shards[c.worker].matvec(&x);
+                        for (i, p) in c.products.iter().enumerate() {
+                            assert!((p - want[c.start_row + i]).abs() < 1e-4);
+                        }
+                        rows[c.worker] += c.products.len();
+                    }
+                    WorkerEvent::Done { rows_done, .. } => {
+                        assert_eq!(rows_done, 8);
+                        done += 1;
+                    }
+                }
+            }
+            assert_eq!(done, 3);
+            assert_eq!(rows, vec![8, 8, 8]);
+        }
+        drop(pool); // must join cleanly
+    }
+}

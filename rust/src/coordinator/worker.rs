@@ -1,11 +1,21 @@
-//! Worker thread: computes its shard's row-products blockwise, paced by
-//! the injected delay model, until finished, cancelled or failed.
+//! Worker job execution: computes a shard's encoded-row × X panel
+//! products blockwise, paced by the injected delay model, until finished,
+//! cancelled or failed. Worker threads are **persistent** (see
+//! [`pool`](super::pool)): they hold their shard resident across jobs and
+//! run one [`JobOrder`] at a time off their queue.
 //!
 //! The worker keeps a **virtual clock** `v = X_i + τ·rows_done` (the
 //! paper's eq. 5) and sleeps so that wall-clock time tracks
 //! `v · time_scale` — unless the real chunk computation (PJRT/native) is
 //! slower, in which case real time wins, exactly like a real overloaded
 //! node. Cancellation is checked between sleep slices and between chunks.
+//!
+//! **Batching**: a job carries `batch ≥ 1` query vectors; each encoded row
+//! produces `batch` products via the block matmat kernel. τ stays a
+//! *per-row* cost: the row of `A_e` is streamed from memory once per job
+//! whatever the batch width, so the extra multiply-adds ride along in the
+//! row's memory-bound budget. That amortization is the point of the
+//! batched serving path (see DESIGN.md §4 and `benches/throughput.rs`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
@@ -17,21 +27,25 @@ use super::straggler::WorkerPlan;
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
 
-/// Everything a worker thread needs for one job.
-pub struct WorkerTask {
-    pub worker: usize,
-    /// This worker's encoded shard (rows × n).
-    pub shard: Arc<Matrix>,
-    /// The broadcast vector.
+/// One queued multiply job, as seen by a single pool worker.
+pub struct JobOrder {
+    /// Broadcast query block `X`: `n × batch` row-major (row `c` holds
+    /// feature `c` of every vector in the batch).
     pub x: Arc<Vec<f32>>,
-    pub engine: Engine,
+    /// Number of query vectors in `x`.
+    pub batch: usize,
     pub plan: WorkerPlan,
-    /// Seconds of virtual time per row-product (τ).
+    /// Seconds of virtual time per encoded-row product (τ).
     pub tau: f64,
-    /// Rows per result message (≥ 1).
+    /// Rows per result message (≥ 1, aligned to the symbol width).
     pub block_rows: usize,
     /// wall seconds = virtual seconds × time_scale (0 ⇒ no pacing).
     pub time_scale: f64,
+    /// Job wall-clock origin, shared across workers so virtual clocks are
+    /// comparable. Under queueing (concurrent jobs), time spent waiting in
+    /// the worker's queue counts against the initial delay — arrivals
+    /// queue exactly like the paper's §5 streaming setting.
+    pub start: Instant,
     pub tx: Sender<WorkerEvent>,
     pub cancel: Arc<AtomicBool>,
 }
@@ -53,23 +67,22 @@ fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) -> bool {
     }
 }
 
-/// Run one worker to completion. `start` is the job's wall-clock origin
-/// (shared across workers so virtual clocks are comparable).
-pub fn run_worker(task: WorkerTask, start: Instant) {
-    let WorkerTask {
-        worker,
-        shard,
+/// Run one job to completion on this worker's resident shard.
+pub fn run_job(worker: usize, shard: &Matrix, engine: &Engine, job: JobOrder) {
+    let JobOrder {
         x,
-        engine,
+        batch,
         plan,
         tau,
         block_rows,
         time_scale,
+        start,
         tx,
         cancel,
-    } = task;
+    } = job;
     let rows = shard.rows();
     let cols = shard.cols();
+    debug_assert_eq!(x.len(), cols * batch, "X shape mismatch");
     let mut rows_done = 0usize;
     let mut v = plan.initial_delay;
     let mut failed = false;
@@ -93,14 +106,14 @@ pub fn run_worker(task: WorkerTask, start: Instant) {
             let mut len = block_rows.min(rows - r);
             if let Some(fail_after) = plan.fail_after {
                 // fail exactly at the boundary so rows_done == fail_after
-                len = len.min(fail_after - rows_done.min(fail_after)).max(0);
+                len = len.min(fail_after - rows_done.min(fail_after));
                 if len == 0 {
                     failed = true;
                     break;
                 }
             }
             let block = shard.row_block(r, len);
-            let products = match engine.matvec_chunk(block, len, cols, &x) {
+            let products = match engine.matmat_chunk(block, len, cols, &x, batch) {
                 Ok(p) => p,
                 Err(e) => {
                     crate::warn_!("worker {worker}: engine error: {e}; dying");
@@ -147,22 +160,19 @@ mod tests {
         }
     }
 
-    fn spawn(task: WorkerTask) {
-        let start = Instant::now();
-        std::thread::spawn(move || run_worker(task, start));
+    fn spawn(shard: Arc<Matrix>, job: JobOrder) {
+        std::thread::spawn(move || run_job(0, &shard, &Engine::Native, job));
     }
 
-    fn base_task(rows: usize, tx: Sender<WorkerEvent>, cancel: Arc<AtomicBool>) -> WorkerTask {
-        let shard = Arc::new(Matrix::random(rows, 4, 1));
-        WorkerTask {
-            worker: 0,
-            shard,
-            x: Arc::new(vec![1.0; 4]),
-            engine: Engine::Native,
+    fn base_job(batch: usize, tx: Sender<WorkerEvent>, cancel: Arc<AtomicBool>) -> JobOrder {
+        JobOrder {
+            x: Arc::new(vec![1.0; 4 * batch]),
+            batch,
             plan: plan(0.0),
             tau: 1e-6,
             block_rows: 3,
             time_scale: 0.0,
+            start: Instant::now(),
             tx,
             cancel,
         }
@@ -172,10 +182,10 @@ mod tests {
     fn sends_all_chunks_then_done() {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        let task = base_task(10, tx, cancel);
-        let shard = Arc::clone(&task.shard);
-        let x = Arc::clone(&task.x);
-        spawn(task);
+        let shard = Arc::new(Matrix::random(10, 4, 1));
+        let job = base_job(1, tx, cancel);
+        let x = Arc::clone(&job.x);
+        spawn(Arc::clone(&shard), job);
         let mut got = vec![f32::NAN; 10];
         let mut done = false;
         while let Ok(ev) = rx.recv() {
@@ -204,15 +214,54 @@ mod tests {
     }
 
     #[test]
+    fn batched_job_products_are_row_major_panels() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let shard = Arc::new(Matrix::random(7, 4, 2));
+        let batch = 3usize;
+        let mut job = base_job(batch, tx, cancel);
+        // X: 4 × 3 row-major with distinct columns
+        let x: Vec<f32> = (0..4 * batch).map(|i| (i % 5) as f32 - 2.0).collect();
+        job.x = Arc::new(x.clone());
+        spawn(Arc::clone(&shard), job);
+        let mut got = vec![f32::NAN; 7 * batch];
+        loop {
+            match rx.recv().unwrap() {
+                WorkerEvent::Chunk(c) => {
+                    let dst = c.start_row * batch;
+                    got[dst..dst + c.products.len()].copy_from_slice(&c.products);
+                }
+                WorkerEvent::Done { rows_done, .. } => {
+                    assert_eq!(rows_done, 7);
+                    break;
+                }
+            }
+        }
+        for j in 0..batch {
+            let xj: Vec<f32> = (0..4).map(|c| x[c * batch + j]).collect();
+            let want = shard.matvec(&xj);
+            for r in 0..7 {
+                assert!(
+                    (got[r * batch + j] - want[r]).abs() < 1e-4,
+                    "r={r} j={j}: {} vs {}",
+                    got[r * batch + j],
+                    want[r]
+                );
+            }
+        }
+    }
+
+    #[test]
     fn failure_stops_at_boundary() {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        let mut task = base_task(10, tx, cancel);
-        task.plan = WorkerPlan {
+        let shard = Arc::new(Matrix::random(10, 4, 1));
+        let mut job = base_job(1, tx, cancel);
+        job.plan = WorkerPlan {
             initial_delay: 0.0,
             fail_after: Some(4),
         };
-        spawn(task);
+        spawn(shard, job);
         let mut rows_received = 0;
         loop {
             match rx.recv().unwrap() {
@@ -233,10 +282,11 @@ mod tests {
     fn cancellation_interrupts_sleep() {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        let mut task = base_task(1000, tx, Arc::clone(&cancel));
-        task.plan = plan(100.0); // would sleep 100 virtual seconds
-        task.time_scale = 1.0;
-        spawn(task);
+        let shard = Arc::new(Matrix::random(1000, 4, 1));
+        let mut job = base_job(1, tx, Arc::clone(&cancel));
+        job.plan = plan(100.0); // would sleep 100 virtual seconds
+        job.time_scale = 1.0;
+        spawn(shard, job);
         std::thread::sleep(Duration::from_millis(30));
         cancel.store(true, Ordering::Relaxed);
         let t0 = Instant::now();

@@ -16,8 +16,36 @@
 //!   and the PJRT runtime (`runtime/`) that executes the AOT artifacts on
 //!   the worker hot path.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
+//! See `DESIGN.md` (repository root) for the full system inventory, the
+//! substitution table (cloud nodes → threads), and the experiment index
 //! mapping every figure and table of the paper onto modules and benches.
+//!
+//! ## The `ErasureCode` abstraction
+//!
+//! Every coding strategy — [`LtCode`](coding::lt::LtCode),
+//! [`SystematicLt`](coding::systematic::SystematicLt),
+//! [`RaptorCode`](coding::raptor::RaptorCode),
+//! [`MdsCode`](coding::mds::MdsCode) and
+//! [`RepCode`](coding::replication::RepCode) — implements
+//! [`coding::ErasureCode`]: encode a matrix into per-worker shards, expose
+//! the encoded-symbol → source-row mapping, and mint per-job
+//! [`coding::ErasureDecoder`]s. The [`Coordinator`](coordinator::Coordinator)
+//! drives everything through `Box<dyn ErasureCode>`, so a new code plugs
+//! in without touching the coordinator. The three rateless variants share
+//! their shard/peel plumbing via the [`coding::Fountain`] helper trait.
+//!
+//! ## Batched serving
+//!
+//! [`Coordinator::multiply_batch`](coordinator::Coordinator::multiply_batch)
+//! multiplies the encoded matrix against `batch ≥ 1` query vectors in one
+//! pass over the shards: workers run a blocked matmat kernel
+//! ([`matrix::ops::block_matmat`]) that streams each encoded row from
+//! memory once per *job* instead of once per *vector*, and the peeling
+//! decoder carries `width · batch`-wide payloads. The coordinator is
+//! `Sync` and its workers are persistent threads with resident shards, so
+//! concurrent clients queue jobs FCFS — the paper's §5 streaming setting
+//! as a serving system. `cargo bench --bench throughput` and the
+//! `rateless throughput` subcommand measure the batching win.
 
 pub mod cli;
 pub mod coding;
@@ -35,6 +63,7 @@ pub mod prelude {
     pub use crate::coding::mds::MdsCode;
     pub use crate::coding::peeling::PeelingDecoder;
     pub use crate::coding::soliton::RobustSoliton;
+    pub use crate::coding::{ErasureCode, ErasureDecoder, Fountain};
     pub use crate::config::{ClusterConfig, WorkloadConfig};
     pub use crate::coordinator::straggler::StragglerProfile;
     pub use crate::coordinator::{Coordinator, JobResult, Strategy};

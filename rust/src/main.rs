@@ -8,6 +8,7 @@
 //! rateless experiment --env parallel|ec2|lambda [--trials N]   Fig 8
 //! rateless failures [--trials N]              Fig 12
 //! rateless stream --lambda 0.3 --jobs 100     §5 queueing on the live coordinator
+//! rateless throughput [--batches 1,8,32,128]  batched serving jobs/sec
 //! ```
 //!
 //! Figure outputs land in `results/` (override with `RATELESS_RESULTS`).
@@ -86,11 +87,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("stream") => stream_cmd(args),
+        Some("throughput") => throughput_cmd(args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}; see README"),
         None => {
             println!(
                 "rateless — LT-coded distributed matrix-vector multiplication\n\
-                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream"
+                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | throughput"
             );
             Ok(())
         }
@@ -200,6 +202,84 @@ fn stream_cmd(args: &Args) -> anyhow::Result<()> {
         out.mean_response, out.mean_service, out.utilization
     );
     Ok(())
+}
+
+/// Batched-serving throughput sweep: jobs/sec and vectors/sec per batch
+/// width on the persistent worker pool (see `benches/throughput.rs` for
+/// the bench-harness version).
+fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize("m", 4096);
+    let n = args.usize("n", 256);
+    let p = args.usize("p", 8);
+    let jobs = args.usize("jobs", 4);
+    let batches: Vec<usize> = args
+        .str("batches", "1,8,32,128")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--batches: bad width {s:?}: {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!batches.is_empty(), "--batches must name at least one width");
+    let a = Matrix::random_ints(m, n, 3, seed_of(args));
+    let cluster = ClusterConfig {
+        workers: p,
+        tau: args.f64("tau", 2e-5),
+        real_sleep: true,
+        time_scale: args.f64("time-scale", 0.02),
+        ..ClusterConfig::default()
+    };
+    let strategy = match args.str("strategy", "lt").as_str() {
+        "lt" => Strategy::Lt(LtParams::with_alpha(args.f64("alpha", 2.0))),
+        "syslt" => Strategy::SystematicLt(LtParams::with_alpha(args.f64("alpha", 2.0))),
+        "raptor" => Strategy::Raptor(Default::default()),
+        "mds" => Strategy::Mds {
+            k: args.usize("k", p.saturating_sub(2).max(1)),
+        },
+        "rep" => Strategy::Replication {
+            r: args.usize("r", 2),
+        },
+        "uncoded" => Strategy::Uncoded,
+        other => anyhow::bail!("--strategy {other:?} unknown"),
+    };
+    println!(
+        "throughput: {m}x{n}, p={p}, strategy={}, {jobs} jobs per width, \
+         time_scale={}",
+        strategy.name(),
+        cluster.time_scale
+    );
+    let coord = Coordinator::new(cluster, strategy, Engine::Native, &a)?;
+    println!("{:>6} {:>12} {:>14} {:>12}", "batch", "jobs/s", "vectors/s", "E[T] (s)");
+    for &b in &batches {
+        anyhow::ensure!(b >= 1, "batch widths must be >= 1");
+        let t0 = std::time::Instant::now();
+        let mut latency = 0.0f64;
+        for j in 0..jobs {
+            let xs = Matrix::random_ints(n, b, 1, 500 + j as u64);
+            let res = coord.multiply_batch_opts(
+                &xs,
+                &rateless::coordinator::JobOptions {
+                    seed: Some(9000 + j as u64),
+                    profile: None,
+                },
+            )?;
+            anyhow::ensure!(res.b.len() == m * b, "short result");
+            latency += res.latency;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{b:>6} {:>12.2} {:>14.2} {:>12.4}",
+            jobs as f64 / wall,
+            (jobs * b) as f64 / wall,
+            latency / jobs as f64
+        );
+    }
+    Ok(())
+}
+
+fn seed_of(args: &Args) -> u64 {
+    args.u64("seed", 42)
 }
 
 /// Parse `[strategy]` from a config doc.

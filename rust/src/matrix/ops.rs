@@ -35,6 +35,52 @@ pub fn block_matvec(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mu
     }
 }
 
+/// `out = block · X` for a flat row-major `block` of `rows × cols` and a
+/// row-major `X` of `cols × batch` (row `c` holds feature `c` of every
+/// batched vector). `out` is row-major `rows × batch`.
+///
+/// The inner loop runs over the contiguous batch dimension with 4 matrix
+/// columns in flight (the same 4 independent-accumulator idiom as [`dot`],
+/// transposed), so each `block` row is streamed from memory exactly once
+/// per job regardless of batch width — that is what makes batched serving
+/// nearly free relative to `batch` independent matvecs.
+pub fn block_matmat(
+    block: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(block.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols * batch);
+    debug_assert_eq!(out.len(), rows * batch);
+    if batch == 1 {
+        block_matvec(block, rows, cols, x, out);
+        return;
+    }
+    let col_chunks = cols / 4;
+    for r in 0..rows {
+        let arow = &block[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * batch..(r + 1) * batch];
+        orow.fill(0.0);
+        for i in 0..col_chunks {
+            let c = i * 4;
+            let (a0, a1, a2, a3) = (arow[c], arow[c + 1], arow[c + 2], arow[c + 3]);
+            let x0 = &x[c * batch..(c + 1) * batch];
+            let x1 = &x[(c + 1) * batch..(c + 2) * batch];
+            let x2 = &x[(c + 2) * batch..(c + 3) * batch];
+            let x3 = &x[(c + 3) * batch..(c + 4) * batch];
+            for j in 0..batch {
+                orow[j] += a0 * x0[j] + a1 * x1[j] + a2 * x2[j] + a3 * x3[j];
+            }
+        }
+        for c in col_chunks * 4..cols {
+            axpy(orow, arow[c], &x[c * batch..(c + 1) * batch]);
+        }
+    }
+}
+
 /// `acc += src` elementwise.
 #[inline]
 pub fn add_assign(acc: &mut [f32], src: &[f32]) {
@@ -90,6 +136,31 @@ mod tests {
         for i in 0..rows {
             let expect = dot(&block[i * cols..(i + 1) * cols], &x);
             assert_eq!(out[i], expect);
+        }
+    }
+
+    #[test]
+    fn block_matmat_matches_per_vector_matvec() {
+        let (rows, cols) = (5usize, 13usize);
+        let block: Vec<f32> = (0..rows * cols).map(|i| ((i * 7) % 19) as f32 - 9.0).collect();
+        for batch in [1usize, 2, 3, 8, 33] {
+            // X: cols × batch row-major
+            let x: Vec<f32> = (0..cols * batch).map(|i| ((i * 5) % 17) as f32 - 8.0).collect();
+            let mut out = vec![0.0f32; rows * batch];
+            block_matmat(&block, rows, cols, &x, batch, &mut out);
+            for j in 0..batch {
+                let xj: Vec<f32> = (0..cols).map(|c| x[c * batch + j]).collect();
+                let mut want = vec![0.0f32; rows];
+                block_matvec(&block, rows, cols, &xj, &mut want);
+                for r in 0..rows {
+                    assert!(
+                        (out[r * batch + j] - want[r]).abs() < 1e-3 * want[r].abs().max(1.0),
+                        "batch={batch} r={r} j={j}: {} vs {}",
+                        out[r * batch + j],
+                        want[r]
+                    );
+                }
+            }
         }
     }
 

@@ -92,6 +92,50 @@ impl Engine {
             Engine::Pjrt { handle, .. } => handle.matvec_chunk(block, rows, cols, x),
         }
     }
+
+    /// Compute `block (rows×cols) · X` for `X` of `cols × batch` row-major;
+    /// the result is `rows × batch` row-major.
+    ///
+    /// Native uses the blocked matmat kernel (`ops::block_matmat`) — the
+    /// batched-serving hot path. The PJRT artifacts are single-vector, so
+    /// that engine falls back to one artifact execution per batch column
+    /// (correct, but without the batching win; batched AOT artifacts are a
+    /// ROADMAP item).
+    pub fn matmat_chunk(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        assert!(batch >= 1);
+        assert_eq!(x.len(), cols * batch);
+        match self {
+            Engine::Native => {
+                let mut out = vec![0.0f32; rows * batch];
+                ops::block_matmat(block, rows, cols, x, batch, &mut out);
+                Ok(out)
+            }
+            Engine::Pjrt { handle, .. } => {
+                if batch == 1 {
+                    return handle.matvec_chunk(block, rows, cols, x);
+                }
+                let mut out = vec![0.0f32; rows * batch];
+                let mut xj = vec![0.0f32; cols];
+                for j in 0..batch {
+                    for c in 0..cols {
+                        xj[c] = x[c * batch + j];
+                    }
+                    let col = handle.matvec_chunk(block, rows, cols, &xj)?;
+                    for r in 0..rows {
+                        out[r * batch + j] = col[r];
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +158,22 @@ mod tests {
     fn auto_falls_back_without_artifacts() {
         let e = Engine::auto(Path::new("/definitely/not/a/dir"));
         assert!(!e.is_pjrt());
+    }
+
+    #[test]
+    fn native_matmat_matches_per_column_matvec() {
+        let e = Engine::Native;
+        let (rows, cols, batch) = (3usize, 5usize, 4usize);
+        let block: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let x: Vec<f32> = (0..cols * batch).map(|i| ((i * 3) % 7) as f32 - 2.0).collect();
+        let out = e.matmat_chunk(&block, rows, cols, &x, batch).unwrap();
+        assert_eq!(out.len(), rows * batch);
+        for j in 0..batch {
+            let xj: Vec<f32> = (0..cols).map(|c| x[c * batch + j]).collect();
+            let want = e.matvec_chunk(&block, rows, cols, &xj).unwrap();
+            for r in 0..rows {
+                assert!((out[r * batch + j] - want[r]).abs() < 1e-4, "r={r} j={j}");
+            }
+        }
     }
 }

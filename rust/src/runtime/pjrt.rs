@@ -12,181 +12,237 @@
 //! Executables are compiled lazily per artifact shape and cached. Chunks
 //! are zero-padded up to the artifact shape and results truncated — zero
 //! rows/cols contribute zeros, so products are exact.
+//!
+//! **Feature gate**: the offline build image does not vendor the `xla`
+//! crate's native closure, so the real service only compiles under the
+//! `pjrt` cargo feature **and** an `xla` dependency added alongside it in
+//! Cargo.toml (the feature alone cannot supply the crate — see the note
+//! in `rust/Cargo.toml`). Without it, [`PjrtService::start`] reports that
+//! PJRT support is not compiled in and [`Engine::auto`](super::Engine::auto)
+//! falls back to the native kernel — same behaviour as missing artifacts.
 
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
-use std::thread::JoinHandle;
+#[cfg(feature = "pjrt")]
+mod service {
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc::{channel, Sender};
+    use std::thread::JoinHandle;
 
-use super::artifacts::Manifest;
+    use super::super::artifacts::Manifest;
 
-/// A chunk-matvec request: `block` is row-major `rows × cols`.
-struct Request {
-    block: Vec<f32>,
-    rows: usize,
-    cols: usize,
-    x: Vec<f32>,
-    reply: Sender<anyhow::Result<Vec<f32>>>,
-}
-
-enum Message {
-    Run(Request),
-    Shutdown,
-}
-
-/// Handle to the PJRT compute-service thread. Cheap to clone; safe to use
-/// from any thread.
-#[derive(Clone)]
-pub struct PjrtHandle {
-    tx: Sender<Message>,
-}
-
-// Sender<T> is Send but not Sync; wrap usage is per-clone so this is fine.
-
-/// Owner of the service thread; dropping it shuts the service down.
-pub struct PjrtService {
-    tx: Sender<Message>,
-    handle: Option<JoinHandle<()>>,
-}
-
-impl PjrtService {
-    /// Start the service for the artifacts in `dir`. Fails fast if the
-    /// manifest is unreadable or the PJRT client cannot start.
-    pub fn start(dir: &std::path::Path) -> anyhow::Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let (tx, rx) = channel::<Message>();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || {
-                // The client lives entirely on this thread.
-                let client = match xla::PjRtClient::cpu() {
-                    Ok(c) => {
-                        let _ = ready_tx.send(Ok(()));
-                        c
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(anyhow::anyhow!("PJRT cpu client: {e}")));
-                        return;
-                    }
-                };
-                let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
-                while let Ok(Message::Run(req)) = rx.recv() {
-                    let result = serve(&client, &manifest, &mut cache, &req);
-                    let _ = req.reply.send(result);
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("pjrt service died during startup"))??;
-        Ok(Self {
-            tx,
-            handle: Some(handle),
-        })
-    }
-
-    pub fn handle(&self) -> PjrtHandle {
-        PjrtHandle {
-            tx: self.tx.clone(),
-        }
-    }
-}
-
-impl Drop for PjrtService {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl PjrtHandle {
-    /// Execute `block (rows×cols) · x` on the service thread.
-    pub fn matvec_chunk(
-        &self,
-        block: &[f32],
+    /// A chunk-matvec request: `block` is row-major `rows × cols`.
+    struct Request {
+        block: Vec<f32>,
         rows: usize,
         cols: usize,
-        x: &[f32],
+        x: Vec<f32>,
+        reply: Sender<anyhow::Result<Vec<f32>>>,
+    }
+
+    enum Message {
+        Run(Request),
+        Shutdown,
+    }
+
+    /// Handle to the PJRT compute-service thread. Cheap to clone; safe to
+    /// use from any thread.
+    #[derive(Clone)]
+    pub struct PjrtHandle {
+        tx: Sender<Message>,
+    }
+
+    /// Owner of the service thread; dropping it shuts the service down.
+    pub struct PjrtService {
+        tx: Sender<Message>,
+        handle: Option<JoinHandle<()>>,
+    }
+
+    impl PjrtService {
+        /// Start the service for the artifacts in `dir`. Fails fast if the
+        /// manifest is unreadable or the PJRT client cannot start.
+        pub fn start(dir: &std::path::Path) -> anyhow::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let (tx, rx) = channel::<Message>();
+            let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name("pjrt-service".into())
+                .spawn(move || {
+                    // The client lives entirely on this thread.
+                    let client = match xla::PjRtClient::cpu() {
+                        Ok(c) => {
+                            let _ = ready_tx.send(Ok(()));
+                            c
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(anyhow::anyhow!("PJRT cpu client: {e}")));
+                            return;
+                        }
+                    };
+                    let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
+                    while let Ok(Message::Run(req)) = rx.recv() {
+                        let result = serve(&client, &manifest, &mut cache, &req);
+                        let _ = req.reply.send(result);
+                    }
+                })?;
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pjrt service died during startup"))??;
+            Ok(Self {
+                tx,
+                handle: Some(handle),
+            })
+        }
+
+        pub fn handle(&self) -> PjrtHandle {
+            PjrtHandle {
+                tx: self.tx.clone(),
+            }
+        }
+    }
+
+    impl Drop for PjrtService {
+        fn drop(&mut self) {
+            let _ = self.tx.send(Message::Shutdown);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    impl PjrtHandle {
+        /// Execute `block (rows×cols) · x` on the service thread.
+        pub fn matvec_chunk(
+            &self,
+            block: &[f32],
+            rows: usize,
+            cols: usize,
+            x: &[f32],
+        ) -> anyhow::Result<Vec<f32>> {
+            assert_eq!(block.len(), rows * cols);
+            assert_eq!(x.len(), cols);
+            let (reply_tx, reply_rx) = channel();
+            self.tx
+                .send(Message::Run(Request {
+                    block: block.to_vec(),
+                    rows,
+                    cols,
+                    x: x.to_vec(),
+                    reply: reply_tx,
+                }))
+                .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
+            reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pjrt service dropped the request"))?
+        }
+    }
+
+    /// Service-thread body for one request: pick artifact, pad, execute,
+    /// truncate.
+    fn serve(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+        req: &Request,
     ) -> anyhow::Result<Vec<f32>> {
-        assert_eq!(block.len(), rows * cols);
-        assert_eq!(x.len(), cols);
-        let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Message::Run(Request {
-                block: block.to_vec(),
-                rows,
-                cols,
-                x: x.to_vec(),
-                reply: reply_tx,
-            }))
-            .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("pjrt service dropped the request"))?
-    }
-}
-
-/// Service-thread body for one request: pick artifact, pad, execute,
-/// truncate.
-fn serve(
-    client: &xla::PjRtClient,
-    manifest: &Manifest,
-    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
-    req: &Request,
-) -> anyhow::Result<Vec<f32>> {
-    let shape = manifest
-        .best_fit(req.rows, req.cols)
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "no artifact fits chunk {}x{} (have up to {:?})",
-                req.rows,
-                req.cols,
-                manifest.matvec.last().map(|s| (s.rows, s.cols))
+        let shape = manifest
+            .best_fit(req.rows, req.cols)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact fits chunk {}x{} (have up to {:?})",
+                    req.rows,
+                    req.cols,
+                    manifest.matvec.last().map(|s| (s.rows, s.cols))
+                )
+            })?;
+        if !cache.contains_key(&shape.path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                shape
+                    .path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
             )
-        })?;
-    if !cache.contains_key(&shape.path) {
-        let proto = xla::HloModuleProto::from_text_file(
-            shape
-                .path
-                .to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e}", shape.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e}", shape.path.display()))?;
-        cache.insert(shape.path.clone(), exe);
-    }
-    let exe = &cache[&shape.path];
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", shape.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e}", shape.path.display()))?;
+            cache.insert(shape.path.clone(), exe);
+        }
+        let exe = &cache[&shape.path];
 
-    // zero-pad block to (shape.rows, shape.cols) and x to shape.cols
-    let (pr, pc) = (shape.rows, shape.cols);
-    let mut a_pad = vec![0.0f32; pr * pc];
-    for r in 0..req.rows {
-        a_pad[r * pc..r * pc + req.cols]
-            .copy_from_slice(&req.block[r * req.cols..(r + 1) * req.cols]);
-    }
-    let mut x_pad = vec![0.0f32; pc];
-    x_pad[..req.cols].copy_from_slice(&req.x);
+        // zero-pad block to (shape.rows, shape.cols) and x to shape.cols
+        let (pr, pc) = (shape.rows, shape.cols);
+        let mut a_pad = vec![0.0f32; pr * pc];
+        for r in 0..req.rows {
+            a_pad[r * pc..r * pc + req.cols]
+                .copy_from_slice(&req.block[r * req.cols..(r + 1) * req.cols]);
+        }
+        let mut x_pad = vec![0.0f32; pc];
+        x_pad[..req.cols].copy_from_slice(&req.x);
 
-    let a_lit = xla::Literal::vec1(&a_pad)
-        .reshape(&[pr as i64, pc as i64])
-        .map_err(|e| anyhow::anyhow!("reshape a: {e}"))?;
-    let x_lit = xla::Literal::vec1(&x_pad);
-    let result = exe
-        .execute::<xla::Literal>(&[a_lit, x_lit])
-        .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
-    // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-    let out = result
-        .to_tuple1()
-        .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-    let full = out
-        .to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-    Ok(full[..req.rows].to_vec())
+        let a_lit = xla::Literal::vec1(&a_pad)
+            .reshape(&[pr as i64, pc as i64])
+            .map_err(|e| anyhow::anyhow!("reshape a: {e}"))?;
+        let x_lit = xla::Literal::vec1(&x_pad);
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, x_lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        let full = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        Ok(full[..req.rows].to_vec())
+    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod service {
+    /// Stub handle: unconstructible in practice ([`PjrtService::start`]
+    /// always errors without the `pjrt` feature).
+    #[derive(Clone)]
+    pub struct PjrtHandle {
+        _priv: (),
+    }
+
+    /// Stub service for builds without the `pjrt` feature.
+    pub struct PjrtService {
+        _priv: (),
+    }
+
+    impl PjrtService {
+        /// Always fails: PJRT support is not compiled in. The manifest is
+        /// still validated first so the error distinguishes "no artifacts"
+        /// from "artifacts present but engine unavailable".
+        pub fn start(dir: &std::path::Path) -> anyhow::Result<Self> {
+            let _ = super::super::artifacts::Manifest::load(dir)?;
+            Err(anyhow::anyhow!(
+                "artifacts found at {} but this binary was built without the `pjrt` \
+                 cargo feature (the offline image does not vendor the `xla` crate)",
+                dir.display()
+            ))
+        }
+
+        pub fn handle(&self) -> PjrtHandle {
+            PjrtHandle { _priv: () }
+        }
+    }
+
+    impl PjrtHandle {
+        pub fn matvec_chunk(
+            &self,
+            _block: &[f32],
+            _rows: usize,
+            _cols: usize,
+            _x: &[f32],
+        ) -> anyhow::Result<Vec<f32>> {
+            Err(anyhow::anyhow!("pjrt support not compiled in"))
+        }
+    }
+}
+
+pub use service::{PjrtHandle, PjrtService};

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         real_sleep: true,
         time_scale: 1.0,
         symbol_width: 1,
+        ..ClusterConfig::default()
     };
     println!("e2e coordinator bench: {m}x{n}, p={p}, {trials} trials, exp(10) delays, τ=1e-4");
     println!("{:<10} {:>10} {:>12} {:>12} {:>12}", "strategy", "E[T] (s)", "E[C]", "E[C]/m", "decode ms");

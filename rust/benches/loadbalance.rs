@@ -1,0 +1,88 @@
+//! Bench: heterogeneous-fleet load balancing — LT (work-stealing) vs MDS
+//! vs replication vs uncoded vs the live ideal-LB baseline on a fleet
+//! with one 2×-slow straggler.
+//!
+//! Self-checking at full size (the ISSUE/paper acceptance criteria):
+//!
+//! * work-stealing LT latency within 10% of the ideal-LB baseline,
+//! * work-stealing LT redundant rows ≤ 5% of m,
+//! * MDS and 2-replication measurably more redundant than LT,
+//! * ideal-LB performs zero redundant work.
+//!
+//! Emits `BENCH_loadbalance.json` (override the directory with
+//! `RATELESS_BENCH_DIR`). Env knobs for the CI smoke run:
+//! `RATELESS_BENCH_M` (default 32768; smaller sizes skip the acceptance
+//! asserts — LT's ε overhead is asymptotic in m and only reaches the
+//! ≤5% band around m = 32k), `RATELESS_BENCH_TRIALS` (default 3),
+//! `RATELESS_BENCH_TIME_SCALE` (default 1.0).
+
+use rateless::figures::loadbalance::{run, LoadBalanceSpec};
+use rateless::util::bench::{env_or, write_json};
+
+fn main() -> anyhow::Result<()> {
+    let spec = LoadBalanceSpec {
+        m: env_or("RATELESS_BENCH_M", 32_768),
+        trials: env_or("RATELESS_BENCH_TRIALS", 3),
+        time_scale: env_or("RATELESS_BENCH_TIME_SCALE", 1.0),
+        slowdown: 2.0,
+        block_fraction: 0.005,
+        ..LoadBalanceSpec::default()
+    };
+    let report = run(&spec)?;
+    print!("{}", report.render());
+
+    let path = write_json("BENCH_loadbalance.json", &report.to_json())?;
+    println!("wrote {}", path.display());
+
+    if spec.m < 32_768 {
+        println!("(smoke size m={}: acceptance asserts skipped)", spec.m);
+        return Ok(());
+    }
+
+    let ideal = report.outcome("ideal-lb").expect("ideal-lb case");
+    let lt = report.outcome("lt-steal").expect("lt-steal case");
+    let mds = report
+        .outcomes
+        .iter()
+        .find(|o| o.name.starts_with("mds"))
+        .expect("mds case");
+    let uncoded = report.outcome("uncoded-static").expect("uncoded case");
+
+    assert_eq!(ideal.redundant_rows, 0.0, "ideal LB must not perform redundant work");
+    assert!(ideal.stolen_rows > 0.0, "ideal LB must actually steal from the slow worker");
+    let ratio = lt.latency / ideal.latency;
+    assert!(
+        ratio <= 1.10,
+        "work-stealing LT must be within 10% of ideal LB: T_lt = {:.4}, T_ideal = {:.4} ({ratio:.3}x)",
+        lt.latency,
+        ideal.latency
+    );
+    assert!(
+        lt.redundant_frac <= 0.05,
+        "work-stealing LT must waste <= 5% of m: got {:.2}%",
+        lt.redundant_frac * 100.0
+    );
+    assert!(
+        mds.redundant_frac > lt.redundant_frac + 0.03,
+        "MDS must discard measurably more work than LT: mds {:.2}% vs lt {:.2}%",
+        mds.redundant_frac * 100.0,
+        lt.redundant_frac * 100.0
+    );
+    if let Some(rep) = report.outcome("rep2-static") {
+        assert!(
+            rep.redundant_frac > lt.redundant_frac + 0.03,
+            "replication must discard measurably more work than LT: rep {:.2}% vs lt {:.2}%",
+            rep.redundant_frac * 100.0,
+            lt.redundant_frac * 100.0
+        );
+    }
+    // the static uncoded run pays the straggler in full
+    assert!(
+        uncoded.latency > 1.3 * ideal.latency,
+        "uncoded static should suffer the slow worker: {:.4} vs ideal {:.4}",
+        uncoded.latency,
+        ideal.latency
+    );
+    println!("loadbalance bench OK: lt-steal at {ratio:.3}x ideal-LB latency");
+    Ok(())
+}

@@ -8,18 +8,20 @@
 //! `b ×` the single-vector rate. The assert at the bottom makes the bench
 //! self-checking for the widths the acceptance criteria name (8, 32).
 //!
+//! Emits `BENCH_throughput.json` (override the directory with
+//! `RATELESS_BENCH_DIR`) so the perf trajectory is tracked across PRs.
+//!
 //! `cargo bench --bench throughput` (RATELESS_BENCH_TIME_SCALE to resize
 //! the virtual→wall scaling, default 0.02).
 
 use rateless::coordinator::JobOptions;
 use rateless::prelude::*;
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::json::Json;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let time_scale: f64 = std::env::var("RATELESS_BENCH_TIME_SCALE")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0.02);
+    let time_scale: f64 = env_or("RATELESS_BENCH_TIME_SCALE", 0.02);
     let (m, n, p) = (4096usize, 256usize, 8usize);
     let jobs = 4usize;
     let a = Matrix::random_ints(m, n, 3, 1);
@@ -32,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         real_sleep: true,
         time_scale,
         symbol_width: 1,
+        ..ClusterConfig::default()
     };
     let coord = Coordinator::new(
         cluster,
@@ -62,8 +65,10 @@ fn main() -> anyhow::Result<()> {
         "batch", "jobs/s", "vectors/s", "vs single-vector"
     );
     let mut single_vps = 0.0f64;
+    let mut rows = Vec::new();
     for &b in &[1usize, 8, 32, 128] {
         let t0 = Instant::now();
+        let mut latency = 0.0f64;
         for j in 0..jobs {
             // same per-job seeds across widths ⇒ identical straggler draws
             let xs = Matrix::random_ints(n, b, 1, 100 + j as u64);
@@ -76,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             )?;
             assert_eq!(res.b.len(), m * b);
             assert_eq!(res.batch, b);
+            latency += res.latency;
         }
         let wall = t0.elapsed().as_secs_f64();
         let jps = jobs as f64 / wall;
@@ -85,6 +91,13 @@ fn main() -> anyhow::Result<()> {
         }
         let speedup = vps / single_vps;
         println!("{b:>6} {jps:>12.2} {vps:>14.2} {speedup:>15.2}x");
+        rows.push(Json::obj(vec![
+            ("batch", Json::Int(b as i64)),
+            ("jobs_per_s", Json::Num(jps)),
+            ("vectors_per_s", Json::Num(vps)),
+            ("speedup_vs_single", Json::Num(speedup)),
+            ("mean_latency", Json::Num(latency / jobs as f64)),
+        ]));
         // acceptance: a batch-b job beats b independent single-vector jobs
         if b == 8 || b == 32 {
             assert!(
@@ -93,5 +106,17 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("throughput")),
+        ("m", Json::Int(m as i64)),
+        ("n", Json::Int(n as i64)),
+        ("p", Json::Int(p as i64)),
+        ("jobs_per_width", Json::Int(jobs as i64)),
+        ("time_scale", Json::Num(time_scale)),
+        ("widths", Json::Arr(rows)),
+    ]);
+    let path = write_json("BENCH_throughput.json", &doc)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -8,6 +8,16 @@
 //! never matches on the strategy again: new codes plug in without touching
 //! `coordinator/`.
 //!
+//! **Heterogeneous fleets**: encoding takes a [`ShardSizing`] — per-worker
+//! weights, typically proportional to configured worker speeds — and the
+//! rateless codes split their encoded rows into *speed-proportional*
+//! shards, so a 2×-fast worker holds 2× the rows and a uniform-speed fleet
+//! degenerates to the old even split. The fixed-rate codes cannot honour
+//! the weights (their decode structure dictates the split: MDS needs k
+//! equal blocks, replication needs equal groups); they keep their own
+//! layout, and heterogeneity is instead absorbed at dispatch time by the
+//! work-stealing scheduler (`coordinator/scheduler.rs`).
+//!
 //! Decoders are **batch-aware**: a job multiplies the encoded matrix
 //! against `batch ≥ 1` query vectors at once (the matrix-matrix regime of
 //! coded-computing follow-ups to the paper), so every payload row carries
@@ -30,6 +40,59 @@ use std::sync::Arc;
 use super::peeling::PeelingDecoder;
 use crate::matrix::Matrix;
 
+/// Per-worker shard-size weights, fixed at encode time.
+///
+/// A worker's weight is its relative share of the encoded rows; a
+/// heterogeneous fleet passes weights proportional to worker speeds so
+/// every worker finishes its shard in roughly the same virtual time.
+#[derive(Clone, Debug)]
+pub struct ShardSizing {
+    weights: Vec<f64>,
+}
+
+impl ShardSizing {
+    /// Equal shares for `p` workers (the homogeneous default).
+    pub fn uniform(p: usize) -> Self {
+        Self::proportional(&vec![1.0; p])
+    }
+
+    /// Shares proportional to `speeds` (all entries finite and > 0).
+    pub fn proportional(speeds: &[f64]) -> Self {
+        assert!(!speeds.is_empty(), "need at least one worker");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speeds must be finite and positive: {speeds:?}"
+        );
+        Self {
+            weights: speeds.to_vec(),
+        }
+    }
+
+    /// Number of workers.
+    pub fn p(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Split `total` items into `p` contiguous spans with sizes
+    /// proportional to the weights: returns `p + 1` monotone boundaries
+    /// with `pts[0] == 0` and `pts[p] == total` (cumulative rounding, so
+    /// no span drifts by more than one item from its exact share).
+    pub fn split_points(&self, total: usize) -> Vec<usize> {
+        let sum: f64 = self.weights.iter().sum();
+        let mut pts = Vec::with_capacity(self.weights.len() + 1);
+        pts.push(0usize);
+        let mut acc = 0.0;
+        for w in &self.weights {
+            acc += w;
+            let cut = ((total as f64) * acc / sum).round() as usize;
+            let prev = *pts.last().expect("non-empty");
+            pts.push(cut.clamp(prev, total));
+        }
+        *pts.last_mut().expect("non-empty") = total;
+        pts
+    }
+}
+
 /// Geometry of an encoded shard assignment, fixed at encode time and
 /// shared by every job's decoder.
 #[derive(Clone, Debug)]
@@ -37,7 +100,8 @@ pub struct ShardLayout {
     /// Per-worker shard offsets in encoded-symbol units (super-row units
     /// when `width > 1`).
     pub starts: Vec<usize>,
-    /// Per-worker shard heights in matrix-row units.
+    /// Per-worker shard heights in matrix-row units (non-uniform for
+    /// speed-proportional sizing).
     pub shard_rows: Vec<usize>,
     /// Rows per encoded symbol (paper §6.3 block encoding; 1 = row-level).
     pub width: usize,
@@ -58,10 +122,11 @@ pub trait ErasureCode: Send + Sync {
     /// Human-readable code name (diagnostics).
     fn name(&self) -> String;
 
-    /// Encode `a` under this code and split it into `p` worker shards.
+    /// Encode `a` under this code and split it into `sizing.p()` worker
+    /// shards, sized by the sizing weights where the code permits.
     /// `width` is the block-encoding symbol width (each encoded symbol
     /// covers `width` matrix rows); fixed-rate codes require `width == 1`.
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards;
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards;
 
     /// Source rows feeding global encoded symbol `id` (for rateless codes
     /// the indices may range over an extended intermediate space, e.g.
@@ -75,11 +140,13 @@ pub trait ErasureCode: Send + Sync {
 /// Per-job decode state behind [`ErasureCode::new_decoder`].
 pub trait ErasureDecoder: Send {
     /// Ingest one worker chunk: `products` holds `rows × batch` values
-    /// row-major for shard-local rows `start_row ..`. Returns the number
-    /// of row-products consumed (0 if the chunk was discarded).
+    /// row-major for rows `start_row ..` *of shard `shard`* (under work
+    /// stealing the computing worker may differ; decode cares only about
+    /// the row space). Returns the number of row-products consumed (0 if
+    /// the chunk was discarded).
     fn ingest(
         &mut self,
-        worker: usize,
+        shard: usize,
         start_row: usize,
         products: &[f32],
         virtual_time: f64,
@@ -90,7 +157,7 @@ pub trait ErasureDecoder: Send {
 
     /// Job latency given the virtual time of the chunk that completed
     /// recovery: rateless codes use it directly; fixed-rate codes take the
-    /// max over their used workers' finish clocks.
+    /// max over their used shards' finish clocks.
     fn latency(&self, completing_v: f64) -> f64;
 
     /// Extract `B` (`out_rows × batch` row-major). Only called after
@@ -131,9 +198,9 @@ pub trait Fountain: Clone + Send + Sync + 'static {
     }
 }
 
-/// Per-worker block-product accumulator shared by the fixed-rate (MDS,
-/// replication) decoders: buffers each worker's `rows × batch` panel and
-/// tracks its filled row prefix.
+/// Per-shard block-product accumulator shared by the fixed-rate (MDS,
+/// replication) decoders: buffers each shard's `rows × batch` panel and
+/// counts its filled rows.
 pub(crate) struct BlockBuffers {
     batch: usize,
     buffers: Vec<Vec<f32>>,
@@ -158,27 +225,34 @@ impl BlockBuffers {
         self.batch
     }
 
-    /// Copy a chunk into `worker`'s panel. Returns `(rows_consumed,
-    /// filled_rows)` where `filled_rows` is the worker's contiguous-prefix
-    /// high-water mark.
+    /// Copy a chunk into `shard`'s panel. Returns `(rows_consumed,
+    /// filled_rows)` where `filled_rows` counts the shard's rows received
+    /// so far; the shard is complete once it equals the shard height.
+    ///
+    /// Counting (rather than a contiguous-prefix high-water mark) is what
+    /// makes this correct under work stealing, where a shard's panel
+    /// fills from both ends — the owner from the front, thieves from the
+    /// tail. Every row is handed out exactly once by the task board (and
+    /// exactly once trivially under static dispatch), so no row can be
+    /// double-counted.
     pub(crate) fn fill(
         &mut self,
-        worker: usize,
+        shard: usize,
         start_row: usize,
         products: &[f32],
     ) -> (usize, usize) {
         let b = self.batch;
         debug_assert_eq!(products.len() % b, 0);
         let rows = products.len() / b;
-        let buf = &mut self.buffers[worker];
+        let buf = &mut self.buffers[shard];
         buf[start_row * b..(start_row + rows) * b].copy_from_slice(products);
-        self.filled[worker] = self.filled[worker].max(start_row + rows);
-        (rows, self.filled[worker])
+        self.filled[shard] += rows;
+        (rows, self.filled[shard])
     }
 
-    /// Move a worker's finished panel out (leaves an empty Vec behind).
-    pub(crate) fn take(&mut self, worker: usize) -> Vec<f32> {
-        std::mem::take(&mut self.buffers[worker])
+    /// Move a shard's finished panel out (leaves an empty Vec behind).
+    pub(crate) fn take(&mut self, shard: usize) -> Vec<f32> {
+        std::mem::take(&mut self.buffers[shard])
     }
 }
 
@@ -200,14 +274,16 @@ pub fn superpose(a: &Matrix, width: usize) -> (Matrix, usize) {
 
 /// Shared [`ErasureCode::encode_shards`] for fountain codes: encode in
 /// super-row space and split the encoded matrix into `p` contiguous
-/// shards, re-expressed as `(rows × n)` matrices so workers compute
-/// ordinary row products.
+/// shards — sized by the [`ShardSizing`] weights (speed-proportional for
+/// heterogeneous fleets) — re-expressed as `(rows × n)` matrices so
+/// workers compute ordinary row products.
 pub fn fountain_shards<C: Fountain>(
     code: &C,
     a: &Matrix,
-    p: usize,
+    sizing: &ShardSizing,
     width: usize,
 ) -> EncodedShards {
+    let p = sizing.p();
     assert!(p >= 1 && width >= 1);
     let (sup, sm) = superpose(a, width);
     assert_eq!(
@@ -218,12 +294,12 @@ pub fn fountain_shards<C: Fountain>(
     let enc = code.encode_source(&sup); // (m_e × width·n)
     let me = enc.rows();
     let n = a.cols();
+    let cuts = sizing.split_points(me);
     let mut starts = Vec::with_capacity(p);
     let mut shard_rows = Vec::with_capacity(p);
     let mut shards = Vec::with_capacity(p);
     for w in 0..p {
-        let s = w * me / p;
-        let e = (w + 1) * me / p;
+        let (s, e) = (cuts[w], cuts[w + 1]);
         starts.push(s);
         // row-major (count, width·n) == (count·width, n): same buffer
         let count = e - s;
@@ -265,8 +341,8 @@ impl ErasureCode for crate::coding::lt::LtCode {
         self.fountain_name()
     }
 
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
-        fountain_shards(self, a, p, width)
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
+        fountain_shards(self, a, sizing, width)
     }
 
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
@@ -283,8 +359,8 @@ impl ErasureCode for crate::coding::systematic::SystematicLt {
         self.fountain_name()
     }
 
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
-        fountain_shards(self, a, p, width)
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
+        fountain_shards(self, a, sizing, width)
     }
 
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
@@ -301,8 +377,8 @@ impl ErasureCode for crate::coding::raptor::RaptorCode {
         self.fountain_name()
     }
 
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
-        fountain_shards(self, a, p, width)
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
+        fountain_shards(self, a, sizing, width)
     }
 
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
@@ -329,7 +405,7 @@ struct FountainJobDecoder<C: Fountain> {
 impl<C: Fountain> ErasureDecoder for FountainJobDecoder<C> {
     fn ingest(
         &mut self,
-        worker: usize,
+        shard: usize,
         start_row: usize,
         products: &[f32],
         _virtual_time: f64,
@@ -337,7 +413,7 @@ impl<C: Fountain> ErasureDecoder for FountainJobDecoder<C> {
         let (w, b) = (self.width, self.batch);
         debug_assert_eq!(start_row % w, 0, "chunks must align to symbol width");
         debug_assert_eq!(products.len() % (w * b), 0);
-        let base = self.starts[worker] + start_row / w;
+        let base = self.starts[shard] + start_row / w;
         let mut used = 0;
         for (i, payload) in products.chunks_exact(w * b).enumerate() {
             if self.peel.is_complete() {
@@ -395,7 +471,15 @@ mod tests {
     /// Drive a code end-to-end through the trait: encode shards, compute
     /// every worker's products for a batched X, feed chunks to a fresh
     /// decoder in round-robin order, and verify the decoded `A·X`.
-    fn roundtrip(name: &str, code: &dyn ErasureCode, m: usize, p: usize, width: usize, batch: usize) {
+    fn roundtrip(
+        name: &str,
+        code: &dyn ErasureCode,
+        m: usize,
+        sizing: &ShardSizing,
+        width: usize,
+        batch: usize,
+    ) {
+        let p = sizing.p();
         let n = 6;
         let a = Matrix::random_ints(m, n, 3, 5);
         // X: n × batch row-major
@@ -404,7 +488,7 @@ mod tests {
         let mut want = vec![0.0f32; m * batch];
         ops::block_matmat(a.data(), m, n, &x, batch, &mut want);
 
-        let EncodedShards { shards, layout } = code.encode_shards(&a, p, width);
+        let EncodedShards { shards, layout } = code.encode_shards(&a, sizing, width);
         assert_eq!(shards.len(), p);
         assert_eq!(layout.out_rows, m);
         for (w, shard) in shards.iter().enumerate() {
@@ -467,21 +551,63 @@ mod tests {
     fn all_five_codes_roundtrip_through_the_trait() {
         // Small-m LT needs generous α: the paper's ε→0 is asymptotic in m.
         let lt = LtParams::with_alpha(3.5);
+        let four = ShardSizing::uniform(4);
         for &batch in &[1usize, 4] {
-            roundtrip("lt", &LtCode::new(96, lt, 1), 96, 4, 1, batch);
-            roundtrip("syslt", &SystematicLt::new(96, lt, 2), 96, 4, 1, batch);
+            roundtrip("lt", &LtCode::new(96, lt, 1), 96, &four, 1, batch);
+            roundtrip("syslt", &SystematicLt::new(96, lt, 2), 96, &four, 1, batch);
             roundtrip(
                 "raptor",
                 &RaptorCode::new(96, RaptorParams::default(), 3),
                 96,
-                4,
+                &four,
                 1,
                 batch,
             );
-            roundtrip("mds", &MdsCode::new(90, 4, 3, 4), 90, 4, 1, batch);
-            roundtrip("rep", &RepCode::new(90, 4, 2), 90, 4, 1, batch);
-            roundtrip("uncoded", &RepCode::new(90, 4, 1), 90, 4, 1, batch);
+            roundtrip("mds", &MdsCode::new(90, 4, 3, 4), 90, &four, 1, batch);
+            roundtrip("rep", &RepCode::new(90, 4, 2), 90, &four, 1, batch);
+            roundtrip("uncoded", &RepCode::new(90, 4, 1), 90, &four, 1, batch);
         }
+        // non-uniform sizing: rateless shards scale with the weights
+        roundtrip(
+            "lt-weighted",
+            &LtCode::new(96, lt, 1),
+            96,
+            &ShardSizing::proportional(&[1.0, 1.0, 2.0]),
+            1,
+            1,
+        );
+    }
+
+    #[test]
+    fn proportional_sizing_shapes_fountain_shards() {
+        let code = LtCode::new(120, LtParams::with_alpha(2.0), 9);
+        let a = Matrix::random_ints(120, 5, 3, 9);
+        let sizing = ShardSizing::proportional(&[1.0, 1.0, 2.0]);
+        let EncodedShards { shards, layout } = code.encode_shards(&a, &sizing, 1);
+        let total: usize = layout.shard_rows.iter().sum();
+        assert_eq!(total, code.encoded_symbols());
+        // worker 2 holds ~half the encoded rows, the others ~a quarter
+        assert_eq!(shards[2].rows(), total / 2);
+        assert!(shards[0].rows().abs_diff(total / 4) <= 1);
+        // starts are the prefix sums of the symbol counts
+        assert_eq!(layout.starts[0], 0);
+        assert_eq!(layout.starts[1], layout.shard_rows[0]);
+        assert_eq!(layout.starts[2], layout.shard_rows[0] + layout.shard_rows[1]);
+    }
+
+    #[test]
+    fn split_points_are_monotone_and_exact() {
+        let s = ShardSizing::proportional(&[3.0, 1.0, 1.0, 1.0]);
+        let pts = s.split_points(100);
+        assert_eq!(pts.first(), Some(&0));
+        assert_eq!(pts.last(), Some(&100));
+        assert!(pts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(pts[1], 50); // 3/6 of 100
+        // degenerate totals still tile
+        let pts = s.split_points(1);
+        assert_eq!(pts, vec![0, 1, 1, 1, 1]);
+        let pts = ShardSizing::uniform(3).split_points(0);
+        assert_eq!(pts, vec![0, 0, 0, 0]);
     }
 
     #[test]
@@ -493,7 +619,7 @@ mod tests {
             "lt-block",
             &LtCode::new(sm, LtParams::with_alpha(4.0), 7),
             m,
-            3,
+            &ShardSizing::uniform(3),
             width,
             3,
         );

@@ -15,7 +15,9 @@
 
 use std::sync::Arc;
 
-use super::erasure::{BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout};
+use super::erasure::{
+    BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout, ShardSizing,
+};
 use super::linsolve;
 use crate::matrix::{ops, Matrix};
 use crate::util::dist::{Sample, StdNormal};
@@ -221,7 +223,11 @@ impl ErasureCode for MdsCode {
         format!("mds{}", self.k)
     }
 
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+    /// MDS ignores the sizing weights: decode needs `k` *equal* blocks,
+    /// so the shards stay `block_rows` tall and heterogeneous fleets rely
+    /// on the work-stealing scheduler instead.
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
+        let p = sizing.p();
         assert_eq!(p, self.p, "MDS code was built for p = {} workers", self.p);
         assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
         let shards: Vec<Arc<Matrix>> = self.encode(a).into_iter().map(Arc::new).collect();
@@ -255,33 +261,36 @@ impl ErasureCode for MdsCode {
         Box::new(MdsJobDecoder {
             code: self.clone(),
             bufs: BlockBuffers::new(layout, batch),
+            shard_v: vec![f64::MIN; layout.shard_rows.len()],
             complete: Vec::new(),
         })
     }
 }
 
-/// Per-job MDS decode state: accumulate per-worker block products; once
-/// any `k` workers have delivered their full block, solve.
+/// Per-job MDS decode state: accumulate per-shard block products; once
+/// any `k` shards have been fully delivered, solve.
 struct MdsJobDecoder {
     code: MdsCode,
     bufs: BlockBuffers,
-    /// Workers whose full block product has arrived, with completion v.
+    /// Per shard: max virtual time over its ingested chunks (under work
+    /// stealing the count-completing chunk need not be the latest one).
+    shard_v: Vec<f64>,
+    /// Shards whose full block product has arrived, with finish v.
     complete: Vec<(usize, f64)>,
 }
 
 impl ErasureDecoder for MdsJobDecoder {
     fn ingest(
         &mut self,
-        worker: usize,
+        shard: usize,
         start_row: usize,
         products: &[f32],
         virtual_time: f64,
     ) -> usize {
-        let (rows, filled) = self.bufs.fill(worker, start_row, products);
-        if filled == self.code.block_rows()
-            && !self.complete.iter().any(|&(cw, _)| cw == worker)
-        {
-            self.complete.push((worker, virtual_time));
+        let (rows, filled) = self.bufs.fill(shard, start_row, products);
+        self.shard_v[shard] = self.shard_v[shard].max(virtual_time);
+        if filled == self.code.block_rows() && !self.complete.iter().any(|&(cw, _)| cw == shard) {
+            self.complete.push((shard, self.shard_v[shard]));
         }
         rows
     }

@@ -28,4 +28,6 @@ pub mod replication;
 pub mod soliton;
 pub mod systematic;
 
-pub use erasure::{EncodedShards, ErasureCode, ErasureDecoder, Fountain, ShardLayout};
+pub use erasure::{
+    EncodedShards, ErasureCode, ErasureDecoder, Fountain, ShardLayout, ShardSizing,
+};

@@ -7,7 +7,9 @@
 
 use std::sync::Arc;
 
-use super::erasure::{BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout};
+use super::erasure::{
+    BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout, ShardSizing,
+};
 use crate::matrix::Matrix;
 
 /// An r-replication assignment over p workers.
@@ -127,7 +129,11 @@ impl ErasureCode for RepCode {
         }
     }
 
-    fn encode_shards(&self, a: &Matrix, p: usize, width: usize) -> EncodedShards {
+    /// Replication ignores the sizing weights: every replica of a group
+    /// must hold the same rows, so the groups stay evenly split and
+    /// heterogeneous fleets rely on the work-stealing scheduler instead.
+    fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
+        let p = sizing.p();
         assert_eq!(p, self.p, "replication code was built for p = {} workers", self.p);
         assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
         let shards: Vec<Arc<Matrix>> = (0..p)
@@ -156,6 +162,7 @@ impl ErasureCode for RepCode {
         Box::new(RepJobDecoder {
             code: self.clone(),
             bufs: BlockBuffers::new(layout, batch),
+            shard_v: vec![f64::MIN; layout.shard_rows.len()],
             group_done: vec![None; self.groups()],
         })
     }
@@ -166,26 +173,32 @@ impl ErasureCode for RepCode {
 struct RepJobDecoder {
     code: RepCode,
     bufs: BlockBuffers,
-    /// Per group: (worker, completion v) of the first finisher.
+    /// Per shard: max virtual time over its ingested chunks. Under work
+    /// stealing chunks arrive from several workers and out of clock
+    /// order, so the chunk that completes the count is not necessarily
+    /// the one that finished last.
+    shard_v: Vec<f64>,
+    /// Per group: (shard, finish v = max chunk v) of the first finisher.
     group_done: Vec<Option<(usize, f64)>>,
 }
 
 impl ErasureDecoder for RepJobDecoder {
     fn ingest(
         &mut self,
-        worker: usize,
+        shard: usize,
         start_row: usize,
         products: &[f32],
         virtual_time: f64,
     ) -> usize {
-        let g = self.code.worker_group(worker);
+        let g = self.code.worker_group(shard);
         if self.group_done[g].is_some() {
             return 0; // group already served; discard (paper)
         }
-        let (rows, filled) = self.bufs.fill(worker, start_row, products);
+        let (rows, filled) = self.bufs.fill(shard, start_row, products);
+        self.shard_v[shard] = self.shard_v[shard].max(virtual_time);
         let (gs, ge) = self.code.group_rows(g);
         if filled == ge - gs {
-            self.group_done[g] = Some((worker, virtual_time));
+            self.group_done[g] = Some((shard, self.shard_v[shard]));
         }
         rows
     }

@@ -19,6 +19,7 @@ pub use parser::{parse, ParseError, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::coordinator::scheduler::SchedulerKind;
 use crate::util::dist::DelayDist;
 
 /// A parsed config document: section name → key → value.
@@ -113,6 +114,16 @@ pub struct ClusterConfig {
     /// Rows per encoded symbol for rateless strategies (paper §6.3: the
     /// Lambda experiment encodes over blocks of 10 rows). 1 = row-level.
     pub symbol_width: usize,
+    /// Per-worker speed multipliers for heterogeneous fleets: worker `w`
+    /// computes a row in `tau / speeds[w]` virtual seconds. Missing
+    /// entries default to 1.0, so an empty list is the homogeneous fleet.
+    /// Speeds also size the rateless shards proportionally at encode
+    /// time (see `coding::ShardSizing`).
+    pub speeds: Vec<f64>,
+    /// Dispatch policy: static one-shard-per-worker assignment, or the
+    /// work-stealing scheduler (ideal load balancing when run over the
+    /// uncoded partition).
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for ClusterConfig {
@@ -126,6 +137,8 @@ impl Default for ClusterConfig {
             real_sleep: false,
             time_scale: 1.0,
             symbol_width: 1,
+            speeds: Vec::new(),
+            scheduler: SchedulerKind::Static,
         }
     }
 }
@@ -154,7 +167,22 @@ impl ClusterConfig {
             real_sleep: doc.bool("cluster", "real_sleep", d.real_sleep),
             time_scale: doc.f64("cluster", "time_scale", d.time_scale),
             symbol_width: doc.usize("cluster", "symbol_width", d.symbol_width),
+            speeds: doc.f64_list("cluster", "speeds", &[]),
+            scheduler: {
+                let raw = doc.str("cluster", "scheduler", "static");
+                SchedulerKind::parse(&raw).unwrap_or_else(|| {
+                    panic!("config cluster.scheduler: expected static|stealing, got {raw:?}")
+                })
+            },
         }
+    }
+
+    /// Per-worker speed multipliers, one per worker: configured entries
+    /// first, then 1.0 for the rest of the fleet.
+    pub fn worker_speeds(&self) -> Vec<f64> {
+        (0..self.workers)
+            .map(|w| self.speeds.get(w).copied().unwrap_or(1.0))
+            .collect()
     }
 }
 
@@ -224,11 +252,30 @@ alphas = [1.25, 2.0]
         assert_eq!(cluster.delay, DelayDist::Exp { mu: 1.0 });
         assert!((cluster.tau - 0.001).abs() < 1e-12);
         assert!(!cluster.real_sleep);
+        // defaults: homogeneous static fleet
+        assert_eq!(cluster.scheduler, SchedulerKind::Static);
+        assert_eq!(cluster.worker_speeds(), vec![1.0; 70]);
         let w = WorkloadConfig::from_doc(&doc);
         assert_eq!((w.rows, w.cols, w.vectors), (11760, 9216, 5));
         assert_eq!(doc.f64_list("lt", "alphas", &[]), vec![1.25, 2.0]);
         // defaults for absent keys
         assert_eq!(doc.usize("workload", "trials", 10), 10);
+    }
+
+    #[test]
+    fn hetero_fleet_parse() {
+        let doc = Doc::from_str(
+            "[cluster]\nworkers = 4\nspeeds = [1.0, 1.0, 1.0, 0.5]\nscheduler = \"stealing\"\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(c.scheduler, SchedulerKind::WorkStealing);
+        assert_eq!(c.worker_speeds(), vec![1.0, 1.0, 1.0, 0.5]);
+        // short lists pad with 1.0
+        let doc = Doc::from_str("[cluster]\nworkers = 3\nspeeds = [2.0]\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(c.worker_speeds(), vec![2.0, 1.0, 1.0]);
+        assert_eq!(c.scheduler, SchedulerKind::Static);
     }
 
     #[test]

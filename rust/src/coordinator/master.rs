@@ -4,7 +4,11 @@
 //! [`ErasureDecoder`], and — the moment `B = A·X` is recoverable —
 //! broadcasts the *done* signal (paper §3.2) so workers stop computing. It
 //! then drains the remaining `Done` events to account the total
-//! computations `C` (paper Definition 2) and per-worker load.
+//! computations `C` (paper Definition 2), the per-worker load, and the
+//! scheduler-level metrics: rows computed via **stolen** tasks (chunks
+//! whose computing worker differs from the owning shard) and **redundant
+//! rows** `C − m` — the work a fixed-rate code discards but ideal load
+//! balancing never performs (paper §1's "redundant computation gap").
 //!
 //! The loop is strategy-agnostic: all code-specific behaviour lives behind
 //! the [`ErasureDecoder`] trait object minted by the coordinator's
@@ -24,9 +28,10 @@ use super::messages::WorkerEvent;
 pub struct WorkerStat {
     /// Injected initial delay X_i.
     pub initial_delay: f64,
-    /// Rows computed until finish/cancel/failure (B_i).
+    /// Rows computed until finish/cancel/failure (B_i), across every
+    /// shard the worker touched.
     pub rows_done: usize,
-    /// Worker's final virtual clock X_i + τ·B_i.
+    /// Worker's final virtual clock X_i + τ_i·B_i.
     pub busy_until: f64,
     pub failed: bool,
 }
@@ -46,6 +51,13 @@ pub struct JobResult {
     /// 2). Counted in rows, not row×batch products: a batched row costs
     /// one τ like a single-vector row (see `worker` docs).
     pub computations: usize,
+    /// Rows of C beyond the `m` an uncoded computation needs: the
+    /// redundant-computation overhead. Zero for ideal load balancing;
+    /// the rateless scheme drives it to ~ε·m (paper Theorem 2).
+    pub redundant_rows: usize,
+    /// Rows computed through stolen tasks (work-stealing scheduler only;
+    /// always 0 under static dispatch).
+    pub stolen_rows: usize,
     /// Encoded rows actually consumed by the master before decode
     /// completed (LT: the empirical M′·width; fixed-rate: rows used).
     pub symbols_used: usize,
@@ -54,12 +66,28 @@ pub struct JobResult {
     pub per_worker: Vec<WorkerStat>,
 }
 
+impl JobResult {
+    /// Redundant rows as a fraction of the output height `m` (the
+    /// bench/test acceptance metric).
+    pub fn redundant_frac(&self) -> f64 {
+        let m = self.b.len() / self.batch.max(1);
+        if m == 0 {
+            0.0
+        } else {
+            self.redundant_rows as f64 / m as f64
+        }
+    }
+}
+
 /// Why a job failed.
 #[derive(Debug)]
 pub enum JobError {
     Undecodable { detail: String },
     Decode(String),
     ChannelClosed,
+    /// A worker thread was gone at submission time (decommissioned via
+    /// `kill` or crashed); the job never started.
+    WorkerLost { worker: usize },
 }
 
 impl std::fmt::Display for JobError {
@@ -71,6 +99,9 @@ impl std::fmt::Display for JobError {
             ),
             JobError::Decode(msg) => write!(f, "decode error: {msg}"),
             JobError::ChannelClosed => write!(f, "worker channel closed unexpectedly"),
+            JobError::WorkerLost { worker } => {
+                write!(f, "worker {worker} is gone; job not submitted")
+            }
         }
     }
 }
@@ -78,10 +109,10 @@ impl std::fmt::Display for JobError {
 impl std::error::Error for JobError {}
 
 /// Run the master loop: collect events from `rx` for `p` workers, cancel
-/// on completion, account C, and return the job result. `tau` is the
-/// per-row virtual cost, needed to clamp C at the completion time T
-/// (paper Definition 2 counts work done *until* b is decodable; work
-/// finished in the cancellation window is excluded from C but still
+/// on completion, account C, and return the job result. `taus[i]` is
+/// worker `i`'s per-row virtual cost, needed to clamp C at the completion
+/// time T (paper Definition 2 counts work done *until* b is decodable;
+/// work finished in the cancellation window is excluded from C but still
 /// visible in `per_worker.rows_done`).
 pub fn collect(
     decoder: Box<dyn ErasureDecoder>,
@@ -89,7 +120,7 @@ pub fn collect(
     cancel: &Arc<AtomicBool>,
     p: usize,
     initial_delays: &[f64],
-    tau: f64,
+    taus: &[f64],
     batch: usize,
 ) -> Result<JobResult, JobError> {
     let mut per_worker: Vec<WorkerStat> = initial_delays
@@ -103,20 +134,37 @@ pub fn collect(
         .collect();
     let mut done_workers = 0usize;
     let mut symbols_used = 0usize;
+    let mut stolen_rows = 0usize;
     let mut completing_v = f64::MIN;
     let mut decode_cpu = 0.0f64;
     let mut live: Option<Box<dyn ErasureDecoder>> = Some(decoder);
     let mut finished: Option<(f64, Box<dyn ErasureDecoder>)> = None;
 
     while done_workers < p {
-        let ev = rx.recv().map_err(|_| JobError::ChannelClosed)?;
+        let Ok(ev) = rx.recv() else {
+            // disconnect before every Done arrived (a worker thread died
+            // mid-job, e.g. kill_worker racing this submission). If the
+            // decode already completed, the result is good — losing the
+            // dead worker's Done only costs its load stats; that partial
+            // accounting is exactly what the code is designed to survive.
+            if finished.is_some() {
+                break;
+            }
+            return Err(JobError::ChannelClosed);
+        };
         match ev {
             WorkerEvent::Chunk(msg) => {
                 let Some(dec) = live.as_mut() else {
                     continue; // post-cancel stragglers
                 };
+                // counted here (not before the guard) so the stolen-row
+                // metric covers exactly the pre-completion work window,
+                // consistent with the computations clamp at T
+                if msg.worker != msg.shard {
+                    stolen_rows += msg.products.len() / batch;
+                }
                 let t0 = Instant::now();
-                let used = dec.ingest(msg.worker, msg.start_row, &msg.products, msg.virtual_time);
+                let used = dec.ingest(msg.shard, msg.start_row, &msg.products, msg.virtual_time);
                 decode_cpu += t0.elapsed().as_secs_f64();
                 symbols_used += used;
                 if used > 0 {
@@ -150,10 +198,11 @@ pub fn collect(
             let b = dec.finish().map_err(JobError::Decode)?;
             decode_cpu += t0.elapsed().as_secs_f64();
             // C (Definition 2): rows finished by time T under the delay
-            // model — clamp each worker's count at floor((T − X_i)/τ).
-            let computations = per_worker
+            // model — clamp each worker's count at floor((T − X_i)/τ_i).
+            let computations: usize = per_worker
                 .iter()
-                .map(|s| {
+                .zip(taus)
+                .map(|(s, &tau)| {
                     let by_t = if latency > s.initial_delay {
                         // +1e-9 guards fp error at exact task boundaries
                         ((latency - s.initial_delay) / tau + 1e-9).floor() as usize
@@ -163,11 +212,14 @@ pub fn collect(
                     s.rows_done.min(by_t)
                 })
                 .sum();
+            let out_rows = b.len() / batch.max(1);
             Ok(JobResult {
                 b,
                 batch,
                 latency,
                 computations,
+                redundant_rows: computations.saturating_sub(out_rows),
+                stolen_rows,
                 symbols_used,
                 decode_cpu,
                 per_worker,

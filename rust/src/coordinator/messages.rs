@@ -4,19 +4,29 @@
 //! message per ~`block_fraction` of their shard rather than per row,
 //! trading monitoring granularity against communication overhead exactly
 //! as the paper's EC2 implementation does (~10% ⇒ ~14 rows/message there).
+//!
+//! With the work-stealing scheduler a block may be computed by a worker
+//! other than the shard's owner, so a chunk carries both identities: the
+//! computing `worker` (per-worker load accounting, paper Fig. 2 bars) and
+//! the `shard` whose row space `start_row` indexes (decode attribution
+//! via `ShardLayout::starts`). Under static dispatch the two are always
+//! equal.
 
 /// One block of finished row-products from a worker.
 #[derive(Clone, Debug)]
 pub struct ChunkMsg {
+    /// Worker that computed the block.
     pub worker: usize,
-    /// First row of this block, as an offset *within the worker's shard*.
+    /// Shard the rows belong to (== `worker` unless the block was stolen).
+    pub shard: usize,
+    /// First row of this block, as an offset *within shard `shard`*.
     pub start_row: usize,
     /// Products for rows `start_row .. start_row + products.len()/batch`,
     /// row-major: each row contributes `batch` values (1 for plain
     /// matvec jobs).
     pub products: Vec<f32>,
-    /// Worker virtual clock when the block was finished:
-    /// `X_i + τ · rows_done_so_far`.
+    /// Computing worker's virtual clock when the block was finished:
+    /// `X_i + τ_i · rows_done_so_far`.
     pub virtual_time: f64,
 }
 
@@ -24,9 +34,10 @@ pub struct ChunkMsg {
 #[derive(Clone, Debug)]
 pub enum WorkerEvent {
     Chunk(ChunkMsg),
-    /// Worker finished its shard, was cancelled, or died. `rows_done` is
-    /// its final computed-row count (the paper's per-worker `B_i`);
-    /// `virtual_time` its final clock; `failed` marks an injected death.
+    /// Worker ran out of tasks, was cancelled, or died. `rows_done` is
+    /// its final computed-row count across all shards it touched (the
+    /// paper's per-worker `B_i`); `virtual_time` its final clock;
+    /// `failed` marks an injected death.
     Done {
         worker: usize,
         rows_done: usize,

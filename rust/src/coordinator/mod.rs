@@ -3,11 +3,15 @@
 //!
 //! A [`Coordinator`] encodes a matrix once under a chosen [`Strategy`]
 //! (paper §2.3/§3) through the unified
-//! [`ErasureCode`](crate::coding::ErasureCode) trait, distributes the
-//! encoded shards into a **persistent worker pool** (one long-lived thread
-//! per worker, shard resident across jobs — see [`pool`]), and serves
-//! multiply jobs: broadcast `X`, collect blockwise partial products,
-//! decode online, cancel leftover work the moment `B = A·X` is
+//! [`ErasureCode`](crate::coding::ErasureCode) trait — shards sized
+//! proportionally to configured worker speeds for heterogeneous fleets —
+//! distributes the encoded shards into a **persistent worker pool** (one
+//! long-lived thread per worker, shard resident across jobs — see
+//! [`pool`]), and serves multiply jobs: hand row-range tasks to workers
+//! through the configured [`scheduler`] (static assignment, or work
+//! stealing with an EWMA speed tracker — the live ideal-load-balancing
+//! baseline over the uncoded partition), collect blockwise partial
+//! products, decode online, cancel leftover work the moment `B = A·X` is
 //! recoverable. Worker straggling follows the paper's delay model via
 //! [`straggler::StragglerProfile`] (threads really sleep, so message
 //! ordering, partial work and cancellation behave like the paper's EC2
@@ -24,6 +28,7 @@
 pub mod master;
 pub mod messages;
 pub mod pool;
+pub mod scheduler;
 pub mod straggler;
 pub mod stream;
 pub mod worker;
@@ -35,6 +40,7 @@ use std::time::Instant;
 
 pub use master::{JobError, JobResult, WorkerStat};
 use pool::WorkerPool;
+use scheduler::Scheduler;
 use straggler::StragglerProfile;
 
 use crate::coding::lt::{LtCode, LtParams};
@@ -42,7 +48,7 @@ use crate::coding::mds::MdsCode;
 use crate::coding::raptor::{RaptorCode, RaptorParams};
 use crate::coding::replication::RepCode;
 use crate::coding::systematic::SystematicLt;
-use crate::coding::{ErasureCode, ShardLayout};
+use crate::coding::{ErasureCode, ShardLayout, ShardSizing};
 use crate::config::ClusterConfig;
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
@@ -124,16 +130,23 @@ pub struct JobOptions {
     pub profile: Option<StragglerProfile>,
 }
 
-/// The master node: owns the encoded-shard layout and a persistent worker
-/// pool, and serves (possibly concurrent, possibly batched) multiply jobs.
+/// The master node: owns the encoded-shard layout, the dispatch
+/// scheduler and a persistent worker pool, and serves (possibly
+/// concurrent, possibly batched) multiply jobs.
 pub struct Coordinator {
     cluster: ClusterConfig,
     strategy: Strategy,
     code: Box<dyn ErasureCode>,
     layout: ShardLayout,
     pool: WorkerPool,
+    /// Dispatch policy (static / work-stealing); persists across jobs so
+    /// the work-stealing EWMA speed tracker keeps learning the fleet.
+    scheduler: Arc<dyn Scheduler>,
     /// Per-worker rows per result message, aligned to the symbol width.
+    /// Doubles as the work-stealing task granularity.
     block_rows: Vec<usize>,
+    /// Per-worker virtual per-row cost τ_i = τ / speed_i.
+    taus: Vec<f64>,
     profile: StragglerProfile,
     m: usize,
     n: usize,
@@ -142,10 +155,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Encode `a` under `strategy` and park the shards in a persistent
-    /// pool of `cluster.workers` worker threads. Encoding is the
-    /// preprocessing step of paper §3.2 — performed once, off the latency
-    /// path; the pool lives until the coordinator is dropped.
+    /// Encode `a` under `strategy` — shards sized proportionally to the
+    /// configured worker speeds where the code permits — and park the
+    /// shards in a persistent pool of `cluster.workers` worker threads.
+    /// Encoding is the preprocessing step of paper §3.2 — performed once,
+    /// off the latency path; the pool lives until the coordinator is
+    /// dropped.
     pub fn new(
         cluster: ClusterConfig,
         strategy: Strategy,
@@ -155,8 +170,18 @@ impl Coordinator {
         let p = cluster.workers;
         anyhow::ensure!(p >= 1, "need at least one worker");
         anyhow::ensure!(cluster.symbol_width >= 1, "symbol_width must be >= 1");
+        anyhow::ensure!(
+            cluster.speeds.len() <= p,
+            "cluster.speeds lists {} workers but the fleet has {p}",
+            cluster.speeds.len()
+        );
+        let speeds = cluster.worker_speeds();
+        anyhow::ensure!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "worker speeds must be finite and positive: {speeds:?}"
+        );
         let (code, width) = strategy.build(a.rows(), p, cluster.symbol_width, cluster.seed);
-        let encoded = code.encode_shards(a, p, width);
+        let encoded = code.encode_shards(a, &ShardSizing::proportional(&speeds), width);
         let layout = encoded.layout;
         let encoded_rows = encoded.shards.iter().map(|s| s.rows()).sum();
         let block_rows = encoded
@@ -169,6 +194,8 @@ impl Coordinator {
                 rows.div_ceil(layout.width) * layout.width
             })
             .collect();
+        let taus: Vec<f64> = speeds.iter().map(|s| cluster.tau / s).collect();
+        let scheduler = cluster.scheduler.build(&taus);
         let pool = WorkerPool::spawn(encoded.shards, &engine);
         let profile = StragglerProfile::new(cluster.delay);
         Ok(Self {
@@ -179,7 +206,9 @@ impl Coordinator {
             code,
             layout,
             pool,
+            scheduler,
             block_rows,
+            taus,
             profile,
             encoded_rows,
             jobs_served: AtomicU64::new(0),
@@ -207,6 +236,18 @@ impl Coordinator {
     /// draws when no explicit seed is given).
     pub fn jobs_served(&self) -> u64 {
         self.jobs_served.load(Ordering::Relaxed)
+    }
+
+    /// Name of the active dispatch scheduler ("static" / "stealing").
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Fault injection / decommission: take worker `w` offline. Jobs
+    /// submitted afterwards fail with [`JobError::WorkerLost`] instead of
+    /// panicking or hanging.
+    pub fn kill_worker(&self, w: usize) {
+        self.pool.kill(w);
     }
 
     /// Multiply a single vector with default per-job options.
@@ -256,38 +297,38 @@ impl Coordinator {
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
         let start = Instant::now();
+        let shared = Arc::new(worker::JobShared {
+            x,
+            batch,
+            tasks: self.scheduler.plan(&self.layout.shard_rows, &self.block_rows),
+            time_scale: if self.cluster.real_sleep {
+                self.cluster.time_scale
+            } else {
+                0.0
+            },
+            start,
+            cancel: Arc::clone(&cancel),
+        });
         let orders = (0..p)
             .map(|w| worker::JobOrder {
-                x: Arc::clone(&x),
-                batch,
+                shared: Arc::clone(&shared),
                 plan: plans[w],
-                tau: self.cluster.tau,
-                block_rows: self.block_rows[w],
-                time_scale: if self.cluster.real_sleep {
-                    self.cluster.time_scale
-                } else {
-                    0.0
-                },
-                start,
+                tau: self.taus[w],
                 tx: tx.clone(),
-                cancel: Arc::clone(&cancel),
             })
             .collect();
         // atomic w.r.t. other jobs: same arrival order on every worker
-        self.pool.broadcast(orders);
+        if let Err(w) = self.pool.broadcast(orders) {
+            // stop any worker that did receive the job, then surface the
+            // loss without poisoning later jobs
+            cancel.store(true, Ordering::Relaxed);
+            return Err(JobError::WorkerLost { worker: w });
+        }
         drop(tx);
 
         let decoder = self.code.new_decoder(&self.layout, batch);
         let delays: Vec<f64> = plans.iter().map(|pl| pl.initial_delay).collect();
-        let result = master::collect(
-            decoder,
-            &rx,
-            &cancel,
-            p,
-            &delays,
-            self.cluster.tau,
-            batch,
-        );
+        let result = master::collect(decoder, &rx, &cancel, p, &delays, &self.taus, batch);
         // belt-and-braces: make sure no worker keeps computing for this job
         cancel.store(true, Ordering::Relaxed);
         result
@@ -309,6 +350,7 @@ mod tests {
             real_sleep: true,
             time_scale: 1.0,
             symbol_width: 1,
+            ..ClusterConfig::default()
         }
     }
 
@@ -531,6 +573,112 @@ mod tests {
             assert!((out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0));
         }
         assert!(out.per_worker[1].failed);
+    }
+
+    /// Every strategy still decodes when dispatched through the
+    /// work-stealing scheduler on a heterogeneous fleet (one 2×-slow
+    /// worker): stolen chunks must land in the right shard's row space.
+    #[test]
+    fn all_strategies_decode_under_work_stealing() {
+        use scheduler::SchedulerKind;
+        let (m, p) = (128usize, 4usize);
+        let a = Matrix::random(m, 12, 300);
+        let x = Matrix::random_vector(12, 301);
+        let want = a.matvec(&x);
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.speeds = vec![1.0, 1.0, 1.0, 0.5];
+        cluster.block_fraction = 0.1;
+        for strategy in [
+            Strategy::Uncoded,
+            Strategy::Replication { r: 2 },
+            Strategy::Mds { k: 3 },
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Strategy::SystematicLt(LtParams::with_alpha(3.0)),
+            Strategy::Raptor(RaptorParams::default()),
+        ] {
+            let name = strategy.name();
+            let coord = Coordinator::new(cluster.clone(), strategy, Engine::Native, &a)
+                .expect("coordinator");
+            assert_eq!(coord.scheduler_name(), "stealing");
+            let out = coord.multiply(&x).unwrap_or_else(|e| panic!("{name}: {e}"));
+            for i in 0..m {
+                assert!(
+                    (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                    "{name} row {i}: {} vs {}",
+                    out.b[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    /// The ideal-LB baseline (uncoded + stealing) performs zero redundant
+    /// work and offloads the slow worker onto the fast ones.
+    #[test]
+    fn ideal_lb_has_zero_redundancy_and_steals_from_the_straggler() {
+        use scheduler::SchedulerKind;
+        let (m, p) = (512usize, 4usize);
+        let a = Matrix::random(m, 8, 310);
+        let x = Matrix::random_vector(8, 311);
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.speeds = vec![1.0, 1.0, 1.0, 1.0 / 3.0];
+        cluster.tau = 5e-5;
+        cluster.block_fraction = 0.05;
+        let coord =
+            Coordinator::new(cluster, Strategy::Uncoded, Engine::Native, &a).expect("coordinator");
+        let out = coord.multiply(&x).expect("ideal-lb multiply");
+        assert_eq!(out.computations, m, "every row computed exactly once");
+        assert_eq!(out.redundant_rows, 0);
+        assert!(out.stolen_rows > 0, "the slow worker's tail must be stolen");
+        let slow = out.per_worker[3].rows_done;
+        let fast = out.per_worker[0].rows_done;
+        assert!(slow < fast, "slow worker computed {slow} rows vs fast {fast}");
+    }
+
+    #[test]
+    fn killed_worker_yields_worker_lost_and_later_jobs_do_not_panic() {
+        let m = 64;
+        let a = Matrix::random(m, 8, 320);
+        let x = Matrix::random_vector(8, 321);
+        let coord = Coordinator::new(
+            fast_cluster(3),
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        coord.multiply(&x).expect("healthy fleet");
+        coord.kill_worker(1);
+        // the kill is asynchronous: a job racing the thread's exit may
+        // still succeed (LT decodes without the lost worker) or fail
+        // cleanly with ChannelClosed — and once the loss is observed at
+        // submission time, every later job reports WorkerLost.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match coord.multiply(&x) {
+                Err(JobError::WorkerLost { worker }) => {
+                    assert_eq!(worker, 1);
+                    break;
+                }
+                Err(JobError::ChannelClosed) | Ok(_) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "worker 1 never observed as lost"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        // not poisoned: the next job reports the same recoverable error
+        match coord.multiply(&x) {
+            Err(JobError::WorkerLost { worker: 1 }) => {}
+            other => panic!("expected WorkerLost, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,19 +1,29 @@
-//! Persistent worker fleet: one long-lived thread per worker, each holding
-//! its encoded shard resident and serving [`JobOrder`]s off a FIFO queue.
+//! Persistent worker fleet: one long-lived thread per worker, each serving
+//! [`JobOrder`]s off a FIFO queue with the fleet's encoded shards
+//! resident.
 //!
 //! The original coordinator spawned `p` fresh threads per multiply job —
 //! fine for one-shot experiments, but under serving traffic the spawn +
 //! page-in cost dominates small jobs and the shards are re-shared per job.
 //! The pool moves both off the latency path: threads are created once in
-//! `Coordinator::new`, shards are moved into them, and a job is just `p`
-//! channel sends. Concurrent jobs (the coordinator is `Sync`) queue FCFS
-//! at each worker, which is exactly the M/G/1 reduction the paper's §5
-//! streaming analysis assumes.
+//! `Coordinator::new`, the shard list is `Arc`-shared into all of them
+//! (worker `w` *owns* shard `w`, but the work-stealing scheduler may hand
+//! it tail ranges of any shard — see [`scheduler`](super::scheduler)),
+//! and a job is just `p` channel sends. Concurrent jobs (the coordinator
+//! is `Sync`) queue FCFS at each worker, which is exactly the M/G/1
+//! reduction the paper's §5 streaming analysis assumes.
+//!
+//! **Worker loss**: a pool thread can go away — [`WorkerPool::kill`]
+//! decommissions one deliberately (fault injection), and a panicking
+//! engine would have the same effect. [`WorkerPool::broadcast`] surfaces
+//! that as `Err(worker)` instead of panicking, so one dead worker fails
+//! the *current* job with a diagnosable error rather than poisoning the
+//! submit lock and every job after it.
 //!
 //! This builds on the same `std::thread` + `std::sync::mpsc` substrate as
 //! [`util::threadpool`](crate::util::threadpool); it is a separate type
-//! because pool workers own per-thread state (the shard) rather than
-//! pulling boxed closures from a shared queue.
+//! because pool workers own per-thread state (the resident shard list)
+//! rather than pulling boxed closures from a shared queue.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -23,9 +33,16 @@ use super::worker::{self, JobOrder};
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
 
+enum PoolMsg {
+    Job(JobOrder),
+    /// Decommission: the worker thread exits after draining earlier
+    /// queue entries.
+    Shutdown,
+}
+
 /// A fleet of persistent worker threads, one per encoded shard.
 pub struct WorkerPool {
-    senders: Vec<Sender<JobOrder>>,
+    senders: Vec<Sender<PoolMsg>>,
     /// Serializes whole-fleet submission: concurrent jobs must land in the
     /// same order on every worker's queue, or two jobs could interleave
     /// (worker 0 runs A then B, worker 1 runs B then A) and each would
@@ -36,19 +53,22 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn one thread per shard; each moves its shard in and serves its
-    /// job queue until the pool is dropped.
+    /// Spawn one thread per shard; each holds the whole fleet's shard
+    /// list resident and serves its job queue until the pool is dropped
+    /// (or the worker is [`kill`](Self::kill)ed).
     pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
-        let mut senders = Vec::with_capacity(shards.len());
-        let mut handles = Vec::with_capacity(shards.len());
-        for (w, shard) in shards.into_iter().enumerate() {
-            let (tx, rx) = channel::<JobOrder>();
+        let fleet = Arc::new(shards);
+        let mut senders = Vec::with_capacity(fleet.len());
+        let mut handles = Vec::with_capacity(fleet.len());
+        for w in 0..fleet.len() {
+            let (tx, rx) = channel::<PoolMsg>();
             let engine = engine.clone();
+            let fleet = Arc::clone(&fleet);
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        worker::run_job(w, &shard, &engine, job);
+                    while let Ok(PoolMsg::Job(job)) = rx.recv() {
+                        worker::run_job(w, &fleet, &engine, job);
                     }
                 })
                 .expect("spawn pool worker");
@@ -68,13 +88,29 @@ impl WorkerPool {
     }
 
     /// Enqueue one job per worker, atomically with respect to other
-    /// broadcasts (returns as soon as all queues have the job).
-    pub fn broadcast(&self, jobs: Vec<JobOrder>) {
+    /// broadcasts (returns as soon as all queues have the job). If a
+    /// worker thread is gone, returns `Err(worker)` — the caller maps
+    /// this to [`JobError::WorkerLost`](super::JobError::WorkerLost) and
+    /// the pool stays usable for diagnostics or a resized retry.
+    pub fn broadcast(&self, jobs: Vec<JobOrder>) -> Result<(), usize> {
         assert_eq!(jobs.len(), self.senders.len(), "one order per worker");
-        let _fleet_order = self.submit_lock.lock().expect("pool submit lock");
-        for (tx, job) in self.senders.iter().zip(jobs) {
-            tx.send(job).expect("worker thread terminated unexpectedly");
+        let _fleet_order = self
+            .submit_lock
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        for (w, (tx, job)) in self.senders.iter().zip(jobs).enumerate() {
+            if tx.send(PoolMsg::Job(job)).is_err() {
+                return Err(w);
+            }
         }
+        Ok(())
+    }
+
+    /// Fault injection / decommission: ask worker `w`'s thread to exit
+    /// once it reaches this point in its queue. Jobs broadcast afterwards
+    /// observe the loss as `Err(w)`.
+    pub fn kill(&self, w: usize) {
+        let _ = self.senders[w].send(PoolMsg::Shutdown);
     }
 }
 
@@ -92,26 +128,40 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use crate::coordinator::messages::WorkerEvent;
+    use crate::coordinator::scheduler::{Scheduler, StaticScheduler};
     use crate::coordinator::straggler::WorkerPlan;
+    use crate::coordinator::worker::JobShared;
     use std::sync::atomic::AtomicBool;
     use std::sync::mpsc::channel as evchannel;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
-    fn order(x: Arc<Vec<f32>>, tx: Sender<WorkerEvent>) -> JobOrder {
-        JobOrder {
+    fn fleet_orders(
+        p: usize,
+        rows: usize,
+        x: Arc<Vec<f32>>,
+        tx: Sender<WorkerEvent>,
+    ) -> Vec<JobOrder> {
+        let shard_rows = vec![rows; p];
+        let grains = vec![4usize; p];
+        let shared = Arc::new(JobShared {
             x,
             batch: 1,
-            plan: WorkerPlan {
-                initial_delay: 0.0,
-                fail_after: None,
-            },
-            tau: 1e-6,
-            block_rows: 4,
+            tasks: StaticScheduler.plan(&shard_rows, &grains),
             time_scale: 0.0,
             start: Instant::now(),
-            tx,
             cancel: Arc::new(AtomicBool::new(false)),
-        }
+        });
+        (0..p)
+            .map(|_| JobOrder {
+                shared: Arc::clone(&shared),
+                plan: WorkerPlan {
+                    initial_delay: 0.0,
+                    fail_after: None,
+                },
+                tau: 1e-6,
+                tx: tx.clone(),
+            })
+            .collect()
     }
 
     #[test]
@@ -124,18 +174,18 @@ mod tests {
         for job_round in 0..3u64 {
             let x = Arc::new(Matrix::random_vector(4, 100 + job_round));
             let (tx, rx) = evchannel();
-            let jobs = (0..3)
-                .map(|_| order(Arc::clone(&x), tx.clone()))
-                .collect();
-            pool.broadcast(jobs);
+            let jobs = fleet_orders(3, 8, Arc::clone(&x), tx.clone());
+            pool.broadcast(jobs).expect("fleet alive");
             drop(tx);
             let mut done = 0;
             let mut rows = vec![0usize; 3];
             while let Ok(ev) = rx.recv() {
                 match ev {
                     WorkerEvent::Chunk(c) => {
-                        // verify products against the resident shard
-                        let want = shards[c.worker].matvec(&x);
+                        // static dispatch: shard == worker; verify products
+                        // against the resident shard
+                        assert_eq!(c.shard, c.worker);
+                        let want = shards[c.shard].matvec(&x);
                         for (i, p) in c.products.iter().enumerate() {
                             assert!((p - want[c.start_row + i]).abs() < 1e-4);
                         }
@@ -151,5 +201,41 @@ mod tests {
             assert_eq!(rows, vec![8, 8, 8]);
         }
         drop(pool); // must join cleanly
+    }
+
+    #[test]
+    fn killed_worker_surfaces_as_broadcast_error_not_panic() {
+        let shards: Vec<Arc<Matrix>> = (0..3)
+            .map(|s| Arc::new(Matrix::random(8, 4, 10 + s as u64)))
+            .collect();
+        let pool = WorkerPool::spawn(shards, &Engine::Native);
+        pool.kill(1);
+        // wait until the thread has actually exited (its receiver drops)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let x = Arc::new(vec![1.0f32; 4]);
+            let (tx, rx) = evchannel();
+            let jobs = fleet_orders(3, 8, x, tx.clone());
+            drop(tx);
+            match pool.broadcast(jobs) {
+                Err(w) => {
+                    assert_eq!(w, 1);
+                    break;
+                }
+                Ok(()) => {
+                    // shutdown not yet processed: drain this job's events
+                    // from the surviving workers and retry
+                    while rx.recv().is_ok() {}
+                    assert!(Instant::now() < deadline, "worker 1 never died");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        // the pool is NOT poisoned: broadcasting again still reports the
+        // same recoverable error instead of panicking
+        let (tx2, _rx2) = evchannel();
+        let jobs = fleet_orders(3, 8, Arc::new(vec![1.0f32; 4]), tx2);
+        assert_eq!(pool.broadcast(jobs), Err(1));
+        drop(pool); // joining a killed worker must still work
     }
 }

@@ -1,0 +1,406 @@
+//! Dispatch schedulers: how a job's encoded rows are handed to workers.
+//!
+//! The original coordinator had exactly one dispatch policy baked in:
+//! broadcast one order per worker and let each worker grind through its
+//! whole resident shard front-to-back. That is the paper's *static
+//! assignment*. This module turns dispatch into a seam — a [`Scheduler`]
+//! mints one [`TaskSource`] per job, and workers pull row-range
+//! [`Task`]s from it until it runs dry — with two implementations:
+//!
+//! * [`StaticScheduler`] — the existing behaviour: worker `w` computes
+//!   shard `w`'s rows in order, nothing is shared. One per-worker atomic
+//!   cursor; zero coordination.
+//! * [`WorkStealingScheduler`] — each worker's rows become a shared
+//!   per-shard range. The owner takes blocks from the *front*; a worker
+//!   whose own range is exhausted **steals a block from the tail** of the
+//!   victim with the most estimated remaining work, where the estimate
+//!   uses an EWMA of each worker's observed per-row time τ̂ (seeded from
+//!   the configured per-worker τ and persistent across jobs, so the
+//!   fleet's speed profile keeps tracking what is actually observed).
+//!   Run over the uncoded partition this is the paper's §2.2 **ideal
+//!   load balancing** baseline made live: every row is computed exactly
+//!   once, and the fleet finishes together up to one task of slack.
+//!
+//! Failure semantics under stealing: a silently-dying worker (paper
+//! Appendix F) loses only the task it is currently computing — the
+//! unstarted tasks of its range stay on the shared board and are drained
+//! by the survivors, which models a master-side task queue whose
+//! un-dispatched ranges remain assignable. In-flight work is lost, as it
+//! must be under silent death.
+//!
+//! The traits are object-safe and transport-agnostic on purpose: a future
+//! async/RPC coordinator can implement `TaskSource` over a network
+//! protocol without touching the worker loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One unit of work: compute rows `start .. start + len` of worker
+/// `shard`'s resident encoded shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    /// Which worker's shard the rows live in (== the row space the
+    /// decoder attributes the products to, via `ShardLayout::starts`).
+    pub shard: usize,
+    /// First row, shard-local.
+    pub start: usize,
+    /// Number of rows (> 0, aligned to the encoded-symbol width except
+    /// possibly at a failure boundary).
+    pub len: usize,
+}
+
+/// Which dispatch policy a coordinator uses (config `cluster.scheduler`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Static assignment: worker `w` computes shard `w`, front to back.
+    #[default]
+    Static,
+    /// Work stealing with EWMA speed tracking (ideal-LB over uncoded).
+    WorkStealing,
+}
+
+impl SchedulerKind {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "static" => Some(SchedulerKind::Static),
+            "stealing" | "work-stealing" | "steal" => Some(SchedulerKind::WorkStealing),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Static => "static",
+            SchedulerKind::WorkStealing => "stealing",
+        }
+    }
+
+    /// Build the fleet-lifetime scheduler. `taus[w]` seeds worker `w`'s
+    /// speed estimate before any observation has been made — the
+    /// coordinator passes its configured per-worker τ, so victim
+    /// selection is right from the first job even on a heterogeneous
+    /// fleet; the EWMA then keeps tracking what is actually observed.
+    pub fn build(self, taus: &[f64]) -> Arc<dyn Scheduler> {
+        match self {
+            SchedulerKind::Static => Arc::new(StaticScheduler),
+            SchedulerKind::WorkStealing => Arc::new(WorkStealingScheduler::new(taus)),
+        }
+    }
+}
+
+/// Fleet-lifetime dispatch policy: lives as long as the coordinator and
+/// mints one fresh [`TaskSource`] per job. State that should persist
+/// across jobs (the EWMA speed tracker) lives here.
+pub trait Scheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Plan one job: `shard_rows[w]` is worker `w`'s resident row count,
+    /// `grain[w]` its task/message granularity in rows (aligned to the
+    /// symbol width by the coordinator).
+    fn plan(&self, shard_rows: &[usize], grain: &[usize]) -> Arc<dyn TaskSource>;
+}
+
+/// Per-job task queue shared by the whole fleet. Workers call
+/// [`next_task`](TaskSource::next_task) until it returns `None`.
+pub trait TaskSource: Send + Sync {
+    /// Next row-range for worker `w`; `None` means no work is left that
+    /// `w` may take (the job is over for `w`).
+    fn next_task(&self, w: usize) -> Option<Task>;
+
+    /// Report a finished task: worker `w` computed `rows` rows in
+    /// `virt_elapsed` virtual seconds (feeds the speed tracker).
+    fn observe(&self, w: usize, rows: usize, virt_elapsed: f64);
+}
+
+// ---------------------------------------------------------------- static
+
+/// The paper's static assignment, unchanged in behaviour: each worker
+/// walks its own shard in `grain`-row blocks.
+pub struct StaticScheduler;
+
+impl Scheduler for StaticScheduler {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&self, shard_rows: &[usize], grain: &[usize]) -> Arc<dyn TaskSource> {
+        assert_eq!(shard_rows.len(), grain.len());
+        Arc::new(StaticSource {
+            cursors: shard_rows.iter().map(|_| AtomicUsize::new(0)).collect(),
+            rows: shard_rows.to_vec(),
+            grain: grain.to_vec(),
+        })
+    }
+}
+
+struct StaticSource {
+    cursors: Vec<AtomicUsize>,
+    rows: Vec<usize>,
+    grain: Vec<usize>,
+}
+
+impl TaskSource for StaticSource {
+    fn next_task(&self, w: usize) -> Option<Task> {
+        // only worker w advances cursor w, so a plain fetch_add is enough
+        let start = self.cursors[w].fetch_add(self.grain[w], Ordering::Relaxed);
+        if start >= self.rows[w] {
+            return None;
+        }
+        Some(Task {
+            shard: w,
+            start,
+            len: self.grain[w].min(self.rows[w] - start),
+        })
+    }
+
+    fn observe(&self, _w: usize, _rows: usize, _virt_elapsed: f64) {}
+}
+
+// ---------------------------------------------------------- work stealing
+
+/// EWMA tracker of each worker's observed per-row virtual time τ̂,
+/// persistent across jobs (shared into every job's task board).
+pub struct EwmaSpeeds {
+    taus: Mutex<Vec<f64>>,
+    beta: f64,
+}
+
+impl EwmaSpeeds {
+    /// Seed with per-worker initial estimates (clamped positive).
+    pub fn new(taus0: &[f64]) -> Self {
+        Self {
+            taus: Mutex::new(taus0.iter().map(|t| t.max(f64::MIN_POSITIVE)).collect()),
+            beta: 0.4,
+        }
+    }
+
+    /// Fold one observation of worker `w`'s per-row time into τ̂_w.
+    pub fn observe(&self, w: usize, per_row: f64) {
+        if !per_row.is_finite() || per_row <= 0.0 {
+            return;
+        }
+        let mut taus = self.taus.lock().unwrap_or_else(|e| e.into_inner());
+        taus[w] += self.beta * (per_row - taus[w]);
+    }
+
+    /// Current τ̂ estimates.
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.taus.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// Work-stealing dispatch: fleet-lifetime half is just the speed tracker;
+/// the per-job board lives in the minted [`TaskSource`].
+pub struct WorkStealingScheduler {
+    speeds: Arc<EwmaSpeeds>,
+}
+
+impl WorkStealingScheduler {
+    /// `taus0[w]` is worker `w`'s initial per-row time estimate.
+    pub fn new(taus0: &[f64]) -> Self {
+        Self {
+            speeds: Arc::new(EwmaSpeeds::new(taus0)),
+        }
+    }
+
+    /// The persistent speed tracker (for diagnostics/tests).
+    pub fn speeds(&self) -> &Arc<EwmaSpeeds> {
+        &self.speeds
+    }
+}
+
+impl Scheduler for WorkStealingScheduler {
+    fn name(&self) -> &'static str {
+        "stealing"
+    }
+
+    fn plan(&self, shard_rows: &[usize], grain: &[usize]) -> Arc<dyn TaskSource> {
+        assert_eq!(shard_rows.len(), grain.len());
+        Arc::new(StealSource {
+            board: Mutex::new(Board {
+                next: vec![0; shard_rows.len()],
+                end: shard_rows.to_vec(),
+                grain: grain.to_vec(),
+            }),
+            speeds: Arc::clone(&self.speeds),
+        })
+    }
+}
+
+/// Per-shard remaining range: the owner pops `grain`-row blocks off the
+/// front (`next`), thieves pop blocks off the tail (`end`). Front and
+/// tail never overlap because both moves happen under the board lock, so
+/// **every row is handed out exactly once** — the zero-redundancy
+/// property the ideal-LB baseline relies on.
+struct Board {
+    next: Vec<usize>,
+    end: Vec<usize>,
+    grain: Vec<usize>,
+}
+
+struct StealSource {
+    board: Mutex<Board>,
+    speeds: Arc<EwmaSpeeds>,
+}
+
+impl TaskSource for StealSource {
+    fn next_task(&self, w: usize) -> Option<Task> {
+        let mut b = self.board.lock().unwrap_or_else(|e| e.into_inner());
+        // own queue first
+        if b.next[w] < b.end[w] {
+            let len = b.grain[w].min(b.end[w] - b.next[w]);
+            let start = b.next[w];
+            b.next[w] += len;
+            return Some(Task { shard: w, start, len });
+        }
+        // steal from the victim with the most estimated remaining
+        // virtual work τ̂_v · remaining_v (the straggler's tail)
+        let taus = self.speeds.snapshot();
+        let mut victim: Option<(usize, f64)> = None;
+        for v in 0..b.next.len() {
+            if v == w || b.next[v] >= b.end[v] {
+                continue;
+            }
+            let work = (b.end[v] - b.next[v]) as f64 * taus[v];
+            match victim {
+                Some((_, best)) if work <= best => {}
+                _ => victim = Some((v, work)),
+            }
+        }
+        let (v, _) = victim?;
+        let len = b.grain[v].min(b.end[v] - b.next[v]);
+        b.end[v] -= len;
+        Some(Task {
+            shard: v,
+            start: b.end[v],
+            len,
+        })
+    }
+
+    fn observe(&self, w: usize, rows: usize, virt_elapsed: f64) {
+        if rows > 0 {
+            self.speeds.observe(w, virt_elapsed / rows as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a source single-threadedly with a fixed worker schedule and
+    /// return every task handed out.
+    fn drain(src: &dyn TaskSource, order: &[usize]) -> Vec<Task> {
+        let mut out = Vec::new();
+        let mut live: Vec<usize> = order.to_vec();
+        while !live.is_empty() {
+            let mut next_live = Vec::new();
+            for &w in &live {
+                if let Some(t) = src.next_task(w) {
+                    out.push(t);
+                    next_live.push(w);
+                }
+            }
+            live = next_live;
+        }
+        out
+    }
+
+    /// Each row of each shard must be handed out exactly once.
+    fn assert_exact_cover(tasks: &[Task], shard_rows: &[usize]) {
+        let mut seen: Vec<Vec<bool>> = shard_rows.iter().map(|&r| vec![false; r]).collect();
+        for t in tasks {
+            assert!(t.len > 0);
+            for r in t.start..t.start + t.len {
+                assert!(!seen[t.shard][r], "row {r} of shard {} issued twice", t.shard);
+                seen[t.shard][r] = true;
+            }
+        }
+        for (s, rows) in seen.iter().enumerate() {
+            assert!(rows.iter().all(|&x| x), "shard {s} not fully covered");
+        }
+    }
+
+    #[test]
+    fn static_source_tiles_each_shard() {
+        let sched = StaticScheduler;
+        let src = sched.plan(&[7, 0, 4], &[3, 1, 4]);
+        let tasks = drain(&*src, &[0, 1, 2]);
+        assert_exact_cover(&tasks, &[7, 0, 4]);
+        // static: every task stays on its own shard, in order
+        for t in &tasks {
+            assert_ne!(t.shard, 1, "empty shard must yield no tasks");
+        }
+        let w0: Vec<_> = tasks.iter().filter(|t| t.shard == 0).collect();
+        assert_eq!(w0.len(), 3); // 3 + 3 + 1
+        assert_eq!((w0[2].start, w0[2].len), (6, 1));
+    }
+
+    #[test]
+    fn stealing_covers_exactly_once_and_steals_from_the_tail() {
+        let sched = WorkStealingScheduler::new(&[1.0; 2]);
+        let src = sched.plan(&[4, 12], &[2, 2]);
+        // worker 0 drains its 4 rows then steals from worker 1's tail;
+        // worker 1 never gets to run (a dead/straggling owner)
+        let mut tasks = Vec::new();
+        while let Some(t) = src.next_task(0) {
+            tasks.push(t);
+        }
+        assert_exact_cover(&tasks, &[4, 12]);
+        // the first stolen task is the tail block of shard 1
+        let first_steal = tasks.iter().find(|t| t.shard == 1).unwrap();
+        assert_eq!((first_steal.start, first_steal.len), (10, 2));
+    }
+
+    #[test]
+    fn stealing_interleaved_owners_still_cover_exactly_once() {
+        let sched = WorkStealingScheduler::new(&[1.0; 3]);
+        let src = sched.plan(&[5, 9, 2], &[2, 3, 2]);
+        let tasks = drain(&*src, &[0, 1, 2]);
+        assert_exact_cover(&tasks, &[5, 9, 2]);
+    }
+
+    #[test]
+    fn victim_is_the_most_loaded_by_ewma_estimate() {
+        let sched = WorkStealingScheduler::new(&[1.0; 3]);
+        // worker 2 is observed to be 10x slower per row
+        sched.speeds().observe(2, 10.0);
+        for _ in 0..8 {
+            sched.speeds().observe(2, 10.0);
+        }
+        let src = sched.plan(&[2, 6, 4], &[2, 2, 2]);
+        // drain worker 0's own rows
+        assert_eq!(src.next_task(0).unwrap().shard, 0);
+        // now steal: shard 1 has 6 rows at τ̂≈1, shard 2 has 4 rows at
+        // τ̂≈10 → victim must be 2 despite having fewer rows
+        let stolen = src.next_task(0).unwrap();
+        assert_eq!(stolen.shard, 2);
+        assert_eq!((stolen.start, stolen.len), (2, 2));
+    }
+
+    #[test]
+    fn ewma_converges_toward_observations() {
+        let sp = EwmaSpeeds::new(&[1.0]);
+        for _ in 0..20 {
+            sp.observe(0, 3.0);
+        }
+        let tau = sp.snapshot()[0];
+        assert!((tau - 3.0).abs() < 1e-3, "tau_hat {tau}");
+        // non-finite and non-positive observations are ignored
+        sp.observe(0, f64::NAN);
+        sp.observe(0, -1.0);
+        assert_eq!(sp.snapshot()[0], tau);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(SchedulerKind::parse("static"), Some(SchedulerKind::Static));
+        assert_eq!(SchedulerKind::parse("stealing"), Some(SchedulerKind::WorkStealing));
+        assert_eq!(SchedulerKind::parse("work-stealing"), Some(SchedulerKind::WorkStealing));
+        assert_eq!(SchedulerKind::parse("nope"), None);
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Static);
+        assert_eq!(SchedulerKind::Static.build(&[1e-3; 4]).name(), "static");
+        assert_eq!(SchedulerKind::WorkStealing.build(&[1e-3; 4]).name(), "stealing");
+    }
+}

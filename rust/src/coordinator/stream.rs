@@ -90,6 +90,7 @@ mod tests {
             real_sleep: true,
             time_scale: 1.0,
             symbol_width: 1,
+            ..ClusterConfig::default()
         };
         let coord = Coordinator::new(
             cluster,

@@ -1,14 +1,24 @@
-//! Worker job execution: computes a shard's encoded-row × X panel
-//! products blockwise, paced by the injected delay model, until finished,
-//! cancelled or failed. Worker threads are **persistent** (see
-//! [`pool`](super::pool)): they hold their shard resident across jobs and
+//! Worker job execution: pulls row-range [`Task`](super::scheduler::Task)s
+//! from the job's [`TaskSource`] and computes each range's encoded-row × X panel
+//! products, paced by the injected delay model, until the source runs
+//! dry, the job is cancelled, or the worker's injected failure fires.
+//! Worker threads are **persistent** (see [`pool`](super::pool)): they
+//! hold the whole fleet's shards resident (`Arc`-shared) across jobs and
 //! run one [`JobOrder`] at a time off their queue.
 //!
-//! The worker keeps a **virtual clock** `v = X_i + τ·rows_done` (the
-//! paper's eq. 5) and sleeps so that wall-clock time tracks
+//! Under the [`StaticScheduler`](super::scheduler::StaticScheduler) a
+//! worker only ever receives tasks on its own shard — exactly the old
+//! one-shard-per-worker behaviour. Under work stealing it may compute
+//! tail ranges of a straggler's shard; the resulting [`ChunkMsg`] carries
+//! both the computing `worker` (for load accounting) and the `shard`
+//! whose row space the products decode in.
+//!
+//! The worker keeps a **virtual clock** `v = X_i + τ_i·rows_done` (the
+//! paper's eq. 5, with a *per-worker* τ_i so heterogeneous fleets slow
+//! down for real) and sleeps so that wall-clock time tracks
 //! `v · time_scale` — unless the real chunk computation (PJRT/native) is
 //! slower, in which case real time wins, exactly like a real overloaded
-//! node. Cancellation is checked between sleep slices and between chunks.
+//! node. Cancellation is checked between sleep slices and between tasks.
 //!
 //! **Batching**: a job carries `batch ≥ 1` query vectors; each encoded row
 //! produces `batch` products via the block matmat kernel. τ stays a
@@ -23,22 +33,21 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::messages::{ChunkMsg, WorkerEvent};
+use super::scheduler::TaskSource;
 use super::straggler::WorkerPlan;
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
 
-/// One queued multiply job, as seen by a single pool worker.
-pub struct JobOrder {
+/// The per-job state shared by the whole fleet (one allocation per job,
+/// `Arc`-cloned into every worker's [`JobOrder`]).
+pub struct JobShared {
     /// Broadcast query block `X`: `n × batch` row-major (row `c` holds
     /// feature `c` of every vector in the batch).
     pub x: Arc<Vec<f32>>,
     /// Number of query vectors in `x`.
     pub batch: usize,
-    pub plan: WorkerPlan,
-    /// Seconds of virtual time per encoded-row product (τ).
-    pub tau: f64,
-    /// Rows per result message (≥ 1, aligned to the symbol width).
-    pub block_rows: usize,
+    /// Where workers pull their row-range tasks from.
+    pub tasks: Arc<dyn TaskSource>,
     /// wall seconds = virtual seconds × time_scale (0 ⇒ no pacing).
     pub time_scale: f64,
     /// Job wall-clock origin, shared across workers so virtual clocks are
@@ -46,8 +55,17 @@ pub struct JobOrder {
     /// the worker's queue counts against the initial delay — arrivals
     /// queue exactly like the paper's §5 streaming setting.
     pub start: Instant,
-    pub tx: Sender<WorkerEvent>,
     pub cancel: Arc<AtomicBool>,
+}
+
+/// One queued multiply job, as seen by a single pool worker.
+pub struct JobOrder {
+    pub shared: Arc<JobShared>,
+    pub plan: WorkerPlan,
+    /// Seconds of virtual time per encoded-row product for *this* worker
+    /// (τ_i = τ / speed_i; heterogeneous fleets differ per worker).
+    pub tau: f64,
+    pub tx: Sender<WorkerEvent>,
 }
 
 /// Sleep until `deadline`, slicing so cancellation is honoured within
@@ -67,53 +85,54 @@ fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) -> bool {
     }
 }
 
-/// Run one job to completion on this worker's resident shard.
-pub fn run_job(worker: usize, shard: &Matrix, engine: &Engine, job: JobOrder) {
+/// Run one job to completion on this worker: pull tasks, compute, pace,
+/// report. `shards` is the whole fleet's resident shard list (stealing
+/// needs access to other workers' rows; static tasks only ever index
+/// `shards[worker]`).
+pub fn run_job(worker: usize, shards: &[Arc<Matrix>], engine: &Engine, job: JobOrder) {
     let JobOrder {
-        x,
-        batch,
+        shared,
         plan,
         tau,
-        block_rows,
-        time_scale,
-        start,
         tx,
-        cancel,
     } = job;
-    let rows = shard.rows();
-    let cols = shard.cols();
-    debug_assert_eq!(x.len(), cols * batch, "X shape mismatch");
+    let s = &*shared;
     let mut rows_done = 0usize;
     let mut v = plan.initial_delay;
     let mut failed = false;
 
     // initial delay X_i
-    let alive = time_scale <= 0.0 || sleep_until(start, v * time_scale, &cancel);
+    let alive = s.time_scale <= 0.0 || sleep_until(s.start, v * s.time_scale, &s.cancel);
 
     if alive {
-        let mut r = 0usize;
-        while r < rows {
-            if cancel.load(Ordering::Relaxed) {
+        loop {
+            if s.cancel.load(Ordering::Relaxed) {
                 break;
             }
-            // injected failure: die silently mid-shard
-            if let Some(fail_after) = plan.fail_after {
-                if rows_done >= fail_after {
-                    failed = true;
-                    break;
-                }
+            // injected failure: die silently between tasks
+            if plan.fail_after.is_some_and(|f| rows_done >= f) {
+                failed = true;
+                break;
             }
-            let mut len = block_rows.min(rows - r);
+            let Some(task) = s.tasks.next_task(worker) else {
+                break; // no work left anywhere this worker may take
+            };
+            let task_t0 = Instant::now();
+            let mut len = task.len;
             if let Some(fail_after) = plan.fail_after {
-                // fail exactly at the boundary so rows_done == fail_after
-                len = len.min(fail_after - rows_done.min(fail_after));
+                // die exactly at the boundary so rows_done == fail_after;
+                // the rest of the task is lost (silent death)
+                len = len.min(fail_after - rows_done);
                 if len == 0 {
                     failed = true;
                     break;
                 }
             }
-            let block = shard.row_block(r, len);
-            let products = match engine.matmat_chunk(block, len, cols, &x, batch) {
+            let shard = &shards[task.shard];
+            let cols = shard.cols();
+            debug_assert_eq!(s.x.len(), cols * s.batch, "X shape mismatch");
+            let block = shard.row_block(task.start, len);
+            let products = match engine.matmat_chunk(block, len, cols, &s.x, s.batch) {
                 Ok(p) => p,
                 Err(e) => {
                     crate::warn_!("worker {worker}: engine error: {e}; dying");
@@ -122,20 +141,38 @@ pub fn run_job(worker: usize, shard: &Matrix, engine: &Engine, job: JobOrder) {
                 }
             };
             rows_done += len;
-            v = plan.initial_delay + tau * rows_done as f64;
+            v += tau * len as f64;
             // pace to the virtual clock (cancellable)
-            if time_scale > 0.0 && !sleep_until(start, v * time_scale, &cancel) {
-                // cancelled mid-block: the block was computed; report it as
-                // done work but don't bother sending the products
+            if s.time_scale > 0.0 && !sleep_until(s.start, v * s.time_scale, &s.cancel) {
+                // cancelled mid-task: the rows were computed; report them
+                // as done work but don't bother sending the products
                 break;
             }
+            // feed the speed tracker what this task actually cost. With
+            // pacing on, wall time ÷ time_scale is the achieved virtual
+            // per-row rate: normally ≈ τ_i, but larger when the real
+            // kernel outruns the virtual clock (an overloaded node) — so
+            // the work-stealing τ̂ tracks observed behaviour, not just
+            // the configured speeds. Without pacing there is no wall ↔
+            // virtual mapping, so fall back to the modelled cost.
+            let virt_elapsed = if s.time_scale > 0.0 {
+                (task_t0.elapsed().as_secs_f64() / s.time_scale).max(tau * len as f64)
+            } else {
+                tau * len as f64
+            };
+            s.tasks.observe(worker, len, virt_elapsed);
             let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
                 worker,
-                start_row: r,
+                shard: task.shard,
+                start_row: task.start,
                 products,
                 virtual_time: v,
             }));
-            r += len;
+            if len < task.len {
+                // failure clipped the task; its tail dies with the worker
+                failed = true;
+                break;
+            }
         }
     }
 
@@ -150,6 +187,7 @@ pub fn run_job(worker: usize, shard: &Matrix, engine: &Engine, job: JobOrder) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::{Scheduler, StaticScheduler, WorkStealingScheduler};
     use crate::coordinator::straggler::WorkerPlan;
     use std::sync::mpsc::channel;
 
@@ -160,22 +198,25 @@ mod tests {
         }
     }
 
-    fn spawn(shard: Arc<Matrix>, job: JobOrder) {
-        std::thread::spawn(move || run_job(0, &shard, &Engine::Native, job));
-    }
-
-    fn base_job(batch: usize, tx: Sender<WorkerEvent>, cancel: Arc<AtomicBool>) -> JobOrder {
-        JobOrder {
+    fn shared_for(
+        rows: &[usize],
+        grain: usize,
+        batch: usize,
+        cancel: Arc<AtomicBool>,
+    ) -> Arc<JobShared> {
+        let grains = vec![grain; rows.len()];
+        Arc::new(JobShared {
             x: Arc::new(vec![1.0; 4 * batch]),
             batch,
-            plan: plan(0.0),
-            tau: 1e-6,
-            block_rows: 3,
+            tasks: StaticScheduler.plan(rows, &grains),
             time_scale: 0.0,
             start: Instant::now(),
-            tx,
             cancel,
-        }
+        })
+    }
+
+    fn spawn(shards: Vec<Arc<Matrix>>, w: usize, job: JobOrder) {
+        std::thread::spawn(move || run_job(w, &shards, &Engine::Native, job));
     }
 
     #[test]
@@ -183,14 +224,21 @@ mod tests {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let shard = Arc::new(Matrix::random(10, 4, 1));
-        let job = base_job(1, tx, cancel);
-        let x = Arc::clone(&job.x);
-        spawn(Arc::clone(&shard), job);
+        let shared = shared_for(&[10], 3, 1, cancel);
+        let x = Arc::clone(&shared.x);
+        let job = JobOrder {
+            shared,
+            plan: plan(0.0),
+            tau: 1e-6,
+            tx,
+        };
+        spawn(vec![Arc::clone(&shard)], 0, job);
         let mut got = vec![f32::NAN; 10];
         let mut done = false;
         while let Ok(ev) = rx.recv() {
             match ev {
                 WorkerEvent::Chunk(c) => {
+                    assert_eq!(c.shard, 0);
                     for (i, p) in c.products.iter().enumerate() {
                         got[c.start_row + i] = *p;
                     }
@@ -219,11 +267,24 @@ mod tests {
         let cancel = Arc::new(AtomicBool::new(false));
         let shard = Arc::new(Matrix::random(7, 4, 2));
         let batch = 3usize;
-        let mut job = base_job(batch, tx, cancel);
+        let grains = vec![3usize];
         // X: 4 × 3 row-major with distinct columns
         let x: Vec<f32> = (0..4 * batch).map(|i| (i % 5) as f32 - 2.0).collect();
-        job.x = Arc::new(x.clone());
-        spawn(Arc::clone(&shard), job);
+        let shared = Arc::new(JobShared {
+            x: Arc::new(x.clone()),
+            batch,
+            tasks: StaticScheduler.plan(&[7], &grains),
+            time_scale: 0.0,
+            start: Instant::now(),
+            cancel,
+        });
+        let job = JobOrder {
+            shared,
+            plan: plan(0.0),
+            tau: 1e-6,
+            tx,
+        };
+        spawn(vec![Arc::clone(&shard)], 0, job);
         let mut got = vec![f32::NAN; 7 * batch];
         loop {
             match rx.recv().unwrap() {
@@ -256,12 +317,17 @@ mod tests {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let shard = Arc::new(Matrix::random(10, 4, 1));
-        let mut job = base_job(1, tx, cancel);
-        job.plan = WorkerPlan {
-            initial_delay: 0.0,
-            fail_after: Some(4),
+        let shared = shared_for(&[10], 3, 1, cancel);
+        let job = JobOrder {
+            shared,
+            plan: WorkerPlan {
+                initial_delay: 0.0,
+                fail_after: Some(4),
+            },
+            tau: 1e-6,
+            tx,
         };
-        spawn(shard, job);
+        spawn(vec![shard], 0, job);
         let mut rows_received = 0;
         loop {
             match rx.recv().unwrap() {
@@ -283,10 +349,22 @@ mod tests {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let shard = Arc::new(Matrix::random(1000, 4, 1));
-        let mut job = base_job(1, tx, Arc::clone(&cancel));
-        job.plan = plan(100.0); // would sleep 100 virtual seconds
-        job.time_scale = 1.0;
-        spawn(shard, job);
+        let grains = vec![3usize];
+        let shared = Arc::new(JobShared {
+            x: Arc::new(vec![1.0; 4]),
+            batch: 1,
+            tasks: StaticScheduler.plan(&[1000], &grains),
+            time_scale: 1.0,
+            start: Instant::now(),
+            cancel: Arc::clone(&cancel),
+        });
+        let job = JobOrder {
+            shared,
+            plan: plan(100.0), // would sleep 100 virtual seconds
+            tau: 1e-6,
+            tx,
+        };
+        spawn(vec![shard], 0, job);
         std::thread::sleep(Duration::from_millis(30));
         cancel.store(true, Ordering::Relaxed);
         let t0 = Instant::now();
@@ -300,5 +378,64 @@ mod tests {
             }
         }
         assert!(t0.elapsed() < Duration::from_secs(1), "cancel must be fast");
+    }
+
+    /// Two workers over a stealing board: the idle-owner shard gets
+    /// computed by the fast worker, with correct shard attribution.
+    #[test]
+    fn stolen_tasks_attribute_products_to_the_victim_shard() {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let shards = vec![
+            Arc::new(Matrix::random(6, 4, 3)),
+            Arc::new(Matrix::random(8, 4, 4)),
+        ];
+        let sched = WorkStealingScheduler::new(&[1e-6; 2]);
+        let shared = Arc::new(JobShared {
+            x: Arc::new(vec![1.0; 4]),
+            batch: 1,
+            tasks: sched.plan(&[6, 8], &[2, 2]),
+            time_scale: 0.0,
+            start: Instant::now(),
+            cancel,
+        });
+        // only worker 0 runs (worker 1 is an extreme straggler that never
+        // starts); it must drain both shards
+        let job = JobOrder {
+            shared: Arc::clone(&shared),
+            plan: plan(0.0),
+            tau: 1e-6,
+            tx,
+        };
+        spawn(shards.clone(), 0, job);
+        let mut got: Vec<Vec<f32>> = vec![vec![f32::NAN; 6], vec![f32::NAN; 8]];
+        loop {
+            match rx.recv().unwrap() {
+                WorkerEvent::Chunk(c) => {
+                    assert_eq!(c.worker, 0, "only worker 0 computes");
+                    for (i, p) in c.products.iter().enumerate() {
+                        got[c.shard][c.start_row + i] = *p;
+                    }
+                }
+                WorkerEvent::Done {
+                    worker, rows_done, ..
+                } => {
+                    assert_eq!(worker, 0);
+                    assert_eq!(rows_done, 14);
+                    break;
+                }
+            }
+        }
+        for (s, shard) in shards.iter().enumerate() {
+            let want = shard.matvec(&shared.x);
+            for r in 0..shard.rows() {
+                assert!(
+                    (got[s][r] - want[r]).abs() < 1e-4,
+                    "shard {s} row {r}: {} vs {}",
+                    got[s][r],
+                    want[r]
+                );
+            }
+        }
     }
 }

@@ -63,6 +63,7 @@ pub fn fig2(scale: f64, time_scale: f64, seed: u64) -> anyhow::Result<String> {
         real_sleep: true,
         time_scale,
         symbol_width: 1,
+        ..ClusterConfig::default()
     };
     let strategies = vec![
         Strategy::Uncoded,
@@ -221,6 +222,7 @@ pub fn fig8(env: Env, scale: f64, trials: usize, time_scale: f64, seed: u64) -> 
         real_sleep: true,
         time_scale,
         symbol_width,
+        ..ClusterConfig::default()
     };
     let mut csv = Csv::new(
         results_dir().join(format!("fig8_{env_name}.csv")),
@@ -300,6 +302,7 @@ pub fn fig12(scale: f64, trials: usize, time_scale: f64, seed: u64) -> anyhow::R
         real_sleep: true,
         time_scale,
         symbol_width: 1,
+        ..ClusterConfig::default()
     };
     let strategies = vec![
         Strategy::Uncoded,

@@ -1,0 +1,316 @@
+//! Heterogeneous-fleet load-balance comparison — the empirical version of
+//! the paper's central claim (Theorems 2–3): rateless coding's latency
+//! approaches **ideal load balancing** with near-zero redundant work,
+//! while fixed-rate baselines pay for straggler tolerance with discarded
+//! computation.
+//!
+//! The ideal-LB baseline is *live*, not analytic: the work-stealing
+//! scheduler run over the uncoded partition computes every row exactly
+//! once and keeps the whole fleet busy until the job is done — the §2.2
+//! ideal made executable. Against it we run LT under both schedulers and
+//! the MDS / replication / uncoded baselines under static dispatch, all
+//! on the same fleet with one deliberately slow worker (a persistent
+//! straggler, modelled as a per-worker speed multiplier rather than a
+//! random initial delay so the comparison is reproducible).
+//!
+//! Shared by the `rateless loadbalance` subcommand and
+//! `benches/loadbalance.rs` (which persists `BENCH_loadbalance.json`).
+
+use crate::coding::lt::LtParams;
+use crate::config::ClusterConfig;
+use crate::coordinator::scheduler::SchedulerKind;
+use crate::coordinator::{Coordinator, JobOptions, Strategy};
+use crate::matrix::Matrix;
+use crate::runtime::Engine;
+use crate::util::dist::DelayDist;
+use crate::util::json::Json;
+use crate::util::rng::derive_seed;
+use crate::util::stats::OnlineStats;
+
+/// Parameters of one comparison run.
+#[derive(Clone, Debug)]
+pub struct LoadBalanceSpec {
+    /// Output rows m.
+    pub m: usize,
+    /// Matrix columns n (small: the experiment is pacing-bound).
+    pub n: usize,
+    /// Fleet size p.
+    pub p: usize,
+    /// How much slower the slow worker is (2.0 = half speed). The slow
+    /// worker is always the last one.
+    pub slowdown: f64,
+    /// Virtual seconds per row-product on a full-speed worker.
+    pub tau: f64,
+    /// Wall seconds per virtual second.
+    pub time_scale: f64,
+    /// Task/message granularity as a fraction of a shard.
+    pub block_fraction: f64,
+    /// LT overhead factor α.
+    pub alpha: f64,
+    /// Trials per strategy (means reported).
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadBalanceSpec {
+    fn default() -> Self {
+        Self {
+            m: 8192,
+            n: 32,
+            p: 4,
+            slowdown: 2.0,
+            tau: 2e-5,
+            time_scale: 1.0,
+            block_fraction: 0.01,
+            alpha: 2.0,
+            trials: 3,
+            seed: 42,
+        }
+    }
+}
+
+/// Mean metrics of one (strategy, scheduler) case.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Case label, e.g. `"ideal-lb"`, `"lt-steal"`, `"mds3-static"`.
+    pub name: String,
+    pub strategy: String,
+    pub scheduler: &'static str,
+    /// Mean latency T (virtual seconds).
+    pub latency: f64,
+    /// Mean total computations C (rows).
+    pub computations: f64,
+    /// Mean redundant rows C − m.
+    pub redundant_rows: f64,
+    /// Mean redundant rows / m.
+    pub redundant_frac: f64,
+    /// Mean rows computed through stolen tasks.
+    pub stolen_rows: f64,
+}
+
+/// Result of [`run`]: one outcome per case, ideal-LB first.
+#[derive(Clone, Debug)]
+pub struct LoadBalanceReport {
+    pub spec: LoadBalanceSpec,
+    pub outcomes: Vec<Outcome>,
+}
+
+impl LoadBalanceReport {
+    /// Look up a case by label.
+    pub fn outcome(&self, name: &str) -> Option<&Outcome> {
+        self.outcomes.iter().find(|o| o.name == name)
+    }
+
+    /// Latency of a case relative to the ideal-LB baseline.
+    pub fn vs_ideal(&self, name: &str) -> Option<f64> {
+        let ideal = self.outcome("ideal-lb")?.latency;
+        Some(self.outcome(name)?.latency / ideal)
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let s = &self.spec;
+        let mut out = format!(
+            "load balance [m={} p={} slow=w{}×{} τ={} α={}, {} trials]\n",
+            s.m,
+            s.p,
+            s.p - 1,
+            s.slowdown,
+            s.tau,
+            s.alpha,
+            s.trials
+        );
+        out.push_str(&format!(
+            "{:<16} {:>9} {:>10} {:>10} {:>10} {:>9} {:>9}\n",
+            "case", "sched", "T (s)", "vs ideal", "C (rows)", "redund", "stolen"
+        ));
+        for o in &self.outcomes {
+            let ratio = self.vs_ideal(&o.name).unwrap_or(f64::NAN);
+            out.push_str(&format!(
+                "{:<16} {:>9} {:>10.4} {:>9.2}x {:>10.0} {:>8.1}% {:>9.0}\n",
+                o.name,
+                o.scheduler,
+                o.latency,
+                ratio,
+                o.computations,
+                o.redundant_frac * 100.0,
+                o.stolen_rows
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable form (`BENCH_loadbalance.json`).
+    pub fn to_json(&self) -> Json {
+        let s = &self.spec;
+        Json::obj(vec![
+            ("bench", Json::str("loadbalance")),
+            ("m", Json::Int(s.m as i64)),
+            ("n", Json::Int(s.n as i64)),
+            ("p", Json::Int(s.p as i64)),
+            ("slowdown", Json::Num(s.slowdown)),
+            ("tau", Json::Num(s.tau)),
+            ("alpha", Json::Num(s.alpha)),
+            ("trials", Json::Int(s.trials as i64)),
+            (
+                "cases",
+                Json::Arr(
+                    self.outcomes
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                ("name", Json::str(o.name.clone())),
+                                ("strategy", Json::str(o.strategy.clone())),
+                                ("scheduler", Json::str(o.scheduler)),
+                                ("latency", Json::Num(o.latency)),
+                                (
+                                    "vs_ideal",
+                                    Json::Num(self.vs_ideal(&o.name).unwrap_or(f64::NAN)),
+                                ),
+                                ("computations", Json::Num(o.computations)),
+                                ("redundant_rows", Json::Num(o.redundant_rows)),
+                                ("redundant_frac", Json::Num(o.redundant_frac)),
+                                ("stolen_rows", Json::Num(o.stolen_rows)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the comparison: ideal-LB (uncoded + stealing), LT under both
+/// schedulers, and the static fixed-rate baselines, every case on the
+/// same heterogeneous fleet and verified against the native product.
+pub fn run(spec: &LoadBalanceSpec) -> anyhow::Result<LoadBalanceReport> {
+    anyhow::ensure!(spec.p >= 2, "need at least two workers");
+    anyhow::ensure!(spec.slowdown >= 1.0, "slowdown must be >= 1");
+    anyhow::ensure!(spec.trials >= 1, "need at least one trial");
+    let a = Matrix::random_ints(spec.m, spec.n, 3, derive_seed(spec.seed, 1));
+    let mut speeds = vec![1.0; spec.p];
+    speeds[spec.p - 1] = 1.0 / spec.slowdown;
+    let base = ClusterConfig {
+        workers: spec.p,
+        // persistent speed heterogeneity only: keeps the comparison
+        // deterministic up to thread scheduling jitter
+        delay: DelayDist::None,
+        tau: spec.tau,
+        block_fraction: spec.block_fraction,
+        seed: spec.seed,
+        real_sleep: true,
+        time_scale: spec.time_scale,
+        symbol_width: 1,
+        speeds,
+        scheduler: SchedulerKind::Static,
+    };
+    let lt = || Strategy::Lt(LtParams::with_alpha(spec.alpha));
+    let k = spec.p - 1;
+    let mut cases: Vec<(String, Strategy, SchedulerKind)> = vec![
+        ("ideal-lb".into(), Strategy::Uncoded, SchedulerKind::WorkStealing),
+        ("lt-steal".into(), lt(), SchedulerKind::WorkStealing),
+        ("lt-static".into(), lt(), SchedulerKind::Static),
+        (format!("mds{k}-static"), Strategy::Mds { k }, SchedulerKind::Static),
+        ("uncoded-static".into(), Strategy::Uncoded, SchedulerKind::Static),
+    ];
+    if spec.p % 2 == 0 {
+        cases.push((
+            "rep2-static".into(),
+            Strategy::Replication { r: 2 },
+            SchedulerKind::Static,
+        ));
+    }
+
+    let mut outcomes = Vec::with_capacity(cases.len());
+    for (name, strategy, kind) in cases {
+        let mut cluster = base.clone();
+        cluster.scheduler = kind;
+        let strategy_name = strategy.name();
+        let coord = Coordinator::new(cluster, strategy, Engine::Native, &a)
+            .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        let mut lat = OnlineStats::new();
+        let mut comp = OnlineStats::new();
+        let mut redundant = OnlineStats::new();
+        let mut frac = OnlineStats::new();
+        let mut stolen = OnlineStats::new();
+        for t in 0..spec.trials {
+            let x = Matrix::random_int_vector(spec.n, 1, derive_seed(spec.seed, 100 + t as u64));
+            let opts = JobOptions {
+                seed: Some(derive_seed(spec.seed, 200 + t as u64)),
+                profile: None,
+            };
+            let res = coord
+                .multiply_opts(&x, &opts)
+                .map_err(|e| anyhow::anyhow!("{name} trial {t}: {e}"))?;
+            // integer workload ⇒ the decoded product must be (near-)exact
+            let want = a.matvec(&x);
+            let err = Matrix::max_abs_diff(&res.b, &want);
+            let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+            anyhow::ensure!(
+                err < 5e-2 * scale,
+                "{name} trial {t}: wrong product (max err {err})"
+            );
+            lat.push(res.latency);
+            comp.push(res.computations as f64);
+            redundant.push(res.redundant_rows as f64);
+            frac.push(res.redundant_frac());
+            stolen.push(res.stolen_rows as f64);
+        }
+        outcomes.push(Outcome {
+            name,
+            strategy: strategy_name,
+            scheduler: kind.name(),
+            latency: lat.mean(),
+            computations: comp.mean(),
+            redundant_rows: redundant.mean(),
+            redundant_frac: frac.mean(),
+            stolen_rows: stolen.mean(),
+        });
+    }
+    Ok(LoadBalanceReport {
+        spec: spec.clone(),
+        outcomes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_runs_at_small_scale() {
+        // τ·grain ≈ 0.6 ms wall per block: far above OS sleep jitter, so
+        // the 2×-slow worker is reliably slower and stealing engages
+        let spec = LoadBalanceSpec {
+            m: 512,
+            n: 8,
+            trials: 1,
+            time_scale: 1.0,
+            tau: 1e-4,
+            block_fraction: 0.05,
+            alpha: 3.0,
+            ..LoadBalanceSpec::default()
+        };
+        let report = run(&spec).expect("loadbalance comparison");
+        assert_eq!(report.outcomes.len(), 6);
+        let ideal = report.outcome("ideal-lb").expect("ideal-lb present");
+        // ideal LB never performs redundant work
+        assert_eq!(ideal.redundant_rows, 0.0);
+        assert!(ideal.stolen_rows > 0.0, "stealing must engage");
+        // every case reports a positive latency and C >= m
+        for o in &report.outcomes {
+            assert!(o.latency > 0.0, "{}", o.name);
+            assert!(o.computations >= spec.m as f64, "{}", o.name);
+        }
+        // static dispatch never steals
+        assert_eq!(report.outcome("lt-static").unwrap().stolen_rows, 0.0);
+        assert_eq!(report.outcome("uncoded-static").unwrap().stolen_rows, 0.0);
+        // the rendering and JSON forms mention every case
+        let text = report.render();
+        let json = report.to_json().render();
+        for o in &report.outcomes {
+            assert!(text.contains(&o.name), "{} missing from render", o.name);
+            assert!(json.contains(&o.name), "{} missing from json", o.name);
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 mod analytic;
 mod cluster;
+pub mod loadbalance;
 
 pub use analytic::{fig1, fig7, fig9, fig11, table1, theory};
 pub use cluster::{fig12, fig2, fig8, Env};

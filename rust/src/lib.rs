@@ -46,6 +46,20 @@
 //! concurrent clients queue jobs FCFS — the paper's §5 streaming setting
 //! as a serving system. `cargo bench --bench throughput` and the
 //! `rateless throughput` subcommand measure the batching win.
+//!
+//! ## Schedulers and heterogeneous fleets
+//!
+//! Dispatch is a seam ([`coordinator::scheduler`]): the classic *static*
+//! assignment (worker `w` grinds through shard `w`) or a *work-stealing*
+//! scheduler in which fast workers steal tail row-ranges from the
+//! stragglers, guided by an EWMA tracker of each worker's observed
+//! per-row time. Configured worker speeds (`cluster.speeds`) both slow
+//! workers down for real and size the rateless shards proportionally at
+//! encode time ([`coding::ShardSizing`]). Work stealing over the uncoded
+//! partition is the paper's §2.2 **ideal load balancing** baseline as a
+//! live system; `rateless loadbalance` and `cargo bench --bench
+//! loadbalance` compare LT / MDS / replication / uncoded against it,
+//! reporting latency and redundant-row counts.
 
 pub mod cli;
 pub mod coding;
@@ -63,8 +77,9 @@ pub mod prelude {
     pub use crate::coding::mds::MdsCode;
     pub use crate::coding::peeling::PeelingDecoder;
     pub use crate::coding::soliton::RobustSoliton;
-    pub use crate::coding::{ErasureCode, ErasureDecoder, Fountain};
+    pub use crate::coding::{ErasureCode, ErasureDecoder, Fountain, ShardSizing};
     pub use crate::config::{ClusterConfig, WorkloadConfig};
+    pub use crate::coordinator::scheduler::SchedulerKind;
     pub use crate::coordinator::straggler::StragglerProfile;
     pub use crate::coordinator::{Coordinator, JobResult, Strategy};
     pub use crate::matrix::Matrix;

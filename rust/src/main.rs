@@ -4,7 +4,11 @@
 //! rateless quickstart                          end-to-end smoke on a small matrix
 //! rateless run --config configs/ec2.toml      config-driven coordinator run
 //! rateless figures --fig fig1|fig7|fig9|fig11|table1|theory|all
-//! rateless loadbalance [--scale 1.0]          Fig 2 per-worker bars
+//! rateless loadbalance [--slowdown 2 --trials 3 --json out.json]
+//!                                             heterogeneous-fleet comparison:
+//!                                             LT/MDS/uncoded vs the live
+//!                                             ideal-LB (work-stealing) baseline
+//! rateless loadbalance --fig2 [--scale 1.0]   Fig 2 per-worker bars
 //! rateless experiment --env parallel|ec2|lambda [--trials N]   Fig 8
 //! rateless failures [--trials N]              Fig 12
 //! rateless stream --lambda 0.3 --jobs 100     §5 queueing on the live coordinator
@@ -65,9 +69,32 @@ fn run(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("loadbalance") => {
-            let scale = args.f64("scale", 1.0);
-            let time_scale = args.f64("time-scale", 1.0);
-            print!("{}", figures::fig2(scale, time_scale, seed)?);
+            if args.flag("fig2") {
+                // legacy behaviour: the paper's Fig. 2 per-worker bars
+                let scale = args.f64("scale", 1.0);
+                let time_scale = args.f64("time-scale", 1.0);
+                print!("{}", figures::fig2(scale, time_scale, seed)?);
+                return Ok(());
+            }
+            let spec = figures::loadbalance::LoadBalanceSpec {
+                m: args.usize("m", 8192),
+                n: args.usize("n", 32),
+                p: args.usize("p", 4),
+                slowdown: args.f64("slowdown", 2.0),
+                tau: args.f64("tau", 2e-5),
+                time_scale: args.f64("time-scale", 1.0),
+                block_fraction: args.f64("block-fraction", 0.01),
+                alpha: args.f64("alpha", 2.0),
+                trials: args.usize("trials", 3),
+                seed,
+            };
+            let report = figures::loadbalance::run(&spec)?;
+            print!("{}", report.render());
+            if let Some(path) = args.opt_str("json") {
+                std::fs::write(&path, report.to_json().render())
+                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                println!("wrote {path}");
+            }
             Ok(())
         }
         Some("experiment") => {

@@ -1,0 +1,42 @@
+//! Shared plumbing for the self-checking bench binaries
+//! (`benches/throughput.rs`, `benches/loadbalance.rs`): env-var knobs and
+//! the `BENCH_*.json` output convention, kept in one place so the bench
+//! outputs cannot drift apart as more benches are added.
+
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+/// Parse an env-var knob, falling back to `default` when the variable is
+/// unset or unparsable.
+pub fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Persist a bench's machine-readable result as
+/// `$RATELESS_BENCH_DIR/<file_name>` (default: the current directory, the
+/// workspace root under `cargo bench`). Returns the path written.
+pub fn write_json(file_name: &str, doc: &Json) -> std::io::Result<PathBuf> {
+    let dir = std::env::var("RATELESS_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let path = Path::new(&dir).join(file_name);
+    std::fs::write(&path, doc.render())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_or_parses_and_defaults() {
+        std::env::set_var("RATELESS_TEST_ENV_OR", "17");
+        assert_eq!(env_or("RATELESS_TEST_ENV_OR", 3usize), 17);
+        std::env::set_var("RATELESS_TEST_ENV_OR", "not a number");
+        assert_eq!(env_or("RATELESS_TEST_ENV_OR", 3usize), 3);
+        std::env::remove_var("RATELESS_TEST_ENV_OR");
+        assert_eq!(env_or("RATELESS_TEST_ENV_OR", 2.5f64), 2.5);
+    }
+}

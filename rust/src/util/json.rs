@@ -1,0 +1,122 @@
+//! Minimal JSON emission for machine-readable bench output.
+//!
+//! No `serde`/`serde_json` offline (DESIGN.md §2), and the benches only
+//! need to *write* small documents — so this is a tiny value tree with a
+//! renderer, not a parser.
+
+/// A JSON value.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    /// Rendered with enough precision to round-trip; non-finite values
+    /// render as `null` (JSON has no NaN/Inf).
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => out.push_str(&i.to_string()),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&x.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_documents() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("loadbalance")),
+            ("m", Json::Int(8192)),
+            ("frac", Json::Num(0.03125)),
+            ("bad", Json::Num(f64::NAN)),
+            (
+                "rows",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("ideal-lb")),
+                    ("ok", Json::Bool(true)),
+                ])]),
+            ),
+        ]);
+        assert_eq!(
+            doc.render(),
+            r#"{"bench":"loadbalance","m":8192,"frac":0.03125,"bad":null,"rows":[{"name":"ideal-lb","ok":true}]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(
+            Json::str("a\"b\\c\nd\u{1}").render(),
+            r#""a\"b\\c\nd\u0001""#
+        );
+    }
+}

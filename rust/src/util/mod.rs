@@ -6,7 +6,9 @@
 //! `tokio`, `clap`) are unavailable — each capability this crate needs is
 //! implemented here from scratch (see DESIGN.md §2, rows 15–19).
 
+pub mod bench;
 pub mod dist;
+pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;

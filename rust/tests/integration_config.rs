@@ -33,6 +33,19 @@ fn ec2_config_values() {
 }
 
 #[test]
+fn hetero_config_speeds_and_scheduler() {
+    let doc = load("hetero.toml");
+    let cluster = ClusterConfig::from_doc(&doc);
+    assert_eq!(cluster.workers, 4);
+    assert_eq!(
+        cluster.scheduler,
+        rateless::coordinator::scheduler::SchedulerKind::WorkStealing
+    );
+    assert_eq!(cluster.worker_speeds(), vec![1.0, 1.0, 1.0, 0.5]);
+    assert_eq!(doc.str("strategy", "kind", ""), "lt");
+}
+
+#[test]
 fn lambda_config_block_width() {
     let doc = load("lambda.toml");
     let cluster = ClusterConfig::from_doc(&doc);

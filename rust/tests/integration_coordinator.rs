@@ -21,6 +21,7 @@ fn cluster(p: usize) -> ClusterConfig {
         real_sleep: true,
         time_scale: 1.0,
         symbol_width: 1,
+        ..ClusterConfig::default()
     }
 }
 

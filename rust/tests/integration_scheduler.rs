@@ -1,0 +1,175 @@
+//! Integration: the scheduler layer on heterogeneous fleets — the
+//! empirical side of the paper's load-balancing claim. A 4-worker fleet
+//! where the last worker is 3× slower (persistent speed heterogeneity,
+//! not a random delay draw, so the numbers are reproducible):
+//!
+//! * work-stealing LT decodes with ≤ 5% redundant rows (near-perfect
+//!   load balancing, paper Theorem 2/3),
+//! * static MDS burns the slow worker's partial block — its rows are
+//!   computed before T but discarded by the k-of-p decode,
+//! * the live ideal-LB baseline (uncoded + stealing) beats the static
+//!   uncoded run outright and performs zero redundant work.
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::scheduler::SchedulerKind;
+use rateless::coordinator::{Coordinator, Strategy};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::dist::DelayDist;
+
+// m is large on purpose: the LT overhead ε (= M′/m − 1) decays like
+// √m·ln²m/m, and the 5%-redundancy acceptance bound needs ε ≈ 2–3.5%,
+// which the default robust-soliton parameters reach around m = 32k
+// (see sim/decoding_curve.rs). Wall time stays ~1 s: the runs are
+// pacing-bound at τ = 20 µs/row across a 3⅓-speed fleet.
+const M: usize = 32_768;
+const N: usize = 16;
+const P: usize = 4;
+const SLOW: usize = P - 1;
+
+fn hetero_cluster(scheduler: SchedulerKind) -> ClusterConfig {
+    ClusterConfig {
+        workers: P,
+        delay: DelayDist::None,
+        tau: 2e-5,
+        block_fraction: 0.005,
+        seed: 1234,
+        real_sleep: true,
+        time_scale: 1.0,
+        symbol_width: 1,
+        speeds: vec![1.0, 1.0, 1.0, 1.0 / 3.0],
+        scheduler,
+    }
+}
+
+fn verify(b: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(b.len(), want.len(), "{tag}");
+    let err = Matrix::max_abs_diff(b, want);
+    let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+    assert!(err < 5e-2 * scale, "{tag}: max err {err}");
+}
+
+/// Work-stealing LT on the 3×-slow fleet: correct product, ≤ 5% of m
+/// redundant rows, and the slow worker carries the smallest load.
+#[test]
+fn work_stealing_lt_wastes_at_most_five_percent() {
+    let a = Matrix::random_ints(M, N, 3, 77);
+    let x = Matrix::random_int_vector(N, 1, 78);
+    let want = a.matvec(&x);
+    let coord = Coordinator::new(
+        hetero_cluster(SchedulerKind::WorkStealing),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )
+    .expect("coordinator");
+    let res = coord.multiply(&x).expect("lt multiply");
+    verify(&res.b, &want, "lt-steal");
+    assert!(
+        res.redundant_frac() <= 0.05,
+        "work-stealing LT must waste <= 5% of m: {} redundant rows of m = {M} ({:.2}%)",
+        res.redundant_rows,
+        res.redundant_frac() * 100.0
+    );
+    // speed-proportional sizing + stealing: the slow worker computes
+    // far fewer rows than any fast worker
+    let slow = res.per_worker[SLOW].rows_done;
+    for w in 0..SLOW {
+        assert!(
+            res.per_worker[w].rows_done > slow,
+            "worker {w} ({} rows) should out-compute the slow worker ({slow} rows)",
+            res.per_worker[w].rows_done
+        );
+    }
+}
+
+/// Static MDS on the same fleet: the slow worker computes a partial
+/// block before the fast k finish, and all of it is discarded — the
+/// redundant-computation gap the paper's §1 attributes to fixed-rate
+/// codes. LT's waste must be measurably smaller.
+#[test]
+fn static_mds_discards_the_slow_workers_partial_work() {
+    let a = Matrix::random_ints(M, N, 3, 79);
+    let x = Matrix::random_int_vector(N, 1, 80);
+    let want = a.matvec(&x);
+    let mds = Coordinator::new(
+        hetero_cluster(SchedulerKind::Static),
+        Strategy::Mds { k: P - 1 },
+        Engine::Native,
+        &a,
+    )
+    .expect("mds coordinator");
+    let res = mds.multiply(&x).expect("mds multiply");
+    verify(&res.b, &want, "mds-static");
+    let slow_rows = res.per_worker[SLOW].rows_done;
+    assert!(slow_rows > 0, "the slow worker must have computed a partial block");
+    // the k fast workers supply the decode; the slow worker's partial
+    // work shows up as redundant computation (~m/9 at 3× slowdown)
+    assert!(
+        res.redundant_frac() > 0.06,
+        "MDS should discard >6% of m on this fleet: got {:.2}%",
+        res.redundant_frac() * 100.0
+    );
+    assert!(
+        2 * res.redundant_rows >= slow_rows,
+        "the discarded work ({}) should cover most of the slow worker's {} rows",
+        res.redundant_rows,
+        slow_rows
+    );
+
+    // head-to-head: work-stealing LT wastes a fraction of what MDS does
+    let lt = Coordinator::new(
+        hetero_cluster(SchedulerKind::WorkStealing),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )
+    .expect("lt coordinator");
+    let lt_res = lt.multiply(&x).expect("lt multiply");
+    verify(&lt_res.b, &want, "lt-steal");
+    assert!(
+        lt_res.redundant_frac() + 0.01 < res.redundant_frac(),
+        "LT ({:.2}%) must waste measurably less than MDS ({:.2}%)",
+        lt_res.redundant_frac() * 100.0,
+        res.redundant_frac() * 100.0
+    );
+}
+
+/// The live ideal-LB baseline: uncoded + stealing computes every row
+/// exactly once and beats static uncoded dispatch on a skewed fleet.
+#[test]
+fn ideal_lb_baseline_beats_static_uncoded() {
+    let a = Matrix::random_ints(M / 4, N, 3, 81); // smaller: two full runs
+    let x = Matrix::random_int_vector(N, 1, 82);
+    let want = a.matvec(&x);
+    let ideal = Coordinator::new(
+        hetero_cluster(SchedulerKind::WorkStealing),
+        Strategy::Uncoded,
+        Engine::Native,
+        &a,
+    )
+    .expect("ideal coordinator");
+    let ideal_res = ideal.multiply(&x).expect("ideal multiply");
+    verify(&ideal_res.b, &want, "ideal-lb");
+    assert_eq!(ideal_res.redundant_rows, 0, "ideal LB wastes nothing");
+    assert!(ideal_res.stolen_rows > 0, "stealing must engage");
+
+    let stat = Coordinator::new(
+        hetero_cluster(SchedulerKind::Static),
+        Strategy::Uncoded,
+        Engine::Native,
+        &a,
+    )
+    .expect("static coordinator");
+    let stat_res = stat.multiply(&x).expect("static multiply");
+    verify(&stat_res.b, &want, "uncoded-static");
+    assert_eq!(stat_res.stolen_rows, 0);
+    // static: T = (m/p)·3τ; ideal: ≈ m·τ/(3 + 1/3) — over 2× faster
+    assert!(
+        ideal_res.latency < 0.8 * stat_res.latency,
+        "ideal LB ({:.4}s) must clearly beat static dispatch ({:.4}s)",
+        ideal_res.latency,
+        stat_res.latency
+    );
+}

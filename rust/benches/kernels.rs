@@ -1,0 +1,250 @@
+//! Bench: kernel-subsystem baseline — rows/s per compute path, scalar
+//! reference vs the runtime-dispatched SIMD kernel, plus serial vs
+//! parallel `encode_shards` on a worker pool.
+//!
+//! Emits `BENCH_kernels.json` (override the directory with
+//! `RATELESS_BENCH_DIR`) so the perf trajectory has an anchor: later PRs
+//! compare their `block_matmat` rows/s and encode speedup against this
+//! record.
+//!
+//! Self-checking: the dispatched `block_matmat` is expected to reach
+//! ≥ 2× the scalar reference rows/s when a SIMD path is available, and
+//! the 4-thread parallel encode ≥ 2× serial at m = 32768 — violations
+//! are printed as warnings (hard asserts under `RATELESS_BENCH_STRICT=1`,
+//! since shared CI runners can be noisy and a host without AVX2/NEON has
+//! parity by construction). Correctness is always asserted: SIMD output
+//! must match scalar bit-for-bit on integer data, parallel encode must be
+//! byte-identical to serial.
+//!
+//! Knobs: `RATELESS_BENCH_MM_ROWS/_MM_COLS/_MM_BATCH` (matmat shape),
+//! `RATELESS_BENCH_ENCODE_M/_ENCODE_N` (encode shape), `RATELESS_BENCH_REPS`.
+
+use rateless::coding::lt::{LtCode, LtParams};
+use rateless::coding::{ErasureCode, ShardSizing};
+use rateless::coordinator::pool::WorkerPool;
+use rateless::matrix::kernel::{self, Kernel, ScalarKernel};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::json::Json;
+use std::time::Instant;
+
+/// Best-of-`reps` wall seconds for one invocation of `f`.
+fn best_secs<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps: usize = env_or("RATELESS_BENCH_REPS", 5);
+    let rows: usize = env_or("RATELESS_BENCH_MM_ROWS", 2048);
+    let cols: usize = env_or("RATELESS_BENCH_MM_COLS", 512);
+    let batch: usize = env_or("RATELESS_BENCH_MM_BATCH", 32);
+    let strict: usize = env_or("RATELESS_BENCH_STRICT", 0);
+
+    let scalar: &dyn Kernel = &ScalarKernel;
+    let dispatched = kernel::active();
+    println!(
+        "kernels bench: dispatched={} arch={} matmat {rows}x{cols} batch={batch} (best of {reps})",
+        dispatched.name(),
+        std::env::consts::ARCH
+    );
+
+    // integer-valued data: SIMD results must match scalar bit-for-bit
+    let a = Matrix::random_ints(rows, cols, 3, 1);
+    let x = Matrix::random_ints(cols, batch, 3, 2);
+    let xv: Vec<f32> = x.data()[..cols].to_vec(); // cols × 1 for matvec/dot
+
+    let mut paths: Vec<Json> = Vec::new();
+    let matmat_speedup = {
+        let mut out_s = vec![0.0f32; rows * batch];
+        let mut out_d = vec![0.0f32; rows * batch];
+        let s_scalar = best_secs(reps, || {
+            scalar.block_matmat(a.data(), rows, cols, x.data(), batch, &mut out_s)
+        });
+        let s_disp = best_secs(reps, || {
+            dispatched.block_matmat(a.data(), rows, cols, x.data(), batch, &mut out_d)
+        });
+        assert_eq!(out_s, out_d, "dispatched matmat must match scalar exactly");
+        let speedup = s_scalar / s_disp;
+        let rps_scalar = rows as f64 / s_scalar;
+        let rps_disp = rows as f64 / s_disp;
+        println!(
+            "  block_matmat: scalar {rps_scalar:.3e} rows/s | {} {rps_disp:.3e} rows/s | speedup {speedup:.2}x",
+            dispatched.name()
+        );
+        paths.push(Json::obj(vec![
+            ("path", Json::str("block_matmat")),
+            ("kernel", Json::str(dispatched.name())),
+            ("rows_per_s_scalar", Json::Num(rps_scalar)),
+            ("rows_per_s_dispatched", Json::Num(rps_disp)),
+            ("speedup_vs_scalar", Json::Num(speedup)),
+        ]));
+        speedup
+    };
+    {
+        let mut out_s = vec![0.0f32; rows];
+        let mut out_d = vec![0.0f32; rows];
+        let s_scalar = best_secs(reps, || {
+            scalar.block_matvec(a.data(), rows, cols, &xv, &mut out_s)
+        });
+        let s_disp = best_secs(reps, || {
+            dispatched.block_matvec(a.data(), rows, cols, &xv, &mut out_d)
+        });
+        assert_eq!(out_s, out_d, "dispatched matvec must match scalar exactly");
+        println!(
+            "  block_matvec: scalar {:.3e} rows/s | {} {:.3e} rows/s | speedup {:.2}x",
+            rows as f64 / s_scalar,
+            dispatched.name(),
+            rows as f64 / s_disp,
+            s_scalar / s_disp
+        );
+        paths.push(Json::obj(vec![
+            ("path", Json::str("block_matvec")),
+            ("kernel", Json::str(dispatched.name())),
+            ("rows_per_s_scalar", Json::Num(rows as f64 / s_scalar)),
+            ("rows_per_s_dispatched", Json::Num(rows as f64 / s_disp)),
+            ("speedup_vs_scalar", Json::Num(s_scalar / s_disp)),
+        ]));
+    }
+    {
+        // decoder payload path: f64 axpy/sub over a payload-sized slab,
+        // repeated to get measurable times
+        let n = 1 << 16;
+        let iters = 64usize;
+        let src: Vec<f64> = (0..n).map(|i| (i % 97) as f64).collect();
+        let mut acc_s = vec![0.0f64; n];
+        let mut acc_d = vec![0.0f64; n];
+        let s_scalar = best_secs(reps, || {
+            for _ in 0..iters {
+                scalar.axpy_f64(&mut acc_s, 1.0, &src);
+                scalar.sub_assign_f64(&mut acc_s, &src);
+            }
+        });
+        let s_disp = best_secs(reps, || {
+            for _ in 0..iters {
+                dispatched.axpy_f64(&mut acc_d, 1.0, &src);
+                dispatched.sub_assign_f64(&mut acc_d, &src);
+            }
+        });
+        assert_eq!(acc_s, acc_d, "dispatched f64 ops must match scalar exactly");
+        let eps_scalar = (2 * n * iters) as f64 / s_scalar;
+        let eps_disp = (2 * n * iters) as f64 / s_disp;
+        println!(
+            "  axpy/sub f64: scalar {eps_scalar:.3e} elems/s | {} {eps_disp:.3e} elems/s | speedup {:.2}x",
+            dispatched.name(),
+            s_scalar / s_disp
+        );
+        paths.push(Json::obj(vec![
+            ("path", Json::str("payload_f64")),
+            ("kernel", Json::str(dispatched.name())),
+            ("elems_per_s_scalar", Json::Num(eps_scalar)),
+            ("elems_per_s_dispatched", Json::Num(eps_disp)),
+            ("speedup_vs_scalar", Json::Num(s_scalar / s_disp)),
+        ]));
+    }
+
+    // ---- parallel encode pipeline: serial vs 4-thread WorkerPool ----
+    let em: usize = env_or("RATELESS_BENCH_ENCODE_M", 32768);
+    let en: usize = env_or("RATELESS_BENCH_ENCODE_N", 32);
+    let threads = 4usize;
+    let ea = Matrix::random_ints(em, en, 3, 5);
+    let code = LtCode::new(em, LtParams::with_alpha(2.0), 7);
+    let sizing = ShardSizing::uniform(threads);
+    let pool = WorkerPool::prepare(threads, &Engine::Native);
+    let mut serial_out = None;
+    let s_serial = best_secs(reps, || {
+        serial_out = Some(ErasureCode::encode_shards(&code, &ea, &sizing, 1));
+    });
+    let mut par_out = None;
+    let s_par = best_secs(reps, || {
+        par_out = Some(code.encode_shards_with(&ea, &sizing, 1, &pool));
+    });
+    let (serial_out, par_out) = (serial_out.unwrap(), par_out.unwrap());
+    let mut identical = serial_out.shards.len() == par_out.shards.len();
+    for (s, q) in serial_out.shards.iter().zip(&par_out.shards) {
+        identical &= s.data() == q.data();
+    }
+    assert!(identical, "parallel encode must be byte-identical to serial");
+    let encode_speedup = s_serial / s_par;
+    let enc_rows = code.num_encoded() as f64;
+    println!(
+        "  encode m={em}: serial {:.3e} rows/s | {threads}-thread pool {:.3e} rows/s | speedup {encode_speedup:.2}x | identical: {identical}",
+        enc_rows / s_serial,
+        enc_rows / s_par
+    );
+
+    // ---- acceptance notes ----
+    let mut notes: Vec<String> = Vec::new();
+    if dispatched.name() == "scalar" {
+        notes.push(
+            "no SIMD path on this host: dispatched == scalar, matmat parity by construction"
+                .to_string(),
+        );
+    } else if matmat_speedup < 2.0 {
+        notes.push(format!(
+            "dispatched block_matmat speedup {matmat_speedup:.2}x below the 2x target on this host"
+        ));
+    }
+    if encode_speedup < 2.0 {
+        notes.push(format!(
+            "parallel encode speedup {encode_speedup:.2}x below the 2x target (host parallelism: {:?} threads)",
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        ));
+    }
+    for n in &notes {
+        println!("  NOTE: {n}");
+    }
+    if strict == 1 {
+        assert!(
+            dispatched.name() == "scalar" || matmat_speedup >= 2.0,
+            "strict: matmat speedup {matmat_speedup:.2}x < 2x"
+        );
+        assert!(
+            encode_speedup >= 2.0,
+            "strict: encode speedup {encode_speedup:.2}x < 2x"
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("kernel", Json::str(dispatched.name())),
+        (
+            "host_threads",
+            Json::Int(
+                std::thread::available_parallelism()
+                    .map(|v| v.get() as i64)
+                    .unwrap_or(1),
+            ),
+        ),
+        ("mm_rows", Json::Int(rows as i64)),
+        ("mm_cols", Json::Int(cols as i64)),
+        ("mm_batch", Json::Int(batch as i64)),
+        ("paths", Json::Arr(paths)),
+        (
+            "encode",
+            Json::obj(vec![
+                ("m", Json::Int(em as i64)),
+                ("n", Json::Int(en as i64)),
+                ("threads", Json::Int(threads as i64)),
+                ("serial_s", Json::Num(s_serial)),
+                ("parallel_s", Json::Num(s_par)),
+                ("speedup", Json::Num(encode_speedup)),
+                ("identical", Json::Bool(identical)),
+            ]),
+        ),
+        (
+            "notes",
+            Json::Arr(notes.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    let path = write_json("BENCH_kernels.json", &doc)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

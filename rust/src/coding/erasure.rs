@@ -39,6 +39,7 @@ use std::sync::Arc;
 
 use super::peeling::PeelingDecoder;
 use crate::matrix::Matrix;
+use crate::util::threadpool::{Executor, SerialExec};
 
 /// Per-worker shard-size weights, fixed at encode time.
 ///
@@ -128,6 +129,22 @@ pub trait ErasureCode: Send + Sync {
     /// covers `width` matrix rows); fixed-rate codes require `width == 1`.
     fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards;
 
+    /// Like [`encode_shards`](Self::encode_shards), with the per-shard
+    /// encode work run on `exec` (e.g. the coordinator's resident worker
+    /// pool). Output is **bit-identical** to the serial path. The default
+    /// falls back to serial — the fixed-rate codes' encodes are not
+    /// range-splittable row streams, and their cost is a copy anyway.
+    fn encode_shards_with(
+        &self,
+        a: &Matrix,
+        sizing: &ShardSizing,
+        width: usize,
+        exec: &dyn Executor,
+    ) -> EncodedShards {
+        let _ = exec;
+        self.encode_shards(a, sizing, width)
+    }
+
     /// Source rows feeding global encoded symbol `id` (for rateless codes
     /// the indices may range over an extended intermediate space, e.g.
     /// Raptor precode parities).
@@ -185,8 +202,28 @@ pub trait Fountain: Clone + Send + Sync + 'static {
     /// Source/intermediate indices of encoded symbol `id`.
     fn sources_of(&self, id: u64, out: &mut Vec<usize>);
 
-    /// Materialize the encoded matrix from the (superposed) source matrix.
-    fn encode_source(&self, sup: &Matrix) -> Matrix;
+    /// Owned preprocessing before row encoding: the identity for plain
+    /// LT / systematic LT; Raptor builds its intermediate (source +
+    /// precode parity) matrix here. Runs once per encode, serially.
+    fn prepare_encode(&self, sup: Matrix) -> Matrix {
+        sup
+    }
+
+    /// Encode rows `[start, end)` of the encoded matrix from the
+    /// [`prepare_encode`](Self::prepare_encode)d source. Must be a pure
+    /// function of `(self, src, row id)` — each row's RNG stream is
+    /// derived from the row id alone — so disjoint ranges computed on
+    /// different threads concatenate **bit-identically** to a serial
+    /// full-range encode. This is what makes the parallel encode
+    /// pipeline ([`fountain_shards_with`]) deterministic.
+    fn encode_rows(&self, src: &Matrix, start: u64, end: u64) -> Matrix;
+
+    /// Materialize the full encoded matrix from the (superposed) source
+    /// matrix (serial convenience over the two hooks above).
+    fn encode_source(&self, sup: &Matrix) -> Matrix {
+        let src = self.prepare_encode(sup.clone());
+        self.encode_rows(&src, 0, self.encoded_symbols() as u64)
+    }
 
     /// Fresh peeling decoder with payload width `w`.
     fn peeler(&self, w: usize) -> PeelingDecoder;
@@ -264,24 +301,40 @@ pub fn superpose(a: &Matrix, width: usize) -> (Matrix, usize) {
     let sm = a.rows().div_ceil(width);
     if a.rows() == sm * width {
         // reinterpret rows without changing the buffer layout
-        let reshaped = Matrix::from_vec(sm, width * a.cols(), a.data().to_vec());
-        return (reshaped, sm);
+        return (a.clone().reshape(sm, width * a.cols()), sm);
     }
-    let mut data = a.data().to_vec();
-    data.resize(sm * width * a.cols(), 0.0);
-    (Matrix::from_vec(sm, width * a.cols(), data), sm)
+    let mut padded = Matrix::zeros(sm, width * a.cols());
+    padded.data_mut()[..a.data().len()].copy_from_slice(a.data());
+    (padded, sm)
 }
 
 /// Shared [`ErasureCode::encode_shards`] for fountain codes: encode in
 /// super-row space and split the encoded matrix into `p` contiguous
 /// shards — sized by the [`ShardSizing`] weights (speed-proportional for
 /// heterogeneous fleets) — re-expressed as `(rows × n)` matrices so
-/// workers compute ordinary row products.
+/// workers compute ordinary row products. Serial ([`SerialExec`]) flavour
+/// of [`fountain_shards_with`].
 pub fn fountain_shards<C: Fountain>(
     code: &C,
     a: &Matrix,
     sizing: &ShardSizing,
     width: usize,
+) -> EncodedShards {
+    fountain_shards_with(code, a, sizing, width, &SerialExec)
+}
+
+/// [`fountain_shards`] with the per-shard encode tasks run on `exec` —
+/// the parallel encode pipeline. Each worker's shard is one task
+/// encoding the deterministic row range `[cuts[w], cuts[w+1])`; every
+/// encoded row is a pure function of `(seed, row_id)`
+/// ([`Fountain::encode_rows`]), so the parallel output is bit-identical
+/// to a serial encode regardless of task scheduling.
+pub fn fountain_shards_with<C: Fountain>(
+    code: &C,
+    a: &Matrix,
+    sizing: &ShardSizing,
+    width: usize,
+    exec: &dyn Executor,
 ) -> EncodedShards {
     let p = sizing.p();
     assert!(p >= 1 && width >= 1);
@@ -291,21 +344,38 @@ pub fn fountain_shards<C: Fountain>(
         code.source_symbols(),
         "matrix shape does not match the code dimension"
     );
-    let enc = code.encode_source(&sup); // (m_e × width·n)
-    let me = enc.rows();
+    let src = Arc::new(code.prepare_encode(sup)); // m (or m+s) × width·n
+    let me = code.encoded_symbols();
     let n = a.cols();
     let cuts = sizing.split_points(me);
+    let (rtx, rrx) = std::sync::mpsc::channel::<(usize, Matrix)>();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = Vec::with_capacity(p);
+    for w in 0..p {
+        let (s, e) = (cuts[w], cuts[w + 1]);
+        let code = code.clone();
+        let src = Arc::clone(&src);
+        let rtx = rtx.clone();
+        tasks.push(Box::new(move || {
+            let _ = rtx.send((w, code.encode_rows(&src, s as u64, e as u64)));
+        }));
+    }
+    drop(rtx);
+    exec.run_all(tasks);
+    let mut slots: Vec<Option<Matrix>> = (0..p).map(|_| None).collect();
+    for (w, enc) in rrx.try_iter() {
+        slots[w] = Some(enc);
+    }
     let mut starts = Vec::with_capacity(p);
     let mut shard_rows = Vec::with_capacity(p);
     let mut shards = Vec::with_capacity(p);
-    for w in 0..p {
-        let (s, e) = (cuts[w], cuts[w + 1]);
-        starts.push(s);
-        // row-major (count, width·n) == (count·width, n): same buffer
-        let count = e - s;
-        let slice = enc.row_block(s, count).to_vec();
+    for (w, slot) in slots.into_iter().enumerate() {
+        let enc = slot.expect("encode task did not complete"); // (count × width·n)
+        let count = enc.rows();
+        debug_assert_eq!(count, cuts[w + 1] - cuts[w]);
+        starts.push(cuts[w]);
         shard_rows.push(count * width);
-        shards.push(Arc::new(Matrix::from_vec(count * width, n, slice)));
+        // row-major (count, width·n) == (count·width, n): same buffer
+        shards.push(Arc::new(enc.reshape(count * width, n)));
     }
     EncodedShards {
         shards,
@@ -345,6 +415,16 @@ impl ErasureCode for crate::coding::lt::LtCode {
         fountain_shards(self, a, sizing, width)
     }
 
+    fn encode_shards_with(
+        &self,
+        a: &Matrix,
+        sizing: &ShardSizing,
+        width: usize,
+        exec: &dyn Executor,
+    ) -> EncodedShards {
+        fountain_shards_with(self, a, sizing, width, exec)
+    }
+
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
         self.sources_of(id, out)
     }
@@ -363,6 +443,16 @@ impl ErasureCode for crate::coding::systematic::SystematicLt {
         fountain_shards(self, a, sizing, width)
     }
 
+    fn encode_shards_with(
+        &self,
+        a: &Matrix,
+        sizing: &ShardSizing,
+        width: usize,
+        exec: &dyn Executor,
+    ) -> EncodedShards {
+        fountain_shards_with(self, a, sizing, width, exec)
+    }
+
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
         self.sources_of(id, out)
     }
@@ -379,6 +469,16 @@ impl ErasureCode for crate::coding::raptor::RaptorCode {
 
     fn encode_shards(&self, a: &Matrix, sizing: &ShardSizing, width: usize) -> EncodedShards {
         fountain_shards(self, a, sizing, width)
+    }
+
+    fn encode_shards_with(
+        &self,
+        a: &Matrix,
+        sizing: &ShardSizing,
+        width: usize,
+        exec: &dyn Executor,
+    ) -> EncodedShards {
+        fountain_shards_with(self, a, sizing, width, exec)
     }
 
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
@@ -593,6 +693,49 @@ mod tests {
         assert_eq!(layout.starts[0], 0);
         assert_eq!(layout.starts[1], layout.shard_rows[0]);
         assert_eq!(layout.starts[2], layout.shard_rows[0] + layout.shard_rows[1]);
+    }
+
+    /// The parallel encode pipeline must be byte-identical to the serial
+    /// path, for every rateless code, including non-uniform sizing and
+    /// block encoding (width > 1).
+    #[test]
+    fn parallel_encode_is_bit_identical_to_serial() {
+        use crate::util::threadpool::ThreadPool;
+        let pool = ThreadPool::new(4);
+        let m = 96usize;
+        let a = Matrix::random_ints(m, 7, 5, 11);
+        let sizing = ShardSizing::proportional(&[1.0, 2.0, 1.0, 1.5]);
+        let codes: Vec<Box<dyn ErasureCode>> = vec![
+            Box::new(LtCode::new(m, LtParams::with_alpha(2.0), 3)),
+            Box::new(SystematicLt::new(m, LtParams::with_alpha(2.0), 4)),
+            Box::new(RaptorCode::new(m, RaptorParams::default(), 5)),
+        ];
+        for code in &codes {
+            let serial = code.encode_shards(&a, &sizing, 1);
+            let par = code.encode_shards_with(&a, &sizing, 1, &pool);
+            assert_eq!(serial.shards.len(), par.shards.len(), "{}", code.name());
+            assert_eq!(serial.layout.starts, par.layout.starts, "{}", code.name());
+            assert_eq!(
+                serial.layout.shard_rows,
+                par.layout.shard_rows,
+                "{}",
+                code.name()
+            );
+            for (w, (s, q)) in serial.shards.iter().zip(&par.shards).enumerate() {
+                assert_eq!(s.rows(), q.rows(), "{} shard {w}", code.name());
+                assert_eq!(s.data(), q.data(), "{} shard {w}", code.name());
+            }
+        }
+        // block encoding: width 4 over a padded row count
+        let (mb, width) = (102usize, 4usize);
+        let ab = Matrix::random_ints(mb, 5, 3, 13);
+        let block_code = LtCode::new(mb.div_ceil(width), LtParams::with_alpha(3.0), 7);
+        let serial = ErasureCode::encode_shards(&block_code, &ab, &ShardSizing::uniform(3), width);
+        let par = block_code.encode_shards_with(&ab, &ShardSizing::uniform(3), width, &pool);
+        for (s, q) in serial.shards.iter().zip(&par.shards) {
+            assert_eq!(s.data(), q.data(), "block-encoded shards must match");
+        }
+        assert_eq!(serial.layout.out_rows, par.layout.out_rows);
     }
 
     #[test]

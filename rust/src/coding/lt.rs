@@ -12,7 +12,7 @@
 use super::erasure::Fountain;
 use super::peeling::PeelingDecoder;
 use super::soliton::RobustSoliton;
-use crate::matrix::{ops, Matrix};
+use crate::matrix::{kernel, Matrix};
 use crate::util::rng::{derive_seed, Rng};
 
 /// LT code parameters.
@@ -107,10 +107,13 @@ impl LtCode {
     pub fn encode_row(&self, a: &Matrix, row_id: u64, out: &mut [f32], scratch: &mut Vec<usize>) {
         assert_eq!(a.rows(), self.m, "matrix rows != code dimension");
         assert_eq!(out.len(), a.cols());
+        // hoist the kernel dispatch out of the per-source loop (the
+        // encode hot path sums ~log m rows per encoded row)
+        let kern = kernel::active();
         self.row_indices(row_id, scratch);
         out.fill(0.0);
         for &src in scratch.iter() {
-            ops::add_assign(out, a.row(src));
+            kern.add_assign(out, a.row(src));
         }
     }
 
@@ -157,6 +160,10 @@ impl Fountain for LtCode {
 
     fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
         self.row_indices(id, out)
+    }
+
+    fn encode_rows(&self, src: &Matrix, start: u64, end: u64) -> Matrix {
+        self.encode_range(src, start, end)
     }
 
     fn encode_source(&self, sup: &Matrix) -> Matrix {
@@ -213,7 +220,7 @@ mod tests {
             code.row_indices(row as u64, &mut idx);
             let mut want = vec![0.0f32; 8];
             for &s in &idx {
-                ops::add_assign(&mut want, a.row(s));
+                crate::matrix::ops::add_assign(&mut want, a.row(s));
             }
             assert_eq!(enc.row(row), &want[..], "row {row}");
         }

@@ -17,6 +17,14 @@
 //! from, compounding over decode generations. In `f32` this amplification
 //! visibly corrupts products beyond m ≈ 10³; in `f64` the residual error
 //! stays ≪ 1e-6 relative at the paper's scales (regression-tested below).
+//!
+//! **Hot path**: payload subtractions run through the dispatched SIMD
+//! [`Kernel`](crate::matrix::kernel::Kernel) (`sub_assign_f64`), and the
+//! receive path performs **no heap allocation in steady state** — the
+//! reveal staging buffer (`scratch`) and the index `Vec`s of retired
+//! symbols (`spare`) are held by the decoder and recycled.
+
+use crate::matrix::kernel::{self, Kernel};
 
 /// Per-received-symbol state. Payloads live in a flat arena on the
 /// decoder (`sid·w ..`), not per-symbol `Vec`s — one allocation for the
@@ -52,6 +60,14 @@ pub struct PeelingDecoder {
     /// the Raptor decoder, where sources `>= watch` are precode parities).
     watch: usize,
     watched_decoded: usize,
+    /// Reusable payload staging buffer for reveals — no per-symbol heap
+    /// allocation on the receive path.
+    scratch: Vec<f64>,
+    /// Recycled index/attachment `Vec`s from retired symbols, reused for
+    /// newly received ones (steady-state decoding allocates nothing).
+    spare: Vec<Vec<u32>>,
+    /// Dispatched SIMD kernel for the payload arithmetic.
+    kern: &'static dyn Kernel,
 }
 
 impl PeelingDecoder {
@@ -77,6 +93,9 @@ impl PeelingDecoder {
             completed_at: None,
             watch,
             watched_decoded: 0,
+            scratch: Vec::new(),
+            spare: Vec::new(),
+            kern: kernel::active(),
         }
     }
 
@@ -117,6 +136,10 @@ impl PeelingDecoder {
     /// source symbols triggered by it.
     ///
     /// `indices` must be distinct, in `[0, m)`; `payload` has width `w`.
+    ///
+    /// Steady-state this allocates nothing: the staged payload reuses the
+    /// arena tail, reveals go through the decoder-held `scratch` buffer,
+    /// and index lists are recycled from retired symbols via `spare`.
     pub fn add_symbol(&mut self, indices: &[usize], payload: &[f32]) -> usize {
         assert_eq!(payload.len(), self.w, "payload width mismatch");
         self.received += 1;
@@ -132,37 +155,42 @@ impl PeelingDecoder {
         for (c, &v) in payload.iter().enumerate() {
             self.payloads[base + c] = v as f64;
         }
-        let mut sym = Symbol {
-            indices: Vec::with_capacity(indices.len()),
-        };
+        let mut unresolved = self.spare.pop().unwrap_or_default();
+        unresolved.clear();
         for &i in indices {
             debug_assert!(i < self.m, "source index out of range");
             if self.decoded[i] {
-                let (lo, hi) = (i * self.w, (i + 1) * self.w);
-                for c in 0..self.w {
-                    self.payloads[base + c] -= self.values[lo..hi][c];
-                }
+                self.kern.sub_assign_f64(
+                    &mut self.payloads[base..base + self.w],
+                    &self.values[i * self.w..(i + 1) * self.w],
+                );
             } else {
-                sym.indices.push(i as u32);
+                unresolved.push(i as u32);
             }
         }
-        match sym.indices.len() {
+        match unresolved.len() {
             0 => {
                 self.payloads.truncate(base); // fully redundant symbol
+                self.spare.push(unresolved);
             }
             1 => {
-                let src = sym.indices[0] as usize;
-                let payload: Vec<f64> = self.payloads[base..base + self.w].to_vec();
+                let src = unresolved[0] as usize;
+                self.scratch.clear();
+                self.scratch
+                    .extend_from_slice(&self.payloads[base..base + self.w]);
                 self.payloads.truncate(base);
-                self.reveal(src, payload);
+                self.spare.push(unresolved);
+                self.reveal_from_scratch(src);
                 self.drain_ripple();
             }
             _ => {
                 let id = self.symbols.len() as u32;
-                for &i in &sym.indices {
+                for &i in &unresolved {
                     self.attached[i as usize].push(id);
                 }
-                self.symbols.push(sym);
+                self.symbols.push(Symbol {
+                    indices: unresolved,
+                });
             }
         }
         if self.is_complete() && self.completed_at.is_none() {
@@ -171,10 +199,13 @@ impl PeelingDecoder {
         self.decoded_count - before
     }
 
-    /// Record source `i` as decoded and schedule neighbour updates.
-    fn reveal(&mut self, i: usize, payload: Vec<f64>) {
+    /// Record source `i` as decoded — its payload staged in `scratch` —
+    /// and schedule neighbour updates.
+    fn reveal_from_scratch(&mut self, i: usize) {
         debug_assert!(!self.decoded[i]);
-        self.values[i * self.w..(i + 1) * self.w].copy_from_slice(&payload);
+        debug_assert_eq!(self.scratch.len(), self.w);
+        let (lo, hi) = (i * self.w, (i + 1) * self.w);
+        self.values[lo..hi].copy_from_slice(&self.scratch);
         self.decoded[i] = true;
         self.decoded_count += 1;
         if i < self.watch {
@@ -182,39 +213,44 @@ impl PeelingDecoder {
         }
         // Subtract from every symbol still referencing i; those reaching
         // degree 1 join the ripple.
-        let attached = std::mem::take(&mut self.attached[i]);
-        for sid in attached {
+        let mut attached = std::mem::take(&mut self.attached[i]);
+        for &sid in &attached {
             let sym = &mut self.symbols[sid as usize];
             // remove i from the symbol's index list (swap-remove)
             if let Some(pos) = sym.indices.iter().position(|&s| s as usize == i) {
                 sym.indices.swap_remove(pos);
-                let (lo, hi) = (i * self.w, (i + 1) * self.w);
                 let pbase = sid as usize * self.w;
-                for c in 0..self.w {
-                    self.payloads[pbase + c] -= self.values[lo..hi][c];
-                }
-                if sym.indices.len() == 1 {
+                self.kern.sub_assign_f64(
+                    &mut self.payloads[pbase..pbase + self.w],
+                    &self.values[lo..hi],
+                );
+                if self.symbols[sid as usize].indices.len() == 1 {
                     self.ripple.push(sid);
                 }
             }
         }
+        attached.clear();
+        self.spare.push(attached);
     }
 
     fn drain_ripple(&mut self) {
         while let Some(sid) = self.ripple.pop() {
-            let sym = &mut self.symbols[sid as usize];
-            if sym.indices.len() != 1 {
+            let s = sid as usize;
+            if self.symbols[s].indices.len() != 1 {
                 continue; // its last source was decoded via another symbol
             }
-            let src = sym.indices[0] as usize;
+            let src = self.symbols[s].indices[0] as usize;
+            let mut retired = std::mem::take(&mut self.symbols[s].indices);
+            retired.clear();
+            self.spare.push(retired);
             if self.decoded[src] {
-                sym.indices.clear();
                 continue;
             }
-            sym.indices.clear();
-            let pbase = sid as usize * self.w;
-            let payload: Vec<f64> = self.payloads[pbase..pbase + self.w].to_vec();
-            self.reveal(src, payload);
+            let pbase = s * self.w;
+            self.scratch.clear();
+            self.scratch
+                .extend_from_slice(&self.payloads[pbase..pbase + self.w]);
+            self.reveal_from_scratch(src);
         }
     }
 
@@ -264,9 +300,11 @@ impl PeelingDecoder {
         match super::linsolve::gauss_rect_solve(&mut a, neq, nunk, &mut rhs, self.w) {
             Some(solution) => {
                 for (c, &u) in unknowns.iter().enumerate() {
-                    let payload = solution[c * self.w..(c + 1) * self.w].to_vec();
                     if !self.decoded[u] {
-                        self.reveal(u, payload);
+                        self.scratch.clear();
+                        self.scratch
+                            .extend_from_slice(&solution[c * self.w..(c + 1) * self.w]);
+                        self.reveal_from_scratch(u);
                     }
                 }
                 self.drain_ripple();

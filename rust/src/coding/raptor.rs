@@ -26,7 +26,7 @@
 use super::erasure::Fountain;
 use super::peeling::PeelingDecoder;
 
-use crate::matrix::{ops, Matrix};
+use crate::matrix::{kernel, Matrix};
 use crate::util::dist::Alias;
 use crate::util::rng::{derive_seed, Rng};
 
@@ -153,12 +153,13 @@ impl RaptorCode {
             z.row_mut(i).copy_from_slice(a.row(i));
         }
         let mut members = Vec::new();
+        let kern = kernel::active();
         for j in 0..self.s {
             self.parity_members(j, &mut members);
             // z_{m+j} = -sum of members
             let mut acc = vec![0.0f32; a.cols()];
             for &i in &members {
-                ops::add_assign(&mut acc, a.row(i));
+                kern.add_assign(&mut acc, a.row(i));
             }
             for v in acc.iter_mut() {
                 *v = -*v;
@@ -171,14 +172,26 @@ impl RaptorCode {
     /// Encode: LT phase over the intermediate matrix.
     pub fn encode(&self, a: &Matrix) -> Matrix {
         let z = self.intermediate(a);
-        let me = self.num_encoded();
-        let mut out = Matrix::zeros(me, a.cols());
+        self.encode_intermediate_range(&z, 0, self.num_encoded() as u64)
+    }
+
+    /// LT-encode rows `[start, end)` from the already-materialized
+    /// intermediate matrix `z` — each encoded row is a pure function of
+    /// `(seed, row_id)`, so disjoint ranges (computed on different
+    /// threads) concatenate bit-identically to a full serial encode.
+    pub fn encode_intermediate_range(&self, z: &Matrix, start: u64, end: u64) -> Matrix {
+        assert_eq!(z.rows(), self.intermediate_count());
+        assert!(start <= end);
+        let rows = (end - start) as usize;
+        let mut out = Matrix::zeros(rows, z.cols());
         let mut idx = Vec::new();
-        for row in 0..me as u64 {
+        // hoist the kernel dispatch out of the row × source double loop
+        let kern = kernel::active();
+        for (i, row) in (start..end).enumerate() {
             self.row_indices(row, &mut idx);
-            let dst = out.row_mut(row as usize);
-            for &i in &idx {
-                ops::add_assign(dst, z.row(i));
+            let dst = out.row_mut(i);
+            for &s in &idx {
+                kern.add_assign(dst, z.row(s));
             }
         }
         out
@@ -248,6 +261,14 @@ impl Fountain for RaptorCode {
 
     fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
         self.row_indices(id, out)
+    }
+
+    fn prepare_encode(&self, sup: Matrix) -> Matrix {
+        self.intermediate(&sup)
+    }
+
+    fn encode_rows(&self, src: &Matrix, start: u64, end: u64) -> Matrix {
+        self.encode_intermediate_range(src, start, end)
     }
 
     fn encode_source(&self, sup: &Matrix) -> Matrix {

@@ -54,16 +54,22 @@ impl SystematicLt {
 
     /// Materialize the encoded matrix.
     pub fn encode(&self, a: &Matrix) -> Matrix {
+        self.encode_range(a, 0, self.num_encoded() as u64)
+    }
+
+    /// Materialize encoded rows `[start, end)` — each row a pure function
+    /// of its id, so disjoint ranges concatenate to the full encode.
+    pub fn encode_range(&self, a: &Matrix, start: u64, end: u64) -> Matrix {
         assert_eq!(a.rows(), self.m());
-        let me = self.num_encoded();
-        let mut out = Matrix::zeros(me, a.cols());
+        assert!(start <= end);
+        let rows = (end - start) as usize;
+        let mut out = Matrix::zeros(rows, a.cols());
         let mut scratch = Vec::new();
-        for row in 0..me as u64 {
+        for (i, row) in (start..end).enumerate() {
             if self.is_systematic(row) {
-                out.row_mut(row as usize).copy_from_slice(a.row(row as usize));
+                out.row_mut(i).copy_from_slice(a.row(row as usize));
             } else {
-                self.inner
-                    .encode_row(a, row, out.row_mut(row as usize), &mut scratch);
+                self.inner.encode_row(a, row, out.row_mut(i), &mut scratch);
             }
         }
         out
@@ -85,6 +91,10 @@ impl Fountain for SystematicLt {
 
     fn sources_of(&self, id: u64, out: &mut Vec<usize>) {
         self.row_indices(id, out)
+    }
+
+    fn encode_rows(&self, src: &Matrix, start: u64, end: u64) -> Matrix {
+        self.encode_range(src, start, end)
     }
 
     fn encode_source(&self, sup: &Matrix) -> Matrix {

@@ -181,7 +181,18 @@ impl Coordinator {
             "worker speeds must be finite and positive: {speeds:?}"
         );
         let (code, width) = strategy.build(a.rows(), p, cluster.symbol_width, cluster.seed);
-        let encoded = code.encode_shards(a, &ShardSizing::proportional(&speeds), width);
+        crate::info!(
+            "kernel: {} (runtime dispatch, {})",
+            crate::matrix::kernel::active().name(),
+            std::env::consts::ARCH
+        );
+        // Spawn the pool *before* encoding: its resident threads double as
+        // the encode fleet (`ErasureCode::encode_shards_with` hands each
+        // worker a deterministic row range, bit-identical to serial), then
+        // hold the finished shards for the serving phase.
+        let pool = WorkerPool::prepare(p, &engine);
+        let encoded = code.encode_shards_with(a, &ShardSizing::proportional(&speeds), width, &pool);
+        pool.install_shards(encoded.shards.clone());
         let layout = encoded.layout;
         let encoded_rows = encoded.shards.iter().map(|s| s.rows()).sum();
         let block_rows = encoded
@@ -196,7 +207,6 @@ impl Coordinator {
             .collect();
         let taus: Vec<f64> = speeds.iter().map(|s| cluster.tau / s).collect();
         let scheduler = cluster.scheduler.build(&taus);
-        let pool = WorkerPool::spawn(encoded.shards, &engine);
         let profile = StragglerProfile::new(cluster.delay);
         Ok(Self {
             m: a.rows(),

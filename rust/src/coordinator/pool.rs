@@ -13,6 +13,15 @@
 //! is `Sync`) queue FCFS at each worker, which is exactly the M/G/1
 //! reduction the paper's §5 streaming analysis assumes.
 //!
+//! **Two-phase construction**: [`WorkerPool::prepare`] spawns the threads
+//! *before* the shards exist, so the encode preprocessing can run **on
+//! the resident worker threads** (the pool implements
+//! [`Executor`](crate::util::threadpool::Executor); the coordinator hands
+//! `ErasureCode::encode_shards_with` the pool, one deterministic
+//! row-range task per shard). [`WorkerPool::install_shards`] then parks
+//! the encoded shards; jobs may only be broadcast after that.
+//! [`WorkerPool::spawn`] keeps the one-shot convenience path.
+//!
 //! **Worker loss**: a pool thread can go away — [`WorkerPool::kill`]
 //! decommissions one deliberately (fault injection), and a panicking
 //! engine would have the same effect. [`WorkerPool::broadcast`] surfaces
@@ -26,15 +35,18 @@
 //! rather than pulling boxed closures from a shared queue.
 
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use super::worker::{self, JobOrder};
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
+use crate::util::threadpool::Executor;
 
 enum PoolMsg {
     Job(JobOrder),
+    /// Run one boxed task on the worker thread (the parallel encode lane).
+    Exec(Box<dyn FnOnce() + Send + 'static>),
     /// Decommission: the worker thread exits after draining earlier
     /// queue entries.
     Shutdown,
@@ -43,6 +55,10 @@ enum PoolMsg {
 /// A fleet of persistent worker threads, one per encoded shard.
 pub struct WorkerPool {
     senders: Vec<Sender<PoolMsg>>,
+    /// The fleet's resident shard list; set once by
+    /// [`install_shards`](Self::install_shards) (after the encode, which
+    /// may itself run on these threads).
+    shards: Arc<OnceLock<Vec<Arc<Matrix>>>>,
     /// Serializes whole-fleet submission: concurrent jobs must land in the
     /// same order on every worker's queue, or two jobs could interleave
     /// (worker 0 runs A then B, worker 1 runs B then A) and each would
@@ -53,22 +69,31 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn one thread per shard; each holds the whole fleet's shard
-    /// list resident and serves its job queue until the pool is dropped
-    /// (or the worker is [`kill`](Self::kill)ed).
-    pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
-        let fleet = Arc::new(shards);
-        let mut senders = Vec::with_capacity(fleet.len());
-        let mut handles = Vec::with_capacity(fleet.len());
-        for w in 0..fleet.len() {
+    /// Spawn `p` worker threads with no shards yet: each thread serves
+    /// its queue (encode tasks now, jobs once shards are installed) until
+    /// the pool is dropped or the worker is [`kill`](Self::kill)ed.
+    pub fn prepare(p: usize, engine: &Engine) -> Self {
+        let shards: Arc<OnceLock<Vec<Arc<Matrix>>>> = Arc::new(OnceLock::new());
+        let mut senders = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for w in 0..p {
             let (tx, rx) = channel::<PoolMsg>();
             let engine = engine.clone();
-            let fleet = Arc::clone(&fleet);
+            let shards = Arc::clone(&shards);
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || {
-                    while let Ok(PoolMsg::Job(job)) = rx.recv() {
-                        worker::run_job(w, &fleet, &engine, job);
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            PoolMsg::Job(job) => {
+                                let fleet = shards
+                                    .get()
+                                    .expect("shards must be installed before jobs");
+                                worker::run_job(w, fleet, &engine, job);
+                            }
+                            PoolMsg::Exec(task) => task(),
+                            PoolMsg::Shutdown => break,
+                        }
                     }
                 })
                 .expect("spawn pool worker");
@@ -77,9 +102,27 @@ impl WorkerPool {
         }
         Self {
             senders,
+            shards,
             submit_lock: Mutex::new(()),
             handles,
         }
+    }
+
+    /// Park the encoded shards in the fleet (exactly once, one shard per
+    /// worker). Jobs broadcast before this panic on the worker thread.
+    pub fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+        assert_eq!(shards.len(), self.senders.len(), "one shard per worker");
+        if self.shards.set(shards).is_err() {
+            panic!("shards already installed");
+        }
+    }
+
+    /// One-shot convenience: spawn one thread per shard with the shards
+    /// resident immediately.
+    pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
+        let pool = Self::prepare(shards.len(), engine);
+        pool.install_shards(shards);
+        pool
     }
 
     /// Number of workers.
@@ -114,6 +157,88 @@ impl WorkerPool {
     }
 }
 
+type ExecTask = Box<dyn FnOnce() + Send + 'static>;
+
+impl Executor for WorkerPool {
+    /// Scatter the tasks round-robin over the worker threads and wait
+    /// for all of them — the encode lane. Each task lives in a shared
+    /// slot, so a task whose worker dies with it still queued (e.g. a
+    /// racing [`kill`](WorkerPool::kill)) is recovered and run inline on
+    /// the caller — mirroring `broadcast`'s no-poisoning rule. Only a
+    /// worker dying *mid-task* is unrecoverable, and panics.
+    fn run_all(&self, tasks: Vec<ExecTask>) {
+        if self.senders.is_empty() {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let n = tasks.len();
+        let slots: Vec<Arc<Mutex<Option<ExecTask>>>> = tasks
+            .into_iter()
+            .map(|t| Arc::new(Mutex::new(Some(t))))
+            .collect();
+        let (tx, rx) = channel::<()>();
+        // tasks whose worker was already gone at send time: run them
+        // inline *after* releasing submit_lock, so a long encode never
+        // blocks concurrent fleet submission
+        let mut undeliverable: Vec<ExecTask> = Vec::new();
+        {
+            let _fleet_order = self
+                .submit_lock
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            for (i, slot) in slots.iter().enumerate() {
+                let slot = Arc::clone(slot);
+                let tx = tx.clone();
+                let wrapped: ExecTask = Box::new(move || {
+                    let task = slot.lock().unwrap_or_else(|p| p.into_inner()).take();
+                    if let Some(task) = task {
+                        task();
+                    }
+                    let _ = tx.send(());
+                });
+                let w = i % self.senders.len();
+                if let Err(failed) = self.senders[w].send(PoolMsg::Exec(wrapped)) {
+                    if let PoolMsg::Exec(f) = failed.0 {
+                        undeliverable.push(f);
+                    }
+                }
+            }
+        }
+        for f in undeliverable {
+            f(); // runs the slot task and sends its completion
+        }
+        drop(tx);
+        let mut done = 0usize;
+        while done < n {
+            match rx.recv() {
+                Ok(()) => done += 1,
+                Err(_) => {
+                    // Every wrapper has now run or been dropped. Run the
+                    // tasks still sitting in their slots (dropped while
+                    // queued on a dead worker); anything neither counted
+                    // nor recoverable died mid-execution.
+                    let mut recovered = 0usize;
+                    for slot in &slots {
+                        let task = slot.lock().unwrap_or_else(|p| p.into_inner()).take();
+                        if let Some(task) = task {
+                            task();
+                            recovered += 1;
+                        }
+                    }
+                    assert!(
+                        done + recovered >= n,
+                        "worker died mid-task with {} of {n} tasks unaccounted",
+                        n - done - recovered
+                    );
+                    return;
+                }
+            }
+        }
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         // closing the queues lets each worker finish in-flight jobs and exit
@@ -131,7 +256,7 @@ mod tests {
     use crate::coordinator::scheduler::{Scheduler, StaticScheduler};
     use crate::coordinator::straggler::WorkerPlan;
     use crate::coordinator::worker::JobShared;
-    use std::sync::atomic::AtomicBool;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::mpsc::channel as evchannel;
     use std::time::{Duration, Instant};
 
@@ -201,6 +326,61 @@ mod tests {
             assert_eq!(rows, vec![8, 8, 8]);
         }
         drop(pool); // must join cleanly
+    }
+
+    /// The encode lane: a prepared (shard-less) pool runs generic tasks
+    /// on its worker threads, then installs shards and serves jobs.
+    #[test]
+    fn prepared_pool_runs_tasks_then_serves_jobs() {
+        let pool = WorkerPool::prepare(3, &Engine::Native);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..10)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.run_all(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+
+        let shards: Vec<Arc<Matrix>> = (0..3)
+            .map(|s| Arc::new(Matrix::random(8, 4, 50 + s as u64)))
+            .collect();
+        pool.install_shards(shards.clone());
+        let x = Arc::new(vec![1.0f32; 4]);
+        let (tx, rx) = evchannel();
+        let jobs = fleet_orders(3, 8, Arc::clone(&x), tx.clone());
+        pool.broadcast(jobs).expect("fleet alive");
+        drop(tx);
+        let mut done = 0;
+        while let Ok(ev) = rx.recv() {
+            if let WorkerEvent::Done { rows_done, .. } = ev {
+                assert_eq!(rows_done, 8);
+                done += 1;
+            }
+        }
+        assert_eq!(done, 3);
+    }
+
+    /// The issue's exact encode path: parallel `encode_shards` on the
+    /// resident WorkerPool threads is byte-identical to the serial path.
+    #[test]
+    fn worker_pool_parallel_encode_matches_serial() {
+        use crate::coding::lt::{LtCode, LtParams};
+        use crate::coding::{ErasureCode, ShardSizing};
+        let pool = WorkerPool::prepare(4, &Engine::Native);
+        let a = Matrix::random_ints(128, 6, 4, 2);
+        let code = LtCode::new(128, LtParams::with_alpha(2.0), 9);
+        let sizing = ShardSizing::uniform(4);
+        let serial = ErasureCode::encode_shards(&code, &a, &sizing, 1);
+        let par = code.encode_shards_with(&a, &sizing, 1, &pool);
+        assert_eq!(serial.shards.len(), par.shards.len());
+        for (s, q) in serial.shards.iter().zip(&par.shards) {
+            assert_eq!(s.data(), q.data());
+        }
+        pool.install_shards(par.shards.clone());
     }
 
     #[test]

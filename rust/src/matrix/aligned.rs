@@ -1,0 +1,156 @@
+//! 64-byte-aligned, lane-padded `f32` storage for the SIMD kernel layer.
+//!
+//! The intrinsic kernels ([`kernel`](super::kernel)) read matrices in
+//! 256-bit (AVX2) or 128-bit (NEON) lanes. [`AlignedBuf`] guarantees the
+//! two properties the kernels rely on:
+//!
+//! * the **base pointer is 64-byte aligned** (one full cache line, and a
+//!   multiple of every vector width we dispatch to), so a block's first
+//!   lane never straddles a cache line;
+//! * the **allocation is padded to a whole 16-float chunk**, so the last
+//!   partial lane of a buffer still sits inside owned memory (the public
+//!   slice view exposes exactly `len` elements; the padding stays zeroed
+//!   and invisible).
+//!
+//! Alignment is obtained without `unsafe` allocation tricks: the backing
+//! store is a `Vec` of `#[repr(align(64))]` 16-float chunks, and the flat
+//! `&[f32]` view is a single `from_raw_parts` over it — the only unsafe
+//! in this module, sound because `len <= chunks.len() * LANES` always
+//! holds and `Chunk` is `repr(C)` over `[f32; LANES]`.
+
+use std::ops::{Deref, DerefMut};
+
+/// Alignment of the base pointer, in bytes.
+pub const ALIGN: usize = 64;
+/// `f32` elements per aligned chunk (= ALIGN / 4).
+pub const LANES: usize = ALIGN / std::mem::size_of::<f32>();
+
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+// the field is only ever accessed through pointer casts in as_slice()
+#[allow(dead_code)]
+struct Chunk([f32; LANES]);
+
+const ZERO_CHUNK: Chunk = Chunk([0.0; LANES]);
+
+/// A flat `f32` buffer with a 64-byte-aligned base and lane-padded tail.
+pub struct AlignedBuf {
+    chunks: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// All-zeros buffer of `len` elements.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            chunks: vec![ZERO_CHUNK; len.div_ceil(LANES)],
+            len,
+        }
+    }
+
+    /// Copy `data` into aligned storage.
+    pub fn from_slice(data: &[f32]) -> Self {
+        let mut buf = Self::zeros(data.len());
+        buf.as_mut_slice().copy_from_slice(data);
+        buf
+    }
+
+    /// Take ownership of `data`, re-homing it into aligned storage.
+    /// (A copy: `Vec<f32>`'s allocation cannot be reused — its alignment
+    /// is only 4 bytes.)
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self::from_slice(&data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The logical elements, as a flat slice (padding excluded).
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `chunks` owns at least `len` contiguous f32s (zeros()
+        // allocates ceil(len/LANES) chunks and len never changes), and
+        // Chunk is repr(C) over [f32; LANES] so the cast is layout-exact.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const f32, self.len) }
+    }
+
+    /// Mutable flat view of the logical elements.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as for as_slice; &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        Self {
+            chunks: self.chunks.clone(),
+            len: self.len,
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
+
+impl PartialEq for AlignedBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_pointer_is_64_byte_aligned() {
+        for len in [0usize, 1, 15, 16, 17, 1000] {
+            let buf = AlignedBuf::zeros(len);
+            assert_eq!(buf.as_slice().as_ptr() as usize % ALIGN, 0, "len={len}");
+            assert_eq!(buf.len(), len);
+        }
+    }
+
+    #[test]
+    fn roundtrips_data_and_compares() {
+        let data: Vec<f32> = (0..37).map(|i| i as f32 - 18.0).collect();
+        let a = AlignedBuf::from_vec(data.clone());
+        let b = AlignedBuf::from_slice(&data);
+        assert_eq!(a.as_slice(), &data[..]);
+        assert_eq!(a, b);
+        assert_eq!(a.clone(), a);
+        let mut c = a.clone();
+        c.as_mut_slice()[0] = 99.0;
+        assert_ne!(c, a);
+        assert_eq!(c[0], 99.0); // Deref indexing
+    }
+
+    #[test]
+    fn empty_buffer_is_sound() {
+        let buf = AlignedBuf::zeros(0);
+        assert!(buf.is_empty());
+        assert_eq!(buf.as_slice(), &[] as &[f32]);
+    }
+}

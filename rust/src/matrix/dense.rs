@@ -3,23 +3,33 @@
 //! `f32` matches the dtype of the AOT-compiled PJRT artifacts; all decoding
 //! arithmetic is done in `f64` where it matters (LU solves), but the bulk
 //! data is `f32` like the paper's float workloads.
+//!
+//! Backing storage is an [`AlignedBuf`]: 64-byte-aligned base,
+//! lane-padded tail — the storage contract the SIMD kernel layer's fast
+//! paths are tuned for (encoded shards inherit it automatically, since a
+//! shard *is* a `Matrix`).
 
+use super::aligned::AlignedBuf;
 use crate::util::dist::{Sample, StdNormal};
 use crate::util::rng::Rng;
 
-/// Row-major dense matrix.
+/// Row-major dense matrix over aligned storage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: AlignedBuf,
 }
 
 impl Matrix {
     /// Construct from raw row-major data.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "data length != rows*cols");
-        Self { rows, cols, data }
+        Self {
+            rows,
+            cols,
+            data: AlignedBuf::from_vec(data),
+        }
     }
 
     /// All-zeros matrix.
@@ -27,7 +37,7 @@ impl Matrix {
         Self {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: AlignedBuf::zeros(rows * cols),
         }
     }
 
@@ -43,10 +53,11 @@ impl Matrix {
     /// Seeded standard-normal entries.
     pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
-        let data = (0..rows * cols)
-            .map(|_| StdNormal.sample(&mut rng) as f32)
-            .collect();
-        Self { rows, cols, data }
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.as_mut_slice() {
+            *v = StdNormal.sample(&mut rng) as f32;
+        }
+        m
     }
 
     /// Seeded random vector of length `n` (as a flat Vec).
@@ -68,10 +79,11 @@ impl Matrix {
     /// is bit-perfect at any m — matching the paper's setup.
     pub fn random_ints(rows: usize, cols: usize, max: u32, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
-        let data = (0..rows * cols)
-            .map(|_| rng.gen_range(max as u64 + 1) as f32)
-            .collect();
-        Self { rows, cols, data }
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.as_mut_slice() {
+            *v = rng.gen_range(max as u64 + 1) as f32;
+        }
+        m
     }
 
     /// Seeded random integer-valued vector with entries in `[0, max]`.
@@ -89,11 +101,22 @@ impl Matrix {
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.as_mut_slice()
+    }
+
+    /// Reinterpret the buffer with a new shape (`rows·cols` must equal
+    /// the current element count). No copy: aligned storage moves over.
+    pub fn reshape(self, rows: usize, cols: usize) -> Matrix {
+        assert_eq!(self.data.len(), rows * cols, "reshape size mismatch");
+        Matrix {
+            rows,
+            cols,
+            data: self.data,
+        }
     }
 
     /// Borrow row `i`.
@@ -167,6 +190,25 @@ mod tests {
         assert_eq!(m.row(0), &[1., 2., 3.]);
         assert_eq!(m.row(1), &[4., 5., 6.]);
         assert_eq!(m.row_block(0, 2).len(), 6);
+    }
+
+    #[test]
+    fn data_is_64_byte_aligned() {
+        for rows in [1usize, 3, 7] {
+            let m = Matrix::random(rows, 5, 42);
+            assert_eq!(m.data().as_ptr() as usize % 64, 0, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn reshape_preserves_buffer() {
+        let m = Matrix::from_vec(2, 6, (0..12).map(|i| i as f32).collect());
+        let data_before = m.data().to_vec();
+        let r = m.reshape(4, 3);
+        assert_eq!(r.rows(), 4);
+        assert_eq!(r.cols(), 3);
+        assert_eq!(r.data(), &data_before[..]);
+        assert_eq!(r.row(1), &[3., 4., 5.]);
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Runtime-dispatched SIMD kernel subsystem — the single home of every
+//! hot arithmetic loop in the system.
+//!
+//! Three call sites funnel through here (via the [`ops`](super::ops)
+//! façade): the worker's row-product compute loops
+//! (`coordinator/worker.rs` → `Engine::matmat_chunk`), the master's
+//! one-shot encode (`coding/erasure.rs`), and the peeling decoder's
+//! per-symbol payload arithmetic (`coding/peeling.rs`, the `_f64`
+//! methods). A [`Kernel`] implementation is selected **once per process**
+//! by [`active`]:
+//!
+//! 1. `RATELESS_KERNEL` env override (`scalar` / `avx2` / `neon`), for
+//!    benches and A/B tests — falls back with a warning if the requested
+//!    path isn't supported on this CPU;
+//! 2. x86-64 with AVX2 **and** FMA detected → [`x86::Avx2Kernel`];
+//! 3. aarch64 with NEON detected → [`neon::NeonKernel`];
+//! 4. otherwise the portable [`scalar::ScalarKernel`].
+//!
+//! **Contract**: on integer-valued `f32` data with all intermediates
+//! below 2²⁴ (the repo's exact-arithmetic convention, see
+//! `Matrix::random_ints`), every implementation must produce results
+//! bit-identical to the scalar reference — any summation order and
+//! FMA's single rounding are exact there. On real-valued data,
+//! implementations may differ by reassociation/FMA rounding only. The
+//! property tests below enforce both.
+//!
+//! Alignment: kernels use unaligned vector loads throughout, so they are
+//! correct for any slice; [`AlignedBuf`](crate::matrix::AlignedBuf) gives
+//! matrix storage a 64-byte base and lane-padded tail so the fast path
+//! stays cache-line friendly.
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use scalar::ScalarKernel;
+
+#[cfg(target_arch = "aarch64")]
+pub use neon::NeonKernel;
+#[cfg(target_arch = "x86_64")]
+pub use x86::Avx2Kernel;
+
+use std::sync::OnceLock;
+
+/// The hot-loop arithmetic surface: vector products for the worker
+/// compute path (f32, the wire dtype) and elementwise payload ops for
+/// the peeling decoder (f64, its internal accumulation dtype).
+pub trait Kernel: Send + Sync {
+    /// Implementation name (diagnostics, bench records).
+    fn name(&self) -> &'static str;
+
+    /// `a · b`.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// `out[i] = block[i,:] · x` for a flat row-major `block`.
+    /// Must equal per-row [`dot`](Self::dot) of the same implementation.
+    fn block_matvec(&self, block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]);
+
+    /// `out = block · X` with row-major `X` of `cols × batch` and
+    /// row-major `out` of `rows × batch` (the register-tiled microkernel
+    /// on the SIMD paths).
+    fn block_matmat(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    );
+
+    /// `acc += src` elementwise.
+    fn add_assign(&self, acc: &mut [f32], src: &[f32]);
+
+    /// `acc -= src` elementwise.
+    fn sub_assign(&self, acc: &mut [f32], src: &[f32]);
+
+    /// `acc += c · src` elementwise.
+    fn axpy(&self, acc: &mut [f32], c: f32, src: &[f32]);
+
+    /// `acc += src` elementwise (decoder payload path).
+    fn add_assign_f64(&self, acc: &mut [f64], src: &[f64]);
+
+    /// `acc -= src` elementwise (decoder payload path).
+    fn sub_assign_f64(&self, acc: &mut [f64], src: &[f64]);
+
+    /// `acc += c · src` elementwise (decoder payload path).
+    fn axpy_f64(&self, acc: &mut [f64], c: f64, src: &[f64]);
+}
+
+static ACTIVE: OnceLock<&'static dyn Kernel> = OnceLock::new();
+
+/// The process-wide dispatched kernel (selected on first call).
+pub fn active() -> &'static dyn Kernel {
+    *ACTIVE.get_or_init(select)
+}
+
+fn auto_detect() -> &'static dyn Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return &x86::Avx2Kernel;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &neon::NeonKernel;
+        }
+    }
+    &scalar::ScalarKernel
+}
+
+fn select() -> &'static dyn Kernel {
+    match std::env::var("RATELESS_KERNEL").ok().as_deref() {
+        Some("scalar") => &scalar::ScalarKernel,
+        Some("avx2") => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                    return &x86::Avx2Kernel;
+                }
+            }
+            crate::warn_!("RATELESS_KERNEL=avx2 unsupported on this CPU; using auto");
+            auto_detect()
+        }
+        Some("neon") => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return &neon::NeonKernel;
+                }
+            }
+            crate::warn_!("RATELESS_KERNEL=neon unsupported on this CPU; using auto");
+            auto_detect()
+        }
+        Some(other) if other != "auto" => {
+            crate::warn_!("unknown RATELESS_KERNEL={other}; using auto");
+            auto_detect()
+        }
+        _ => auto_detect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every kernel reachable on this host: the scalar reference, the
+    /// dispatched one, and each arch-specific implementation whose CPU
+    /// features are present.
+    fn kernels_under_test() -> Vec<&'static dyn Kernel> {
+        let mut v: Vec<&'static dyn Kernel> = vec![&scalar::ScalarKernel, active()];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                v.push(&x86::Avx2Kernel);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(&neon::NeonKernel);
+            }
+        }
+        v
+    }
+
+    /// Deterministic integer-valued data in [-8, 8]: with cols ≤ 128 all
+    /// dot/matmat intermediates stay far below 2²⁴, so results are exact
+    /// in f32 under ANY summation order — bit-for-bit comparable.
+    fn int_data(len: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        (0..len)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                ((state % 17) as i64 - 8) as f32
+            })
+            .collect()
+    }
+
+    fn real_data(len: usize, seed: u64) -> Vec<f32> {
+        int_data(len, seed)
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v * 0.37 + (i as f32) * 1e-3)
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        let a = active();
+        let b = active();
+        // compare data pointers (vtable addresses are not guaranteed unique)
+        let pa = a as *const dyn Kernel as *const ();
+        let pb = b as *const dyn Kernel as *const ();
+        assert_eq!(pa, pb, "dispatch must be selected once");
+        assert!(!a.name().is_empty());
+    }
+
+    #[test]
+    fn every_kernel_matches_scalar_bit_for_bit_on_integer_data() {
+        let reference = &scalar::ScalarKernel;
+        let odd_cols = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 65, 100];
+        let odd_batch = [1usize, 2, 3, 4, 5, 7, 8, 9, 13, 16, 17, 24, 33];
+        for k in kernels_under_test() {
+            for &cols in &odd_cols {
+                let a = int_data(cols, 1);
+                let b = int_data(cols, 2);
+                assert_eq!(
+                    k.dot(&a, &b),
+                    reference.dot(&a, &b),
+                    "{} dot cols={cols}",
+                    k.name()
+                );
+            }
+            for &cols in &[1usize, 3, 7, 16, 33] {
+                for &rows in &[1usize, 2, 3, 4, 5, 7, 9] {
+                    let block = int_data(rows * cols, 3);
+                    let x = int_data(cols, 4);
+                    let mut got = vec![0.0f32; rows];
+                    let mut want = vec![0.0f32; rows];
+                    k.block_matvec(&block, rows, cols, &x, &mut got);
+                    reference.block_matvec(&block, rows, cols, &x, &mut want);
+                    assert_eq!(got, want, "{} matvec {rows}x{cols}", k.name());
+                }
+            }
+            for &cols in &[1usize, 5, 8, 17, 37] {
+                for &rows in &[1usize, 3, 4, 5, 8, 13] {
+                    for &batch in &odd_batch {
+                        let block = int_data(rows * cols, 5);
+                        let x = int_data(cols * batch, 6);
+                        let mut got = vec![f32::NAN; rows * batch];
+                        let mut want = vec![f32::NAN; rows * batch];
+                        k.block_matmat(&block, rows, cols, &x, batch, &mut got);
+                        reference.block_matmat(&block, rows, cols, &x, batch, &mut want);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} matmat {rows}x{cols} batch={batch}",
+                            k.name()
+                        );
+                    }
+                }
+            }
+            for &n in &[1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33] {
+                let src = int_data(n, 7);
+                let mut acc = int_data(n, 8);
+                let mut want = acc.clone();
+                k.add_assign(&mut acc, &src);
+                reference.add_assign(&mut want, &src);
+                assert_eq!(acc, want, "{} add n={n}", k.name());
+                k.sub_assign(&mut acc, &src);
+                reference.sub_assign(&mut want, &src);
+                assert_eq!(acc, want, "{} sub n={n}", k.name());
+                k.axpy(&mut acc, 3.0, &src);
+                reference.axpy(&mut want, 3.0, &src);
+                assert_eq!(acc, want, "{} axpy n={n}", k.name());
+
+                let src64: Vec<f64> = src.iter().map(|&v| v as f64).collect();
+                let mut acc64: Vec<f64> = want.iter().map(|&v| v as f64).collect();
+                let mut want64 = acc64.clone();
+                k.add_assign_f64(&mut acc64, &src64);
+                reference.add_assign_f64(&mut want64, &src64);
+                assert_eq!(acc64, want64, "{} add_f64 n={n}", k.name());
+                k.sub_assign_f64(&mut acc64, &src64);
+                reference.sub_assign_f64(&mut want64, &src64);
+                assert_eq!(acc64, want64, "{} sub_f64 n={n}", k.name());
+                k.axpy_f64(&mut acc64, 2.0, &src64);
+                reference.axpy_f64(&mut want64, 2.0, &src64);
+                assert_eq!(acc64, want64, "{} axpy_f64 n={n}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_tracks_scalar_closely_on_real_data() {
+        let reference = &scalar::ScalarKernel;
+        let (rows, cols, batch) = (13usize, 301usize, 19usize);
+        let block = real_data(rows * cols, 11);
+        let x = real_data(cols * batch, 12);
+        for k in kernels_under_test() {
+            let mut got = vec![0.0f32; rows * batch];
+            let mut want = vec![0.0f32; rows * batch];
+            k.block_matmat(&block, rows, cols, &x, batch, &mut got);
+            reference.block_matmat(&block, rows, cols, &x, batch, &mut want);
+            for i in 0..rows * batch {
+                let tol = 1e-4 * want[i].abs().max(1.0);
+                assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "{} real matmat idx {i}: {} vs {}",
+                    k.name(),
+                    got[i],
+                    want[i]
+                );
+            }
+            let d = k.dot(&block, &real_data(rows * cols, 13));
+            let dr = reference.dot(&block, &real_data(rows * cols, 13));
+            assert!(
+                (d - dr).abs() <= 1e-4 * dr.abs().max(1.0),
+                "{} real dot: {d} vs {dr}",
+                k.name()
+            );
+        }
+    }
+
+    /// The aligned-storage fast path: inputs whose base is 64-byte
+    /// aligned and whose sizes are lane multiples (what `Matrix` hands
+    /// the kernels in production) must agree like any other input.
+    #[test]
+    fn aligned_lane_multiple_inputs_match() {
+        use crate::matrix::AlignedBuf;
+        let reference = &scalar::ScalarKernel;
+        let (rows, cols, batch) = (8usize, 64usize, 16usize);
+        let block = AlignedBuf::from_vec(int_data(rows * cols, 21));
+        let x = AlignedBuf::from_vec(int_data(cols * batch, 22));
+        for k in kernels_under_test() {
+            let mut got = vec![0.0f32; rows * batch];
+            let mut want = vec![0.0f32; rows * batch];
+            k.block_matmat(&block, rows, cols, &x, batch, &mut got);
+            reference.block_matmat(&block, rows, cols, &x, batch, &mut want);
+            assert_eq!(got, want, "{}", k.name());
+        }
+    }
+}

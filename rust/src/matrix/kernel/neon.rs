@@ -1,0 +1,314 @@
+//! NEON kernel (aarch64).
+//!
+//! Mirror of the AVX2 kernel at 128-bit width: the matmat microkernel
+//! tiles **4 A-rows × 8 batch columns** (8 q-register accumulators), with
+//! a 4×4 half panel and scalar edges; `batch == 1` routes to the row-dot
+//! path (same reduction, contiguous `x`). All loads are `vld1q` —
+//! alignment-agnostic — so the 64-byte [`AlignedBuf`](crate::matrix::AlignedBuf)
+//! base is a cache-friendliness guarantee, not a soundness requirement.
+//!
+//! # Safety
+//! Every `unsafe fn` is `#[target_feature(enable = "neon")]`;
+//! [`NeonKernel`] is only constructed by the dispatcher after
+//! `std::arch::is_aarch64_feature_detected!("neon")` succeeds.
+
+#![allow(clippy::missing_safety_doc)]
+
+use std::arch::aarch64::*;
+
+use super::scalar;
+use super::Kernel;
+
+/// Runtime-dispatched NEON implementation.
+pub struct NeonKernel;
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let chunks = n / 16;
+    for i in 0..chunks {
+        let j = i * 16;
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(ap.add(j + 8)), vld1q_f32(bp.add(j + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(ap.add(j + 12)), vld1q_f32(bp.add(j + 12)));
+    }
+    let mut j = chunks * 16;
+    while j + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+        j += 4;
+    }
+    let mut sum = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while j < n {
+        sum += a[j] * b[j];
+        j += 1;
+    }
+    sum
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn block_matvec_neon(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    for i in 0..rows {
+        out[i] = dot_neon(&block[i * cols..(i + 1) * cols], x);
+    }
+}
+
+/// 4 rows × 8 batch columns microkernel.
+#[target_feature(enable = "neon")]
+unsafe fn matmat_4x8(
+    block: &[f32],
+    cols: usize,
+    r0: usize,
+    x: &[f32],
+    batch: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let bp = block.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = [vdupq_n_f32(0.0); 8];
+    for c in 0..cols {
+        let xv0 = vld1q_f32(xp.add(c * batch + j0));
+        let xv1 = vld1q_f32(xp.add(c * batch + j0 + 4));
+        for r in 0..4 {
+            let a = vdupq_n_f32(*bp.add((r0 + r) * cols + c));
+            acc[2 * r] = vfmaq_f32(acc[2 * r], a, xv0);
+            acc[2 * r + 1] = vfmaq_f32(acc[2 * r + 1], a, xv1);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for r in 0..4 {
+        vst1q_f32(op.add((r0 + r) * batch + j0), acc[2 * r]);
+        vst1q_f32(op.add((r0 + r) * batch + j0 + 4), acc[2 * r + 1]);
+    }
+}
+
+/// 4 rows × 4 batch columns half panel.
+#[target_feature(enable = "neon")]
+unsafe fn matmat_4x4(
+    block: &[f32],
+    cols: usize,
+    r0: usize,
+    x: &[f32],
+    batch: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let bp = block.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = [vdupq_n_f32(0.0); 4];
+    for c in 0..cols {
+        let xv = vld1q_f32(xp.add(c * batch + j0));
+        for r in 0..4 {
+            let a = vdupq_n_f32(*bp.add((r0 + r) * cols + c));
+            acc[r] = vfmaq_f32(acc[r], a, xv);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for r in 0..4 {
+        vst1q_f32(op.add((r0 + r) * batch + j0), acc[r]);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn block_matmat_neon(
+    block: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    if batch == 1 {
+        block_matvec_neon(block, rows, cols, x, out);
+        return;
+    }
+    let rb = rows - rows % 4;
+    for r0 in (0..rb).step_by(4) {
+        let mut j = 0usize;
+        while j + 8 <= batch {
+            matmat_4x8(block, cols, r0, x, batch, j, out);
+            j += 8;
+        }
+        if j + 4 <= batch {
+            matmat_4x4(block, cols, r0, x, batch, j, out);
+            j += 4;
+        }
+        if j < batch {
+            scalar::matmat_edge(block, cols, r0, r0 + 4, x, batch, j, batch, out);
+        }
+    }
+    if rb < rows {
+        scalar::matmat_edge(block, cols, rb, rows, x, batch, 0, batch, out);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn add_assign_neon(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = vld1q_f32(acc.as_ptr().add(j));
+        let s = vld1q_f32(src.as_ptr().add(j));
+        vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(a, s));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sub_assign_neon(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = vld1q_f32(acc.as_ptr().add(j));
+        let s = vld1q_f32(src.as_ptr().add(j));
+        vst1q_f32(acc.as_mut_ptr().add(j), vsubq_f32(a, s));
+        j += 4;
+    }
+    while j < n {
+        acc[j] -= src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(acc: &mut [f32], c: f32, src: &[f32]) {
+    let n = acc.len();
+    let cv = vdupq_n_f32(c);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = vld1q_f32(acc.as_ptr().add(j));
+        let s = vld1q_f32(src.as_ptr().add(j));
+        vst1q_f32(acc.as_mut_ptr().add(j), vfmaq_f32(a, cv, s));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += c * src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn add_assign_f64_neon(acc: &mut [f64], src: &[f64]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 2 <= n {
+        let a = vld1q_f64(acc.as_ptr().add(j));
+        let s = vld1q_f64(src.as_ptr().add(j));
+        vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, s));
+        j += 2;
+    }
+    while j < n {
+        acc[j] += src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sub_assign_f64_neon(acc: &mut [f64], src: &[f64]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 2 <= n {
+        let a = vld1q_f64(acc.as_ptr().add(j));
+        let s = vld1q_f64(src.as_ptr().add(j));
+        vst1q_f64(acc.as_mut_ptr().add(j), vsubq_f64(a, s));
+        j += 2;
+    }
+    while j < n {
+        acc[j] -= src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f64_neon(acc: &mut [f64], c: f64, src: &[f64]) {
+    let n = acc.len();
+    let cv = vdupq_n_f64(c);
+    let mut j = 0usize;
+    while j + 2 <= n {
+        let a = vld1q_f64(acc.as_ptr().add(j));
+        let s = vld1q_f64(src.as_ptr().add(j));
+        vst1q_f64(acc.as_mut_ptr().add(j), vfmaq_f64(a, cv, s));
+        j += 2;
+    }
+    while j < n {
+        acc[j] += c * src[j];
+        j += 1;
+    }
+}
+
+impl Kernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    // The shape asserts below are what keep this safe API sound: the
+    // unsafe fns size their raw-pointer loads off these relations.
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe { dot_neon(a, b) }
+    }
+
+    fn block_matvec(&self, block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols);
+        assert_eq!(out.len(), rows);
+        unsafe { block_matvec_neon(block, rows, cols, x, out) }
+    }
+
+    fn block_matmat(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols * batch);
+        assert_eq!(out.len(), rows * batch);
+        unsafe { block_matmat_neon(block, rows, cols, x, batch, out) }
+    }
+
+    fn add_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { add_assign_neon(acc, src) }
+    }
+
+    fn sub_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { sub_assign_neon(acc, src) }
+    }
+
+    fn axpy(&self, acc: &mut [f32], c: f32, src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { axpy_neon(acc, c, src) }
+    }
+
+    fn add_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { add_assign_f64_neon(acc, src) }
+    }
+
+    fn sub_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { sub_assign_f64_neon(acc, src) }
+    }
+
+    fn axpy_f64(&self, acc: &mut [f64], c: f64, src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { axpy_f64_neon(acc, c, src) }
+    }
+}

@@ -1,0 +1,205 @@
+//! Portable scalar reference kernel.
+//!
+//! Every other [`Kernel`] implementation is defined by this one: the
+//! property tests require bit-identical results on integer-valued data
+//! (where every summation order is exact in f32), and close agreement on
+//! real data. The loops are written with independent accumulator lanes so
+//! LLVM autovectorizes them even without explicit intrinsics — this is
+//! the path the pre-kernel `matrix::ops` shipped, kept as the dispatch
+//! fallback and the correctness oracle.
+
+use super::Kernel;
+
+/// The reference implementation (always available, any arch).
+pub struct ScalarKernel;
+
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..n {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+pub(super) fn block_matvec(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    for i in 0..rows {
+        out[i] = dot(&block[i * cols..(i + 1) * cols], x);
+    }
+}
+
+/// One tiled path for every `batch >= 1` — no `batch == 1` early return,
+/// so single-vector and batched jobs share one numerical behaviour (the
+/// transposed 4-column accumulation below).
+pub(super) fn block_matmat(
+    block: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    let col_chunks = cols / 4;
+    for r in 0..rows {
+        let arow = &block[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * batch..(r + 1) * batch];
+        orow.fill(0.0);
+        for i in 0..col_chunks {
+            let c = i * 4;
+            let (a0, a1, a2, a3) = (arow[c], arow[c + 1], arow[c + 2], arow[c + 3]);
+            let x0 = &x[c * batch..(c + 1) * batch];
+            let x1 = &x[(c + 1) * batch..(c + 2) * batch];
+            let x2 = &x[(c + 2) * batch..(c + 3) * batch];
+            let x3 = &x[(c + 3) * batch..(c + 4) * batch];
+            for j in 0..batch {
+                orow[j] += a0 * x0[j] + a1 * x1[j] + a2 * x2[j] + a3 * x3[j];
+            }
+        }
+        for c in col_chunks * 4..cols {
+            axpy(orow, arow[c], &x[c * batch..(c + 1) * batch]);
+        }
+    }
+}
+
+/// Scalar edge-panel fallback shared by the SIMD kernels: computes
+/// `out[r][j]` for the rectangle `r_start..r_end × j_start..j_end`
+/// element-by-element (assignment, not accumulation).
+#[cfg_attr(
+    not(any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(dead_code)
+)]
+#[allow(clippy::too_many_arguments)]
+pub(super) fn matmat_edge(
+    block: &[f32],
+    cols: usize,
+    r_start: usize,
+    r_end: usize,
+    x: &[f32],
+    batch: usize,
+    j_start: usize,
+    j_end: usize,
+    out: &mut [f32],
+) {
+    for r in r_start..r_end {
+        let arow = &block[r * cols..(r + 1) * cols];
+        for j in j_start..j_end {
+            let mut s = 0.0f32;
+            for (c, &a) in arow.iter().enumerate() {
+                s += a * x[c * batch + j];
+            }
+            out[r * batch + j] = s;
+        }
+    }
+}
+
+pub(super) fn add_assign(acc: &mut [f32], src: &[f32]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += s;
+    }
+}
+
+pub(super) fn sub_assign(acc: &mut [f32], src: &[f32]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a -= s;
+    }
+}
+
+pub(super) fn axpy(acc: &mut [f32], c: f32, src: &[f32]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += c * s;
+    }
+}
+
+pub(super) fn add_assign_f64(acc: &mut [f64], src: &[f64]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += s;
+    }
+}
+
+pub(super) fn sub_assign_f64(acc: &mut [f64], src: &[f64]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a -= s;
+    }
+}
+
+pub(super) fn axpy_f64(acc: &mut [f64], c: f64, src: &[f64]) {
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a += c * s;
+    }
+}
+
+impl Kernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    // Same shape asserts as the SIMD impls, so misuse fails identically
+    // on every kernel instead of silently truncating here.
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        dot(a, b)
+    }
+
+    fn block_matvec(&self, block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols);
+        assert_eq!(out.len(), rows);
+        block_matvec(block, rows, cols, x, out)
+    }
+
+    fn block_matmat(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols * batch);
+        assert_eq!(out.len(), rows * batch);
+        block_matmat(block, rows, cols, x, batch, out)
+    }
+
+    fn add_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        add_assign(acc, src)
+    }
+
+    fn sub_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        sub_assign(acc, src)
+    }
+
+    fn axpy(&self, acc: &mut [f32], c: f32, src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        axpy(acc, c, src)
+    }
+
+    fn add_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        add_assign_f64(acc, src)
+    }
+
+    fn sub_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        sub_assign_f64(acc, src)
+    }
+
+    fn axpy_f64(&self, acc: &mut [f64], c: f64, src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        axpy_f64(acc, c, src)
+    }
+}

@@ -1,0 +1,339 @@
+//! AVX2 + FMA kernel (x86-64).
+//!
+//! Layout assumptions: none beyond what safe slices give — every vector
+//! access uses unaligned loads/stores (`loadu`/`storeu`), which run at
+//! full speed on aligned data on every AVX2-era core, so interior rows of
+//! a shard (whose offsets depend on `cols`) are as fast as the 64-byte
+//! aligned base the [`AlignedBuf`](crate::matrix::AlignedBuf) guarantees.
+//! Tails shorter than one lane fall back to scalar code.
+//!
+//! The matmat path is the register-tiled microkernel of the kernel
+//! subsystem: panels of **4 A-rows × 16 batch columns** (8 ymm
+//! accumulators + 1 broadcast + 2 x-lane registers = 11 of 16 ymm) stream
+//! each A element from memory exactly once while all partial sums stay in
+//! registers. `batch == 1` routes to the row-dot path, which is the same
+//! reduction with a contiguous `x` (the strided microkernel degenerates
+//! to gathers there).
+//!
+//! # Safety
+//! Every `unsafe fn` here is `#[target_feature(enable = "avx2,fma")]`;
+//! [`Avx2Kernel`] is only ever constructed by the dispatcher after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`,
+//! which is what makes the internal `unsafe { .. }` calls sound.
+
+#![allow(clippy::missing_safety_doc)]
+
+use std::arch::x86_64::*;
+
+use super::scalar;
+use super::Kernel;
+
+/// Runtime-dispatched AVX2+FMA implementation.
+pub struct Avx2Kernel;
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let chunks = n / 32;
+    for i in 0..chunks {
+        let j = i * 32;
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 8)),
+            _mm256_loadu_ps(bp.add(j + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 16)),
+            _mm256_loadu_ps(bp.add(j + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 24)),
+            _mm256_loadu_ps(bp.add(j + 24)),
+            acc3,
+        );
+    }
+    let mut j = chunks * 32;
+    while j + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+        j += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut sum = lanes.iter().sum::<f32>();
+    while j < n {
+        sum += a[j] * b[j];
+        j += 1;
+    }
+    sum
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn block_matvec_avx2(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    for i in 0..rows {
+        out[i] = dot_avx2(&block[i * cols..(i + 1) * cols], x);
+    }
+}
+
+/// 4 rows × 16 batch columns microkernel.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmat_4x16(
+    block: &[f32],
+    cols: usize,
+    r0: usize,
+    x: &[f32],
+    batch: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let bp = block.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = [_mm256_setzero_ps(); 8];
+    for c in 0..cols {
+        let xv0 = _mm256_loadu_ps(xp.add(c * batch + j0));
+        let xv1 = _mm256_loadu_ps(xp.add(c * batch + j0 + 8));
+        for r in 0..4 {
+            let a = _mm256_set1_ps(*bp.add((r0 + r) * cols + c));
+            acc[2 * r] = _mm256_fmadd_ps(a, xv0, acc[2 * r]);
+            acc[2 * r + 1] = _mm256_fmadd_ps(a, xv1, acc[2 * r + 1]);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for r in 0..4 {
+        _mm256_storeu_ps(op.add((r0 + r) * batch + j0), acc[2 * r]);
+        _mm256_storeu_ps(op.add((r0 + r) * batch + j0 + 8), acc[2 * r + 1]);
+    }
+}
+
+/// 4 rows × 8 batch columns microkernel (the 16-wide kernel's half panel).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matmat_4x8(
+    block: &[f32],
+    cols: usize,
+    r0: usize,
+    x: &[f32],
+    batch: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let bp = block.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = [_mm256_setzero_ps(); 4];
+    for c in 0..cols {
+        let xv = _mm256_loadu_ps(xp.add(c * batch + j0));
+        for r in 0..4 {
+            let a = _mm256_set1_ps(*bp.add((r0 + r) * cols + c));
+            acc[r] = _mm256_fmadd_ps(a, xv, acc[r]);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for r in 0..4 {
+        _mm256_storeu_ps(op.add((r0 + r) * batch + j0), acc[r]);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn block_matmat_avx2(
+    block: &[f32],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    if batch == 1 {
+        // contiguous-x degenerate case: the row-dot reduction
+        block_matvec_avx2(block, rows, cols, x, out);
+        return;
+    }
+    let rb = rows - rows % 4;
+    for r0 in (0..rb).step_by(4) {
+        let mut j = 0usize;
+        while j + 16 <= batch {
+            matmat_4x16(block, cols, r0, x, batch, j, out);
+            j += 16;
+        }
+        if j + 8 <= batch {
+            matmat_4x8(block, cols, r0, x, batch, j, out);
+            j += 8;
+        }
+        if j < batch {
+            scalar::matmat_edge(block, cols, r0, r0 + 4, x, batch, j, batch, out);
+        }
+    }
+    if rb < rows {
+        scalar::matmat_edge(block, cols, rb, rows, x, batch, 0, batch, out);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn add_assign_avx2(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(a, s));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sub_assign_avx2(acc: &mut [f32], src: &[f32]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_sub_ps(a, s));
+        j += 8;
+    }
+    while j < n {
+        acc[j] -= src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(acc: &mut [f32], c: f32, src: &[f32]) {
+    let n = acc.len();
+    let cv = _mm256_set1_ps(c);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_fmadd_ps(cv, s, a));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += c * src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn add_assign_f64_avx2(acc: &mut [f64], src: &[f64]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+        let s = _mm256_loadu_pd(src.as_ptr().add(j));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, s));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sub_assign_f64_avx2(acc: &mut [f64], src: &[f64]) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+        let s = _mm256_loadu_pd(src.as_ptr().add(j));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_sub_pd(a, s));
+        j += 4;
+    }
+    while j < n {
+        acc[j] -= src[j];
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_f64_avx2(acc: &mut [f64], c: f64, src: &[f64]) {
+    let n = acc.len();
+    let cv = _mm256_set1_pd(c);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+        let s = _mm256_loadu_pd(src.as_ptr().add(j));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_fmadd_pd(cv, s, a));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += c * src[j];
+        j += 1;
+    }
+}
+
+impl Kernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2+fma"
+    }
+
+    // The shape asserts below are what keep this safe API sound: the
+    // unsafe fns size their raw-pointer loads off these relations.
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        unsafe { dot_avx2(a, b) }
+    }
+
+    fn block_matvec(&self, block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols);
+        assert_eq!(out.len(), rows);
+        unsafe { block_matvec_avx2(block, rows, cols, x, out) }
+    }
+
+    fn block_matmat(
+        &self,
+        block: &[f32],
+        rows: usize,
+        cols: usize,
+        x: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(block.len(), rows * cols);
+        assert_eq!(x.len(), cols * batch);
+        assert_eq!(out.len(), rows * batch);
+        unsafe { block_matmat_avx2(block, rows, cols, x, batch, out) }
+    }
+
+    fn add_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { add_assign_avx2(acc, src) }
+    }
+
+    fn sub_assign(&self, acc: &mut [f32], src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { sub_assign_avx2(acc, src) }
+    }
+
+    fn axpy(&self, acc: &mut [f32], c: f32, src: &[f32]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { axpy_avx2(acc, c, src) }
+    }
+
+    fn add_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { add_assign_f64_avx2(acc, src) }
+    }
+
+    fn sub_assign_f64(&self, acc: &mut [f64], src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { sub_assign_f64_avx2(acc, src) }
+    }
+
+    fn axpy_f64(&self, acc: &mut [f64], c: f64, src: &[f64]) {
+        assert_eq!(acc.len(), src.len());
+        unsafe { axpy_f64_avx2(acc, c, src) }
+    }
+}

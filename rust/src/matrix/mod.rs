@@ -1,8 +1,16 @@
-//! Dense row-major matrix/vector types and the synthetic dataset
-//! generator used in place of STL-10 (DESIGN.md substitution table).
+//! Dense row-major matrix/vector types, the SIMD kernel subsystem, and
+//! the synthetic dataset generator used in place of STL-10 (DESIGN.md
+//! substitution table).
+//!
+//! Storage is 64-byte-aligned and lane-padded ([`AlignedBuf`]); the hot
+//! arithmetic loops live in [`kernel`] behind runtime CPU-feature
+//! dispatch, with [`ops`] as the stable free-function façade.
 
+mod aligned;
 pub mod dataset;
 mod dense;
+pub mod kernel;
 pub mod ops;
 
+pub use aligned::AlignedBuf;
 pub use dense::Matrix;

@@ -1,49 +1,41 @@
-//! Hot-path vector kernels. These are the native fallback for the PJRT
-//! artifacts and the reference the integration tests compare against.
+//! Hot-path vector kernels — the stable free-function façade over the
+//! runtime-dispatched [`kernel`](super::kernel) subsystem.
 //!
-//! `dot` is written as 4 independent accumulator lanes so LLVM
-//! autovectorizes it; see EXPERIMENTS.md §Perf for measured impact.
+//! Call sites (worker compute loops, encoders, decoders, tests) keep this
+//! flat API; the implementation behind it is chosen once per process:
+//! AVX2+FMA on capable x86-64, NEON on aarch64, and the autovectorized
+//! scalar reference otherwise (see `kernel::active`). Shape checks live
+//! here so every implementation can assume validated inputs.
 
-/// Dot product with 4-way unrolled independent accumulators.
+use super::kernel;
+
+/// Dot product.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut tail = 0.0f32;
-    for j in chunks * 4..n {
-        tail += a[j] * b[j];
-    }
-    (s0 + s1) + (s2 + s3) + tail
+    assert_eq!(a.len(), b.len());
+    kernel::active().dot(a, b)
 }
 
 /// `out[i] = block[i,:]·x` for a flat row-major `block` of `rows` rows.
 pub fn block_matvec(block: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(block.len(), rows * cols);
-    debug_assert_eq!(x.len(), cols);
-    debug_assert_eq!(out.len(), rows);
-    for i in 0..rows {
-        out[i] = dot(&block[i * cols..(i + 1) * cols], x);
-    }
+    assert_eq!(block.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    assert_eq!(out.len(), rows);
+    kernel::active().block_matvec(block, rows, cols, x, out)
 }
 
 /// `out = block · X` for a flat row-major `block` of `rows × cols` and a
 /// row-major `X` of `cols × batch` (row `c` holds feature `c` of every
 /// batched vector). `out` is row-major `rows × batch`.
 ///
-/// The inner loop runs over the contiguous batch dimension with 4 matrix
-/// columns in flight (the same 4 independent-accumulator idiom as [`dot`],
-/// transposed), so each `block` row is streamed from memory exactly once
-/// per job regardless of batch width — that is what makes batched serving
-/// nearly free relative to `batch` independent matvecs.
+/// There is deliberately no `batch == 1` special case at this layer or
+/// in the scalar reference: the reference's tiled loop handles every
+/// `batch ≥ 1`, so the numerical contract is one code path. The SIMD
+/// implementations route `batch == 1` to their vectorized row-dot (a
+/// different summation order, so last-ulp divergence is possible on
+/// real-valued data there); on the repo's integer-exact data (see
+/// `Matrix::random_ints`) every route is bit-identical, which is what
+/// the property tests pin.
 pub fn block_matmat(
     block: &[f32],
     rows: usize,
@@ -52,60 +44,31 @@ pub fn block_matmat(
     batch: usize,
     out: &mut [f32],
 ) {
-    debug_assert_eq!(block.len(), rows * cols);
-    debug_assert_eq!(x.len(), cols * batch);
-    debug_assert_eq!(out.len(), rows * batch);
-    if batch == 1 {
-        block_matvec(block, rows, cols, x, out);
-        return;
-    }
-    let col_chunks = cols / 4;
-    for r in 0..rows {
-        let arow = &block[r * cols..(r + 1) * cols];
-        let orow = &mut out[r * batch..(r + 1) * batch];
-        orow.fill(0.0);
-        for i in 0..col_chunks {
-            let c = i * 4;
-            let (a0, a1, a2, a3) = (arow[c], arow[c + 1], arow[c + 2], arow[c + 3]);
-            let x0 = &x[c * batch..(c + 1) * batch];
-            let x1 = &x[(c + 1) * batch..(c + 2) * batch];
-            let x2 = &x[(c + 2) * batch..(c + 3) * batch];
-            let x3 = &x[(c + 3) * batch..(c + 4) * batch];
-            for j in 0..batch {
-                orow[j] += a0 * x0[j] + a1 * x1[j] + a2 * x2[j] + a3 * x3[j];
-            }
-        }
-        for c in col_chunks * 4..cols {
-            axpy(orow, arow[c], &x[c * batch..(c + 1) * batch]);
-        }
-    }
+    assert_eq!(block.len(), rows * cols);
+    assert_eq!(x.len(), cols * batch);
+    assert_eq!(out.len(), rows * batch);
+    kernel::active().block_matmat(block, rows, cols, x, batch, out)
 }
 
 /// `acc += src` elementwise.
 #[inline]
 pub fn add_assign(acc: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(acc.len(), src.len());
-    for (a, s) in acc.iter_mut().zip(src) {
-        *a += s;
-    }
+    assert_eq!(acc.len(), src.len());
+    kernel::active().add_assign(acc, src)
 }
 
 /// `acc -= src` elementwise.
 #[inline]
 pub fn sub_assign(acc: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(acc.len(), src.len());
-    for (a, s) in acc.iter_mut().zip(src) {
-        *a -= s;
-    }
+    assert_eq!(acc.len(), src.len());
+    kernel::active().sub_assign(acc, src)
 }
 
-/// `acc += c * src` elementwise (f64 coefficient, f32 data).
+/// `acc += c * src` elementwise.
 #[inline]
 pub fn axpy(acc: &mut [f32], c: f32, src: &[f32]) {
-    debug_assert_eq!(acc.len(), src.len());
-    for (a, s) in acc.iter_mut().zip(src) {
-        *a += c * s;
-    }
+    assert_eq!(acc.len(), src.len());
+    kernel::active().axpy(acc, c, src)
 }
 
 #[cfg(test)]

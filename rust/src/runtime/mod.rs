@@ -2,8 +2,9 @@
 //!
 //! Two engines compute chunk products `A_chunk · x`:
 //!
-//! * [`Engine::Native`] — the autovectorized Rust kernel
-//!   (`matrix::ops::block_matvec`), always available.
+//! * [`Engine::Native`] — the runtime-dispatched SIMD kernel
+//!   (`matrix::kernel` via the `matrix::ops` façade: AVX2+FMA / NEON /
+//!   scalar, selected once per process), always available.
 //! * [`Engine::Pjrt`] — AOT-compiled HLO artifacts executed on the PJRT
 //!   CPU client (the `xla` crate), proving the Python-authored L1/L2
 //!   layers run under the Rust coordinator with Python out of the loop.
@@ -96,7 +97,8 @@ impl Engine {
     /// Compute `block (rows×cols) · X` for `X` of `cols × batch` row-major;
     /// the result is `rows × batch` row-major.
     ///
-    /// Native uses the blocked matmat kernel (`ops::block_matmat`) — the
+    /// Native uses the blocked matmat kernel (`ops::block_matmat`, the
+    /// register-tiled SIMD microkernel on capable CPUs) — the
     /// batched-serving hot path. The PJRT artifacts are single-vector, so
     /// that engine falls back to one artifact execution per batch column
     /// (correct, but without the batching win; batched AOT artifacts are a

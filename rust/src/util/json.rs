@@ -10,8 +10,11 @@ pub enum Json {
     Null,
     Bool(bool),
     Int(i64),
-    /// Rendered with enough precision to round-trip; non-finite values
-    /// render as `null` (JSON has no NaN/Inf).
+    /// Rendered with enough precision to round-trip. JSON has no
+    /// NaN/Inf, so non-finite values are **escaped to string tokens**
+    /// (`"NaN"`, `"Infinity"`, `"-Infinity"`): a degenerate bench run
+    /// still emits a parseable document, and the bad value stays
+    /// diagnosable instead of silently collapsing to `null`.
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
@@ -43,7 +46,16 @@ impl Json {
                 if x.is_finite() {
                     out.push_str(&x.to_string());
                 } else {
-                    out.push_str("null");
+                    let token = if x.is_nan() {
+                        "NaN"
+                    } else if *x > 0.0 {
+                        "Infinity"
+                    } else {
+                        "-Infinity"
+                    };
+                    out.push('"');
+                    out.push_str(token);
+                    out.push('"');
                 }
             }
             Json::Str(s) => {
@@ -108,8 +120,16 @@ mod tests {
         ]);
         assert_eq!(
             doc.render(),
-            r#"{"bench":"loadbalance","m":8192,"frac":0.03125,"bad":null,"rows":[{"name":"ideal-lb","ok":true}]}"#
+            r#"{"bench":"loadbalance","m":8192,"frac":0.03125,"bad":"NaN","rows":[{"name":"ideal-lb","ok":true}]}"#
         );
+    }
+
+    #[test]
+    fn non_finite_numbers_stay_valid_json() {
+        assert_eq!(Json::Num(f64::NAN).render(), r#""NaN""#);
+        assert_eq!(Json::Num(f64::INFINITY).render(), r#""Infinity""#);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).render(), r#""-Infinity""#);
+        assert_eq!(Json::Num(1.5).render(), "1.5");
     }
 
     #[test]

@@ -12,6 +12,50 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Something that can run a batch of independent tasks to completion.
+///
+/// The contract is a barrier: `run_all` returns only after **every** task
+/// has finished. Implementations: [`SerialExec`] (inline, in order — the
+/// determinism reference), [`ThreadPool`] (generic data parallelism) and
+/// the coordinator's `WorkerPool` (the already-resident worker threads,
+/// used for the parallel encode pipeline).
+pub trait Executor: Sync {
+    fn run_all(&self, tasks: Vec<Job>);
+}
+
+/// Runs tasks inline, in submission order — the zero-thread executor.
+pub struct SerialExec;
+
+impl Executor for SerialExec {
+    fn run_all(&self, tasks: Vec<Job>) {
+        for task in tasks {
+            task();
+        }
+    }
+}
+
+impl Executor for ThreadPool {
+    fn run_all(&self, tasks: Vec<Job>) {
+        let n = tasks.len();
+        let (tx, rx) = channel::<()>();
+        for task in tasks {
+            let tx = tx.clone();
+            self.execute(move || {
+                task();
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        let mut done = 0usize;
+        while done < n {
+            match rx.recv() {
+                Ok(()) => done += 1,
+                Err(_) => panic!("pool thread died with {} of {n} tasks unfinished", n - done),
+            }
+        }
+    }
+}
+
 enum Message {
     Run(Job),
     Shutdown,
@@ -127,6 +171,29 @@ mod tests {
         let pool = ThreadPool::new(8);
         let out = pool.map((0..1000).collect::<Vec<i64>>(), |x| x * 2);
         assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn run_all_is_a_barrier() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..50)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.run_all(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        SerialExec.run_all(vec![{
+            let c = Arc::clone(&counter);
+            Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+        }]);
+        assert_eq!(counter.load(Ordering::SeqCst), 51);
     }
 
     #[test]

@@ -1,0 +1,75 @@
+//! Adaptive batch sizing under the §5 queueing model: the same Poisson
+//! request stream served at a low and a high arrival rate, under fixed
+//! batch sizes and the adaptive policy. The adaptive front-end tracks
+//! the load point — b → 1 when latency-bound, large b when
+//! throughput-bound — and its chosen operating point matches the
+//! analytic (λ, b) sweep of `sim::queueing`.
+//!
+//! ```sh
+//! cargo run --release --example adaptive_serving -- --requests 80
+//! ```
+
+use rateless::cli::Args;
+use rateless::coordinator::stream::run_stream_batched;
+use rateless::prelude::*;
+use rateless::sim::queueing::{optimal_fixed_b, BatchService};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let (m, n, p) = (1024usize, 64usize, 4usize);
+    let requests = args.usize("requests", 80);
+    let a = Matrix::random_ints(m, n, 3, 1);
+    let cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 2000.0 },
+        tau: 2e-5,
+        real_sleep: true,
+        time_scale: args.f64("time-scale", 0.25),
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )?;
+
+    // one probe job fixes the λ grid at ρ(1) ≈ 0.2 and 0.9
+    let probe = coord.multiply(&Matrix::random_int_vector(n, 1, 2))?;
+    let t1 = probe.latency;
+    println!("E[T(1)] ≈ {t1:.4}s (virtual); sweeping λ·E[T(1)] ∈ {{0.2, 0.9}}");
+
+    for &rho in &[0.2f64, 0.9] {
+        let lambda = rho / t1;
+        println!("\n-- λ = {lambda:.1} (ρ(1) ≈ {rho}) --");
+        let policies: Vec<Box<dyn BatchPolicy>> = vec![
+            Box::new(Fixed { b: 1 }),
+            Box::new(Fixed { b: 8 }),
+            Box::new(Fixed { b: 32 }),
+            Box::new(Adaptive::with_bounds(1, 32)),
+        ];
+        let mut best_fixed = f64::INFINITY;
+        for policy in policies {
+            let name = policy.name();
+            let out = run_stream_batched(&coord, lambda, requests, policy, 11)?;
+            if name != "adaptive" {
+                best_fixed = best_fixed.min(out.mean_response);
+            }
+            println!(
+                "{name:>10}: E[Z] = {:.4}s  p95 = {:.4}s  mean b = {:.2}  jobs = {}",
+                out.mean_response, out.p95_response, out.mean_batch, out.jobs
+            );
+        }
+        // analytic cross-check: the (λ, b) sweep on the fitted service model
+        let model = BatchService {
+            base: t1,
+            per_vector: 0.0,
+            noise: 0.1 * t1,
+        };
+        let mut rng = Rng::new(3);
+        let (b_star, z_star) = optimal_fixed_b(&model, lambda, &[1, 8, 32], 5, 2000, &mut rng);
+        println!(" analytic sweep: optimal fixed b = {b_star} (E[Z] ≈ {z_star:.4}s)");
+    }
+    println!("\nadaptive_serving OK");
+    Ok(())
+}

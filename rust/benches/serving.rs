@@ -1,0 +1,141 @@
+//! Bench: the adaptive batching front-end vs fixed batch sizes across
+//! the load spectrum (paper §5 + ROADMAP adaptive batch sizing).
+//!
+//! Poisson(λ) single-vector requests are served through the batcher at
+//! three operating points — λ·E[T(1)] ≈ {0.2, 0.6, 0.9} — under
+//! `Fixed(1)`, `Fixed(8)`, `Fixed(32)` and the `Adaptive` policy
+//! (candidates 1..32). The whole pipeline runs in virtual time, so E[Z]
+//! is deterministic-in-distribution and the wall cost is only the
+//! real-sleep pacing of each job.
+//!
+//! Emits `BENCH_serving.json` (directory override: `RATELESS_BENCH_DIR`).
+//! With `RATELESS_BENCH_STRICT=1` the run additionally asserts that the
+//! adaptive policy is within 10% of the best fixed batch size at every
+//! operating point.
+//!
+//! `cargo bench --bench serving`.
+
+use rateless::coordinator::stream::run_stream_batched;
+use rateless::coordinator::JobOptions;
+use rateless::prelude::*;
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let time_scale: f64 = env_or("RATELESS_BENCH_TIME_SCALE", 0.05);
+    let requests: usize = env_or("RATELESS_BENCH_REQUESTS", 120);
+    let strict = std::env::var("RATELESS_BENCH_STRICT").ok().as_deref() == Some("1");
+    let (m, n, p) = (2048usize, 64usize, 4usize);
+    let a = Matrix::random_ints(m, n, 3, 1);
+    let cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 2000.0 },
+        tau: 2e-5,
+        block_fraction: 0.1,
+        seed: 42,
+        real_sleep: true,
+        time_scale,
+        symbol_width: 1,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )?;
+
+    // measure E[T(1)] to place the λ grid (3 seeded warmup jobs)
+    let mut t1 = 0.0f64;
+    for j in 0..3u64 {
+        let x = Matrix::random_ints(n, 1, 1, 70 + j);
+        let res = coord.multiply_batch_opts(
+            &x,
+            &JobOptions {
+                seed: Some(700 + j),
+                profile: None,
+            },
+        )?;
+        t1 += res.latency / 3.0;
+    }
+    println!(
+        "serving bench: {m}x{n}, p={p}, LT α=2, E[T(1)] = {t1:.4}s, \
+         {requests} requests per run, time_scale={time_scale}"
+    );
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "ρ(1)", "λ", "policy", "E[Z] (s)", "p95 (s)", "mean b", "jobs"
+    );
+
+    let mut points = Vec::new();
+    let mut all_ok = true;
+    for &rho in &[0.2f64, 0.6, 0.9] {
+        let lambda = rho / t1;
+        let mut rows = Vec::new();
+        let mut best_fixed = f64::INFINITY;
+        let mut adaptive_z = f64::INFINITY;
+        let policies: Vec<Box<dyn BatchPolicy>> = vec![
+            Box::new(Fixed { b: 1 }),
+            Box::new(Fixed { b: 8 }),
+            Box::new(Fixed { b: 32 }),
+            Box::new(Adaptive::with_bounds(1, 32)),
+        ];
+        for policy in policies {
+            let name = policy.name();
+            let out = run_stream_batched(&coord, lambda, requests, policy, 9000)?;
+            println!(
+                "{rho:>6.1} {lambda:>10.1} {name:>10} {:>12.4} {:>12.4} {:>10.2} {:>8}",
+                out.mean_response, out.p95_response, out.mean_batch, out.jobs
+            );
+            if name == "adaptive" {
+                adaptive_z = out.mean_response;
+            } else {
+                best_fixed = best_fixed.min(out.mean_response);
+            }
+            rows.push(Json::obj(vec![
+                ("policy", Json::str(name)),
+                ("mean_response", Json::Num(out.mean_response)),
+                ("p50_response", Json::Num(out.p50_response)),
+                ("p95_response", Json::Num(out.p95_response)),
+                ("p99_response", Json::Num(out.p99_response)),
+                ("mean_service", Json::Num(out.mean_service)),
+                ("mean_batch", Json::Num(out.mean_batch)),
+                ("jobs", Json::Int(out.jobs as i64)),
+            ]));
+        }
+        let ok = adaptive_z <= 1.10 * best_fixed;
+        all_ok &= ok;
+        println!(
+            "       adaptive vs best fixed: {:.4}s vs {:.4}s ({})",
+            adaptive_z,
+            best_fixed,
+            if ok { "ok" } else { "MISS" }
+        );
+        points.push(Json::obj(vec![
+            ("rho_single", Json::Num(rho)),
+            ("lambda", Json::Num(lambda)),
+            ("adaptive_ok", Json::Bool(ok)),
+            ("policies", Json::Arr(rows)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("m", Json::Int(m as i64)),
+        ("n", Json::Int(n as i64)),
+        ("p", Json::Int(p as i64)),
+        ("requests", Json::Int(requests as i64)),
+        ("time_scale", Json::Num(time_scale)),
+        ("mean_t1", Json::Num(t1)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = write_json("BENCH_serving.json", &doc)?;
+    println!("wrote {}", path.display());
+    if strict {
+        assert!(
+            all_ok,
+            "adaptive policy missed the 10% band at some operating point"
+        );
+    }
+    Ok(())
+}

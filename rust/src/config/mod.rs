@@ -19,6 +19,7 @@ pub use parser::{parse, ParseError, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::coordinator::batcher::BatchPolicyKind;
 use crate::coordinator::scheduler::SchedulerKind;
 use crate::util::dist::DelayDist;
 
@@ -124,6 +125,54 @@ pub struct ClusterConfig {
     /// work-stealing scheduler (ideal load balancing when run over the
     /// uncoded partition).
     pub scheduler: SchedulerKind,
+    /// Serving front-end batching knobs (`[batching]` section): how the
+    /// batcher coalesces single-vector requests into `multiply_batch`
+    /// jobs (paper §5 + adaptive batch sizing).
+    pub batching: BatchingConfig,
+}
+
+/// Batching knobs of the serving front-end (`coordinator/batcher.rs`).
+#[derive(Debug, Clone)]
+pub struct BatchingConfig {
+    /// Which [`BatchPolicyKind`] the front-end runs.
+    pub policy: BatchPolicyKind,
+    /// Smallest batch the adaptive policy may pick.
+    pub min_batch: usize,
+    /// Largest batch any policy may dispatch.
+    pub max_batch: usize,
+    /// Deadline policy: max virtual seconds a queued request is held.
+    pub max_wait: f64,
+}
+
+impl Default for BatchingConfig {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicyKind::Adaptive,
+            min_batch: 1,
+            max_batch: 32,
+            max_wait: 5e-3,
+        }
+    }
+}
+
+impl BatchingConfig {
+    /// Read a `[batching]` section; missing keys fall back to defaults.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        let fixed_b = doc.usize("batching", "fixed_b", 8);
+        let policy = {
+            let raw = doc.str("batching", "policy", "adaptive");
+            BatchPolicyKind::parse(&raw, fixed_b).unwrap_or_else(|| {
+                panic!("config batching.policy: expected fixed|deadline|adaptive, got {raw:?}")
+            })
+        };
+        Self {
+            policy,
+            min_batch: doc.usize("batching", "min_batch", d.min_batch).max(1),
+            max_batch: doc.usize("batching", "max_batch", d.max_batch).max(1),
+            max_wait: doc.f64("batching", "max_wait", d.max_wait),
+        }
+    }
 }
 
 impl Default for ClusterConfig {
@@ -139,6 +188,7 @@ impl Default for ClusterConfig {
             symbol_width: 1,
             speeds: Vec::new(),
             scheduler: SchedulerKind::Static,
+            batching: BatchingConfig::default(),
         }
     }
 }
@@ -174,6 +224,7 @@ impl ClusterConfig {
                     panic!("config cluster.scheduler: expected static|stealing, got {raw:?}")
                 })
             },
+            batching: BatchingConfig::from_doc(doc),
         }
     }
 
@@ -276,6 +327,27 @@ alphas = [1.25, 2.0]
         let c = ClusterConfig::from_doc(&doc);
         assert_eq!(c.worker_speeds(), vec![2.0, 1.0, 1.0]);
         assert_eq!(c.scheduler, SchedulerKind::Static);
+    }
+
+    #[test]
+    fn batching_section_parse() {
+        // absent section: adaptive defaults
+        let doc = Doc::from_str("[cluster]\nworkers = 4\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(c.batching.policy, BatchPolicyKind::Adaptive);
+        assert_eq!((c.batching.min_batch, c.batching.max_batch), (1, 32));
+        // explicit fixed policy with its batch size
+        let doc = Doc::from_str(
+            "[batching]\npolicy = \"fixed\"\nfixed_b = 16\nmax_batch = 64\nmax_wait = 0.002\n",
+        )
+        .unwrap();
+        let b = BatchingConfig::from_doc(&doc);
+        assert_eq!(b.policy, BatchPolicyKind::Fixed(16));
+        assert_eq!(b.max_batch, 64);
+        assert!((b.max_wait - 0.002).abs() < 1e-12);
+        // deadline
+        let doc = Doc::from_str("[batching]\npolicy = \"deadline\"\n").unwrap();
+        assert_eq!(BatchingConfig::from_doc(&doc).policy, BatchPolicyKind::Deadline);
     }
 
     #[test]

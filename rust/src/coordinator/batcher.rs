@@ -1,0 +1,670 @@
+//! Adaptive batching front-end for the serving layer (paper §5 + ROADMAP
+//! "pick b from the arrival rate to bound E[Z]").
+//!
+//! Single-vector requests arrive as a stream (Poisson(λ) via
+//! [`poisson_requests`], or caller-driven with explicit arrival times) and
+//! queue at the master. The [`Batcher`] coalesces them into
+//! [`Coordinator::multiply_batch`] jobs; a pluggable [`BatchPolicy`]
+//! decides the batch size `b`:
+//!
+//! * [`Fixed`] — always accumulate exactly `b` requests (the final
+//!   partial batch flushes when the stream ends);
+//! * [`Deadline`] — dispatch at `max_batch` queued requests or when the
+//!   oldest queued request has waited `max_wait`, whichever first;
+//! * [`Adaptive`] — estimate the arrival rate λ̂ and the per-batch
+//!   service time Ê[T(b)] online (linear fit over measured job
+//!   latencies), then pick the candidate b minimizing the predicted
+//!   per-request response E[Z] under the M/G/1 batching model
+//!   ([`crate::sim::queueing::predicted_batch_response`]): forming delay
+//!   `(b−1)/2λ̂` + Pollaczek–Khinchine wait at job rate λ̂/b + Ê[T(b)].
+//!
+//! The whole pipeline runs in **virtual time** — arrivals carry virtual
+//! timestamps and job service is the coordinator's virtual latency — so
+//! every run is deterministic under a fixed seed and the live system can
+//! be swept against the analytic simulator
+//! ([`crate::sim::queueing::simulate_batched_queue`]) on equal terms. The server
+//! model is the paper's §5 FCFS reduction: one multiply at a time across
+//! the fleet, batch jobs queue behind each other (Lindley recursion over
+//! `dispatch = max(server_free, formed)`).
+
+use super::{Coordinator, JobError, JobOptions};
+use crate::matrix::Matrix;
+use crate::sim::queueing::predicted_batch_response;
+use crate::util::dist::PoissonArrivals;
+use crate::util::rng::{derive_seed, Rng};
+use crate::util::stats::{percentile, OnlineStats};
+
+/// One single-vector request with its virtual arrival time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Virtual arrival time (non-decreasing across the stream).
+    pub arrival: f64,
+    /// Query vector of length `n` (the coordinator matrix's columns).
+    pub x: Vec<f32>,
+}
+
+/// Generate `count` Poisson(λ) requests with seeded random integer
+/// vectors of length `n` — the §5 arrival stream as batcher input.
+pub fn poisson_requests(n: usize, lambda: f64, count: usize, seed: u64) -> Vec<Request> {
+    assert!(lambda > 0.0 && count > 0);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = PoissonArrivals::new(lambda);
+    (0..count)
+        .map(|i| Request {
+            arrival: arrivals.next_arrival(&mut rng),
+            x: Matrix::random_int_vector(n, 1, derive_seed(seed, 40_000 + i as u64)),
+        })
+        .collect()
+}
+
+/// A batch-sizing policy: the batcher asks for the target batch size and
+/// the maximum hold time before every dispatch, and feeds back what it
+/// observed (arrivals as they join the queue, job service times as jobs
+/// complete).
+pub trait BatchPolicy: Send {
+    /// Display name (reports, benches).
+    fn name(&self) -> String;
+
+    /// Batch size the policy currently wants to accumulate.
+    fn target_batch(&self) -> usize;
+
+    /// Max virtual seconds the oldest queued request may be held beyond
+    /// the moment the batching window opens (server free and the request
+    /// arrived) before dispatching whatever is queued.
+    fn max_hold(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    /// A request arrived at virtual time `t` (fed in arrival order).
+    fn observe_arrival(&mut self, t: f64) {
+        let _ = t;
+    }
+
+    /// A batch-`b` job completed with measured virtual latency `service`.
+    fn observe_service(&mut self, batch: usize, service: f64) {
+        let _ = (batch, service);
+    }
+}
+
+/// Always dispatch batches of exactly `b` (the throughput-bound fixed
+/// operating point; at low λ it pays the full forming delay).
+pub struct Fixed {
+    pub b: usize,
+}
+
+impl BatchPolicy for Fixed {
+    fn name(&self) -> String {
+        format!("fixed{}", self.b)
+    }
+
+    fn target_batch(&self) -> usize {
+        self.b.max(1)
+    }
+}
+
+/// Dispatch at `max_batch` queued requests or once the oldest has waited
+/// `max_wait`, whichever comes first — the classic serving-system
+/// compromise when λ is unknown.
+pub struct Deadline {
+    pub max_batch: usize,
+    pub max_wait: f64,
+}
+
+impl BatchPolicy for Deadline {
+    fn name(&self) -> String {
+        format!("deadline{}w{:.0e}", self.max_batch, self.max_wait)
+    }
+
+    fn target_batch(&self) -> usize {
+        self.max_batch.max(1)
+    }
+
+    fn max_hold(&self) -> f64 {
+        self.max_wait
+    }
+}
+
+/// Online E[Z]-minimizing policy: tracks λ̂ from observed arrivals and a
+/// linear service model `Ê[T(b)] = β₀ + β₁·b` (least squares over
+/// measured job latencies, slope clamped ≥ 0), then picks the candidate
+/// batch size minimizing [`predicted_batch_response`]. Until enough
+/// arrivals are seen (`MIN_ARRIVALS`) it stays at the smallest candidate
+/// — the safe latency-bound choice.
+pub struct Adaptive {
+    candidates: Vec<usize>,
+    target: usize,
+    // λ̂ state: arrival count and observed time span
+    arrivals: usize,
+    first_arrival: f64,
+    last_arrival: f64,
+    // least-squares accumulators of (b, T) service observations
+    n_obs: f64,
+    sum_b: f64,
+    sum_bb: f64,
+    sum_t: f64,
+    sum_bt: f64,
+    sum_tt: f64,
+}
+
+/// Arrivals required before the λ̂ estimate is trusted.
+const MIN_ARRIVALS: usize = 8;
+
+impl Adaptive {
+    /// Policy over an explicit candidate set (sorted, deduplicated).
+    pub fn new(mut candidates: Vec<usize>) -> Self {
+        assert!(!candidates.is_empty(), "need at least one candidate b");
+        assert!(candidates.iter().all(|&b| b >= 1));
+        candidates.sort_unstable();
+        candidates.dedup();
+        Self {
+            target: candidates[0],
+            candidates,
+            arrivals: 0,
+            first_arrival: 0.0,
+            last_arrival: 0.0,
+            n_obs: 0.0,
+            sum_b: 0.0,
+            sum_bb: 0.0,
+            sum_t: 0.0,
+            sum_bt: 0.0,
+            sum_tt: 0.0,
+        }
+    }
+
+    /// Doubling candidate ladder between `min_batch` and `max_batch`
+    /// (both included).
+    pub fn with_bounds(min_batch: usize, max_batch: usize) -> Self {
+        let (lo, hi) = (min_batch.max(1), max_batch.max(min_batch.max(1)));
+        let mut candidates = Vec::new();
+        let mut b = lo;
+        while b < hi {
+            candidates.push(b);
+            b *= 2;
+        }
+        candidates.push(hi);
+        Self::new(candidates)
+    }
+
+    /// The candidate set the policy chooses between.
+    pub fn candidates(&self) -> &[usize] {
+        &self.candidates
+    }
+
+    /// Observed arrival-rate estimate, if enough arrivals were seen.
+    pub fn lambda_hat(&self) -> Option<f64> {
+        let span = self.last_arrival - self.first_arrival;
+        if self.arrivals >= MIN_ARRIVALS && span > 0.0 {
+            Some((self.arrivals - 1) as f64 / span)
+        } else {
+            None
+        }
+    }
+
+    /// Fitted mean service time for a batch-`b` job: `β₀ + β₁·b` with
+    /// slope clamped ≥ 0 (service cannot shrink with batch size), or
+    /// `None` before any job completed.
+    pub fn service_hat(&self, b: usize) -> Option<f64> {
+        if self.n_obs < 1.0 {
+            return None;
+        }
+        let (beta0, beta1, _) = self.fit();
+        Some((beta0 + beta1 * b as f64).max(1e-12))
+    }
+
+    /// `(intercept, slope, residual variance)` of the service fit.
+    fn fit(&self) -> (f64, f64, f64) {
+        let n = self.n_obs;
+        let denom = n * self.sum_bb - self.sum_b * self.sum_b;
+        let mut slope = if denom.abs() > 1e-12 {
+            (n * self.sum_bt - self.sum_b * self.sum_t) / denom
+        } else {
+            0.0
+        };
+        slope = slope.max(0.0);
+        let intercept = ((self.sum_t - slope * self.sum_b) / n).max(1e-12);
+        let sse = (self.sum_tt - intercept * self.sum_t - slope * self.sum_bt).max(0.0);
+        (intercept, slope, sse / n)
+    }
+
+    /// Recompute the target batch size from the current estimates.
+    fn choose(&mut self) {
+        let Some(lambda) = self.lambda_hat() else {
+            return; // stay at the current (initially smallest) candidate
+        };
+        if self.n_obs < 1.0 {
+            return;
+        }
+        let (beta0, beta1, var) = self.fit();
+        let mut best: Option<(f64, usize)> = None;
+        for &b in &self.candidates {
+            let mean_s = (beta0 + beta1 * b as f64).max(1e-12);
+            let second = mean_s * mean_s + var;
+            let z = predicted_batch_response(lambda, b, mean_s, second);
+            if best.map(|(bz, _)| z < bz).unwrap_or(true) {
+                best = Some((z, b));
+            }
+        }
+        self.target = match best {
+            // every candidate unstable: take the largest (max throughput)
+            Some((z, _)) if z.is_infinite() => *self.candidates.last().expect("non-empty"),
+            Some((_, b)) => b,
+            None => self.target,
+        };
+    }
+}
+
+impl BatchPolicy for Adaptive {
+    fn name(&self) -> String {
+        "adaptive".into()
+    }
+
+    fn target_batch(&self) -> usize {
+        self.target
+    }
+
+    fn observe_arrival(&mut self, t: f64) {
+        if self.arrivals == 0 {
+            self.first_arrival = t;
+        }
+        self.arrivals += 1;
+        self.last_arrival = t;
+        self.choose();
+    }
+
+    fn observe_service(&mut self, batch: usize, service: f64) {
+        let b = batch as f64;
+        self.n_obs += 1.0;
+        self.sum_b += b;
+        self.sum_bb += b * b;
+        self.sum_t += service;
+        self.sum_bt += b * service;
+        self.sum_tt += service * service;
+        self.choose();
+    }
+}
+
+/// Which policy to run — the config/CLI-facing tag
+/// (`cluster/batching` TOML section, `rateless serve --policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicyKind {
+    Fixed(usize),
+    Deadline,
+    Adaptive,
+}
+
+impl BatchPolicyKind {
+    /// Parse a policy tag; `fixed` takes its batch size from `fixed_b`.
+    pub fn parse(s: &str, fixed_b: usize) -> Option<Self> {
+        match s {
+            "fixed" => Some(BatchPolicyKind::Fixed(fixed_b.max(1))),
+            "deadline" => Some(BatchPolicyKind::Deadline),
+            "adaptive" => Some(BatchPolicyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BatchPolicyKind::Fixed(b) => format!("fixed{b}"),
+            BatchPolicyKind::Deadline => "deadline".into(),
+            BatchPolicyKind::Adaptive => "adaptive".into(),
+        }
+    }
+
+    /// Instantiate the policy with the configured bounds.
+    pub fn build(&self, min_batch: usize, max_batch: usize, max_wait: f64) -> Box<dyn BatchPolicy> {
+        let hi = max_batch.max(min_batch.max(1));
+        match *self {
+            BatchPolicyKind::Fixed(b) => Box::new(Fixed { b: b.clamp(1, hi) }),
+            BatchPolicyKind::Deadline => Box::new(Deadline {
+                max_batch: hi,
+                max_wait,
+            }),
+            BatchPolicyKind::Adaptive => Box::new(Adaptive::with_bounds(min_batch, hi)),
+        }
+    }
+}
+
+/// Summary of one batched serving run.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Policy display name.
+    pub policy: String,
+    /// Requests served.
+    pub requests: usize,
+    /// Jobs dispatched.
+    pub jobs: usize,
+    /// Mean dispatched batch size.
+    pub mean_batch: f64,
+    /// Mean per-request response E[Z] (virtual seconds).
+    pub mean_response: f64,
+    /// Response-time tail quantiles.
+    pub p50_response: f64,
+    pub p95_response: f64,
+    pub p99_response: f64,
+    /// Mean per-job service E[T].
+    pub mean_service: f64,
+    /// Offered per-request load ρ = λ̂·E[T]/E[b] (observed).
+    pub utilization: f64,
+    /// Per-request response samples, in arrival order.
+    pub responses: Vec<f64>,
+    /// Per-request decoded products `A·x` (length m each), in arrival
+    /// order — so batched serving can be checked against sequential
+    /// multiplies.
+    pub outputs: Vec<Vec<f32>>,
+}
+
+/// The batching front-end: owns a policy and drives a request stream
+/// through a [`Coordinator`] in virtual time.
+pub struct Batcher<'a> {
+    coord: &'a Coordinator,
+    policy: Box<dyn BatchPolicy>,
+    /// Hard safety cap on any dispatched batch.
+    max_batch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(coord: &'a Coordinator, policy: Box<dyn BatchPolicy>) -> Self {
+        Self {
+            coord,
+            policy,
+            max_batch: 4096,
+        }
+    }
+
+    /// Build the batcher from the coordinator's configured batching knobs
+    /// (`ClusterConfig::batching`).
+    pub fn from_config(coord: &'a Coordinator) -> Self {
+        let cfg = &coord.cluster().batching;
+        let policy = cfg.policy.build(cfg.min_batch, cfg.max_batch, cfg.max_wait);
+        let mut batcher = Self::new(coord, policy);
+        batcher.max_batch = batcher.max_batch.min(cfg.max_batch.max(1));
+        batcher
+    }
+
+    /// Serve a request stream (sorted by arrival time) to completion.
+    ///
+    /// Discrete-event loop: when the server frees up, the policy's
+    /// `(target_batch, max_hold)` pair fixes the dispatch instant —
+    /// `max(server_free, min(arrival of the target-th request, window
+    /// open + hold))` — and every request arrived by then (capped at the
+    /// target) joins the batch. Waiting "until the b-th arrival or the
+    /// deadline" is resolved by event time, not by peeking: the dispatch
+    /// decision uses only arrivals at or before it.
+    pub fn run(&mut self, requests: &[Request], seed: u64) -> Result<BatchReport, JobError> {
+        assert!(!requests.is_empty(), "need at least one request");
+        assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival time"
+        );
+        let m = self.coord.m();
+        let mut responses = Vec::with_capacity(requests.len());
+        let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(requests.len());
+        let mut service = OnlineStats::new();
+        let mut server_free = 0.0f64;
+        let mut idx = 0usize; // next unserved request
+        let mut seen = 0usize; // arrivals already fed to the policy
+        let mut jobs = 0usize;
+        while idx < requests.len() {
+            let target = self.policy.target_batch().clamp(1, self.max_batch);
+            let hold = self.policy.max_hold();
+            let open = server_free.max(requests[idx].arrival);
+            let deadline = open + hold; // infinite hold ⇒ infinite deadline
+            // when the target-th request (from idx) will have arrived; the
+            // stream's end flushes whatever is pending
+            let fill_at = requests
+                .get(idx + target - 1)
+                .or_else(|| requests.last())
+                .expect("non-empty")
+                .arrival;
+            let dispatch_t = open.max(fill_at.min(deadline));
+            // everyone arrived by the dispatch instant joins, up to target
+            let k = requests[idx..]
+                .iter()
+                .take_while(|r| r.arrival <= dispatch_t)
+                .count()
+                .clamp(1, target);
+            // causal feedback: the policy has "seen" exactly the arrivals
+            // up to the dispatch instant (queued or joining)
+            while seen < requests.len() && requests[seen].arrival <= dispatch_t {
+                self.policy.observe_arrival(requests[seen].arrival);
+                seen += 1;
+            }
+            let batch = &requests[idx..idx + k];
+            let n = batch[0].x.len();
+            // X: n × k row-major (column j = request j's vector)
+            let mut xs = Matrix::zeros(n, k);
+            for (j, r) in batch.iter().enumerate() {
+                assert_eq!(r.x.len(), n, "request vector length mismatch");
+                for (c, &v) in r.x.iter().enumerate() {
+                    xs.data_mut()[c * k + j] = v;
+                }
+            }
+            let opts = JobOptions {
+                seed: Some(derive_seed(seed, 20_000 + jobs as u64)),
+                profile: None,
+            };
+            let res = self.coord.multiply_batch_opts(&xs, &opts)?;
+            let done = dispatch_t + res.latency;
+            server_free = done;
+            service.push(res.latency);
+            self.policy.observe_service(k, res.latency);
+            for (j, r) in batch.iter().enumerate() {
+                responses.push(done - r.arrival);
+                outputs.push((0..m).map(|i| res.b[i * k + j]).collect());
+            }
+            idx += k;
+            jobs += 1;
+        }
+        let span = requests.last().expect("non-empty").arrival - requests[0].arrival;
+        let lambda_obs = if span > 0.0 {
+            (requests.len() - 1) as f64 / span
+        } else {
+            0.0
+        };
+        let mean_batch = requests.len() as f64 / jobs as f64;
+        Ok(BatchReport {
+            policy: self.policy.name(),
+            requests: requests.len(),
+            jobs,
+            mean_batch,
+            mean_response: responses.iter().sum::<f64>() / responses.len() as f64,
+            p50_response: percentile(&responses, 0.50),
+            p95_response: percentile(&responses, 0.95),
+            p99_response: percentile(&responses, 0.99),
+            mean_service: service.mean(),
+            utilization: lambda_obs * service.mean() / mean_batch,
+            responses,
+            outputs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::lt::LtParams;
+    use crate::config::ClusterConfig;
+    use crate::coordinator::Strategy;
+    use crate::runtime::Engine;
+    use crate::util::dist::DelayDist;
+
+    fn small_coord(m: usize, n: usize) -> Coordinator {
+        let a = Matrix::random_ints(m, n, 3, 17);
+        let cluster = ClusterConfig {
+            workers: 4,
+            delay: DelayDist::Exp { mu: 2000.0 },
+            tau: 2e-5,
+            block_fraction: 0.25,
+            seed: 5,
+            real_sleep: false,
+            time_scale: 0.0,
+            symbol_width: 1,
+            ..ClusterConfig::default()
+        };
+        Coordinator::new(
+            cluster,
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .expect("coordinator")
+    }
+
+    fn uniform_requests(n: usize, inter: f64, count: usize, seed: u64) -> Vec<Request> {
+        (0..count)
+            .map(|i| Request {
+                arrival: inter * (i + 1) as f64,
+                x: Matrix::random_int_vector(n, 1, derive_seed(seed, i as u64)),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fixed_policy_groups_exactly_b_and_flushes_the_tail() {
+        let coord = small_coord(48, 6);
+        let requests = uniform_requests(6, 1e-4, 10, 1);
+        let mut batcher = Batcher::new(&coord, Box::new(Fixed { b: 4 }));
+        let report = batcher.run(&requests, 2).expect("run");
+        assert_eq!(report.requests, 10);
+        assert_eq!(report.jobs, 3, "4 + 4 + flush(2)");
+        assert!((report.mean_batch - 10.0 / 3.0).abs() < 1e-12);
+        assert_eq!(report.responses.len(), 10);
+        assert_eq!(report.outputs.len(), 10);
+        assert!(report.mean_response >= report.mean_service / report.mean_batch);
+        assert!(report.p99_response >= report.p50_response);
+    }
+
+    #[test]
+    fn deadline_policy_dispatches_at_max_wait_under_light_load() {
+        let coord = small_coord(48, 6);
+        // interarrival 1s ≫ max_wait 1ms: every request must go out alone
+        let requests = uniform_requests(6, 1.0, 5, 3);
+        let mut batcher = Batcher::new(
+            &coord,
+            Box::new(Deadline {
+                max_batch: 32,
+                max_wait: 1e-3,
+            }),
+        );
+        let report = batcher.run(&requests, 4).expect("run");
+        assert_eq!(report.jobs, 5, "deadline must not hold for the full batch");
+        // held at most max_wait + service beyond arrival
+        for (i, &z) in report.responses.iter().enumerate() {
+            assert!(z < 1e-3 + 10.0 * report.mean_service, "request {i}: Z={z}");
+        }
+    }
+
+    #[test]
+    fn batched_outputs_match_sequential_multiplies_bitwise() {
+        let coord = small_coord(64, 8);
+        let requests = uniform_requests(8, 1e-5, 12, 5);
+        let mut batcher = Batcher::new(&coord, Box::new(Fixed { b: 4 }));
+        let report = batcher.run(&requests, 6).expect("run");
+        for (i, r) in requests.iter().enumerate() {
+            let solo = coord.multiply(&r.x).expect("sequential multiply");
+            assert_eq!(
+                report.outputs[i], solo.b,
+                "request {i}: batched result must be byte-identical to b=1"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_estimators_converge() {
+        let mut pol = Adaptive::new(vec![1, 4, 16]);
+        assert_eq!(pol.target_batch(), 1, "bootstrap = smallest candidate");
+        assert!(pol.lambda_hat().is_none());
+        // uniform arrivals at rate 100/s
+        for i in 0..50 {
+            pol.observe_arrival(i as f64 * 0.01);
+        }
+        let lam = pol.lambda_hat().expect("λ̂ after enough arrivals");
+        assert!((lam - 100.0).abs() < 1.0, "λ̂={lam}");
+        // constant service 0.5 + 0.01·b
+        for i in 0..30 {
+            let b = [1usize, 4, 16][i % 3];
+            pol.observe_service(b, 0.5 + 0.01 * b as f64);
+        }
+        let t1 = pol.service_hat(1).expect("fit");
+        let t16 = pol.service_hat(16).expect("fit");
+        assert!((t1 - 0.51).abs() < 0.02, "T̂(1)={t1}");
+        assert!((t16 - 0.66).abs() < 0.02, "T̂(16)={t16}");
+    }
+
+    #[test]
+    fn adaptive_picks_small_b_at_low_lambda_and_large_b_at_high_lambda() {
+        // λ·T(1) = 0.1: latency-bound ⇒ b = 1
+        let mut low = Adaptive::new(vec![1, 4, 16]);
+        for i in 0..40 {
+            low.observe_arrival(i as f64 * 10.0); // λ = 0.1
+        }
+        for _ in 0..5 {
+            low.observe_service(1, 1.0);
+        }
+        assert_eq!(low.target_batch(), 1);
+        // λ·T(1) = 5: only batching keeps the queue stable
+        let mut high = Adaptive::new(vec![1, 4, 16]);
+        for i in 0..40 {
+            high.observe_arrival(i as f64 * 0.2); // λ = 5
+        }
+        for _ in 0..5 {
+            high.observe_service(1, 1.0);
+        }
+        assert_eq!(high.target_batch(), 16, "ρ(1) = 5, ρ(4) = 1.25 unstable");
+    }
+
+    /// Property: whatever it observes, Adaptive only ever picks from its
+    /// candidate set (and hence stays within its configured bounds).
+    #[test]
+    fn property_adaptive_never_leaves_its_candidate_set() {
+        let mut rng = Rng::new(123);
+        for trial in 0..50 {
+            let candidates = match trial % 3 {
+                0 => vec![1, 8, 32],
+                1 => vec![2, 3, 5, 7],
+                _ => vec![4],
+            };
+            let mut pol = Adaptive::new(candidates.clone());
+            let mut t = 0.0f64;
+            for _ in 0..200 {
+                if rng.next_f64() < 0.5 {
+                    // adversarial arrival gaps spanning 6 orders of magnitude
+                    t += 10f64.powf(rng.next_f64() * 6.0 - 3.0);
+                    pol.observe_arrival(t);
+                } else {
+                    let b = candidates[rng.gen_index(candidates.len())];
+                    pol.observe_service(b, 10f64.powf(rng.next_f64() * 4.0 - 2.0));
+                }
+                assert!(
+                    candidates.contains(&pol.target_batch()),
+                    "trial {trial}: target {} outside {candidates:?}",
+                    pol.target_batch()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_bounds_builds_a_doubling_ladder() {
+        let pol = Adaptive::with_bounds(1, 32);
+        assert_eq!(pol.candidates(), &[1, 2, 4, 8, 16, 32]);
+        let pol = Adaptive::with_bounds(3, 20);
+        assert_eq!(pol.candidates(), &[3, 6, 12, 20]);
+        let pol = Adaptive::with_bounds(5, 5);
+        assert_eq!(pol.candidates(), &[5]);
+    }
+
+    #[test]
+    fn policy_kind_parses_and_builds() {
+        assert_eq!(BatchPolicyKind::parse("fixed", 8), Some(BatchPolicyKind::Fixed(8)));
+        assert_eq!(BatchPolicyKind::parse("deadline", 8), Some(BatchPolicyKind::Deadline));
+        assert_eq!(BatchPolicyKind::parse("adaptive", 8), Some(BatchPolicyKind::Adaptive));
+        assert_eq!(BatchPolicyKind::parse("nope", 8), None);
+        assert_eq!(BatchPolicyKind::Fixed(8).build(1, 4, 1e-3).target_batch(), 4);
+        assert_eq!(BatchPolicyKind::Deadline.build(1, 16, 1e-3).target_batch(), 16);
+        let adaptive = BatchPolicyKind::Adaptive.build(1, 16, 1e-3);
+        assert_eq!(adaptive.target_batch(), 1);
+        assert_eq!(adaptive.name(), "adaptive");
+    }
+}

@@ -25,6 +25,7 @@
 //! submit jobs concurrently from many threads and they queue FCFS at the
 //! workers, the paper's §5 streaming setting.
 
+pub mod batcher;
 pub mod master;
 pub mod messages;
 pub mod pool;
@@ -235,6 +236,11 @@ impl Coordinator {
 
     pub fn m(&self) -> usize {
         self.m
+    }
+
+    /// Columns of the encoded matrix (the query-vector length).
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     /// Total encoded rows held across all workers.

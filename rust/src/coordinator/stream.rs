@@ -8,6 +8,7 @@
 //! fresh straggler draw), so the queueing figure can be regenerated from
 //! the running system, not just the analytic simulator.
 
+use super::batcher::{poisson_requests, BatchPolicy, BatchReport, Batcher};
 use super::{Coordinator, JobError, JobOptions};
 use crate::matrix::Matrix;
 use crate::util::dist::PoissonArrivals;
@@ -70,6 +71,36 @@ pub fn run_stream(
     })
 }
 
+/// Serve `requests` Poisson(λ) arrivals through the batching front-end:
+/// single-vector requests are coalesced into `multiply_batch` jobs by
+/// `policy` (see [`batcher`](super::batcher)). The report adds what the
+/// unbatched path cannot measure: tail quantiles and the mean dispatched
+/// batch size alongside E[Z].
+pub fn run_stream_batched(
+    coord: &Coordinator,
+    lambda: f64,
+    requests: usize,
+    policy: Box<dyn BatchPolicy>,
+    seed: u64,
+) -> Result<BatchReport, JobError> {
+    assert!(lambda > 0.0 && requests > 0);
+    let stream = poisson_requests(coord.n(), lambda, requests, seed);
+    Batcher::new(coord, policy).run(&stream, seed)
+}
+
+/// [`run_stream_batched`] with the policy taken from the coordinator's
+/// configured batching knobs (`ClusterConfig::batching`).
+pub fn run_stream_configured(
+    coord: &Coordinator,
+    lambda: f64,
+    requests: usize,
+    seed: u64,
+) -> Result<BatchReport, JobError> {
+    assert!(lambda > 0.0 && requests > 0);
+    let stream = poisson_requests(coord.n(), lambda, requests, seed);
+    Batcher::from_config(coord).run(&stream, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +136,40 @@ mod tests {
         assert!(out.mean_response >= out.mean_service);
         assert!(out.utilization > 0.0);
         assert_eq!(out.responses.len(), 10);
+    }
+
+    #[test]
+    fn batched_stream_reports_tails_and_mean_batch() {
+        use crate::coordinator::batcher::Fixed;
+        let a = Matrix::random_ints(64, 8, 3, 21);
+        let cluster = ClusterConfig {
+            workers: 4,
+            delay: DelayDist::Exp { mu: 2000.0 },
+            tau: 2e-5,
+            block_fraction: 0.25,
+            seed: 9,
+            real_sleep: false,
+            time_scale: 0.0,
+            symbol_width: 1,
+            ..ClusterConfig::default()
+        };
+        let coord = Coordinator::new(
+            cluster,
+            Strategy::Lt(crate::coding::lt::LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .unwrap();
+        let out = run_stream_batched(&coord, 5000.0, 12, Box::new(Fixed { b: 4 }), 7).unwrap();
+        assert_eq!(out.requests, 12);
+        assert_eq!(out.jobs, 3);
+        assert!((out.mean_batch - 4.0).abs() < 1e-12);
+        assert!(out.p50_response <= out.p95_response);
+        assert!(out.p95_response <= out.p99_response);
+        assert!(out.mean_response > 0.0);
+        // the configured default policy (adaptive) also runs end to end
+        let cfg = run_stream_configured(&coord, 5000.0, 12, 7).unwrap();
+        assert_eq!(cfg.policy, "adaptive");
+        assert_eq!(cfg.requests, 12);
     }
 }

@@ -203,6 +203,7 @@ pub fn run(spec: &LoadBalanceSpec) -> anyhow::Result<LoadBalanceReport> {
         symbol_width: 1,
         speeds,
         scheduler: SchedulerKind::Static,
+        ..ClusterConfig::default()
     };
     let lt = || Strategy::Lt(LtParams::with_alpha(spec.alpha));
     let k = spec.p - 1;

@@ -47,6 +47,16 @@
 //! as a serving system. `cargo bench --bench throughput` and the
 //! `rateless throughput` subcommand measure the batching win.
 //!
+//! On top of that sits the **adaptive batching front-end**
+//! ([`coordinator::batcher`]): single-vector requests arriving as a
+//! Poisson(λ) stream are coalesced into `multiply_batch` jobs by a
+//! pluggable `BatchPolicy` — fixed-b, deadline, or the adaptive policy
+//! that estimates λ̂ and Ê[T(b)] online and picks the b minimizing the
+//! predicted mean response E[Z] under the §5 M/G/1 reduction
+//! ([`sim::queueing::predicted_batch_response`]). `rateless serve` and
+//! `cargo bench --bench serving` sweep the policies across arrival
+//! rates.
+//!
 //! ## Schedulers and heterogeneous fleets
 //!
 //! Dispatch is a seam ([`coordinator::scheduler`]): the classic *static*
@@ -74,6 +84,9 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::coding::lt::{LtCode, LtParams};
+    pub use crate::coordinator::batcher::{
+        Adaptive, BatchPolicy, BatchPolicyKind, BatchReport, Batcher, Deadline, Fixed, Request,
+    };
     pub use crate::coding::mds::MdsCode;
     pub use crate::coding::peeling::PeelingDecoder;
     pub use crate::coding::soliton::RobustSoliton;

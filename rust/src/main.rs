@@ -12,6 +12,9 @@
 //! rateless experiment --env parallel|ec2|lambda [--trials N]   Fig 8
 //! rateless failures [--trials N]              Fig 12
 //! rateless stream --lambda 0.3 --jobs 100     §5 queueing on the live coordinator
+//! rateless serve --lambda 200 --requests 100 --policy adaptive|fixed|deadline
+//!                                             batching front-end: E[Z], tails,
+//!                                             mean dispatched batch size
 //! rateless throughput [--batches 1,8,32,128]  batched serving jobs/sec
 //! ```
 //!
@@ -114,12 +117,13 @@ fn run(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("stream") => stream_cmd(args),
+        Some("serve") => serve_cmd(args),
         Some("throughput") => throughput_cmd(args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}; see README"),
         None => {
             println!(
                 "rateless — LT-coded distributed matrix-vector multiplication\n\
-                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | throughput"
+                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | serve | throughput"
             );
             Ok(())
         }
@@ -227,6 +231,62 @@ fn stream_cmd(args: &Args) -> anyhow::Result<()> {
     println!(
         "stream: λ={lambda}, jobs={jobs}: E[Z] = {:.4}s, E[T] = {:.4}s, ρ = {:.3}",
         out.mean_response, out.mean_service, out.utilization
+    );
+    Ok(())
+}
+
+/// Adaptive batching front-end demo: Poisson(λ) single-vector requests
+/// through the configured `BatchPolicy` (paper §5 + adaptive batch
+/// sizing), reporting E[Z], tail quantiles and the mean dispatched b.
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    use rateless::coordinator::batcher::BatchPolicyKind;
+    use rateless::coordinator::stream::run_stream_batched;
+    let m = args.usize("m", 2048);
+    let n = args.usize("n", 128);
+    let p = args.usize("p", 4);
+    let lambda = args.f64("lambda", 100.0);
+    let requests = args.usize("requests", 100);
+    let min_b = args.usize("min-b", 1);
+    let max_b = args.usize("max-b", 32);
+    let max_wait = args.f64("max-wait", 5e-3);
+    let policy_tag = args.str("policy", "adaptive");
+    let policy = BatchPolicyKind::parse(&policy_tag, args.usize("b", 8))
+        .ok_or_else(|| anyhow::anyhow!("--policy must be fixed|deadline|adaptive"))?;
+    let a = Matrix::random_ints(m, n, 3, seed_of(args));
+    let cluster = ClusterConfig {
+        workers: p,
+        tau: args.f64("tau", 2e-5),
+        real_sleep: true,
+        time_scale: args.f64("time-scale", 0.2),
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::new(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(args.f64("alpha", 2.0))),
+        Engine::Native,
+        &a,
+    )?;
+    let out = run_stream_batched(
+        &coord,
+        lambda,
+        requests,
+        policy.build(min_b, max_b, max_wait),
+        seed_of(args),
+    )?;
+    println!(
+        "serve: {}x{n}, p={p}, λ={lambda}, policy={}: {} requests in {} jobs \
+         (mean b = {:.2})",
+        m, out.policy, out.requests, out.jobs, out.mean_batch
+    );
+    println!(
+        "E[Z] = {:.4}s  p50 = {:.4}s  p95 = {:.4}s  p99 = {:.4}s  \
+         E[T] = {:.4}s  ρ = {:.3}",
+        out.mean_response,
+        out.p50_response,
+        out.p95_response,
+        out.p99_response,
+        out.mean_service,
+        out.utilization
     );
     Ok(())
 }

@@ -11,7 +11,7 @@
 
 use super::delay_model::DelayModel;
 use super::strategies::SimStrategy;
-use crate::util::dist::PoissonArrivals;
+use crate::util::dist::{PoissonArrivals, Sample};
 use crate::util::rng::Rng;
 use crate::util::stats::OnlineStats;
 
@@ -82,6 +82,139 @@ pub fn pollaczek_khinchine(lambda: f64, mean_s: f64, second_moment_s: f64) -> f6
     mean_s + lambda * second_moment_s / (2.0 * (1.0 - rho))
 }
 
+/// Service-time model for **batched** jobs: a batch-`b` multiply costs
+/// `base + per_vector·b` virtual seconds plus an exponential per-job
+/// fluctuation of mean `noise` (0 = deterministic service).
+///
+/// This is the analytic counterpart of the coordinator's batched path
+/// (DESIGN.md §5): τ is a per-encoded-row cost, so `base` (straggler
+/// delays + rows to decodability) dominates and `per_vector` is small —
+/// which is exactly why batching wins at high arrival rates.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchService {
+    /// Fixed per-job cost (initial delays + τ·rows-to-decode).
+    pub base: f64,
+    /// Marginal cost per additional batched vector.
+    pub per_vector: f64,
+    /// Mean of an exponential per-job fluctuation (0 = deterministic).
+    pub noise: f64,
+}
+
+impl BatchService {
+    /// Mean service time of a batch-`b` job.
+    pub fn mean(&self, b: usize) -> f64 {
+        self.base + self.per_vector * b as f64 + self.noise
+    }
+
+    /// Second moment `E[T(b)²]` (deterministic part + exponential noise).
+    pub fn second_moment(&self, b: usize) -> f64 {
+        let d = self.base + self.per_vector * b as f64;
+        d * d + 2.0 * d * self.noise + 2.0 * self.noise * self.noise
+    }
+
+    /// Draw one service time for a batch-`b` job.
+    pub fn sample(&self, b: usize, rng: &mut Rng) -> f64 {
+        let d = self.base + self.per_vector * b as f64;
+        if self.noise > 0.0 {
+            d + crate::util::dist::Exponential::new(1.0 / self.noise).sample(rng)
+        } else {
+            d
+        }
+    }
+}
+
+/// Predicted mean **per-request** response time E[Z] when Poisson(λ)
+/// single-vector arrivals are coalesced into batch-`b` jobs and served
+/// FCFS by one fleet (the batching generalization of Theorem 5's M/G/1
+/// reduction):
+///
+/// * forming delay: a request waits on average `(b−1)/(2λ)` for its
+///   batch to fill;
+/// * queueing delay: batch jobs arrive at rate `λ/b` and wait the
+///   Pollaczek–Khinchine `(λ/b)·E[T(b)²] / 2(1−ρ)` with `ρ = λ·E[T(b)]/b`
+///   (job interarrivals are Erlang-b, so treating them as Poisson is an
+///   approximation — validated against [`simulate_batched_queue`]);
+/// * service: `E[T(b)]`.
+///
+/// Returns `f64::INFINITY` when the queue is unstable (`ρ ≥ 1`) — callers
+/// minimizing over b can treat that uniformly.
+pub fn predicted_batch_response(lambda: f64, b: usize, mean_s: f64, second_moment_s: f64) -> f64 {
+    assert!(lambda > 0.0 && b >= 1 && mean_s > 0.0);
+    let bf = b as f64;
+    let lam_j = lambda / bf;
+    let rho = lam_j * mean_s;
+    if rho >= 1.0 {
+        return f64::INFINITY;
+    }
+    (bf - 1.0) / (2.0 * lambda) + lam_j * second_moment_s / (2.0 * (1.0 - rho)) + mean_s
+}
+
+/// Lindley-recursion simulation of the batched queue: Poisson(λ) request
+/// arrivals grouped into consecutive batches of `b` (the final partial
+/// batch flushes), one FCFS server with [`BatchService`] job times.
+/// `mean_response` is the mean **per-request** response (completion −
+/// arrival); `mean_service` is per job.
+pub fn simulate_batched_queue(
+    model: &BatchService,
+    lambda: f64,
+    b: usize,
+    trials: usize,
+    requests_per_trial: usize,
+    rng: &mut Rng,
+) -> QueueOutcome {
+    assert!(lambda > 0.0 && b >= 1 && requests_per_trial >= 1);
+    let mut trial_means = OnlineStats::new();
+    let mut all_service = OnlineStats::new();
+    for _ in 0..trials {
+        let mut arrivals = PoissonArrivals::new(lambda);
+        let times: Vec<f64> = (0..requests_per_trial)
+            .map(|_| arrivals.next_arrival(rng))
+            .collect();
+        let mut response = OnlineStats::new();
+        let mut server_free = 0.0f64;
+        for batch in times.chunks(b) {
+            let ready = *batch.last().expect("non-empty batch");
+            let start = server_free.max(ready);
+            let service = model.sample(batch.len(), rng);
+            all_service.push(service);
+            let done = start + service;
+            server_free = done;
+            for &arr in batch {
+                response.push(done - arr);
+            }
+        }
+        trial_means.push(response.mean());
+    }
+    QueueOutcome {
+        mean_response: trial_means.mean(),
+        trial_std: trial_means.std(),
+        mean_service: all_service.mean(),
+        utilization: lambda * model.mean(b) / b as f64,
+    }
+}
+
+/// Brute-force sweep: simulate every candidate batch size and return the
+/// `(b, E[Z])` minimizer — the oracle the adaptive batching policy is
+/// validated against (`coordinator/batcher.rs`).
+pub fn optimal_fixed_b(
+    model: &BatchService,
+    lambda: f64,
+    candidates: &[usize],
+    trials: usize,
+    requests_per_trial: usize,
+    rng: &mut Rng,
+) -> (usize, f64) {
+    assert!(!candidates.is_empty());
+    let mut best = (candidates[0], f64::INFINITY);
+    for &b in candidates {
+        let out = simulate_batched_queue(model, lambda, b, trials, requests_per_trial, rng);
+        if out.mean_response < best.1 {
+            best = (b, out.mean_response);
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +283,71 @@ mod tests {
         let rep = simulate_queue(SimStrategy::Rep { r: 2 }, &model, m, 0.3, 5, 100, &mut rng);
         assert!(lt.mean_response < mds.mean_response);
         assert!(lt.mean_response < rep.mean_response);
+    }
+
+    /// Lindley-recursion regression pin: with wholly exponential service
+    /// (mean 1/μ) and b = 1 the batched queue is an M/M/1, whose mean
+    /// response has the closed form `1/(μ − λ)`.
+    #[test]
+    fn batched_queue_matches_mm1_closed_form() {
+        let model = BatchService {
+            base: 0.0,
+            per_vector: 0.0,
+            noise: 1.0, // service ~ exp(mean 1) ⇒ μ = 1
+        };
+        let mut rng = Rng::new(11);
+        let out = simulate_batched_queue(&model, 0.5, 1, 8, 4000, &mut rng);
+        let want = 1.0 / (1.0 - 0.5); // 1/(μ−λ) = 2
+        assert!((out.mean_service - 1.0).abs() < 0.05, "E[T]={}", out.mean_service);
+        assert!(
+            (out.mean_response - want).abs() < 0.15 * want,
+            "sim Z={} vs M/M/1 {want}",
+            out.mean_response
+        );
+        assert!((out.utilization - 0.5).abs() < 1e-12);
+    }
+
+    /// The closed-form batching predictor tracks the Lindley simulation.
+    #[test]
+    fn predicted_batch_response_matches_simulation() {
+        let model = BatchService {
+            base: 1.0,
+            per_vector: 0.0,
+            noise: 0.0,
+        };
+        let mut rng = Rng::new(12);
+        for &(lambda, b) in &[(0.5f64, 4usize), (0.2, 1), (2.0, 8)] {
+            let predicted =
+                predicted_batch_response(lambda, b, model.mean(b), model.second_moment(b));
+            let sim = simulate_batched_queue(&model, lambda, b, 6, 4000, &mut rng);
+            assert!(
+                (sim.mean_response - predicted).abs() < 0.1 * predicted,
+                "λ={lambda} b={b}: sim {} vs predicted {predicted}",
+                sim.mean_response
+            );
+        }
+        // instability is reported uniformly as infinity
+        assert!(predicted_batch_response(2.0, 1, 1.0, 1.0).is_infinite());
+    }
+
+    /// The brute-force (λ, b) sweep: the optimal batch size grows with
+    /// the arrival rate — b = 1 when latency-bound, large b when
+    /// throughput-bound.
+    #[test]
+    fn optimal_batch_grows_with_lambda() {
+        let model = BatchService {
+            base: 1.0,
+            per_vector: 0.005,
+            noise: 0.05,
+        };
+        let candidates = [1usize, 4, 32];
+        let mut rng = Rng::new(13);
+        let (b_low, _) = optimal_fixed_b(&model, 0.2, &candidates, 5, 2000, &mut rng);
+        let (b_mid, _) = optimal_fixed_b(&model, 3.0, &candidates, 5, 2000, &mut rng);
+        let (b_high, _) = optimal_fixed_b(&model, 20.0, &candidates, 5, 2000, &mut rng);
+        assert_eq!(b_low, 1, "λ·E[T(1)] ≈ 0.2 is latency-bound");
+        assert_eq!(b_mid, 4, "moderate overload wants a middle batch");
+        assert_eq!(b_high, 32, "heavy overload wants the largest batch");
     }
 
     #[test]

@@ -46,6 +46,22 @@ fn hetero_config_speeds_and_scheduler() {
 }
 
 #[test]
+fn serving_config_batching_knobs() {
+    use rateless::coordinator::batcher::BatchPolicyKind;
+    let doc = load("serving.toml");
+    let cluster = ClusterConfig::from_doc(&doc);
+    assert_eq!(cluster.batching.policy, BatchPolicyKind::Adaptive);
+    assert_eq!(cluster.batching.min_batch, 1);
+    assert_eq!(cluster.batching.max_batch, 32);
+    assert!((cluster.batching.max_wait - 0.005).abs() < 1e-12);
+    assert!(cluster.real_sleep);
+    // flipping the policy key switches to fixed with its configured b
+    let doc = Doc::from_str("[batching]\npolicy = \"fixed\"\nfixed_b = 4\n").unwrap();
+    let b = rateless::config::BatchingConfig::from_doc(&doc);
+    assert_eq!(b.policy, BatchPolicyKind::Fixed(4));
+}
+
+#[test]
 fn lambda_config_block_width() {
     let doc = load("lambda.toml");
     let cluster = ClusterConfig::from_doc(&doc);

@@ -40,6 +40,7 @@ fn hetero_cluster(scheduler: SchedulerKind) -> ClusterConfig {
         symbol_width: 1,
         speeds: vec![1.0, 1.0, 1.0, 1.0 / 3.0],
         scheduler,
+        ..ClusterConfig::default()
     }
 }
 

@@ -1,0 +1,207 @@
+//! Integration: the adaptive batch-sizing serving front-end under the
+//! §5 queueing model (ISSUE 5 acceptance).
+//!
+//! * the `Adaptive` policy's mean response E[Z] is within 5% of the best
+//!   fixed batch size in its candidate set, at both the latency-bound
+//!   (λ·E[T(1)] ≈ 0.2) and throughput-bound (≈ 0.9) operating points;
+//! * the analytic (λ, b) sweep (`sim::queueing::optimal_fixed_b`) and
+//!   the live fixed-b sweep agree on the optimal batch size;
+//! * batched serving is byte-identical to b = 1 sequential multiplies;
+//! * the PR 4 parallel-encode pipeline (encode on the resident 4-thread
+//!   worker pool) composes with work stealing and adaptive batching for
+//!   LT, systematic LT and Raptor at m = 4096.
+
+use rateless::coordinator::batcher::{poisson_requests, Adaptive, Batcher, Fixed};
+use rateless::coordinator::stream::run_stream_batched;
+use rateless::coordinator::JobOptions;
+use rateless::prelude::*;
+use rateless::sim::queueing::{optimal_fixed_b, BatchService};
+use rateless::util::rng::derive_seed;
+
+fn serving_cluster(p: usize, real_sleep: bool, time_scale: f64) -> ClusterConfig {
+    ClusterConfig {
+        workers: p,
+        delay: DelayDist::Exp { mu: 2000.0 }, // ~0.5 ms initial delays
+        tau: 2e-5,
+        block_fraction: 0.1,
+        seed: 7,
+        real_sleep,
+        time_scale,
+        symbol_width: 1,
+        ..ClusterConfig::default()
+    }
+}
+
+/// The headline acceptance: adaptive tracks the load point at both ends
+/// of the spectrum, and the analytic simulator agrees with the live
+/// system about the optimal fixed batch size.
+#[test]
+fn adaptive_beats_fixed_at_both_operating_points_and_sim_agrees_with_live() {
+    let (m, n, p) = (512usize, 32usize, 4usize);
+    let a = Matrix::random_ints(m, n, 3, 31);
+    // real-sleep pacing keeps chunk delivery in virtual-time order, so
+    // measured latencies follow the paper's delay model
+    let coord = Coordinator::new(
+        serving_cluster(p, true, 0.5),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )
+    .expect("coordinator");
+
+    // measured E[T(1)] places the λ grid
+    let mut t1 = 0.0f64;
+    for j in 0..3u64 {
+        let x = Matrix::random_int_vector(n, 1, 60 + j);
+        let res = coord
+            .multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(600 + j),
+                    profile: None,
+                },
+            )
+            .expect("probe job");
+        t1 += res.latency / 3.0;
+    }
+    assert!(t1 > 0.0);
+
+    let fixed_bs = [1usize, 2, 4, 8, 16, 32];
+    let sweep_bs = [1usize, 4, 32]; // wide margins for the argmin check
+    let requests = 96usize;
+    for &rho in &[0.2f64, 0.9] {
+        let lambda = rho / t1;
+        let mut best_fixed = f64::INFINITY;
+        let mut sweep_best: (usize, f64) = (0, f64::INFINITY);
+        for &b in &fixed_bs {
+            let out = run_stream_batched(&coord, lambda, requests, Box::new(Fixed { b }), 42)
+                .expect("fixed run");
+            best_fixed = best_fixed.min(out.mean_response);
+            if sweep_bs.contains(&b) && out.mean_response < sweep_best.1 {
+                sweep_best = (b, out.mean_response);
+            }
+        }
+        let adaptive = run_stream_batched(
+            &coord,
+            lambda,
+            requests,
+            Box::new(Adaptive::with_bounds(1, 32)),
+            42,
+        )
+        .expect("adaptive run");
+        assert!(
+            adaptive.mean_response <= 1.05 * best_fixed,
+            "ρ(1)={rho}: adaptive E[Z]={:.5} vs best fixed {:.5}",
+            adaptive.mean_response,
+            best_fixed
+        );
+        // the load point shows in the dispatched batch sizes
+        if rho < 0.5 {
+            assert!(
+                adaptive.mean_batch < 2.0,
+                "latency-bound point must stay near b=1, got {}",
+                adaptive.mean_batch
+            );
+        } else {
+            assert!(
+                adaptive.mean_batch > 1.2,
+                "throughput-bound point must batch, got {}",
+                adaptive.mean_batch
+            );
+        }
+        // analytic sweep on the measured service model agrees with live
+        let model = BatchService {
+            base: t1,
+            per_vector: 0.0,
+            noise: 0.2 * t1,
+        };
+        let mut rng = Rng::new(5);
+        let (sim_b, _) = optimal_fixed_b(&model, lambda, &sweep_bs, 6, 3000, &mut rng);
+        assert_eq!(
+            sim_b, sweep_best.0,
+            "ρ(1)={rho}: sim optimum b={sim_b} vs live optimum b={}",
+            sweep_best.0
+        );
+    }
+}
+
+/// Batched serving returns exactly what sequential b = 1 multiplies
+/// return — integer data keeps the whole pipeline bit-exact.
+#[test]
+fn batched_serving_is_byte_identical_to_sequential() {
+    let (m, n) = (256usize, 16usize);
+    let a = Matrix::random_ints(m, n, 3, 11);
+    let coord = Coordinator::new(
+        serving_cluster(4, false, 0.0),
+        Strategy::Lt(LtParams::with_alpha(3.0)),
+        Engine::Native,
+        &a,
+    )
+    .expect("coordinator");
+    let requests = poisson_requests(n, 3000.0, 20, 13);
+    let mut batcher = Batcher::new(&coord, Box::new(Adaptive::with_bounds(1, 8)));
+    let report = batcher.run(&requests, 14).expect("batched run");
+    assert_eq!(report.outputs.len(), 20);
+    for (i, r) in requests.iter().enumerate() {
+        let solo = coord
+            .multiply_opts(
+                &r.x,
+                &JobOptions {
+                    seed: Some(derive_seed(14, 90_000 + i as u64)),
+                    profile: None,
+                },
+            )
+            .expect("sequential multiply");
+        assert_eq!(
+            report.outputs[i], solo.b,
+            "request {i}: batched product differs from the sequential one"
+        );
+        // and both match the reference product exactly
+        assert_eq!(solo.b, a.matvec(&r.x), "request {i}: reference mismatch");
+    }
+}
+
+/// PR 4's parallel encode (on the resident 4-thread pool) + the
+/// work-stealing scheduler + adaptive batching, end to end at m = 4096
+/// for every rateless code.
+#[test]
+fn parallel_encode_work_stealing_and_adaptive_batching_compose_at_m4096() {
+    let (m, n, p) = (4096usize, 8usize, 4usize);
+    let a = Matrix::random_ints(m, n, 3, 17);
+    let strategies: Vec<(&str, Strategy)> = vec![
+        ("lt", Strategy::Lt(LtParams::with_alpha(2.0))),
+        ("syslt", Strategy::SystematicLt(LtParams::with_alpha(2.0))),
+        (
+            "raptor",
+            Strategy::Raptor(rateless::coding::raptor::RaptorParams::default()),
+        ),
+    ];
+    for (name, strategy) in strategies {
+        let mut cluster = serving_cluster(p, false, 0.0);
+        cluster.delay = DelayDist::None;
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.speeds = vec![1.0, 1.0, 1.0, 0.5]; // heterogeneous fleet
+        // Coordinator::new runs encode_shards_with on the 4 resident
+        // worker threads (the PR 4 parallel-encode pipeline)
+        let coord = Coordinator::new(cluster, strategy, Engine::Native, &a)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(coord.scheduler_name(), "stealing", "{name}");
+        let requests = poisson_requests(n, 2000.0, 12, 19);
+        let mut batcher = Batcher::new(&coord, Box::new(Adaptive::with_bounds(1, 8)));
+        let report = batcher
+            .run(&requests, 23)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(report.requests, 12, "{name}");
+        for (i, r) in requests.iter().enumerate() {
+            let want = a.matvec(&r.x);
+            // tight tolerance rather than bit-equality: Raptor may finish
+            // through inactivation (dense f64 GE), which rounds
+            for (row, (&got, &w)) in report.outputs[i].iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() <= 1e-3 * w.abs().max(1.0),
+                    "{name}: request {i} row {row}: {got} vs {w}"
+                );
+            }
+        }
+    }
+}

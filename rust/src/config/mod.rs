@@ -78,6 +78,20 @@ impl Doc {
         }
     }
 
+    pub fn str_list(&self, section: &str, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(section, key) {
+            Some(Value::List(vs)) => vs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => s.clone(),
+                    other => panic!("config {section}.{key}: non-string list item {other:?}"),
+                })
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => panic!("config {section}.{key}: expected list, got {v:?}"),
+        }
+    }
+
     pub fn f64_list(&self, section: &str, key: &str, default: &[f64]) -> Vec<f64> {
         match self.get(section, key) {
             Some(Value::List(vs)) => vs
@@ -129,6 +143,54 @@ pub struct ClusterConfig {
     /// batcher coalesces single-vector requests into `multiply_batch`
     /// jobs (paper §5 + adaptive batch sizing).
     pub batching: BatchingConfig,
+    /// Worker transport (`[transport]` section): in-process channel
+    /// threads (the simulation default) or TCP connections to resident
+    /// `rateless worker` processes (the cluster path, paper §6.2).
+    pub transport: TransportConfig,
+}
+
+/// Which backend carries jobs between the master and its workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Workers are threads in the master process, fed over mpsc channels.
+    InProcess,
+    /// Workers are separate `rateless worker` processes reached over TCP
+    /// (`coordinator/transport/tcp.rs`); shards stay resident remotely.
+    Tcp,
+}
+
+/// Transport knobs (`[transport]` section).
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    /// `host:port` of each worker process, one per worker, in shard
+    /// order. Required (and length-checked against `cluster.workers`)
+    /// when `kind = "tcp"`; ignored for in-process runs.
+    pub peers: Vec<String>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            kind: TransportKind::InProcess,
+            peers: Vec::new(),
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Read a `[transport]` section; absent section = in-process.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let kind = match doc.str("transport", "kind", "inprocess").as_str() {
+            "inprocess" | "channel" => TransportKind::InProcess,
+            "tcp" => TransportKind::Tcp,
+            other => panic!("config transport.kind: expected inprocess|tcp, got {other:?}"),
+        };
+        Self {
+            kind,
+            peers: doc.str_list("transport", "peers", &[]),
+        }
+    }
 }
 
 /// Batching knobs of the serving front-end (`coordinator/batcher.rs`).
@@ -189,6 +251,7 @@ impl Default for ClusterConfig {
             speeds: Vec::new(),
             scheduler: SchedulerKind::Static,
             batching: BatchingConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -225,6 +288,7 @@ impl ClusterConfig {
                 })
             },
             batching: BatchingConfig::from_doc(doc),
+            transport: TransportConfig::from_doc(doc),
         }
     }
 
@@ -348,6 +412,33 @@ alphas = [1.25, 2.0]
         // deadline
         let doc = Doc::from_str("[batching]\npolicy = \"deadline\"\n").unwrap();
         assert_eq!(BatchingConfig::from_doc(&doc).policy, BatchPolicyKind::Deadline);
+    }
+
+    #[test]
+    fn transport_section_parse() {
+        // absent section: in-process, no peers
+        let doc = Doc::from_str("[cluster]\nworkers = 4\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(c.transport.kind, TransportKind::InProcess);
+        assert!(c.transport.peers.is_empty());
+        // tcp with a peer list
+        let doc = Doc::from_str(
+            "[transport]\nkind = \"tcp\"\npeers = [\"10.0.0.1:4000\", \"10.0.0.2:4000\"]\n",
+        )
+        .unwrap();
+        let t = TransportConfig::from_doc(&doc);
+        assert_eq!(t.kind, TransportKind::Tcp);
+        assert_eq!(t.peers, vec!["10.0.0.1:4000", "10.0.0.2:4000"]);
+        // "channel" is an accepted alias for the in-process backend
+        let doc = Doc::from_str("[transport]\nkind = \"channel\"\n").unwrap();
+        assert_eq!(TransportConfig::from_doc(&doc).kind, TransportKind::InProcess);
+    }
+
+    #[test]
+    #[should_panic(expected = "transport.kind")]
+    fn transport_rejects_unknown_kind() {
+        let doc = Doc::from_str("[transport]\nkind = \"carrier-pigeon\"\n").unwrap();
+        TransportConfig::from_doc(&doc);
     }
 
     #[test]

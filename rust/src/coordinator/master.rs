@@ -14,6 +14,7 @@
 //! the [`ErasureDecoder`] trait object minted by the coordinator's
 //! [`ErasureCode`](crate::coding::ErasureCode).
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -139,6 +140,14 @@ pub fn collect(
     let mut decode_cpu = 0.0f64;
     let mut live: Option<Box<dyn ErasureDecoder>> = Some(decoder);
     let mut finished: Option<(f64, Box<dyn ErasureDecoder>)> = None;
+    // Row ranges already ingested, keyed by (shard, start_row, rows). A
+    // network transport can re-deliver completed work (a reconnect after
+    // a partially-acked job replays it; the board itself never
+    // double-issues a range). The rateless decoders are idempotent per
+    // *symbol*, but the fixed-rate block-fill counters are not, and the
+    // stolen/redundant statistics would double-count — so duplicates are
+    // dropped here, before any accounting.
+    let mut seen: HashSet<(usize, usize, usize)> = HashSet::new();
 
     while done_workers < p {
         let Ok(ev) = rx.recv() else {
@@ -157,11 +166,16 @@ pub fn collect(
                 let Some(dec) = live.as_mut() else {
                     continue; // post-cancel stragglers
                 };
-                // counted here (not before the guard) so the stolen-row
-                // metric covers exactly the pre-completion work window,
-                // consistent with the computations clamp at T
+                let rows = msg.rows(batch);
+                if !seen.insert((msg.shard, msg.start_row, rows)) {
+                    continue; // re-delivered chunk: already ingested
+                }
+                // counted here (not before the guards) so the stolen-row
+                // metric covers exactly the pre-completion work window —
+                // consistent with the computations clamp at T — and never
+                // counts a duplicate delivery twice
                 if msg.worker != msg.shard {
-                    stolen_rows += msg.products.len() / batch;
+                    stolen_rows += rows;
                 }
                 let t0 = Instant::now();
                 let used = dec.ingest(msg.shard, msg.start_row, &msg.products, msg.virtual_time);
@@ -228,5 +242,156 @@ pub fn collect(
         None => Err(JobError::Undecodable {
             detail: live.map(|d| d.detail()).unwrap_or_default(),
         }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::lt::{LtCode, LtParams};
+    use crate::coding::mds::MdsCode;
+    use crate::coding::{ErasureCode, ShardSizing};
+    use crate::coordinator::messages::ChunkMsg;
+    use crate::matrix::Matrix;
+    use std::sync::mpsc::channel;
+
+    const TAU: f64 = 1e-3;
+
+    /// Stuff a pre-scripted event stream into the collect loop.
+    fn collect_events(
+        dec: Box<dyn ErasureDecoder>,
+        events: Vec<WorkerEvent>,
+        p: usize,
+    ) -> JobResult {
+        let (tx, rx) = channel();
+        for ev in events {
+            tx.send(ev).unwrap();
+        }
+        drop(tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let delays = vec![0.0; p];
+        let taus = vec![TAU; p];
+        collect(dec, &rx, &cancel, p, &delays, &taus, 1).expect("collect")
+    }
+
+    /// Chunk a shard's full product into 8-row messages attributed to
+    /// `worker` (≠ shard simulates stolen work).
+    fn shard_chunks(shard: &Matrix, s: usize, worker: usize, x: &[f32]) -> Vec<ChunkMsg> {
+        let prod = shard.matvec(x);
+        let rows = shard.rows();
+        let mut v = 0.0;
+        let mut out = Vec::new();
+        for start in (0..rows).step_by(8) {
+            let len = 8.min(rows - start);
+            v += TAU * len as f64;
+            out.push(ChunkMsg {
+                worker,
+                shard: s,
+                start_row: start,
+                products: prod[start..start + len].to_vec(),
+                virtual_time: v,
+            });
+        }
+        out
+    }
+
+    fn done(worker: usize, rows_done: usize) -> WorkerEvent {
+        WorkerEvent::Done {
+            worker,
+            rows_done,
+            virtual_time: TAU * rows_done as f64,
+            failed: false,
+        }
+    }
+
+    /// Re-delivered chunks (a TCP reconnect replaying completed work)
+    /// must change neither the decoded output nor any statistic — the
+    /// dedup happens *before* stolen/redundant accounting. Pinned for
+    /// the peeling (LT) decoder, with every chunk marked stolen so a
+    /// double-count would show up in `stolen_rows`.
+    #[test]
+    fn duplicated_chunks_change_nothing_for_lt() {
+        let a = Matrix::random_ints(64, 6, 4, 11);
+        let x = Matrix::random_int_vector(6, 4, 12);
+        let code = LtCode::new(64, LtParams::with_alpha(3.0), 13);
+        let enc = ErasureCode::encode_shards(&code, &a, &ShardSizing::uniform(2), 1);
+        let want = a.matvec(&x);
+
+        let mut base = Vec::new();
+        let mut dup = Vec::new();
+        for (s, shard) in enc.shards.iter().enumerate() {
+            for msg in shard_chunks(shard, s, 1 - s, &x) {
+                base.push(WorkerEvent::Chunk(msg.clone()));
+                dup.push(WorkerEvent::Chunk(msg.clone()));
+                dup.push(WorkerEvent::Chunk(msg)); // immediate re-delivery
+            }
+        }
+        let dones = [
+            done(0, enc.shards[1].rows()),
+            done(1, enc.shards[0].rows()),
+        ];
+        base.extend(dones.iter().cloned());
+        dup.extend(dones.iter().cloned());
+
+        let clean = collect_events(code.new_decoder(&enc.layout, 1), base, 2);
+        let replay = collect_events(code.new_decoder(&enc.layout, 1), dup, 2);
+
+        assert_eq!(clean.b, replay.b, "decode must be idempotent");
+        assert_eq!(clean.symbols_used, replay.symbols_used);
+        assert_eq!(clean.stolen_rows, replay.stolen_rows);
+        assert_eq!(clean.redundant_rows, replay.redundant_rows);
+        assert_eq!(clean.computations, replay.computations);
+        assert_eq!(clean.latency, replay.latency);
+        for i in 0..64 {
+            assert_eq!(
+                clean.b[i].to_bits(),
+                want[i].to_bits(),
+                "integer data decodes exactly (row {i})"
+            );
+        }
+    }
+
+    /// The fixed-rate failure mode the dedup guards against: MDS block
+    /// buffers count *filled rows*, so an un-deduped duplicate would mark
+    /// a half-filled shard complete and decode garbage.
+    #[test]
+    fn duplicated_chunks_change_nothing_for_mds() {
+        let a = Matrix::random_ints(64, 6, 4, 21);
+        let x = Matrix::random_int_vector(6, 4, 22);
+        let code = MdsCode::new(64, 2, 2, 23);
+        let enc = ErasureCode::encode_shards(&code, &a, &ShardSizing::uniform(2), 1);
+        let want = a.matvec(&x);
+
+        let mut base = Vec::new();
+        let mut dup = Vec::new();
+        for (s, shard) in enc.shards.iter().enumerate() {
+            for (i, msg) in shard_chunks(shard, s, s, &x).into_iter().enumerate() {
+                base.push(WorkerEvent::Chunk(msg.clone()));
+                dup.push(WorkerEvent::Chunk(msg.clone()));
+                if i == 0 {
+                    // duplicating the first chunk of each shard would,
+                    // without dedup, complete the 32-row block buffer
+                    // after only 24 real rows
+                    dup.push(WorkerEvent::Chunk(msg));
+                }
+            }
+        }
+        let dones = [done(0, 32), done(1, 32)];
+        base.extend(dones.iter().cloned());
+        dup.extend(dones.iter().cloned());
+
+        let clean = collect_events(code.new_decoder(&enc.layout, 1), base, 2);
+        let replay = collect_events(code.new_decoder(&enc.layout, 1), dup, 2);
+
+        assert_eq!(clean.b, replay.b);
+        assert_eq!(clean.symbols_used, replay.symbols_used);
+        assert_eq!(clean.redundant_rows, replay.redundant_rows);
+        for i in 0..64 {
+            assert_eq!(
+                clean.b[i].to_bits(),
+                want[i].to_bits(),
+                "systematic MDS on integer data decodes exactly (row {i})"
+            );
+        }
     }
 }

@@ -11,6 +11,14 @@
 //! the `shard` whose row space `start_row` indexes (decode attribution
 //! via `ShardLayout::starts`). Under static dispatch the two are always
 //! equal.
+//!
+//! Over the TCP transport these messages travel as `CHUNK`/`JOB_DONE`
+//! frames (see [`transport::framing`](super::transport::framing)); the
+//! master-side proxy reconstructs them so the collect loop is
+//! transport-agnostic. Because a network can re-deliver completed work
+//! (reconnect replay), the master deduplicates chunks by
+//! `(shard, start_row, rows)` before ingest — see
+//! [`master::collect`](super::master::collect).
 
 /// One block of finished row-products from a worker.
 #[derive(Clone, Debug)]
@@ -28,6 +36,14 @@ pub struct ChunkMsg {
     /// Computing worker's virtual clock when the block was finished:
     /// `X_i + τ_i · rows_done_so_far`.
     pub virtual_time: f64,
+}
+
+impl ChunkMsg {
+    /// Encoded rows this chunk covers (`products` holds `batch` values
+    /// per row).
+    pub fn rows(&self, batch: usize) -> usize {
+        self.products.len() / batch.max(1)
+    }
 }
 
 /// Worker lifecycle events.

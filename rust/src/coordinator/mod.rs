@@ -32,6 +32,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod straggler;
 pub mod stream;
+pub mod transport;
 pub mod worker;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -168,6 +169,41 @@ impl Coordinator {
         engine: Engine,
         a: &Matrix,
     ) -> anyhow::Result<Self> {
+        // Spawn the pool *before* encoding: its resident threads double as
+        // the encode fleet (`ErasureCode::encode_shards_with` hands each
+        // worker a deterministic row range, bit-identical to serial), then
+        // hold the finished shards for the serving phase.
+        let pool = WorkerPool::prepare(cluster.workers, &engine);
+        Self::assemble(cluster, strategy, pool, a)
+    }
+
+    /// Like [`new`](Self::new), but over an explicit [`Transport`](pool::Transport)
+    /// (e.g. a connected [`TcpTransport`](transport::tcp::TcpTransport)
+    /// fleet of remote worker processes). Encoding still runs master-side
+    /// on the transport's lane threads; the finished shards are then
+    /// installed across the transport (for TCP, shipped to each remote
+    /// worker, where they stay resident across jobs and reconnects).
+    pub fn with_transport(
+        cluster: ClusterConfig,
+        strategy: Strategy,
+        transport: Box<dyn pool::Transport>,
+        a: &Matrix,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            transport.size() == cluster.workers,
+            "transport has {} lanes but cluster.workers = {}",
+            transport.size(),
+            cluster.workers
+        );
+        Self::assemble(cluster, strategy, WorkerPool::from_transport(transport), a)
+    }
+
+    fn assemble(
+        cluster: ClusterConfig,
+        strategy: Strategy,
+        pool: WorkerPool,
+        a: &Matrix,
+    ) -> anyhow::Result<Self> {
         let p = cluster.workers;
         anyhow::ensure!(p >= 1, "need at least one worker");
         anyhow::ensure!(cluster.symbol_width >= 1, "symbol_width must be >= 1");
@@ -183,15 +219,11 @@ impl Coordinator {
         );
         let (code, width) = strategy.build(a.rows(), p, cluster.symbol_width, cluster.seed);
         crate::info!(
-            "kernel: {} (runtime dispatch, {})",
+            "kernel: {} (runtime dispatch, {}); transport: {}",
             crate::matrix::kernel::active().name(),
-            std::env::consts::ARCH
+            std::env::consts::ARCH,
+            pool.transport_name()
         );
-        // Spawn the pool *before* encoding: its resident threads double as
-        // the encode fleet (`ErasureCode::encode_shards_with` hands each
-        // worker a deterministic row range, bit-identical to serial), then
-        // hold the finished shards for the serving phase.
-        let pool = WorkerPool::prepare(p, &engine);
         let encoded = code.encode_shards_with(a, &ShardSizing::proportional(&speeds), width, &pool);
         pool.install_shards(encoded.shards.clone());
         let layout = encoded.layout;
@@ -264,6 +296,19 @@ impl Coordinator {
     /// panicking or hanging.
     pub fn kill_worker(&self, w: usize) {
         self.pool.kill(w);
+    }
+
+    /// Re-admit a lost worker (network transports only): reconnect its
+    /// lane and re-install its shard. Returns whether the worker is live
+    /// again; always `false` in-process (a dead thread has nothing to
+    /// reconnect to) and after a deliberate [`kill_worker`](Self::kill_worker).
+    pub fn rejoin_worker(&self, w: usize) -> bool {
+        self.pool.rejoin(w)
+    }
+
+    /// The active transport backend's short name ("channel" / "tcp").
+    pub fn transport_name(&self) -> &'static str {
+        self.pool.transport_name()
     }
 
     /// Multiply a single vector with default per-job options.
@@ -694,6 +739,90 @@ mod tests {
         match coord.multiply(&x) {
             Err(JobError::WorkerLost { worker: 1 }) => {}
             other => panic!("expected WorkerLost, got {other:?}"),
+        }
+    }
+
+    /// The kill/WorkerLost audit under work stealing: when a worker dies
+    /// holding the tail of the task board, tasks stolen *from* it are not
+    /// lost — survivors drain the unissued tail over the shared board and
+    /// the job completes without hanging. With uncoded data (no surplus at
+    /// all) every one of the victim's remaining rows must arrive via a
+    /// steal, so completion is itself the proof.
+    #[test]
+    fn death_at_board_tail_is_drained_by_thieves() {
+        use scheduler::SchedulerKind;
+        let (m, p) = (64usize, 4usize);
+        let a = Matrix::random(m, 8, 330);
+        let x = Matrix::random_vector(8, 331);
+        let want = a.matvec(&x);
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.block_fraction = 0.25; // 4-row tasks on 16-row shards
+        let coord =
+            Coordinator::new(cluster, Strategy::Uncoded, Engine::Native, &a).expect("coordinator");
+        // worker 0 dies at a task boundary (8 = 2 tasks), so rows 8..16 of
+        // its shard sit unissued on the board when it goes
+        let opts = JobOptions {
+            seed: Some(3),
+            profile: Some(StragglerProfile::none().with_failures(vec![0], 8)),
+        };
+        let out = coord
+            .multiply_opts(&x, &opts)
+            .expect("survivors must complete the victim's tail");
+        assert!(out.per_worker[0].failed);
+        assert_eq!(out.per_worker[0].rows_done, 8);
+        assert!(
+            out.stolen_rows >= 8,
+            "the victim's 8-row tail must arrive via steals, got {}",
+            out.stolen_rows
+        );
+        assert_eq!(out.computations, m, "uncoded: every row exactly once");
+        assert_eq!(out.redundant_rows, 0);
+        for i in 0..m {
+            assert!((out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0), "row {i}");
+        }
+    }
+
+    /// Mid-task death under stealing: the clipped task's tail is issued
+    /// but never delivered, so uncoded data cannot complete — while LT's
+    /// surplus symbols absorb the loss. Neither case may hang.
+    #[test]
+    fn mid_task_death_loses_inflight_rows_but_lt_completes() {
+        use scheduler::SchedulerKind;
+        let (m, p) = (128usize, 4usize);
+        let a = Matrix::random(m, 8, 340);
+        let x = Matrix::random_vector(8, 341);
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.block_fraction = 0.25;
+        // fail_after = 6 is inside a task (not a multiple of the grain):
+        // the remainder of that task dies with the worker
+        let opts = JobOptions {
+            seed: Some(4),
+            profile: Some(StragglerProfile::none().with_failures(vec![0], 6)),
+        };
+        let unc = Coordinator::new(cluster.clone(), Strategy::Uncoded, Engine::Native, &a)
+            .expect("coordinator");
+        match unc.multiply_opts(&x, &opts) {
+            Err(JobError::Undecodable { .. }) => {}
+            other => panic!("uncoded must lose the in-flight rows, got {other:?}"),
+        }
+        let lt = Coordinator::new(
+            cluster,
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .expect("coordinator");
+        let out = lt
+            .multiply_opts(&x, &opts)
+            .expect("LT completes from surplus chunks");
+        assert!(out.per_worker[0].failed);
+        let want = a.matvec(&x);
+        for i in 0..m {
+            assert!((out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0), "row {i}");
         }
     }
 

@@ -1,37 +1,52 @@
-//! Persistent worker fleet: one long-lived thread per worker, each serving
-//! [`JobOrder`]s off a FIFO queue with the fleet's encoded shards
+//! Persistent worker fleet: one long-lived service lane per worker, each
+//! serving [`JobOrder`]s off a FIFO queue with the fleet's encoded shards
 //! resident.
 //!
 //! The original coordinator spawned `p` fresh threads per multiply job —
 //! fine for one-shot experiments, but under serving traffic the spawn +
 //! page-in cost dominates small jobs and the shards are re-shared per job.
-//! The pool moves both off the latency path: threads are created once in
-//! `Coordinator::new`, the shard list is `Arc`-shared into all of them
-//! (worker `w` *owns* shard `w`, but the work-stealing scheduler may hand
-//! it tail ranges of any shard — see [`scheduler`](super::scheduler)),
-//! and a job is just `p` channel sends. Concurrent jobs (the coordinator
-//! is `Sync`) queue FCFS at each worker, which is exactly the M/G/1
-//! reduction the paper's §5 streaming analysis assumes.
+//! The pool moves both off the latency path: lanes are created once in
+//! `Coordinator::new`, the shard list is installed once (worker `w` *owns*
+//! shard `w`, but the work-stealing scheduler may hand it tail ranges of
+//! any shard — see [`scheduler`](super::scheduler)), and a job is just `p`
+//! lane sends. Concurrent jobs (the coordinator is `Sync`) queue FCFS at
+//! each worker, which is exactly the M/G/1 reduction the paper's §5
+//! streaming analysis assumes.
 //!
-//! **Two-phase construction**: [`WorkerPool::prepare`] spawns the threads
+//! **The transport seam**: *how* a lane reaches its worker is behind the
+//! [`Transport`] trait. [`ChannelTransport`] is the in-process default —
+//! one `std::thread` per worker pulling [`TransportMsg`]s off an `mpsc`
+//! queue, byte-identical to the pre-seam pool. The TCP backend
+//! ([`transport::tcp::TcpTransport`](super::transport::tcp::TcpTransport))
+//! drives one remote `rateless worker` *process* per lane over
+//! length-prefixed frames, with the task board (and therefore steal
+//! decisions) staying master-side. `WorkerPool` is the façade both sit
+//! behind: it owns fleet-ordered submission and the [`Executor`] encode
+//! lane, and never looks past the trait.
+//!
+//! **Two-phase construction**: [`WorkerPool::prepare`] spawns the lanes
 //! *before* the shards exist, so the encode preprocessing can run **on
-//! the resident worker threads** (the pool implements
+//! the resident worker lanes** (the pool implements
 //! [`Executor`](crate::util::threadpool::Executor); the coordinator hands
 //! `ErasureCode::encode_shards_with` the pool, one deterministic
 //! row-range task per shard). [`WorkerPool::install_shards`] then parks
 //! the encoded shards; jobs may only be broadcast after that.
 //! [`WorkerPool::spawn`] keeps the one-shot convenience path.
 //!
-//! **Worker loss**: a pool thread can go away — [`WorkerPool::kill`]
-//! decommissions one deliberately (fault injection), and a panicking
-//! engine would have the same effect. [`WorkerPool::broadcast`] surfaces
-//! that as `Err(worker)` instead of panicking, so one dead worker fails
-//! the *current* job with a diagnosable error rather than poisoning the
-//! submit lock and every job after it.
+//! **Worker loss**: a lane can go away — [`WorkerPool::kill`]
+//! decommissions one deliberately (fault injection), a panicking engine
+//! has the same effect, and a network transport additionally loses lanes
+//! to dead connections. [`WorkerPool::broadcast`] surfaces all of these
+//! as `Err(worker)` instead of panicking, so one dead worker fails the
+//! *current* job with a diagnosable error rather than poisoning the
+//! submit lock and every job after it. Network transports can also
+//! re-admit a lost worker via [`WorkerPool::rejoin`] (reconnect + shard
+//! re-install); for the in-process transport a dead thread is gone for
+//! good and `rejoin` reports `false`.
 //!
 //! This builds on the same `std::thread` + `std::sync::mpsc` substrate as
 //! [`util::threadpool`](crate::util::threadpool); it is a separate type
-//! because pool workers own per-thread state (the resident shard list)
+//! because pool workers own per-lane state (the resident shard list)
 //! rather than pulling boxed closures from a shared queue.
 
 use std::sync::mpsc::{channel, Sender};
@@ -43,41 +58,71 @@ use crate::matrix::Matrix;
 use crate::runtime::Engine;
 use crate::util::threadpool::Executor;
 
-enum PoolMsg {
+/// One unit of work handed to a worker's service lane, in FIFO order.
+pub enum TransportMsg {
+    /// Run one multiply job (shards must be installed first).
     Job(JobOrder),
-    /// Run one boxed task on the worker thread (the parallel encode lane).
+    /// Run one boxed task on the lane (the parallel encode path). Always
+    /// executed master-side — a network transport runs it on the lane's
+    /// local proxy thread, never on the remote worker.
     Exec(Box<dyn FnOnce() + Send + 'static>),
-    /// Decommission: the worker thread exits after draining earlier
-    /// queue entries.
+    /// Decommission: the lane shuts its worker down after draining
+    /// earlier queue entries.
     Shutdown,
 }
 
-/// A fleet of persistent worker threads, one per encoded shard.
-pub struct WorkerPool {
-    senders: Vec<Sender<PoolMsg>>,
-    /// The fleet's resident shard list; set once by
-    /// [`install_shards`](Self::install_shards) (after the encode, which
-    /// may itself run on these threads).
+/// How the master reaches its worker fleet.
+///
+/// Implementations own one FIFO service lane per worker and must preserve
+/// per-worker ordering: a `Job` sent after `install_shards` must observe
+/// the shards, and two jobs sent to the same worker run in send order.
+/// Cross-worker ordering is the caller's problem (`WorkerPool` holds its
+/// submit lock across a whole-fleet broadcast).
+pub trait Transport: Send + Sync {
+    /// Short backend name for logs ("channel", "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Number of worker lanes.
+    fn size(&self) -> usize;
+
+    /// Park the fleet's encoded shards with the workers (exactly once,
+    /// one shard per lane). Panics on a second install or a length
+    /// mismatch — both are coordinator bugs, not runtime conditions.
+    fn install_shards(&self, shards: Vec<Arc<Matrix>>);
+
+    /// Hand `msg` to worker `w`'s lane. `Err` returns the message if the
+    /// worker is already known to be gone, letting the caller recover
+    /// queued work (see [`Executor::run_all`]).
+    fn send(&self, w: usize, msg: TransportMsg) -> Result<(), TransportMsg>;
+
+    /// Try to re-admit a lost worker — reconnect and re-install its
+    /// shards. Only meaningful for network transports; the in-process
+    /// default has nothing to reconnect to.
+    fn rejoin(&self, _w: usize) -> bool {
+        false
+    }
+}
+
+/// The in-process transport: one `std::thread` per worker, `mpsc` lanes,
+/// shards shared by `Arc` — the simulation backend.
+pub struct ChannelTransport {
+    senders: Vec<Sender<TransportMsg>>,
+    /// The fleet's resident shard list; set once by `install_shards`
+    /// (after the encode, which may itself run on these threads).
     shards: Arc<OnceLock<Vec<Arc<Matrix>>>>,
-    /// Serializes whole-fleet submission: concurrent jobs must land in the
-    /// same order on every worker's queue, or two jobs could interleave
-    /// (worker 0 runs A then B, worker 1 runs B then A) and each would
-    /// stall on the other — breaking the FCFS/M-G-1 queueing the §5
-    /// streaming model assumes.
-    submit_lock: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
 }
 
-impl WorkerPool {
+impl ChannelTransport {
     /// Spawn `p` worker threads with no shards yet: each thread serves
     /// its queue (encode tasks now, jobs once shards are installed) until
-    /// the pool is dropped or the worker is [`kill`](Self::kill)ed.
+    /// the transport is dropped or the worker is shut down.
     pub fn prepare(p: usize, engine: &Engine) -> Self {
         let shards: Arc<OnceLock<Vec<Arc<Matrix>>>> = Arc::new(OnceLock::new());
         let mut senders = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for w in 0..p {
-            let (tx, rx) = channel::<PoolMsg>();
+            let (tx, rx) = channel::<TransportMsg>();
             let engine = engine.clone();
             let shards = Arc::clone(&shards);
             let handle = std::thread::Builder::new()
@@ -85,14 +130,14 @@ impl WorkerPool {
                 .spawn(move || {
                     while let Ok(msg) = rx.recv() {
                         match msg {
-                            PoolMsg::Job(job) => {
+                            TransportMsg::Job(job) => {
                                 let fleet = shards
                                     .get()
                                     .expect("shards must be installed before jobs");
                                 worker::run_job(w, fleet, &engine, job);
                             }
-                            PoolMsg::Exec(task) => task(),
-                            PoolMsg::Shutdown => break,
+                            TransportMsg::Exec(task) => task(),
+                            TransportMsg::Shutdown => break,
                         }
                     }
                 })
@@ -103,22 +148,79 @@ impl WorkerPool {
         Self {
             senders,
             shards,
-            submit_lock: Mutex::new(()),
             handles,
         }
     }
+}
 
-    /// Park the encoded shards in the fleet (exactly once, one shard per
-    /// worker). Jobs broadcast before this panic on the worker thread.
-    pub fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+impl Transport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "channel"
+    }
+
+    fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
         assert_eq!(shards.len(), self.senders.len(), "one shard per worker");
         if self.shards.set(shards).is_err() {
             panic!("shards already installed");
         }
     }
 
-    /// One-shot convenience: spawn one thread per shard with the shards
-    /// resident immediately.
+    fn send(&self, w: usize, msg: TransportMsg) -> Result<(), TransportMsg> {
+        self.senders[w].send(msg).map_err(|failed| failed.0)
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        // closing the queues lets each worker finish in-flight jobs and exit
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A fleet of persistent workers behind a [`Transport`], one per encoded
+/// shard.
+pub struct WorkerPool {
+    transport: Box<dyn Transport>,
+    /// Serializes whole-fleet submission: concurrent jobs must land in the
+    /// same order on every worker's queue, or two jobs could interleave
+    /// (worker 0 runs A then B, worker 1 runs B then A) and each would
+    /// stall on the other — breaking the FCFS/M-G-1 queueing the §5
+    /// streaming model assumes.
+    submit_lock: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `p` in-process worker threads with no shards yet (the
+    /// simulation default; see [`from_transport`](Self::from_transport)
+    /// for other backends).
+    pub fn prepare(p: usize, engine: &Engine) -> Self {
+        Self::from_transport(Box::new(ChannelTransport::prepare(p, engine)))
+    }
+
+    /// Wrap an already-connected transport (e.g. a TCP fleet) in the
+    /// pool façade.
+    pub fn from_transport(transport: Box<dyn Transport>) -> Self {
+        Self {
+            transport,
+            submit_lock: Mutex::new(()),
+        }
+    }
+
+    /// Park the encoded shards in the fleet (exactly once, one shard per
+    /// worker). Jobs broadcast before this panic on the worker lane.
+    pub fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+        self.transport.install_shards(shards);
+    }
+
+    /// One-shot convenience: spawn one in-process thread per shard with
+    /// the shards resident immediately.
     pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
         let pool = Self::prepare(shards.len(), engine);
         pool.install_shards(shards);
@@ -127,47 +229,59 @@ impl WorkerPool {
 
     /// Number of workers.
     pub fn size(&self) -> usize {
-        self.senders.len()
+        self.transport.size()
+    }
+
+    /// The backend's short name ("channel", "tcp") for logs.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
     }
 
     /// Enqueue one job per worker, atomically with respect to other
-    /// broadcasts (returns as soon as all queues have the job). If a
-    /// worker thread is gone, returns `Err(worker)` — the caller maps
-    /// this to [`JobError::WorkerLost`](super::JobError::WorkerLost) and
-    /// the pool stays usable for diagnostics or a resized retry.
+    /// broadcasts (returns as soon as all lanes have the job). If a
+    /// worker is gone, returns `Err(worker)` — the caller maps this to
+    /// [`JobError::WorkerLost`](super::JobError::WorkerLost) and the pool
+    /// stays usable for diagnostics, a [`rejoin`](Self::rejoin), or a
+    /// resized retry.
     pub fn broadcast(&self, jobs: Vec<JobOrder>) -> Result<(), usize> {
-        assert_eq!(jobs.len(), self.senders.len(), "one order per worker");
+        assert_eq!(jobs.len(), self.size(), "one order per worker");
         let _fleet_order = self
             .submit_lock
             .lock()
             .unwrap_or_else(|poisoned| poisoned.into_inner());
-        for (w, (tx, job)) in self.senders.iter().zip(jobs).enumerate() {
-            if tx.send(PoolMsg::Job(job)).is_err() {
+        for (w, job) in jobs.into_iter().enumerate() {
+            if self.transport.send(w, TransportMsg::Job(job)).is_err() {
                 return Err(w);
             }
         }
         Ok(())
     }
 
-    /// Fault injection / decommission: ask worker `w`'s thread to exit
+    /// Fault injection / decommission: ask worker `w`'s lane to shut down
     /// once it reaches this point in its queue. Jobs broadcast afterwards
     /// observe the loss as `Err(w)`.
     pub fn kill(&self, w: usize) {
-        let _ = self.senders[w].send(PoolMsg::Shutdown);
+        let _ = self.transport.send(w, TransportMsg::Shutdown);
+    }
+
+    /// Try to re-admit a lost worker (network transports only): reconnect
+    /// and re-install its shard. Returns whether the worker is live again.
+    pub fn rejoin(&self, w: usize) -> bool {
+        self.transport.rejoin(w)
     }
 }
 
 type ExecTask = Box<dyn FnOnce() + Send + 'static>;
 
 impl Executor for WorkerPool {
-    /// Scatter the tasks round-robin over the worker threads and wait
+    /// Scatter the tasks round-robin over the worker lanes and wait
     /// for all of them — the encode lane. Each task lives in a shared
     /// slot, so a task whose worker dies with it still queued (e.g. a
     /// racing [`kill`](WorkerPool::kill)) is recovered and run inline on
     /// the caller — mirroring `broadcast`'s no-poisoning rule. Only a
     /// worker dying *mid-task* is unrecoverable, and panics.
     fn run_all(&self, tasks: Vec<ExecTask>) {
-        if self.senders.is_empty() {
+        if self.size() == 0 {
             for task in tasks {
                 task();
             }
@@ -198,9 +312,9 @@ impl Executor for WorkerPool {
                     }
                     let _ = tx.send(());
                 });
-                let w = i % self.senders.len();
-                if let Err(failed) = self.senders[w].send(PoolMsg::Exec(wrapped)) {
-                    if let PoolMsg::Exec(f) = failed.0 {
+                let w = i % self.size();
+                if let Err(failed) = self.transport.send(w, TransportMsg::Exec(wrapped)) {
+                    if let TransportMsg::Exec(f) = failed {
                         undeliverable.push(f);
                     }
                 }
@@ -235,16 +349,6 @@ impl Executor for WorkerPool {
                     return;
                 }
             }
-        }
-    }
-}
-
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        // closing the queues lets each worker finish in-flight jobs and exit
-        self.senders.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
         }
     }
 }
@@ -296,6 +400,7 @@ mod tests {
             .collect();
         let pool = WorkerPool::spawn(shards.clone(), &Engine::Native);
         assert_eq!(pool.size(), 3);
+        assert_eq!(pool.transport_name(), "channel");
         for job_round in 0..3u64 {
             let x = Arc::new(Matrix::random_vector(4, 100 + job_round));
             let (tx, rx) = evchannel();
@@ -390,6 +495,8 @@ mod tests {
             .collect();
         let pool = WorkerPool::spawn(shards, &Engine::Native);
         pool.kill(1);
+        // the in-process transport has nothing to reconnect to
+        assert!(!pool.rejoin(1));
         // wait until the thread has actually exited (its receiver drops)
         let deadline = Instant::now() + Duration::from_secs(5);
         loop {

@@ -1,0 +1,574 @@
+//! Length-prefixed binary wire format for the TCP transport.
+//!
+//! The vendored-crates-only policy rules out serde, so every message is
+//! encoded by hand with an **explicit little-endian field order** — the
+//! frame a worker built on aarch64 decodes identically on x86. The
+//! format is documented normatively in DESIGN.md §10; the layout is:
+//!
+//! ```text
+//! [len: u32 LE] [ver: u8] [type: u8] [payload: len-2 bytes]
+//! ```
+//!
+//! `len` counts everything after itself (version byte, type byte and
+//! payload), so a reader can skip unknown frame types wholesale.
+//! Variable-length fields inside a payload are prefixed with their own
+//! `u32 LE` element count; `f32`/`f64` travel as IEEE-754 bits in LE
+//! byte order (bit-exact round trip — the decode byte-identity claim
+//! depends on it).
+//!
+//! **Version negotiation**: the connecting master opens with
+//! [`WireMsg::Hello`] carrying the `RTLS` magic and the highest protocol
+//! version it speaks; the worker answers [`WireMsg::HelloAck`] with
+//! `min(worker_max, master_max)`, and both sides then stamp every frame
+//! with that agreed version. A peer seeing magic mismatch (not a rateless
+//! worker at all) or an agreed version it cannot speak drops the
+//! connection — there is exactly one version today, so "negotiation" is
+//! a handshake-time equality check with room to grow.
+
+use std::io::{self, Read, Write};
+
+/// Current (and only) protocol version.
+pub const PROTO_VERSION: u8 = 1;
+
+/// `"RTLS"` — distinguishes a rateless worker from a random listener.
+pub const MAGIC: [u8; 4] = *b"RTLS";
+
+/// Refuse frames larger than this (corrupt length prefix, not a real
+/// shard: a 100k×10k f32 shard is 4 GB installed in row-range pieces? No
+/// — shards install as one frame, so this bounds shard size to 1 GiB).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// In a `TaskGrant`, `len` encoding for "no more work" is a separate
+/// frame type instead — see [`WireMsg::TaskFin`].
+///
+/// Frame type codes (u8, grouped: 0x0_ session, 0x1_ job, 0x2_ liveness).
+pub mod ty {
+    pub const HELLO: u8 = 0x01;
+    pub const HELLO_ACK: u8 = 0x02;
+    pub const INSTALL_SHARD: u8 = 0x03;
+    pub const SHARD_OK: u8 = 0x04;
+    pub const JOB_START: u8 = 0x10;
+    pub const TASK_REQ: u8 = 0x11;
+    pub const TASK_GRANT: u8 = 0x12;
+    pub const TASK_FIN: u8 = 0x13;
+    pub const CHUNK: u8 = 0x14;
+    pub const JOB_DONE: u8 = 0x15;
+    pub const PING: u8 = 0x20;
+    pub const PONG: u8 = 0x21;
+    pub const SHUTDOWN: u8 = 0x22;
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Payload writer: appends fields in declaration order, LE throughout.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// `u32` count followed by the raw LE f32 bits.
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Payload reader with bounds-checked, typed field extraction.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(bad("payload truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if n > (MAX_FRAME as usize) / 4 {
+            return Err(bad("f32 vector length exceeds frame bound"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn finish(self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad("trailing bytes in payload"));
+        }
+        Ok(())
+    }
+}
+
+/// Every message that crosses a master ↔ worker connection.
+///
+/// Field order in each variant is the wire order. `TaskGrant.rows` is
+/// the steal path: when the master's board assigns worker `w` a range of
+/// a *foreign* shard, the victim's rows ship inline (the remote worker
+/// only holds its own shard resident), and `None` means "your resident
+/// shard, slice it yourself".
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Master → worker connection opener: magic + highest version spoken.
+    Hello { ver: u8 },
+    /// Worker → master: agreed version = min of the two maxima.
+    HelloAck { ver: u8 },
+    /// Master → worker: become worker `worker` and hold this shard
+    /// resident across jobs (and across reconnects).
+    InstallShard {
+        worker: u32,
+        rows: u32,
+        cols: u32,
+        data: Vec<f32>,
+    },
+    /// Worker → master: shard parked, jobs may begin.
+    ShardOk,
+    /// Master → worker: one multiply job. `fail_after == u64::MAX` means
+    /// no injected failure; `x` is the `cols × batch` row-major query
+    /// block.
+    JobStart {
+        batch: u32,
+        tau: f64,
+        initial_delay: f64,
+        fail_after: u64,
+        time_scale: f64,
+        x: Vec<f32>,
+    },
+    /// Worker → master: give me my next row-range task (this is how a
+    /// steal request traverses the transport — the board stays at the
+    /// master).
+    TaskReq,
+    /// Master → worker: compute `len` rows of `shard` starting at
+    /// `start` (row indices in the shard's row space).
+    TaskGrant {
+        shard: u32,
+        start: u32,
+        len: u32,
+        rows: Option<Vec<f32>>,
+    },
+    /// Master → worker: the board is dry for you; finish the job.
+    TaskFin,
+    /// Worker → master: one task's products plus the observability the
+    /// in-process path reports via `TaskSource::observe`.
+    Chunk {
+        shard: u32,
+        start_row: u32,
+        virtual_time: f64,
+        virt_elapsed: f64,
+        products: Vec<f32>,
+    },
+    /// Worker → master: job finished (`failed` = injected failure fired
+    /// or the engine errored — mirrors `WorkerEvent::Done`).
+    JobDone {
+        rows_done: u64,
+        virtual_time: f64,
+        failed: bool,
+    },
+    /// Master → worker liveness probe (idle lanes only; see
+    /// `tcp::HEARTBEAT_PERIOD`).
+    Ping { seq: u64 },
+    Pong { seq: u64 },
+    /// Master → worker: decommission — exit the process.
+    Shutdown,
+}
+
+impl WireMsg {
+    fn type_code(&self) -> u8 {
+        match self {
+            WireMsg::Hello { .. } => ty::HELLO,
+            WireMsg::HelloAck { .. } => ty::HELLO_ACK,
+            WireMsg::InstallShard { .. } => ty::INSTALL_SHARD,
+            WireMsg::ShardOk => ty::SHARD_OK,
+            WireMsg::JobStart { .. } => ty::JOB_START,
+            WireMsg::TaskReq => ty::TASK_REQ,
+            WireMsg::TaskGrant { .. } => ty::TASK_GRANT,
+            WireMsg::TaskFin => ty::TASK_FIN,
+            WireMsg::Chunk { .. } => ty::CHUNK,
+            WireMsg::JobDone { .. } => ty::JOB_DONE,
+            WireMsg::Ping { .. } => ty::PING,
+            WireMsg::Pong { .. } => ty::PONG,
+            WireMsg::Shutdown => ty::SHUTDOWN,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            WireMsg::Hello { ver } => {
+                e.buf.extend_from_slice(&MAGIC);
+                e.u8(*ver);
+            }
+            WireMsg::HelloAck { ver } => {
+                e.buf.extend_from_slice(&MAGIC);
+                e.u8(*ver);
+            }
+            WireMsg::InstallShard {
+                worker,
+                rows,
+                cols,
+                data,
+            } => {
+                e.u32(*worker);
+                e.u32(*rows);
+                e.u32(*cols);
+                e.f32s(data);
+            }
+            WireMsg::ShardOk | WireMsg::TaskReq | WireMsg::TaskFin | WireMsg::Shutdown => {}
+            WireMsg::JobStart {
+                batch,
+                tau,
+                initial_delay,
+                fail_after,
+                time_scale,
+                x,
+            } => {
+                e.u32(*batch);
+                e.f64(*tau);
+                e.f64(*initial_delay);
+                e.u64(*fail_after);
+                e.f64(*time_scale);
+                e.f32s(x);
+            }
+            WireMsg::TaskGrant {
+                shard,
+                start,
+                len,
+                rows,
+            } => {
+                e.u32(*shard);
+                e.u32(*start);
+                e.u32(*len);
+                match rows {
+                    None => e.u8(0),
+                    Some(r) => {
+                        e.u8(1);
+                        e.f32s(r);
+                    }
+                }
+            }
+            WireMsg::Chunk {
+                shard,
+                start_row,
+                virtual_time,
+                virt_elapsed,
+                products,
+            } => {
+                e.u32(*shard);
+                e.u32(*start_row);
+                e.f64(*virtual_time);
+                e.f64(*virt_elapsed);
+                e.f32s(products);
+            }
+            WireMsg::JobDone {
+                rows_done,
+                virtual_time,
+                failed,
+            } => {
+                e.u64(*rows_done);
+                e.f64(*virtual_time);
+                e.u8(*failed as u8);
+            }
+            WireMsg::Ping { seq } | WireMsg::Pong { seq } => e.u64(*seq),
+        }
+        e.buf
+    }
+
+    /// Frame and write `self` (one syscall-ish: single buffered write +
+    /// flush, so a frame is never interleaved with another).
+    pub fn write(&self, w: &mut impl Write) -> io::Result<()> {
+        let payload = self.payload();
+        let len = (payload.len() + 2) as u32;
+        if len > MAX_FRAME {
+            return Err(bad("frame exceeds MAX_FRAME"));
+        }
+        let mut frame = Vec::with_capacity(payload.len() + 6);
+        frame.extend_from_slice(&len.to_le_bytes());
+        frame.push(PROTO_VERSION);
+        frame.push(self.type_code());
+        frame.extend_from_slice(&payload);
+        w.write_all(&frame)?;
+        w.flush()
+    }
+
+    /// Read one frame, validating version, type and payload shape.
+    pub fn read(r: &mut impl Read) -> io::Result<WireMsg> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4);
+        if len < 2 || len > MAX_FRAME {
+            return Err(bad("bad frame length"));
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body)?;
+        let ver = body[0];
+        if ver != PROTO_VERSION {
+            return Err(bad("unsupported protocol version"));
+        }
+        let code = body[1];
+        let mut d = Dec::new(&body[2..]);
+        let msg = match code {
+            ty::HELLO | ty::HELLO_ACK => {
+                let magic = d.take(4)?;
+                if magic != MAGIC {
+                    return Err(bad("bad magic (not a rateless peer)"));
+                }
+                let ver = d.u8()?;
+                if code == ty::HELLO {
+                    WireMsg::Hello { ver }
+                } else {
+                    WireMsg::HelloAck { ver }
+                }
+            }
+            ty::INSTALL_SHARD => {
+                let worker = d.u32()?;
+                let rows = d.u32()?;
+                let cols = d.u32()?;
+                let data = d.f32s()?;
+                if data.len() != rows as usize * cols as usize {
+                    return Err(bad("shard data length mismatch"));
+                }
+                WireMsg::InstallShard {
+                    worker,
+                    rows,
+                    cols,
+                    data,
+                }
+            }
+            ty::SHARD_OK => WireMsg::ShardOk,
+            ty::JOB_START => WireMsg::JobStart {
+                batch: d.u32()?,
+                tau: d.f64()?,
+                initial_delay: d.f64()?,
+                fail_after: d.u64()?,
+                time_scale: d.f64()?,
+                x: d.f32s()?,
+            },
+            ty::TASK_REQ => WireMsg::TaskReq,
+            ty::TASK_GRANT => {
+                let shard = d.u32()?;
+                let start = d.u32()?;
+                let len = d.u32()?;
+                let rows = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.f32s()?),
+                    _ => return Err(bad("bad inline-rows tag")),
+                };
+                WireMsg::TaskGrant {
+                    shard,
+                    start,
+                    len,
+                    rows,
+                }
+            }
+            ty::TASK_FIN => WireMsg::TaskFin,
+            ty::CHUNK => WireMsg::Chunk {
+                shard: d.u32()?,
+                start_row: d.u32()?,
+                virtual_time: d.f64()?,
+                virt_elapsed: d.f64()?,
+                products: d.f32s()?,
+            },
+            ty::JOB_DONE => WireMsg::JobDone {
+                rows_done: d.u64()?,
+                virtual_time: d.f64()?,
+                failed: d.u8()? != 0,
+            },
+            ty::PING => WireMsg::Ping { seq: d.u64()? },
+            ty::PONG => WireMsg::Pong { seq: d.u64()? },
+            ty::SHUTDOWN => WireMsg::Shutdown,
+            _ => return Err(bad("unknown frame type")),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: WireMsg) {
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        // frame length prefix is consistent
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        assert_eq!(len as usize, buf.len() - 4);
+        assert_eq!(buf[4], PROTO_VERSION);
+        let got = WireMsg::read(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        round_trip(WireMsg::Hello { ver: 1 });
+        round_trip(WireMsg::HelloAck { ver: 1 });
+        round_trip(WireMsg::InstallShard {
+            worker: 3,
+            rows: 2,
+            cols: 3,
+            data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 4.0, 1e9],
+        });
+        round_trip(WireMsg::ShardOk);
+        round_trip(WireMsg::JobStart {
+            batch: 4,
+            tau: 2e-6,
+            initial_delay: 0.125,
+            fail_after: u64::MAX,
+            time_scale: 0.0,
+            x: vec![0.5; 12],
+        });
+        round_trip(WireMsg::TaskReq);
+        round_trip(WireMsg::TaskGrant {
+            shard: 1,
+            start: 128,
+            len: 64,
+            rows: None,
+        });
+        round_trip(WireMsg::TaskGrant {
+            shard: 2,
+            start: 0,
+            len: 2,
+            rows: Some(vec![9.0; 8]),
+        });
+        round_trip(WireMsg::TaskFin);
+        round_trip(WireMsg::Chunk {
+            shard: 0,
+            start_row: 32,
+            virtual_time: 1.5,
+            virt_elapsed: 0.25,
+            products: vec![13.0, -7.0],
+        });
+        round_trip(WireMsg::JobDone {
+            rows_done: 512,
+            virtual_time: 3.25,
+            failed: true,
+        });
+        round_trip(WireMsg::Ping { seq: 42 });
+        round_trip(WireMsg::Pong { seq: 42 });
+        round_trip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn f32_bits_survive_exactly() {
+        // decode byte-identity rests on bit-exact f32 transport: exercise
+        // non-trivial bit patterns (subnormal, -0.0, NaN payload is out of
+        // scope — matrices never contain NaN)
+        let vals = vec![-0.0f32, 1.0e-42, 3.402_823_5e38, 1.172_656_25];
+        let msg = WireMsg::Chunk {
+            shard: 0,
+            start_row: 0,
+            virtual_time: 0.0,
+            virt_elapsed: 0.0,
+            products: vals.clone(),
+        };
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        match WireMsg::read(&mut buf.as_slice()).unwrap() {
+            WireMsg::Chunk { products, .. } => {
+                for (a, b) in vals.iter().zip(&products) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_layout_is_pinned_little_endian() {
+        // pin the exact bytes of a small frame so an accidental field
+        // reorder or endianness slip is a test failure, not a silent
+        // protocol break
+        let mut buf = Vec::new();
+        WireMsg::Ping { seq: 0x0102 }.write(&mut buf).unwrap();
+        assert_eq!(
+            buf,
+            vec![
+                10, 0, 0, 0, // len = ver + type + 8-byte seq
+                1,    // version
+                0x20, // PING
+                0x02, 0x01, 0, 0, 0, 0, 0, 0, // seq LE
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_version_and_magic_mismatch() {
+        let mut buf = Vec::new();
+        WireMsg::TaskReq.write(&mut buf).unwrap();
+        buf[4] = 9; // unsupported version
+        assert!(WireMsg::read(&mut buf.as_slice()).is_err());
+
+        let mut hello = Vec::new();
+        WireMsg::Hello { ver: 1 }.write(&mut hello).unwrap();
+        hello[6] = b'X'; // corrupt magic
+        assert!(WireMsg::read(&mut hello.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_and_oversized_frames() {
+        let mut buf = Vec::new();
+        WireMsg::Ping { seq: 7 }.write(&mut buf).unwrap();
+        assert!(WireMsg::read(&mut buf[..buf.len() - 2].as_ref()).is_err());
+
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        let mut frame = huge.to_vec();
+        frame.extend_from_slice(&[1, 0x20]);
+        assert!(WireMsg::read(&mut frame.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_shard_shape_mismatch() {
+        let msg = WireMsg::InstallShard {
+            worker: 0,
+            rows: 2,
+            cols: 2,
+            data: vec![1.0; 4],
+        };
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        // corrupt the rows field (payload starts at byte 6; worker u32,
+        // then rows u32 at offset 10)
+        buf[10] = 3;
+        assert!(WireMsg::read(&mut buf.as_slice()).is_err());
+    }
+}

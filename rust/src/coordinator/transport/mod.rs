@@ -1,0 +1,18 @@
+//! Network transports for the worker fleet.
+//!
+//! The [`Transport`](super::pool::Transport) seam lives in
+//! [`pool`](super::pool) (next to its in-process default); this module
+//! holds the backends that cross a machine boundary:
+//!
+//! * [`framing`] — the length-prefixed, versioned, little-endian wire
+//!   format (DESIGN.md §10). No serde: every field is written by hand in
+//!   a pinned order, and the f32 payloads round-trip bit-exactly — the
+//!   cross-transport decode byte-identity claim depends on it.
+//! * [`tcp`] — the cluster backend: each worker is a separate
+//!   `rateless worker` process holding its encoded shard resident
+//!   across jobs *and across reconnects*, driven by a master-side proxy
+//!   thread per lane. The scheduler's task board stays at the master, so
+//!   work-stealing decisions traverse the transport as task grants.
+
+pub mod framing;
+pub mod tcp;

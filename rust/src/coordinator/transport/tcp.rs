@@ -1,0 +1,825 @@
+//! TCP transport: the fleet as separate `rateless worker` processes.
+//!
+//! # Topology
+//!
+//! The master owns one **proxy thread per worker lane**. A proxy holds
+//! the lane's `TcpStream` and translates between the pool's in-memory
+//! protocol ([`TransportMsg`]) and the wire ([`WireMsg`]): a broadcast
+//! job becomes a `JOB_START` frame, and the proxy then serves the remote
+//! worker's pull loop — `TASK_REQ` frames are answered from the job's
+//! [`TaskSource`](crate::coordinator::scheduler::TaskSource), which is
+//! how **steal requests traverse the transport**: the work-stealing board
+//! stays master-side, and a grant on a *foreign* shard ships the victim's
+//! rows inline (a remote worker only holds its own shard resident).
+//! `CHUNK` frames are forwarded to the job's event channel exactly as the
+//! in-process worker would send them, including the `virt_elapsed`
+//! feedback for the EWMA speed tracker.
+//!
+//! # Worker processes
+//!
+//! `rateless worker --listen host:port` ([`run_worker`]) binds, prints
+//! the bound address on stdout (`--listen 127.0.0.1:0` gives an
+//! OS-assigned port — how the loopback tests avoid collisions), and
+//! serves one master connection at a time. The encoded shard installed
+//! by `INSTALL_SHARD` stays resident across jobs **and across
+//! connections**: when a master reconnects after a network fault, the
+//! accept loop is the rejoin path. The worker runs the same virtual-time
+//! pacing loop as the in-process path (`initial_delay`, per-row `tau`,
+//! `time_scale`, `fail_after` clipping at the failure boundary), so a
+//! TCP fleet reproduces the simulator's straggler model bit-for-bit on
+//! integer-valued data.
+//!
+//! # Failure semantics
+//!
+//! Any I/O error on a lane marks it dead (`alive = false`): a job in
+//! flight reports `Done { failed: true }` — the same silent-death shape
+//! as an injected failure, so the decoder completes from surplus chunks —
+//! and the *next* [`broadcast`](crate::coordinator::pool::WorkerPool::broadcast)
+//! surfaces [`JobError::WorkerLost`](crate::coordinator::JobError::WorkerLost).
+//! Idle lanes are probed with `PING`/`PONG` every
+//! [`HEARTBEAT_PERIOD`] so a silently dead peer is noticed between jobs,
+//! not at the next submit. [`TcpTransport::rejoin`] reconnects a dead
+//! lane and re-installs its shard; [`kill`](crate::coordinator::pool::WorkerPool::kill)
+//! sends `SHUTDOWN`, which exits the remote process (decommission is
+//! deliberate and permanent — rejoin after kill fails).
+//!
+//! # Divergences from the in-process transport
+//!
+//! * The remote virtual clock starts at `JOB_START` receipt, so time a
+//!   job spends queued at the master does not count against the remote
+//!   worker's initial delay (in-process it does, via the shared `start`
+//!   Instant). Irrelevant for single-job-at-a-time runs.
+//! * Cancellation reaches a remote worker at its next `TASK_REQ` (the
+//!   master answers `TASK_FIN`), not mid-sleep.
+//! * MDS decode output across transports matches to float tolerance,
+//!   not bitwise: the decoder uses the first `k` shards to *complete*,
+//!   an arrival-order-dependent subset (true of any two in-process runs
+//!   as well). LT and uncoded decode are bitwise identical on
+//!   integer-valued data regardless of arrival order.
+
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::framing::{WireMsg, PROTO_VERSION};
+use crate::coordinator::messages::{ChunkMsg, WorkerEvent};
+use crate::coordinator::pool::{Transport, TransportMsg};
+use crate::coordinator::worker::{self, JobOrder};
+use crate::matrix::Matrix;
+use crate::runtime::Engine;
+
+/// Idle-lane liveness probe cadence (master → worker `PING`).
+pub const HEARTBEAT_PERIOD: Duration = Duration::from_millis(500);
+/// How long an idle probe waits for its `PONG`.
+const PONG_TIMEOUT: Duration = Duration::from_secs(5);
+/// Shard install acknowledgement window (shards can be large).
+const INSTALL_TIMEOUT: Duration = Duration::from_secs(60);
+/// Per-peer connection establishment window.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// How long [`TcpTransport::rejoin`] waits for the lane to come back.
+const REJOIN_WAIT: Duration = Duration::from_secs(5);
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Master side of the handshake: send `HELLO`, agree on
+/// `min(ours, theirs)`, reject anything we cannot speak.
+fn client_handshake(stream: &mut TcpStream) -> io::Result<()> {
+    WireMsg::Hello { ver: PROTO_VERSION }.write(stream)?;
+    match WireMsg::read(stream)? {
+        WireMsg::HelloAck { ver } => {
+            let agreed = ver.min(PROTO_VERSION);
+            if agreed != PROTO_VERSION {
+                return Err(bad("no common protocol version"));
+            }
+            Ok(())
+        }
+        _ => Err(bad("expected HELLO_ACK")),
+    }
+}
+
+fn connect_peer(addr: &str) -> io::Result<TcpStream> {
+    let mut last = bad("peer address resolved to nothing");
+    for sock in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT) {
+            Ok(mut stream) => {
+                stream.set_nodelay(true)?;
+                client_handshake(&mut stream)?;
+                return Ok(stream);
+            }
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Ship worker `w`'s shard and wait for the ack.
+fn install_remote(stream: &mut TcpStream, w: usize, shard: &Matrix) -> io::Result<()> {
+    WireMsg::InstallShard {
+        worker: w as u32,
+        rows: shard.rows() as u32,
+        cols: shard.cols() as u32,
+        data: shard.data().to_vec(),
+    }
+    .write(stream)?;
+    stream.set_read_timeout(Some(INSTALL_TIMEOUT))?;
+    let reply = WireMsg::read(stream);
+    stream.set_read_timeout(None)?;
+    match reply? {
+        WireMsg::ShardOk => Ok(()),
+        _ => Err(bad("expected SHARD_OK")),
+    }
+}
+
+enum ProxyMsg {
+    /// The fleet's full shard list: install `shards[w]` remotely, keep
+    /// the rest for inline steal grants.
+    Install(Arc<Vec<Arc<Matrix>>>),
+    External(TransportMsg),
+    Rejoin,
+}
+
+/// The cluster backend: one remote worker process per lane.
+pub struct TcpTransport {
+    lanes: Vec<Sender<ProxyMsg>>,
+    alive: Vec<Arc<AtomicBool>>,
+    handles: Vec<JoinHandle<()>>,
+    installed: OnceLock<()>,
+    peers: Vec<String>,
+}
+
+impl TcpTransport {
+    /// Connect and handshake every peer (`host:port` each), spawning one
+    /// proxy thread per lane. Fails if any peer is unreachable — a fleet
+    /// that starts degraded is a config error, not a runtime fault.
+    pub fn connect(peers: &[String]) -> anyhow::Result<Self> {
+        let mut lanes = Vec::with_capacity(peers.len());
+        let mut alive = Vec::with_capacity(peers.len());
+        let mut handles = Vec::with_capacity(peers.len());
+        for (w, addr) in peers.iter().enumerate() {
+            let stream = connect_peer(addr)
+                .map_err(|e| anyhow::anyhow!("worker {w} at {addr}: {e}"))?;
+            let (tx, rx) = channel::<ProxyMsg>();
+            let live = Arc::new(AtomicBool::new(true));
+            let handle = {
+                let live = Arc::clone(&live);
+                let addr = addr.clone();
+                std::thread::Builder::new()
+                    .name(format!("tcp-proxy-{w}"))
+                    .spawn(move || proxy_loop(w, &addr, stream, rx, &live))
+                    .expect("spawn tcp proxy")
+            };
+            lanes.push(tx);
+            alive.push(live);
+            handles.push(handle);
+        }
+        crate::info!("tcp transport: {} workers connected", peers.len());
+        Ok(Self {
+            lanes,
+            alive,
+            handles,
+            installed: OnceLock::new(),
+            peers: peers.to_vec(),
+        })
+    }
+
+    /// The peer list this transport was built from.
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn size(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+        assert_eq!(shards.len(), self.lanes.len(), "one shard per worker");
+        if self.installed.set(()).is_err() {
+            panic!("shards already installed");
+        }
+        let fleet = Arc::new(shards);
+        for lane in &self.lanes {
+            let _ = lane.send(ProxyMsg::Install(Arc::clone(&fleet)));
+        }
+    }
+
+    fn send(&self, w: usize, msg: TransportMsg) -> Result<(), TransportMsg> {
+        // a dead lane still drains its queue (failing jobs fast), but the
+        // pool contract wants loss surfaced at submit time
+        if !self.alive[w].load(Ordering::SeqCst) {
+            return Err(msg);
+        }
+        self.lanes[w].send(ProxyMsg::External(msg)).map_err(|e| {
+            match e.0 {
+                ProxyMsg::External(m) => m,
+                _ => unreachable!("send only enqueues External"),
+            }
+        })
+    }
+
+    fn rejoin(&self, w: usize) -> bool {
+        if self.lanes[w].send(ProxyMsg::Rejoin).is_err() {
+            return false; // proxy exited: the worker was decommissioned
+        }
+        let deadline = Instant::now() + REJOIN_WAIT;
+        while Instant::now() < deadline {
+            if self.alive[w].load(Ordering::SeqCst) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // closing the lanes lets each proxy finish in-flight work and
+        // exit; remote workers see EOF and return to their accept loop
+        // (they stay up for the next master — shards stay resident)
+        self.lanes.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One lane's service thread: owns the socket, speaks the wire protocol.
+fn proxy_loop(
+    w: usize,
+    addr: &str,
+    stream: TcpStream,
+    rx: Receiver<ProxyMsg>,
+    alive: &AtomicBool,
+) {
+    let mut stream = Some(stream);
+    let mut fleet: Option<Arc<Vec<Arc<Matrix>>>> = None;
+    let mut ping_seq = 0u64;
+    loop {
+        match rx.recv_timeout(HEARTBEAT_PERIOD) {
+            Ok(ProxyMsg::Install(f)) => {
+                fleet = Some(f);
+                let fleet = fleet.as_ref().unwrap();
+                if let Some(s) = stream.as_mut() {
+                    if let Err(e) = install_remote(s, w, &fleet[w]) {
+                        crate::warn_!("tcp worker {w}: shard install failed: {e}");
+                        stream = None;
+                        alive.store(false, Ordering::SeqCst);
+                    }
+                }
+            }
+            Ok(ProxyMsg::External(TransportMsg::Job(job))) => match stream.as_mut() {
+                Some(s) => {
+                    if let Err(e) = drive_job(w, s, fleet.as_deref(), job) {
+                        crate::warn_!("tcp worker {w}: lost mid-job: {e}");
+                        stream = None;
+                        alive.store(false, Ordering::SeqCst);
+                    }
+                }
+                None => {
+                    // lane already dead: fail the job instantly so the
+                    // collector never hangs on a missing Done
+                    fail_job(w, job);
+                }
+            },
+            Ok(ProxyMsg::External(TransportMsg::Exec(task))) => task(),
+            Ok(ProxyMsg::External(TransportMsg::Shutdown)) => {
+                if let Some(s) = stream.as_mut() {
+                    let _ = WireMsg::Shutdown.write(s);
+                }
+                alive.store(false, Ordering::SeqCst);
+                return;
+            }
+            Ok(ProxyMsg::Rejoin) => {
+                if stream.is_some() {
+                    continue; // already live
+                }
+                match reconnect(w, addr, fleet.as_deref()) {
+                    Ok(s) => {
+                        crate::info!("tcp worker {w}: rejoined at {addr}");
+                        stream = Some(s);
+                        alive.store(true, Ordering::SeqCst);
+                    }
+                    Err(e) => crate::warn_!("tcp worker {w}: rejoin failed: {e}"),
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // idle: probe liveness so loss is noticed between jobs
+                if let Some(s) = stream.as_mut() {
+                    ping_seq += 1;
+                    if let Err(e) = ping(s, ping_seq) {
+                        crate::warn_!("tcp worker {w}: heartbeat failed: {e}");
+                        stream = None;
+                        alive.store(false, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn reconnect(
+    w: usize,
+    addr: &str,
+    fleet: Option<&Vec<Arc<Matrix>>>,
+) -> io::Result<TcpStream> {
+    let mut stream = connect_peer(addr)?;
+    if let Some(fleet) = fleet {
+        install_remote(&mut stream, w, &fleet[w])?;
+    }
+    Ok(stream)
+}
+
+fn ping(stream: &mut TcpStream, seq: u64) -> io::Result<()> {
+    WireMsg::Ping { seq }.write(stream)?;
+    stream.set_read_timeout(Some(PONG_TIMEOUT))?;
+    let reply = WireMsg::read(stream);
+    stream.set_read_timeout(None)?;
+    match reply? {
+        WireMsg::Pong { seq: s } if s == seq => Ok(()),
+        _ => Err(bad("expected matching PONG")),
+    }
+}
+
+/// Report a job as instantly dead (the silent-death shape the collector
+/// already understands) without touching the wire.
+fn fail_job(w: usize, job: JobOrder) {
+    let _ = job.tx.send(WorkerEvent::Done {
+        worker: w,
+        rows_done: 0,
+        virtual_time: job.plan.initial_delay,
+        failed: true,
+    });
+}
+
+/// Serve one job over the wire: announce it, answer the remote pull loop
+/// from the master-side task board, forward chunks. An I/O error fails
+/// the job (Done { failed }) and the caller marks the lane dead.
+fn drive_job(
+    w: usize,
+    stream: &mut TcpStream,
+    fleet: Option<&Vec<Arc<Matrix>>>,
+    job: JobOrder,
+) -> io::Result<()> {
+    let JobOrder {
+        shared,
+        plan,
+        tau,
+        tx,
+    } = job;
+    let s = &*shared;
+    let res: io::Result<()> = (|| {
+        WireMsg::JobStart {
+            batch: s.batch as u32,
+            tau,
+            initial_delay: plan.initial_delay,
+            fail_after: plan.fail_after.map_or(u64::MAX, |f| f as u64),
+            time_scale: s.time_scale,
+            x: (*s.x).clone(),
+        }
+        .write(stream)?;
+        loop {
+            match WireMsg::read(stream)? {
+                WireMsg::TaskReq => {
+                    let task = if s.cancel.load(Ordering::Relaxed) {
+                        None // cancellation reaches the remote as board-dry
+                    } else {
+                        s.tasks.next_task(w)
+                    };
+                    match task {
+                        None => WireMsg::TaskFin.write(stream)?,
+                        Some(t) => {
+                            let rows = if t.shard == w {
+                                None // resident shard: slice remotely
+                            } else {
+                                let fleet =
+                                    fleet.ok_or_else(|| bad("job before shard install"))?;
+                                Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
+                            };
+                            WireMsg::TaskGrant {
+                                shard: t.shard as u32,
+                                start: t.start as u32,
+                                len: t.len as u32,
+                                rows,
+                            }
+                            .write(stream)?;
+                        }
+                    }
+                }
+                WireMsg::Chunk {
+                    shard,
+                    start_row,
+                    virtual_time,
+                    virt_elapsed,
+                    products,
+                } => {
+                    let rows = products.len() / s.batch.max(1);
+                    s.tasks.observe(w, rows, virt_elapsed);
+                    let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
+                        worker: w,
+                        shard: shard as usize,
+                        start_row: start_row as usize,
+                        products,
+                        virtual_time,
+                    }));
+                }
+                WireMsg::JobDone {
+                    rows_done,
+                    virtual_time,
+                    failed,
+                } => {
+                    let _ = tx.send(WorkerEvent::Done {
+                        worker: w,
+                        rows_done: rows_done as usize,
+                        virtual_time,
+                        failed,
+                    });
+                    return Ok(());
+                }
+                _ => return Err(bad("unexpected frame during job")),
+            }
+        }
+    })();
+    if res.is_err() {
+        // the remote died mid-job: synthesize the silent-death Done so
+        // the collector completes from surplus chunks instead of hanging
+        let _ = tx.send(WorkerEvent::Done {
+            worker: w,
+            rows_done: 0,
+            virtual_time: plan.initial_delay,
+            failed: true,
+        });
+    }
+    res
+}
+
+// ---------------------------------------------------------------------
+// Worker process side
+// ---------------------------------------------------------------------
+
+struct Resident {
+    worker: usize,
+    shard: Matrix,
+}
+
+enum Served {
+    /// Master closed the connection; await the next one (rejoin path).
+    Disconnected,
+    /// Master decommissioned this worker; exit the process.
+    Shutdown,
+}
+
+/// Entry point of `rateless worker --listen host:port`.
+///
+/// Prints `rateless worker listening on <addr>` on stdout once bound
+/// (with `:0`, the line is how callers learn the OS-assigned port), then
+/// serves masters until one sends `SHUTDOWN`. The installed shard stays
+/// resident across connections.
+pub fn run_worker(listen: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    println!("rateless worker listening on {addr}");
+    io::stdout().flush()?;
+    let engine = Engine::Native;
+    let mut resident: Option<Resident> = None;
+    for conn in listener.incoming() {
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                crate::warn_!("worker accept failed: {e}");
+                continue;
+            }
+        };
+        if let Err(e) = stream.set_nodelay(true) {
+            crate::warn_!("worker: set_nodelay failed: {e}");
+        }
+        match serve_master(&mut stream, &engine, &mut resident) {
+            Ok(Served::Shutdown) => {
+                crate::info!("worker: decommissioned by master");
+                return Ok(());
+            }
+            Ok(Served::Disconnected) => {
+                crate::info!("worker: master disconnected; awaiting rejoin");
+            }
+            Err(e) => {
+                crate::warn_!("worker: connection error: {e}; awaiting reconnect");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn is_disconnect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+    )
+}
+
+fn serve_master(
+    stream: &mut TcpStream,
+    engine: &Engine,
+    resident: &mut Option<Resident>,
+) -> io::Result<Served> {
+    // worker side of the handshake: agree on min(ours, theirs)
+    match WireMsg::read(stream)? {
+        WireMsg::Hello { ver } => {
+            let agreed = ver.min(PROTO_VERSION);
+            if agreed == 0 {
+                return Err(bad("no common protocol version"));
+            }
+            WireMsg::HelloAck { ver: agreed }.write(stream)?;
+        }
+        _ => return Err(bad("expected HELLO")),
+    }
+    loop {
+        let msg = match WireMsg::read(stream) {
+            Ok(m) => m,
+            Err(e) if is_disconnect(&e) => return Ok(Served::Disconnected),
+            Err(e) => return Err(e),
+        };
+        match msg {
+            WireMsg::InstallShard {
+                worker,
+                rows,
+                cols,
+                data,
+            } => {
+                *resident = Some(Resident {
+                    worker: worker as usize,
+                    shard: Matrix::from_vec(rows as usize, cols as usize, data),
+                });
+                WireMsg::ShardOk.write(stream)?;
+                crate::info!("worker {worker}: shard resident ({rows}×{cols})");
+            }
+            WireMsg::Ping { seq } => WireMsg::Pong { seq }.write(stream)?,
+            WireMsg::Shutdown => return Ok(Served::Shutdown),
+            WireMsg::JobStart {
+                batch,
+                tau,
+                initial_delay,
+                fail_after,
+                time_scale,
+                x,
+            } => run_remote_job(
+                stream,
+                engine,
+                resident.as_ref(),
+                batch as usize,
+                tau,
+                initial_delay,
+                fail_after,
+                time_scale,
+                &x,
+            )?,
+            _ => return Err(bad("unexpected frame between jobs")),
+        }
+    }
+}
+
+/// The remote twin of [`worker::run_job`]: same virtual clock, same
+/// pacing, same failure-boundary clipping — but tasks are pulled over
+/// the wire instead of from a shared board.
+#[allow(clippy::too_many_arguments)]
+fn run_remote_job(
+    stream: &mut TcpStream,
+    engine: &Engine,
+    resident: Option<&Resident>,
+    batch: usize,
+    tau: f64,
+    initial_delay: f64,
+    fail_after: u64,
+    time_scale: f64,
+    x: &[f32],
+) -> io::Result<()> {
+    let start = Instant::now();
+    let no_cancel = AtomicBool::new(false); // cancellation arrives as TASK_FIN
+    let mut v = initial_delay;
+    let mut rows_done = 0u64;
+    let mut failed = false;
+
+    if time_scale > 0.0 {
+        worker::sleep_until(start, v * time_scale, &no_cancel);
+    }
+    loop {
+        if rows_done >= fail_after {
+            failed = true;
+            break;
+        }
+        WireMsg::TaskReq.write(stream)?;
+        let (shard_id, t_start, granted, inline) = match WireMsg::read(stream)? {
+            WireMsg::TaskFin => break,
+            WireMsg::TaskGrant {
+                shard,
+                start,
+                len,
+                rows,
+            } => (shard as usize, start as usize, len as usize, rows),
+            _ => return Err(bad("expected TASK_GRANT or TASK_FIN")),
+        };
+        let task_t0 = Instant::now();
+        let mut len = granted;
+        if fail_after != u64::MAX {
+            // die exactly at the boundary so rows_done == fail_after;
+            // the rest of the task is lost (silent death)
+            len = len.min((fail_after - rows_done) as usize);
+            if len == 0 {
+                failed = true;
+                break;
+            }
+        }
+        let computed = match &inline {
+            Some(data) => {
+                if granted == 0 || data.len() % granted != 0 {
+                    return Err(bad("inline rows shape mismatch"));
+                }
+                let cols = data.len() / granted;
+                engine.matmat_chunk(&data[..len * cols], len, cols, x, batch)
+            }
+            None => {
+                let r = resident.ok_or_else(|| bad("task before shard install"))?;
+                if shard_id != r.worker {
+                    return Err(bad("foreign-shard grant without inline rows"));
+                }
+                let block = r.shard.row_block(t_start, len);
+                engine.matmat_chunk(block, len, r.shard.cols(), x, batch)
+            }
+        };
+        let products = match computed {
+            Ok(p) => p,
+            Err(e) => {
+                crate::warn_!("remote worker: engine error: {e}; dying");
+                failed = true;
+                break;
+            }
+        };
+        rows_done += len as u64;
+        v += tau * len as f64;
+        if time_scale > 0.0 {
+            worker::sleep_until(start, v * time_scale, &no_cancel);
+        }
+        let virt_elapsed = if time_scale > 0.0 {
+            (task_t0.elapsed().as_secs_f64() / time_scale).max(tau * len as f64)
+        } else {
+            tau * len as f64
+        };
+        WireMsg::Chunk {
+            shard: shard_id as u32,
+            start_row: t_start as u32,
+            virtual_time: v,
+            virt_elapsed,
+            products,
+        }
+        .write(stream)?;
+        if len < granted {
+            failed = true;
+            break;
+        }
+    }
+    WireMsg::JobDone {
+        rows_done,
+        virtual_time: v,
+        failed,
+    }
+    .write(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::WorkerPool;
+    use crate::coordinator::scheduler::{Scheduler, StaticScheduler};
+    use crate::coordinator::straggler::WorkerPlan;
+    use crate::coordinator::worker::JobShared;
+
+    /// Spawn an in-process worker "process" (thread running the real
+    /// accept loop) and return its address — the unit-test twin of the
+    /// spawned-binary integration test.
+    fn spawn_worker_thread() -> (String, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let engine = Engine::Native;
+            let mut resident: Option<Resident> = None;
+            for conn in listener.incoming() {
+                let mut stream = conn.unwrap();
+                stream.set_nodelay(true).unwrap();
+                match serve_master(&mut stream, &engine, &mut resident) {
+                    Ok(Served::Shutdown) => return,
+                    Ok(Served::Disconnected) => continue,
+                    Err(_) => continue,
+                }
+            }
+        });
+        (addr, handle)
+    }
+
+    fn fleet_pool(p: usize) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>) {
+        let (addrs, handles): (Vec<_>, Vec<_>) =
+            (0..p).map(|_| spawn_worker_thread()).unzip();
+        let transport = TcpTransport::connect(&addrs).expect("connect fleet");
+        let pool = WorkerPool::from_transport(Box::new(transport));
+        let shards: Vec<Arc<Matrix>> = (0..p)
+            .map(|s| Arc::new(Matrix::random_ints(8, 4, 4, 60 + s as u64)))
+            .collect();
+        pool.install_shards(shards.clone());
+        (pool, handles, shards)
+    }
+
+    fn run_fleet_job(pool: &WorkerPool, p: usize, shards: &[Arc<Matrix>]) {
+        let x = Arc::new(Matrix::random_int_vector(4, 4, 7));
+        let shared = Arc::new(JobShared {
+            x: Arc::clone(&x),
+            batch: 1,
+            tasks: StaticScheduler.plan(&vec![8; p], &vec![4; p]),
+            time_scale: 0.0,
+            start: Instant::now(),
+            cancel: Arc::new(AtomicBool::new(false)),
+        });
+        let (tx, rx) = channel();
+        let jobs: Vec<JobOrder> = (0..p)
+            .map(|_| JobOrder {
+                shared: Arc::clone(&shared),
+                plan: WorkerPlan {
+                    initial_delay: 0.0,
+                    fail_after: None,
+                },
+                tau: 1e-6,
+                tx: tx.clone(),
+            })
+            .collect();
+        pool.broadcast(jobs).expect("fleet alive");
+        drop(tx);
+        let mut done = 0usize;
+        let mut got: Vec<Vec<f32>> = (0..p).map(|_| vec![f32::NAN; 8]).collect();
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                WorkerEvent::Chunk(c) => {
+                    for (i, pv) in c.products.iter().enumerate() {
+                        got[c.shard][c.start_row + i] = *pv;
+                    }
+                }
+                WorkerEvent::Done {
+                    rows_done, failed, ..
+                } => {
+                    assert!(!failed);
+                    assert_eq!(rows_done, 8);
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!(done, p);
+        // integer data: the remote products are bitwise what the shard
+        // computes locally
+        for (s, shard) in shards.iter().enumerate() {
+            let want = shard.matvec(&x);
+            for r in 0..8 {
+                assert_eq!(got[s][r].to_bits(), want[r].to_bits(), "shard {s} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_fleet_serves_jobs_and_shuts_down() {
+        let p = 2;
+        let (pool, handles, shards) = fleet_pool(p);
+        assert_eq!(pool.transport_name(), "tcp");
+        run_fleet_job(&pool, p, &shards);
+        run_fleet_job(&pool, p, &shards); // shard stays resident across jobs
+        for w in 0..p {
+            pool.kill(w);
+        }
+        drop(pool);
+        for h in handles {
+            h.join().unwrap(); // SHUTDOWN must exit the accept loop
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_non_worker_peer() {
+        // a listener that speaks garbage instead of HELLO_ACK
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = s.write_all(b"HTTP/1.1 200 OK\r\n\r\n");
+        });
+        assert!(TcpTransport::connect(&[addr]).is_err());
+        h.join().unwrap();
+    }
+}

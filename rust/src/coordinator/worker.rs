@@ -69,8 +69,9 @@ pub struct JobOrder {
 }
 
 /// Sleep until `deadline`, slicing so cancellation is honoured within
-/// ~2 ms. Returns false if cancelled.
-fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) -> bool {
+/// ~2 ms. Returns false if cancelled. Also used by the remote worker
+/// process (`transport::tcp`), which paces the same virtual clock.
+pub(crate) fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) -> bool {
     const SLICE: Duration = Duration::from_millis(2);
     loop {
         if cancel.load(Ordering::Relaxed) {

@@ -16,13 +16,23 @@
 //!                                             batching front-end: E[Z], tails,
 //!                                             mean dispatched batch size
 //! rateless throughput [--batches 1,8,32,128]  batched serving jobs/sec
+//!                     [--peers h1:p,h2:p,...]  ... over TCP worker processes
+//! rateless worker --listen 0.0.0.0:4000       resident TCP worker process
 //! ```
+//!
+//! The simulation commands run workers as in-process threads. To run on a
+//! real cluster, start one `rateless worker` per node, then point the
+//! master at them — `throughput --peers ...` or a `[transport]` section
+//! with `kind = "tcp"` in the config passed to `run` (see
+//! `configs/ec2.toml`). Shards install once at connect and stay resident
+//! across jobs.
 //!
 //! Figure outputs land in `results/` (override with `RATELESS_RESULTS`).
 
 use rateless::cli::Args;
 use rateless::coding::lt::LtParams;
-use rateless::config::{ClusterConfig, Doc, WorkloadConfig};
+use rateless::config::{ClusterConfig, Doc, TransportKind, WorkloadConfig};
+use rateless::coordinator::transport::tcp::TcpTransport;
 use rateless::coordinator::{stream, Coordinator, Strategy};
 use rateless::figures;
 use rateless::matrix::{dataset, Matrix};
@@ -119,11 +129,15 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("stream") => stream_cmd(args),
         Some("serve") => serve_cmd(args),
         Some("throughput") => throughput_cmd(args),
+        Some("worker") => {
+            let listen = args.str("listen", "127.0.0.1:4000");
+            rateless::coordinator::transport::tcp::run_worker(&listen)
+        }
         Some(other) => anyhow::bail!("unknown subcommand {other:?}; see README"),
         None => {
             println!(
                 "rateless — LT-coded distributed matrix-vector multiplication\n\
-                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | serve | throughput"
+                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | serve | throughput | worker"
             );
             Ok(())
         }
@@ -189,7 +203,11 @@ fn config_run(args: &Args) -> anyhow::Result<()> {
         strategy.name(),
         engine.name()
     );
-    let coord = Coordinator::new(cluster, strategy, engine, &a)?;
+    let peers = match cluster.transport.kind {
+        TransportKind::Tcp => Some(cluster.transport.peers.clone()),
+        TransportKind::InProcess => None,
+    };
+    let coord = coordinator_over(cluster, strategy, engine, &a, peers.as_deref())?;
     for v in 0..workload.vectors.max(1) {
         let x = Matrix::random_int_vector(workload.cols, 1, 90_000 + v as u64);
         let res = coord.multiply(&x)?;
@@ -330,13 +348,15 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         "uncoded" => Strategy::Uncoded,
         other => anyhow::bail!("--strategy {other:?} unknown"),
     };
+    let peers = peers_of(args);
     println!(
         "throughput: {m}x{n}, p={p}, strategy={}, {jobs} jobs per width, \
-         time_scale={}",
+         time_scale={}, transport={}",
         strategy.name(),
-        cluster.time_scale
+        cluster.time_scale,
+        if peers.is_some() { "tcp" } else { "inprocess" }
     );
-    let coord = Coordinator::new(cluster, strategy, Engine::Native, &a)?;
+    let coord = coordinator_over(cluster, strategy, Engine::Native, &a, peers.as_deref())?;
     println!("{:>6} {:>12} {:>14} {:>12}", "batch", "jobs/s", "vectors/s", "E[T] (s)");
     for &b in &batches {
         anyhow::ensure!(b >= 1, "batch widths must be >= 1");
@@ -367,6 +387,43 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
 
 fn seed_of(args: &Args) -> u64 {
     args.u64("seed", 42)
+}
+
+/// Build a coordinator over in-process worker threads (default) or, when
+/// `peers` is given, over a connected TCP fleet of resident
+/// `rateless worker` processes (one `host:port` per worker, shard order).
+/// Remote workers run their own native kernels, so `engine` only applies
+/// to the in-process path.
+fn coordinator_over(
+    cluster: ClusterConfig,
+    strategy: Strategy,
+    engine: Engine,
+    a: &Matrix,
+    peers: Option<&[String]>,
+) -> anyhow::Result<Coordinator> {
+    match peers {
+        Some(peers) => {
+            anyhow::ensure!(
+                peers.len() == cluster.workers,
+                "peer list names {} workers but cluster.workers = {}",
+                peers.len(),
+                cluster.workers
+            );
+            let fleet = TcpTransport::connect(peers)?;
+            Coordinator::with_transport(cluster, strategy, Box::new(fleet), a)
+        }
+        None => Coordinator::new(cluster, strategy, engine, a),
+    }
+}
+
+/// Parse a `--peers h1:p1,h2:p2,...` flag into a peer list.
+fn peers_of(args: &Args) -> Option<Vec<String>> {
+    args.opt_str("peers").map(|raw| {
+        raw.split(',')
+            .map(|h| h.trim().to_string())
+            .filter(|h| !h.is_empty())
+            .collect()
+    })
 }
 
 /// Parse `[strategy]` from a config doc.

@@ -1,0 +1,304 @@
+//! Integration: the TCP transport end-to-end against real
+//! `rateless worker` **processes** on loopback — the cluster path of
+//! paper §6.2 exercised exactly as a deployment would run it.
+//!
+//! What is pinned here:
+//!
+//! * a TCP fleet decodes **byte-identically** to the in-process channel
+//!   transport for LT and uncoded strategies on integer-valued data
+//!   (MDS matches to float tolerance: its decode uses the first `k`
+//!   shards to complete, an arrival-order-dependent subset),
+//! * worker processes keep their shard resident across master
+//!   connections — dropping one coordinator and connecting another
+//!   reuses the same fleet (the reconnect/rejoin path),
+//! * steal requests traverse the transport: work-stealing LT on a
+//!   heterogeneous TCP fleet still wastes ≤ 5% of `m`,
+//! * SIGKILL of a worker mid-job does not lose the job — the proxy
+//!   synthesizes the silent-death `Done` and LT completes from surplus —
+//!   and the *next* job surfaces `JobError::WorkerLost`,
+//! * decommissioning via `kill_worker` exits the remote process, and a
+//!   later `rejoin_worker` reports failure instead of hanging.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::scheduler::SchedulerKind;
+use rateless::coordinator::transport::tcp::TcpTransport;
+use rateless::coordinator::{Coordinator, JobError, Strategy};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::dist::DelayDist;
+
+/// A fleet of spawned `rateless worker` processes. Killed on drop so a
+/// failing test never leaks children.
+struct Fleet {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Fleet {
+    fn spawn(p: usize) -> Fleet {
+        let mut children = Vec::with_capacity(p);
+        let mut addrs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let mut child = Command::new(env!("CARGO_BIN_EXE_rateless"))
+                .args(["worker", "--listen", "127.0.0.1:0"])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn rateless worker");
+            // `--listen :0` asks the OS for a port; the worker announces
+            // it on stdout as its first (and only) line
+            let mut banner = String::new();
+            BufReader::new(child.stdout.take().expect("stdout piped"))
+                .read_line(&mut banner)
+                .expect("read worker banner");
+            let addr = banner
+                .trim()
+                .strip_prefix("rateless worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected worker banner {banner:?}"))
+                .to_string();
+            children.push(child);
+            addrs.push(addr);
+        }
+        Fleet { children, addrs }
+    }
+
+    fn connect(&self) -> TcpTransport {
+        TcpTransport::connect(&self.addrs).expect("connect fleet")
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn base_cluster(p: usize) -> ClusterConfig {
+    ClusterConfig {
+        workers: p,
+        delay: DelayDist::None,
+        tau: 1e-5,
+        block_fraction: 0.05,
+        seed: 4242,
+        real_sleep: false,
+        ..ClusterConfig::default()
+    }
+}
+
+/// LT, uncoded and MDS over a real TCP fleet, decoded against the
+/// in-process transport on the same matrix. Integer data keeps every
+/// f32 sum exact, so LT and uncoded must match **bitwise**; the fleet
+/// is connected to afresh per strategy, which also proves the shard
+/// lifecycle survives master turnover (drop → reconnect → reinstall).
+#[test]
+fn tcp_fleet_decodes_byte_identically_to_in_process() {
+    const M: usize = 2048;
+    const N: usize = 32;
+    const P: usize = 4;
+    let fleet = Fleet::spawn(P);
+    let a = Matrix::random_ints(M, N, 3, 11);
+    let x = Matrix::random_int_vector(N, 1, 12);
+    let want = a.matvec(&x);
+
+    let strategies: &[(&str, fn() -> Strategy, bool)] = &[
+        ("lt", || Strategy::Lt(LtParams::with_alpha(2.0)), true),
+        ("uncoded", || Strategy::Uncoded, true),
+        ("mds", || Strategy::Mds { k: P - 2 }, false),
+    ];
+    for (tag, strategy, bitwise) in strategies {
+        let local = Coordinator::new(base_cluster(P), strategy(), Engine::Native, &a)
+            .expect("in-process coordinator");
+        let local_res = local.multiply(&x).expect("in-process multiply");
+
+        let remote = Coordinator::with_transport(
+            base_cluster(P),
+            strategy(),
+            Box::new(fleet.connect()),
+            &a,
+        )
+        .expect("tcp coordinator");
+        assert_eq!(remote.transport_name(), "tcp");
+        let remote_res = remote.multiply(&x).expect("tcp multiply");
+
+        assert_eq!(local_res.b.len(), remote_res.b.len(), "{tag}");
+        if *bitwise {
+            for (r, (lv, rv)) in local_res.b.iter().zip(&remote_res.b).enumerate() {
+                assert_eq!(
+                    lv.to_bits(),
+                    rv.to_bits(),
+                    "{tag}: row {r} differs across transports"
+                );
+            }
+            // and both are the exact product
+            for (r, (rv, wv)) in remote_res.b.iter().zip(&want).enumerate() {
+                assert_eq!(rv.to_bits(), wv.to_bits(), "{tag}: row {r} wrong");
+            }
+        } else {
+            let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+            let err = Matrix::max_abs_diff(&remote_res.b, &want);
+            assert!(err < 1e-3 * scale, "{tag}: max err {err}");
+        }
+        // the same rows were computed: the fleet did real work remotely
+        assert_eq!(
+            remote_res.computations,
+            remote_res.per_worker.iter().map(|w| w.rows_done).sum::<usize>(),
+            "{tag}"
+        );
+    }
+}
+
+/// Work stealing over TCP: the board lives master-side and `TASK_REQ`
+/// pulls traverse the wire, so a heterogeneous fleet still load-balances
+/// — same ≤ 5% waste bound as the in-process scheduler test, and the
+/// stolen (foreign-shard) grants ship victim rows inline correctly.
+#[test]
+fn tcp_work_stealing_lt_stays_under_five_percent_waste() {
+    const M: usize = 32_768;
+    const N: usize = 16;
+    const P: usize = 4;
+    let fleet = Fleet::spawn(P);
+    let a = Matrix::random_ints(M, N, 3, 21);
+    let x = Matrix::random_int_vector(N, 1, 22);
+    let want = a.matvec(&x);
+    let cluster = ClusterConfig {
+        workers: P,
+        delay: DelayDist::None,
+        tau: 2e-5,
+        block_fraction: 0.005,
+        seed: 77,
+        real_sleep: true,
+        time_scale: 1.0,
+        speeds: vec![1.0, 1.0, 1.0, 1.0 / 3.0],
+        scheduler: SchedulerKind::WorkStealing,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::with_transport(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Box::new(fleet.connect()),
+        &a,
+    )
+    .expect("tcp coordinator");
+    let res = coord.multiply(&x).expect("tcp multiply");
+    for (r, (rv, wv)) in res.b.iter().zip(&want).enumerate() {
+        assert_eq!(rv.to_bits(), wv.to_bits(), "row {r} wrong");
+    }
+    assert!(res.stolen_rows > 0, "steals must traverse the transport");
+    assert!(
+        res.redundant_frac() <= 0.05,
+        "work-stealing LT over TCP must waste <= 5% of m: {} rows ({:.2}%)",
+        res.redundant_rows,
+        res.redundant_frac() * 100.0
+    );
+}
+
+/// SIGKILL a worker process mid-job: the lane proxy turns the broken
+/// stream into the silent-death `Done { failed }`, LT completes from the
+/// survivors' surplus, and the next submission reports `WorkerLost`.
+#[test]
+fn sigkill_mid_job_completes_from_surplus_then_worker_lost() {
+    const M: usize = 4096;
+    const N: usize = 16;
+    const P: usize = 4;
+    const VICTIM: usize = 0;
+    let mut fleet = Fleet::spawn(P);
+    let a = Matrix::random_ints(M, N, 3, 31);
+    let x = Matrix::random_int_vector(N, 1, 32);
+    let want = a.matvec(&x);
+    let cluster = ClusterConfig {
+        workers: P,
+        delay: DelayDist::None,
+        // alpha·m/p = 2048 rows per worker at 400 µs/row ≈ 0.8 s/job:
+        // plenty of room to land the kill mid-flight
+        tau: 4e-4,
+        block_fraction: 0.02,
+        seed: 55,
+        real_sleep: true,
+        time_scale: 1.0,
+        ..ClusterConfig::default()
+    };
+    let coord = Coordinator::with_transport(
+        cluster,
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Box::new(fleet.connect()),
+        &a,
+    )
+    .expect("tcp coordinator");
+
+    let victim = fleet.children.remove(VICTIM);
+    let killer = std::thread::spawn(move || {
+        let mut victim = victim;
+        std::thread::sleep(Duration::from_millis(250));
+        victim.kill().expect("SIGKILL worker");
+        let _ = victim.wait();
+    });
+    let res = coord.multiply(&x).expect("job must complete from surplus");
+    killer.join().unwrap();
+
+    assert!(
+        res.per_worker[VICTIM].failed,
+        "the killed worker must be reported as a silent death"
+    );
+    for (r, (rv, wv)) in res.b.iter().zip(&want).enumerate() {
+        assert_eq!(rv.to_bits(), wv.to_bits(), "row {r} wrong after the kill");
+    }
+
+    // the loss was detected mid-job, so later submissions must refuse
+    // fast with WorkerLost rather than hanging (small grace window in
+    // case the job finished a hair before the kill landed)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match coord.multiply(&x) {
+            Err(JobError::WorkerLost { worker }) => {
+                assert_eq!(worker, VICTIM);
+                break;
+            }
+            Ok(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            other => panic!("expected WorkerLost, got {other:?}"),
+        }
+    }
+}
+
+/// Deliberate decommission: `kill_worker` sends `SHUTDOWN`, the remote
+/// process exits cleanly, and `rejoin_worker` reports failure
+/// immediately (the lane is gone for good, not merely disconnected).
+#[test]
+fn decommission_exits_the_remote_process_and_rejoin_fails() {
+    const M: usize = 256;
+    const N: usize = 8;
+    const P: usize = 2;
+    let mut fleet = Fleet::spawn(P);
+    let a = Matrix::random_ints(M, N, 2, 41);
+    let x = Matrix::random_int_vector(N, 1, 42);
+    let coord = Coordinator::with_transport(
+        base_cluster(P),
+        Strategy::Uncoded,
+        Box::new(fleet.connect()),
+        &a,
+    )
+    .expect("tcp coordinator");
+    let res = coord.multiply(&x).expect("healthy multiply");
+    assert_eq!(res.b, a.matvec(&x));
+
+    coord.kill_worker(0);
+    let status = fleet.children.remove(0).wait().expect("wait worker 0");
+    assert!(status.success(), "SHUTDOWN must exit the worker cleanly");
+    assert!(
+        !coord.rejoin_worker(0),
+        "rejoin after decommission must fail"
+    );
+    match coord.multiply(&x) {
+        Err(JobError::WorkerLost { worker: 0 }) => {}
+        other => panic!("expected WorkerLost for worker 0, got {other:?}"),
+    }
+}

@@ -1,0 +1,206 @@
+//! Bench: TCP transport job throughput vs pipeline depth × injected RTT.
+//!
+//! Spawns a real `rateless worker` fleet on loopback, injects a per-frame
+//! delivery delay on both ends of every lane (RTT = 2 × delay; see
+//! `coordinator/transport/delay.rs` — frames pipeline in flight, the
+//! link is not serialized), and measures multiply-job throughput for:
+//!
+//! * `pull`     — the master pinned to the v1 pull loop (one round trip
+//!                per task grant): the PR-6 baseline,
+//! * `depth-1`  — the v2 pipeline at window 1 (lockstep; isolates frame
+//!                coalescing from windowing),
+//! * `depth-4` / `depth-8` — the credit-windowed pipeline.
+//!
+//! Every mode's decoded output is asserted byte-identical to the first
+//! mode's (integer data ⇒ exact f32 sums), so the speedups are for
+//! *identical results*. With `RATELESS_BENCH_STRICT=1` the headline
+//! acceptance claim is enforced: at ≥ 20 ms RTT, depth ≥ 4 must reach
+//! ≥ 2× the pull loop's throughput.
+//!
+//! Emits `BENCH_transport.json` (override the directory with
+//! `RATELESS_BENCH_DIR`). Knobs: `RATELESS_BENCH_RTTS_MS` (comma list,
+//! default "0,20"), `RATELESS_BENCH_JOBS` (jobs per mode, default 3),
+//! `RATELESS_BENCH_TRANSPORT_M` (rows, default 2048).
+//!
+//! `cargo bench --bench transport`
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use rateless::prelude::*;
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::json::Json;
+
+const N: usize = 16;
+const P: usize = 4;
+
+/// Spawned worker processes, killed on drop so a failing bench never
+/// leaks children.
+struct Fleet {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Fleet {
+    /// Spawn `p` workers with `delay_ms` of injected delivery delay on
+    /// their side of every connection.
+    fn spawn(p: usize, delay_ms: f64) -> Fleet {
+        let mut children = Vec::with_capacity(p);
+        let mut addrs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let mut cmd = Command::new(env!("CARGO_BIN_EXE_rateless"));
+            cmd.args(["worker", "--listen", "127.0.0.1:0"])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .env("RATELESS_WIRE_DELAY_MS", format!("{delay_ms}"));
+            let mut child = cmd.spawn().expect("spawn rateless worker");
+            let mut banner = String::new();
+            BufReader::new(child.stdout.take().expect("stdout piped"))
+                .read_line(&mut banner)
+                .expect("read worker banner");
+            let addr = banner
+                .trim()
+                .strip_prefix("rateless worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected worker banner {banner:?}"))
+                .to_string();
+            children.push(child);
+            addrs.push(addr);
+        }
+        Fleet { children, addrs }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+struct Mode {
+    tag: &'static str,
+    /// Highest protocol the master offers (1 = force the pull loop).
+    proto_max: u8,
+    pipeline_depth: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let strict = std::env::var("RATELESS_BENCH_STRICT").as_deref() == Ok("1");
+    let jobs: usize = env_or("RATELESS_BENCH_JOBS", 3);
+    let m: usize = env_or("RATELESS_BENCH_TRANSPORT_M", 2048);
+    let rtts_ms: Vec<f64> = std::env::var("RATELESS_BENCH_RTTS_MS")
+        .unwrap_or_else(|_| "0,20".to_string())
+        .split(',')
+        .map(|t| t.trim().parse().expect("RATELESS_BENCH_RTTS_MS: bad number"))
+        .collect();
+
+    let a = Matrix::random_ints(m, N, 3, 81);
+    let x = Matrix::random_int_vector(N, 1, 82);
+    let want = a.matvec(&x);
+    // small tasks keep the runs grant-bound, the regime pipelining targets
+    let cluster = || ClusterConfig {
+        workers: P,
+        delay: DelayDist::None,
+        tau: 1e-5,
+        block_fraction: 0.02,
+        seed: 4242,
+        real_sleep: false,
+        ..ClusterConfig::default()
+    };
+    let modes = [
+        Mode { tag: "pull", proto_max: 1, pipeline_depth: 1 },
+        Mode { tag: "depth-1", proto_max: 2, pipeline_depth: 1 },
+        Mode { tag: "depth-4", proto_max: 2, pipeline_depth: 4 },
+        Mode { tag: "depth-8", proto_max: 2, pipeline_depth: 8 },
+    ];
+
+    println!(
+        "transport bench: {m}x{N}, p={P}, LT α=2, {jobs} jobs per mode, \
+         RTTs {rtts_ms:?} ms{}",
+        if strict { " [strict]" } else { "" }
+    );
+    println!("{:>8} {:>8} {:>7} {:>12} {:>14}", "rtt_ms", "mode", "proto", "jobs/s", "vs pull");
+
+    let mut rtt_rows = Vec::new();
+    for &rtt in &rtts_ms {
+        // the delay knob is per *direction*: both ends get RTT/2
+        let delay_ms = rtt / 2.0;
+        let fleet = Fleet::spawn(P, delay_ms);
+        let mut pull_jps = 0.0f64;
+        let mut mode_rows = Vec::new();
+        for mode in &modes {
+            let tun = TcpTunables {
+                proto_max: mode.proto_max,
+                pipeline_depth: mode.pipeline_depth,
+                wire_delay: std::time::Duration::from_secs_f64(delay_ms / 1000.0),
+                ..TcpTunables::default()
+            };
+            let transport = TcpTransport::connect_tuned(&fleet.addrs, tun)?;
+            let agreed = transport.lane_protocols();
+            assert!(
+                agreed.iter().all(|&v| v == mode.proto_max),
+                "{}: lanes negotiated {agreed:?}",
+                mode.tag
+            );
+            let coord = Coordinator::with_transport(
+                cluster(),
+                Strategy::Lt(LtParams::with_alpha(2.0)),
+                Box::new(transport),
+                &a,
+            )?;
+            let t0 = Instant::now();
+            let mut b = Vec::new();
+            for _ in 0..jobs {
+                b = coord.multiply(&x)?.b;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            // identical decode in every mode (integer data ⇒ bitwise)
+            assert_eq!(b.len(), want.len(), "{}", mode.tag);
+            for (r, (bv, wv)) in b.iter().zip(&want).enumerate() {
+                assert_eq!(bv.to_bits(), wv.to_bits(), "{}: row {r} wrong", mode.tag);
+            }
+            let jps = jobs as f64 / wall;
+            if mode.tag == "pull" {
+                pull_jps = jps;
+            }
+            let speedup = jps / pull_jps;
+            println!(
+                "{rtt:>8} {:>8} {:>7} {jps:>12.2} {speedup:>13.2}x",
+                mode.tag, mode.proto_max
+            );
+            if strict && rtt >= 20.0 && mode.pipeline_depth >= 4 {
+                assert!(
+                    speedup >= 2.0,
+                    "{} at {rtt} ms RTT: {speedup:.2}x < the required 2x over the pull loop",
+                    mode.tag
+                );
+            }
+            mode_rows.push(Json::obj(vec![
+                ("mode", Json::str(mode.tag)),
+                ("proto", Json::Int(mode.proto_max as i64)),
+                ("pipeline_depth", Json::Int(mode.pipeline_depth as i64)),
+                ("jobs_per_s", Json::Num(jps)),
+                ("speedup_vs_pull", Json::Num(speedup)),
+            ]));
+        }
+        rtt_rows.push(Json::obj(vec![
+            ("rtt_ms", Json::Num(rtt)),
+            ("modes", Json::Arr(mode_rows)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("transport")),
+        ("m", Json::Int(m as i64)),
+        ("n", Json::Int(N as i64)),
+        ("p", Json::Int(P as i64)),
+        ("jobs_per_mode", Json::Int(jobs as i64)),
+        ("rtts", Json::Arr(rtt_rows)),
+    ]);
+    let path = write_json("BENCH_transport.json", &doc)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

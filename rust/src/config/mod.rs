@@ -159,7 +159,11 @@ pub enum TransportKind {
     Tcp,
 }
 
-/// Transport knobs (`[transport]` section).
+/// Transport knobs (`[transport]` section). The pipeline/framing and
+/// timing fields feed
+/// [`TcpTunables::from_config`](crate::coordinator::transport::tcp::TcpTunables::from_config)
+/// and only matter for `kind = "tcp"`; defaults reproduce the transport
+/// module's built-in constants.
 #[derive(Debug, Clone)]
 pub struct TransportConfig {
     pub kind: TransportKind,
@@ -167,13 +171,37 @@ pub struct TransportConfig {
     /// order. Required (and length-checked against `cluster.workers`)
     /// when `kind = "tcp"`; ignored for in-process runs.
     pub peers: Vec<String>,
+    /// Max outstanding task grants per lane under protocol v2 (the
+    /// credit-windowed pipeline). 1 degenerates to lockstep.
+    pub pipeline_depth: usize,
+    /// Worker-side result-coalescing flush threshold in bytes (v2).
+    pub chunk_coalesce_bytes: usize,
+    /// Streamed shard installs are chunked so no frame exceeds this
+    /// many bytes (v2).
+    pub max_frame_bytes: usize,
+    /// Idle-lane PING cadence, milliseconds.
+    pub heartbeat_ms: u64,
+    /// How long an idle probe waits for its PONG, milliseconds.
+    pub pong_timeout_ms: u64,
+    /// Per-peer connection establishment window, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Shard install acknowledgement window, milliseconds.
+    pub install_timeout_ms: u64,
 }
 
 impl Default for TransportConfig {
     fn default() -> Self {
+        use crate::coordinator::transport::tcp;
         Self {
             kind: TransportKind::InProcess,
             peers: Vec::new(),
+            pipeline_depth: tcp::DEFAULT_PIPELINE_DEPTH,
+            chunk_coalesce_bytes: tcp::DEFAULT_CHUNK_COALESCE_BYTES,
+            max_frame_bytes: tcp::DEFAULT_MAX_FRAME_BYTES,
+            heartbeat_ms: tcp::HEARTBEAT_PERIOD.as_millis() as u64,
+            pong_timeout_ms: tcp::PONG_TIMEOUT.as_millis() as u64,
+            connect_timeout_ms: tcp::CONNECT_TIMEOUT.as_millis() as u64,
+            install_timeout_ms: tcp::INSTALL_TIMEOUT.as_millis() as u64,
         }
     }
 }
@@ -186,9 +214,34 @@ impl TransportConfig {
             "tcp" => TransportKind::Tcp,
             other => panic!("config transport.kind: expected inprocess|tcp, got {other:?}"),
         };
+        let base = Self::default();
         Self {
             kind,
             peers: doc.str_list("transport", "peers", &[]),
+            pipeline_depth: doc.usize("transport", "pipeline_depth", base.pipeline_depth),
+            chunk_coalesce_bytes: doc.usize(
+                "transport",
+                "chunk_coalesce_bytes",
+                base.chunk_coalesce_bytes,
+            ),
+            max_frame_bytes: doc.usize("transport", "max_frame_bytes", base.max_frame_bytes),
+            heartbeat_ms: doc.usize("transport", "heartbeat_ms", base.heartbeat_ms as usize)
+                as u64,
+            pong_timeout_ms: doc.usize(
+                "transport",
+                "pong_timeout_ms",
+                base.pong_timeout_ms as usize,
+            ) as u64,
+            connect_timeout_ms: doc.usize(
+                "transport",
+                "connect_timeout_ms",
+                base.connect_timeout_ms as usize,
+            ) as u64,
+            install_timeout_ms: doc.usize(
+                "transport",
+                "install_timeout_ms",
+                base.install_timeout_ms as usize,
+            ) as u64,
         }
     }
 }
@@ -432,6 +485,53 @@ alphas = [1.25, 2.0]
         // "channel" is an accepted alias for the in-process backend
         let doc = Doc::from_str("[transport]\nkind = \"channel\"\n").unwrap();
         assert_eq!(TransportConfig::from_doc(&doc).kind, TransportKind::InProcess);
+    }
+
+    #[test]
+    fn transport_pipeline_and_timing_knobs() {
+        use crate::coordinator::transport::tcp;
+        // absent keys: the tcp module's built-in constants
+        let t = TransportConfig::from_doc(&Doc::from_str("[transport]\nkind = \"tcp\"\n").unwrap());
+        assert_eq!(t.pipeline_depth, tcp::DEFAULT_PIPELINE_DEPTH);
+        assert_eq!(t.chunk_coalesce_bytes, tcp::DEFAULT_CHUNK_COALESCE_BYTES);
+        assert_eq!(t.max_frame_bytes, tcp::DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(t.heartbeat_ms, tcp::HEARTBEAT_PERIOD.as_millis() as u64);
+        assert_eq!(t.pong_timeout_ms, tcp::PONG_TIMEOUT.as_millis() as u64);
+        assert_eq!(t.connect_timeout_ms, tcp::CONNECT_TIMEOUT.as_millis() as u64);
+        assert_eq!(t.install_timeout_ms, tcp::INSTALL_TIMEOUT.as_millis() as u64);
+        // explicit overrides parse
+        let doc = Doc::from_str(
+            "[transport]\nkind = \"tcp\"\npipeline_depth = 4\nchunk_coalesce_bytes = 8192\n\
+             max_frame_bytes = 65536\nheartbeat_ms = 250\npong_timeout_ms = 2000\n\
+             connect_timeout_ms = 1000\ninstall_timeout_ms = 30000\n",
+        )
+        .unwrap();
+        let t = TransportConfig::from_doc(&doc);
+        assert_eq!(t.pipeline_depth, 4);
+        assert_eq!(t.chunk_coalesce_bytes, 8192);
+        assert_eq!(t.max_frame_bytes, 65536);
+        assert_eq!(t.heartbeat_ms, 250);
+        assert_eq!(t.pong_timeout_ms, 2000);
+        assert_eq!(t.connect_timeout_ms, 1000);
+        assert_eq!(t.install_timeout_ms, 30000);
+        // …and land in TcpTunables with clamping applied
+        let tun = tcp::TcpTunables::from_config(&t);
+        assert_eq!(tun.pipeline_depth, 4);
+        assert_eq!(tun.chunk_coalesce_bytes, 8192);
+        assert_eq!(tun.max_frame_bytes, 65536);
+        assert_eq!(tun.heartbeat_period, std::time::Duration::from_millis(250));
+        assert_eq!(tun.pong_timeout, std::time::Duration::from_millis(2000));
+        assert_eq!(tun.connect_timeout, std::time::Duration::from_millis(1000));
+        assert_eq!(tun.install_timeout, std::time::Duration::from_millis(30000));
+        // clamps: depth ≥ 1, frame ≥ 1 KiB, coalesce ≤ frame
+        let doc = Doc::from_str(
+            "[transport]\npipeline_depth = 0\nmax_frame_bytes = 16\nchunk_coalesce_bytes = 99999\n",
+        )
+        .unwrap();
+        let tun = tcp::TcpTunables::from_config(&TransportConfig::from_doc(&doc));
+        assert_eq!(tun.pipeline_depth, 1);
+        assert_eq!(tun.max_frame_bytes, 1024);
+        assert_eq!(tun.chunk_coalesce_bytes, 1024);
     }
 
     #[test]

@@ -78,6 +78,13 @@ pub enum TransportMsg {
 /// the shards, and two jobs sent to the same worker run in send order.
 /// Cross-worker ordering is the caller's problem (`WorkerPool` holds its
 /// submit lock across a whole-fleet broadcast).
+///
+/// *How* a lane serves a job is the transport's business — the channel
+/// backend hands the whole `JobOrder` to a resident thread, while the
+/// TCP backend's proxies translate it into wire traffic (pipelined
+/// grants + coalesced results under protocol v2, a per-task pull loop on
+/// v1 lanes) — but the observable event stream (`Chunk`s then one
+/// `Done` per worker on the job's channel) is identical across backends.
 pub trait Transport: Send + Sync {
     /// Short backend name for logs ("channel", "tcp").
     fn name(&self) -> &'static str;

@@ -103,6 +103,14 @@ pub trait Scheduler: Send + Sync {
 
 /// Per-job task queue shared by the whole fleet. Workers call
 /// [`next_task`](TaskSource::next_task) until it returns `None`.
+///
+/// Consumers differ in *cadence*, not contract: in-process workers pull
+/// one task at a time, and the TCP transport's v2 proxies pull up to
+/// `pipeline_depth` tasks ahead per lane to keep grants in flight over a
+/// slow link. The board cannot tell the difference — steal semantics and
+/// the `observe` feedback are identical — but a pipelined lane may hold
+/// a few not-yet-computed tasks that a thief can no longer steal; that
+/// over-draw is bounded by the credit window.
 pub trait TaskSource: Send + Sync {
     /// Next row-range for worker `w`; `None` means no work is left that
     /// `w` may take (the job is over for `w`).

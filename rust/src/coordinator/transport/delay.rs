@@ -1,0 +1,202 @@
+//! Latency-injection harness: a per-frame delayed writer.
+//!
+//! The pipelining claim ("`pipeline_depth ≥ 4` hides a 20 ms RTT") needs
+//! a WAN to test against, and the loopback tests never leave one
+//! machine. This module simulates the propagation delay of a long link:
+//! every frame written through a [`DelayedWriter`] is *delivered*
+//! `delay` after it was *sent*, but sends themselves never block — so N
+//! frames enqueued back-to-back all arrive ≈`delay` later, back-to-back,
+//! exactly like N packets in flight on a real link. (A naive
+//! sleep-before-write would serialize the link at one frame per `delay`
+//! and make pipelining look useless — the opposite of a WAN.)
+//!
+//! Both ends of a connection install their own `DelayedWriter`, so a
+//! configured delay `D` yields an RTT of `2·D`. The knob is the
+//! `RATELESS_WIRE_DELAY_MS` environment variable on the worker side
+//! (read once per process via [`wire_delay_from_env`]) and the
+//! `wire_delay` field of `tcp::TcpTunables` on the master side; the
+//! transport bench and the latency-injected integration test set both.
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Worker-side injection knob: `RATELESS_WIRE_DELAY_MS` (fractional
+/// milliseconds allowed). Unset, unparsable or non-positive = no delay.
+pub fn wire_delay_from_env() -> Duration {
+    match std::env::var("RATELESS_WIRE_DELAY_MS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+    {
+        Some(ms) if ms > 0.0 => Duration::from_secs_f64(ms / 1000.0),
+        _ => Duration::ZERO,
+    }
+}
+
+/// A `Write` that delivers each buffer `delay` after it was written,
+/// without blocking the writer — frames pipeline in flight like packets
+/// on a long link. Writes are whole frames by construction (`WireMsg::
+/// write` issues exactly one `write_all` per frame), and the single
+/// delivery thread preserves order, so frames are never interleaved.
+///
+/// Delivery errors surface on the *next* write (the delivery thread
+/// cannot return them synchronously); the read side of a broken
+/// connection notices first in practice, which is the lane-death path
+/// the proxy already handles.
+pub struct DelayedWriter {
+    tx: Option<Sender<(Instant, Vec<u8>)>>,
+    err: Arc<Mutex<Option<io::Error>>>,
+    handle: Option<JoinHandle<()>>,
+    delay: Duration,
+}
+
+impl DelayedWriter {
+    /// Wrap `stream` (a `try_clone` of the connection's socket) in a
+    /// delivery thread that holds each frame for `delay`.
+    pub fn spawn(mut stream: TcpStream, delay: Duration) -> Self {
+        let (tx, rx) = channel::<(Instant, Vec<u8>)>();
+        let err = Arc::new(Mutex::new(None));
+        let slot = Arc::clone(&err);
+        let handle = std::thread::Builder::new()
+            .name("wire-delay".into())
+            .spawn(move || {
+                for (deadline, frame) in rx {
+                    let now = Instant::now();
+                    if deadline > now {
+                        std::thread::sleep(deadline - now);
+                    }
+                    if let Err(e) = write_all_retry(&mut stream, &frame) {
+                        *slot.lock().unwrap() = Some(e);
+                        return; // undeliverable: drop the rest, lane dies
+                    }
+                }
+            })
+            .expect("spawn wire-delay thread");
+        Self {
+            tx: Some(tx),
+            err,
+            handle: Some(handle),
+            delay,
+        }
+    }
+
+    fn take_err(&self) -> Option<io::Error> {
+        self.err.lock().unwrap().take()
+    }
+}
+
+/// `write_all` that spins through `WouldBlock`: the peer-facing socket
+/// is shared with the reader half, and the v2 worker's frame poll flips
+/// the fd into non-blocking mode for an instant — a delivery landing in
+/// that window must wait it out, not die.
+fn write_all_retry(stream: &mut TcpStream, mut buf: &[u8]) -> io::Result<()> {
+    while !buf.is_empty() {
+        match stream.write(buf) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "wire write stalled",
+                ))
+            }
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+impl Write for DelayedWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if let Some(e) = self.take_err() {
+            return Err(e);
+        }
+        let deadline = Instant::now() + self.delay;
+        match self
+            .tx
+            .as_ref()
+            .expect("delay sender lives until drop")
+            .send((deadline, buf.to_vec()))
+        {
+            Ok(()) => Ok(buf.len()),
+            Err(_) => Err(self.take_err().unwrap_or_else(|| {
+                io::Error::new(io::ErrorKind::BrokenPipe, "wire-delay thread exited")
+            })),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        // frames are handed off whole; delivery order is the thread's
+        // queue order, so there is nothing to force here
+        Ok(())
+    }
+}
+
+impl Drop for DelayedWriter {
+    fn drop(&mut self) {
+        // closing the channel lets the delivery thread drain in-flight
+        // frames (e.g. a SHUTDOWN) before the socket handle drops
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn frames_are_delayed_but_pipelined() {
+        let (tx_stream, mut rx_stream) = loopback_pair();
+        let delay = Duration::from_millis(80);
+        let mut w = DelayedWriter::spawn(tx_stream, delay);
+
+        let t0 = Instant::now();
+        for i in 0u8..4 {
+            w.write_all(&[i; 16]).unwrap();
+        }
+        let mut buf = [0u8; 64];
+        rx_stream.read_exact(&mut buf).unwrap();
+        let elapsed = t0.elapsed();
+        // all four frames arrive ≈ one delay after send — NOT four
+        // delays (that would be the serialized, non-pipelined model)
+        assert!(elapsed >= delay, "delivery under the injected delay");
+        assert!(
+            elapsed < delay * 3,
+            "4 frames took {elapsed:?}: delivery is serializing, not pipelining"
+        );
+        // order preserved
+        for i in 0..4 {
+            assert!(buf[i * 16..(i + 1) * 16].iter().all(|&b| b == i as u8));
+        }
+    }
+
+    #[test]
+    fn env_knob_parses_and_defaults_to_zero() {
+        std::env::remove_var("RATELESS_WIRE_DELAY_MS");
+        assert_eq!(wire_delay_from_env(), Duration::ZERO);
+        std::env::set_var("RATELESS_WIRE_DELAY_MS", "2.5");
+        assert_eq!(wire_delay_from_env(), Duration::from_micros(2500));
+        std::env::set_var("RATELESS_WIRE_DELAY_MS", "not a number");
+        assert_eq!(wire_delay_from_env(), Duration::ZERO);
+        std::env::remove_var("RATELESS_WIRE_DELAY_MS");
+    }
+}

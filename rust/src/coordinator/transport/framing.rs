@@ -16,26 +16,50 @@
 //! byte order (bit-exact round trip — the decode byte-identity claim
 //! depends on it).
 //!
+//! # Versions
+//!
+//! **v1** is the pull-loop protocol: `TASK_REQ` → `TASK_GRANT`, one
+//! `CHUNK` frame per task, whole-shard `INSTALL_SHARD`. **v2** adds the
+//! credit-windowed pipeline (the master pushes `TASK_GRANT`s ahead of
+//! results), coalesced [`WireMsg::Chunks`] result frames, the streamed
+//! `SHARD_BEGIN`/`SHARD_DATA`/`SHARD_END` install, and the `JOB_ACK`
+//! post-job fence. A handful of v1 payloads grow trailing fields under
+//! v2 (`HELLO_ACK` gains the worker's advertised credit window,
+//! `JOB_START` the effective window and coalesce threshold, `TASK_FIN` a
+//! drop-queued flag); the frame's version byte — not the negotiated
+//! session version — selects the payload shape, so one decoder serves
+//! both dialects.
+//!
 //! **Version negotiation**: the connecting master opens with
 //! [`WireMsg::Hello`] carrying the `RTLS` magic and the highest protocol
 //! version it speaks; the worker answers [`WireMsg::HelloAck`] with
 //! `min(worker_max, master_max)`, and both sides then stamp every frame
-//! with that agreed version. A peer seeing magic mismatch (not a rateless
-//! worker at all) or an agreed version it cannot speak drops the
-//! connection — there is exactly one version today, so "negotiation" is
-//! a handshake-time equality check with room to grow.
+//! with that agreed version. The two handshake frames themselves are
+//! always stamped **v1** in the master → worker direction so a v1-only
+//! peer can read them (a v1 reader rejects any other stamp); the
+//! worker's `HELLO_ACK` is stamped with the agreed version, which is how
+//! the v2 credit field travels only when both ends speak v2. A peer
+//! seeing magic mismatch (not a rateless worker at all) or no common
+//! version drops the connection.
 
 use std::io::{self, Read, Write};
 
-/// Current (and only) protocol version.
-pub const PROTO_VERSION: u8 = 1;
+/// Legacy pull-loop protocol (PR 6). Still fully supported: a v2 master
+/// falls back to the v1 pull loop against a v1-pinned worker.
+pub const PROTO_V1: u8 = 1;
+
+/// Highest protocol version this build speaks (the credit-windowed
+/// pipeline dialect).
+pub const PROTO_VERSION: u8 = 2;
 
 /// `"RTLS"` — distinguishes a rateless worker from a random listener.
 pub const MAGIC: [u8; 4] = *b"RTLS";
 
 /// Refuse frames larger than this (corrupt length prefix, not a real
-/// shard: a 100k×10k f32 shard is 4 GB installed in row-range pieces? No
-/// — shards install as one frame, so this bounds shard size to 1 GiB).
+/// payload). v1 installs a shard as a single frame, so there it also
+/// bounds shard size to 1 GiB; v2 streams installs in
+/// `max_frame_bytes`-sized `SHARD_DATA` pieces, so shard size is
+/// unbounded by the frame cap.
 pub const MAX_FRAME: u32 = 1 << 30;
 
 /// In a `TaskGrant`, `len` encoding for "no more work" is a separate
@@ -47,12 +71,23 @@ pub mod ty {
     pub const HELLO_ACK: u8 = 0x02;
     pub const INSTALL_SHARD: u8 = 0x03;
     pub const SHARD_OK: u8 = 0x04;
+    /// v2: open a streamed shard install (shape announcement).
+    pub const SHARD_BEGIN: u8 = 0x05;
+    /// v2: one piece of streamed shard data, ≤ `max_frame_bytes`.
+    pub const SHARD_DATA: u8 = 0x06;
+    /// v2: close a streamed install; the worker validates and acks.
+    pub const SHARD_END: u8 = 0x07;
     pub const JOB_START: u8 = 0x10;
     pub const TASK_REQ: u8 = 0x11;
     pub const TASK_GRANT: u8 = 0x12;
     pub const TASK_FIN: u8 = 0x13;
     pub const CHUNK: u8 = 0x14;
     pub const JOB_DONE: u8 = 0x15;
+    /// v2: coalesced results — many task chunks in one frame.
+    pub const CHUNKS: u8 = 0x16;
+    /// v2: master → worker fence after `JOB_DONE`; the worker discards
+    /// stale in-flight grants until it sees this.
+    pub const JOB_ACK: u8 = 0x17;
     pub const PING: u8 = 0x20;
     pub const PONG: u8 = 0x21;
     pub const SHUTDOWN: u8 = 0x22;
@@ -140,6 +175,24 @@ impl<'a> Dec<'a> {
     }
 }
 
+/// One task's results inside a coalesced [`WireMsg::Chunks`] frame —
+/// exactly the fields of a v1 `CHUNK`, repeated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkEntry {
+    pub shard: u32,
+    pub start_row: u32,
+    pub virtual_time: f64,
+    pub virt_elapsed: f64,
+    pub products: Vec<f32>,
+}
+
+impl ChunkEntry {
+    /// Encoded size of this entry on the wire (coalescing flush math).
+    pub fn wire_bytes(&self) -> usize {
+        4 + 4 + 8 + 8 + 4 + self.products.len() * 4
+    }
+}
+
 /// Every message that crosses a master ↔ worker connection.
 ///
 /// Field order in each variant is the wire order. `TaskGrant.rows` is
@@ -151,10 +204,14 @@ impl<'a> Dec<'a> {
 pub enum WireMsg {
     /// Master → worker connection opener: magic + highest version spoken.
     Hello { ver: u8 },
-    /// Worker → master: agreed version = min of the two maxima.
-    HelloAck { ver: u8 },
-    /// Master → worker: become worker `worker` and hold this shard
-    /// resident across jobs (and across reconnects).
+    /// Worker → master: agreed version = min of the two maxima. Under v2
+    /// the worker also advertises `credit` — the most task grants it is
+    /// willing to have outstanding (the master caps its pipeline at
+    /// `min(credit, pipeline_depth)`). On a v1 frame `credit` reads 0.
+    HelloAck { ver: u8, credit: u32 },
+    /// v1 master → worker: become worker `worker` and hold this shard
+    /// resident across jobs (and across reconnects). The whole shard in
+    /// one frame — bounded by [`MAX_FRAME`].
     InstallShard {
         worker: u32,
         rows: u32,
@@ -163,9 +220,21 @@ pub enum WireMsg {
     },
     /// Worker → master: shard parked, jobs may begin.
     ShardOk,
+    /// v2 master → worker: open a streamed install of a `rows × cols`
+    /// shard for worker `worker`; `SHARD_DATA` frames follow.
+    ShardBegin { worker: u32, rows: u32, cols: u32 },
+    /// v2 master → worker: the next piece of the streamed shard, in row-
+    /// major order. Piece size is the master's `max_frame_bytes` knob.
+    ShardData { data: Vec<f32> },
+    /// v2 master → worker: streamed install complete — the worker checks
+    /// the accumulated length against the announced shape and answers
+    /// `SHARD_OK`.
+    ShardEnd,
     /// Master → worker: one multiply job. `fail_after == u64::MAX` means
     /// no injected failure; `x` is the `cols × batch` row-major query
-    /// block.
+    /// block. Under v2 the frame also carries the effective credit
+    /// `window` for this lane and the `coalesce` flush threshold (bytes)
+    /// for the worker's result batching; both read 0 from a v1 frame.
     JobStart {
         batch: u32,
         tau: f64,
@@ -173,10 +242,12 @@ pub enum WireMsg {
         fail_after: u64,
         time_scale: f64,
         x: Vec<f32>,
+        window: u32,
+        coalesce: u32,
     },
-    /// Worker → master: give me my next row-range task (this is how a
+    /// v1 worker → master: give me my next row-range task (this is how a
     /// steal request traverses the transport — the board stays at the
-    /// master).
+    /// master). Not sent under v2: the master pushes grants unprompted.
     TaskReq,
     /// Master → worker: compute `len` rows of `shard` starting at
     /// `start` (row indices in the shard's row space).
@@ -186,10 +257,14 @@ pub enum WireMsg {
         len: u32,
         rows: Option<Vec<f32>>,
     },
-    /// Master → worker: the board is dry for you; finish the job.
-    TaskFin,
-    /// Worker → master: one task's products plus the observability the
-    /// in-process path reports via `TaskSource::observe`.
+    /// Master → worker: no more grants are coming; finish the job. Under
+    /// v2 `drop_queued` distinguishes cancellation (`true`: discard
+    /// queued grants, report now) from board-dry (`false`: drain queued
+    /// grants first). A v1 frame reads `false` — v1 cancellation is
+    /// indistinguishable from board-dry on the wire.
+    TaskFin { drop_queued: bool },
+    /// v1 worker → master: one task's products plus the observability
+    /// the in-process path reports via `TaskSource::observe`.
     Chunk {
         shard: u32,
         start_row: u32,
@@ -197,6 +272,10 @@ pub enum WireMsg {
         virt_elapsed: f64,
         products: Vec<f32>,
     },
+    /// v2 worker → master: coalesced results — one frame, many tasks.
+    /// Entries are in completion order; each one replenishes a credit at
+    /// the master.
+    Chunks { entries: Vec<ChunkEntry> },
     /// Worker → master: job finished (`failed` = injected failure fired
     /// or the engine errored — mirrors `WorkerEvent::Done`).
     JobDone {
@@ -204,12 +283,25 @@ pub enum WireMsg {
         virtual_time: f64,
         failed: bool,
     },
+    /// v2 master → worker: fence acknowledging `JOB_DONE`. Grants the
+    /// master pushed before it learned the job was over may still be in
+    /// flight; the worker discards frames until this fence so the next
+    /// job starts on a clean stream.
+    JobAck,
     /// Master → worker liveness probe (idle lanes only; see
     /// `tcp::HEARTBEAT_PERIOD`).
     Ping { seq: u64 },
     Pong { seq: u64 },
     /// Master → worker: decommission — exit the process.
     Shutdown,
+}
+
+/// Frame types that only exist in the v2 dialect.
+fn v2_only(code: u8) -> bool {
+    matches!(
+        code,
+        ty::SHARD_BEGIN | ty::SHARD_DATA | ty::SHARD_END | ty::CHUNKS | ty::JOB_ACK
+    )
 }
 
 impl WireMsg {
@@ -219,28 +311,38 @@ impl WireMsg {
             WireMsg::HelloAck { .. } => ty::HELLO_ACK,
             WireMsg::InstallShard { .. } => ty::INSTALL_SHARD,
             WireMsg::ShardOk => ty::SHARD_OK,
+            WireMsg::ShardBegin { .. } => ty::SHARD_BEGIN,
+            WireMsg::ShardData { .. } => ty::SHARD_DATA,
+            WireMsg::ShardEnd => ty::SHARD_END,
             WireMsg::JobStart { .. } => ty::JOB_START,
             WireMsg::TaskReq => ty::TASK_REQ,
             WireMsg::TaskGrant { .. } => ty::TASK_GRANT,
-            WireMsg::TaskFin => ty::TASK_FIN,
+            WireMsg::TaskFin { .. } => ty::TASK_FIN,
             WireMsg::Chunk { .. } => ty::CHUNK,
+            WireMsg::Chunks { .. } => ty::CHUNKS,
             WireMsg::JobDone { .. } => ty::JOB_DONE,
+            WireMsg::JobAck => ty::JOB_ACK,
             WireMsg::Ping { .. } => ty::PING,
             WireMsg::Pong { .. } => ty::PONG,
             WireMsg::Shutdown => ty::SHUTDOWN,
         }
     }
 
-    fn payload(&self) -> Vec<u8> {
+    /// Encode the payload as stamped with protocol version `ver` (the
+    /// trailing v2 fields of the hybrid payloads are omitted at v1).
+    fn payload(&self, ver: u8) -> Vec<u8> {
         let mut e = Enc::default();
         match self {
-            WireMsg::Hello { ver } => {
+            WireMsg::Hello { ver: max } => {
                 e.buf.extend_from_slice(&MAGIC);
-                e.u8(*ver);
+                e.u8(*max);
             }
-            WireMsg::HelloAck { ver } => {
+            WireMsg::HelloAck { ver: agreed, credit } => {
                 e.buf.extend_from_slice(&MAGIC);
-                e.u8(*ver);
+                e.u8(*agreed);
+                if ver >= 2 {
+                    e.u32(*credit);
+                }
             }
             WireMsg::InstallShard {
                 worker,
@@ -253,7 +355,24 @@ impl WireMsg {
                 e.u32(*cols);
                 e.f32s(data);
             }
-            WireMsg::ShardOk | WireMsg::TaskReq | WireMsg::TaskFin | WireMsg::Shutdown => {}
+            WireMsg::ShardOk
+            | WireMsg::ShardEnd
+            | WireMsg::TaskReq
+            | WireMsg::JobAck
+            | WireMsg::Shutdown => {}
+            WireMsg::TaskFin { drop_queued } => {
+                if ver >= 2 {
+                    e.u8(*drop_queued as u8);
+                }
+            }
+            WireMsg::ShardBegin { worker, rows, cols } => {
+                e.u32(*worker);
+                e.u32(*rows);
+                e.u32(*cols);
+            }
+            WireMsg::ShardData { data } => {
+                e.f32s(data);
+            }
             WireMsg::JobStart {
                 batch,
                 tau,
@@ -261,6 +380,8 @@ impl WireMsg {
                 fail_after,
                 time_scale,
                 x,
+                window,
+                coalesce,
             } => {
                 e.u32(*batch);
                 e.f64(*tau);
@@ -268,6 +389,10 @@ impl WireMsg {
                 e.u64(*fail_after);
                 e.f64(*time_scale);
                 e.f32s(x);
+                if ver >= 2 {
+                    e.u32(*window);
+                    e.u32(*coalesce);
+                }
             }
             WireMsg::TaskGrant {
                 shard,
@@ -299,6 +424,16 @@ impl WireMsg {
                 e.f64(*virt_elapsed);
                 e.f32s(products);
             }
+            WireMsg::Chunks { entries } => {
+                e.u32(entries.len() as u32);
+                for c in entries {
+                    e.u32(c.shard);
+                    e.u32(c.start_row);
+                    e.f64(c.virtual_time);
+                    e.f64(c.virt_elapsed);
+                    e.f32s(&c.products);
+                }
+            }
             WireMsg::JobDone {
                 rows_done,
                 virtual_time,
@@ -313,38 +448,46 @@ impl WireMsg {
         e.buf
     }
 
-    /// Frame and write `self` (one syscall-ish: single buffered write +
-    /// flush, so a frame is never interleaved with another).
-    pub fn write(&self, w: &mut impl Write) -> io::Result<()> {
-        let payload = self.payload();
+    /// Frame and write `self` stamped with protocol version `ver` (one
+    /// syscall-ish: single buffered write + flush, so a frame is never
+    /// interleaved with another). Writing a v2-only frame type at v1 is
+    /// a caller bug surfaced as an error, not a corrupt stream.
+    pub fn write<W: Write + ?Sized>(&self, w: &mut W, ver: u8) -> io::Result<()> {
+        if ver < 1 || ver > PROTO_VERSION {
+            return Err(bad("cannot stamp unknown protocol version"));
+        }
+        if ver < 2 && v2_only(self.type_code()) {
+            return Err(bad("frame type requires protocol v2"));
+        }
+        let payload = self.payload(ver);
         let len = (payload.len() + 2) as u32;
         if len > MAX_FRAME {
             return Err(bad("frame exceeds MAX_FRAME"));
         }
         let mut frame = Vec::with_capacity(payload.len() + 6);
         frame.extend_from_slice(&len.to_le_bytes());
-        frame.push(PROTO_VERSION);
+        frame.push(ver);
         frame.push(self.type_code());
         frame.extend_from_slice(&payload);
         w.write_all(&frame)?;
         w.flush()
     }
 
-    /// Read one frame, validating version, type and payload shape.
-    pub fn read(r: &mut impl Read) -> io::Result<WireMsg> {
-        let mut len4 = [0u8; 4];
-        r.read_exact(&mut len4)?;
-        let len = u32::from_le_bytes(len4);
-        if len < 2 || len > MAX_FRAME {
-            return Err(bad("bad frame length"));
+    /// Decode a frame body (`[ver][type][payload]`, the bytes after the
+    /// length prefix), validating version, type and payload shape. The
+    /// frame's own version byte selects the payload dialect.
+    pub fn decode_body(body: &[u8]) -> io::Result<WireMsg> {
+        if body.len() < 2 {
+            return Err(bad("frame body too short"));
         }
-        let mut body = vec![0u8; len as usize];
-        r.read_exact(&mut body)?;
         let ver = body[0];
-        if ver != PROTO_VERSION {
+        if ver < 1 || ver > PROTO_VERSION {
             return Err(bad("unsupported protocol version"));
         }
         let code = body[1];
+        if ver < 2 && v2_only(code) {
+            return Err(bad("v2 frame type on a v1 frame"));
+        }
         let mut d = Dec::new(&body[2..]);
         let msg = match code {
             ty::HELLO | ty::HELLO_ACK => {
@@ -352,11 +495,15 @@ impl WireMsg {
                 if magic != MAGIC {
                     return Err(bad("bad magic (not a rateless peer)"));
                 }
-                let ver = d.u8()?;
+                let peer_ver = d.u8()?;
                 if code == ty::HELLO {
-                    WireMsg::Hello { ver }
+                    WireMsg::Hello { ver: peer_ver }
                 } else {
-                    WireMsg::HelloAck { ver }
+                    let credit = if ver >= 2 { d.u32()? } else { 0 };
+                    WireMsg::HelloAck {
+                        ver: peer_ver,
+                        credit,
+                    }
                 }
             }
             ty::INSTALL_SHARD => {
@@ -375,14 +522,36 @@ impl WireMsg {
                 }
             }
             ty::SHARD_OK => WireMsg::ShardOk,
-            ty::JOB_START => WireMsg::JobStart {
-                batch: d.u32()?,
-                tau: d.f64()?,
-                initial_delay: d.f64()?,
-                fail_after: d.u64()?,
-                time_scale: d.f64()?,
-                x: d.f32s()?,
+            ty::SHARD_BEGIN => WireMsg::ShardBegin {
+                worker: d.u32()?,
+                rows: d.u32()?,
+                cols: d.u32()?,
             },
+            ty::SHARD_DATA => WireMsg::ShardData { data: d.f32s()? },
+            ty::SHARD_END => WireMsg::ShardEnd,
+            ty::JOB_START => {
+                let batch = d.u32()?;
+                let tau = d.f64()?;
+                let initial_delay = d.f64()?;
+                let fail_after = d.u64()?;
+                let time_scale = d.f64()?;
+                let x = d.f32s()?;
+                let (window, coalesce) = if ver >= 2 {
+                    (d.u32()?, d.u32()?)
+                } else {
+                    (0, 0)
+                };
+                WireMsg::JobStart {
+                    batch,
+                    tau,
+                    initial_delay,
+                    fail_after,
+                    time_scale,
+                    x,
+                    window,
+                    coalesce,
+                }
+            }
             ty::TASK_REQ => WireMsg::TaskReq,
             ty::TASK_GRANT => {
                 let shard = d.u32()?;
@@ -400,7 +569,9 @@ impl WireMsg {
                     rows,
                 }
             }
-            ty::TASK_FIN => WireMsg::TaskFin,
+            ty::TASK_FIN => WireMsg::TaskFin {
+                drop_queued: if ver >= 2 { d.u8()? != 0 } else { false },
+            },
             ty::CHUNK => WireMsg::Chunk {
                 shard: d.u32()?,
                 start_row: d.u32()?,
@@ -408,11 +579,29 @@ impl WireMsg {
                 virt_elapsed: d.f64()?,
                 products: d.f32s()?,
             },
+            ty::CHUNKS => {
+                let n = d.u32()? as usize;
+                if n > (MAX_FRAME as usize) / 28 {
+                    return Err(bad("chunk entry count exceeds frame bound"));
+                }
+                let mut entries = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    entries.push(ChunkEntry {
+                        shard: d.u32()?,
+                        start_row: d.u32()?,
+                        virtual_time: d.f64()?,
+                        virt_elapsed: d.f64()?,
+                        products: d.f32s()?,
+                    });
+                }
+                WireMsg::Chunks { entries }
+            }
             ty::JOB_DONE => WireMsg::JobDone {
                 rows_done: d.u64()?,
                 virtual_time: d.f64()?,
                 failed: d.u8()? != 0,
             },
+            ty::JOB_ACK => WireMsg::JobAck,
             ty::PING => WireMsg::Ping { seq: d.u64()? },
             ty::PONG => WireMsg::Pong { seq: d.u64()? },
             ty::SHUTDOWN => WireMsg::Shutdown,
@@ -421,71 +610,248 @@ impl WireMsg {
         d.finish()?;
         Ok(msg)
     }
+
+    /// Read one frame from a blocking reader.
+    pub fn read(r: &mut impl Read) -> io::Result<WireMsg> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4);
+        if len < 2 || len > MAX_FRAME {
+            return Err(bad("bad frame length"));
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body)?;
+        Self::decode_body(&body)
+    }
+}
+
+/// Incremental frame assembler for the pipelined worker loop.
+///
+/// The v2 worker must know whether *another* grant is already available
+/// before it blocks on the socket (that is what decides a coalescing
+/// flush and what makes cancellation prompt), so it reads the socket in
+/// non-blocking gulps into this buffer and pulls complete frames out of
+/// the front. Pure byte-in/frame-out — the socket plumbing lives in
+/// `tcp.rs`, which keeps this testable without a network.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes read from the connection.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop one complete frame off the front of the buffer, if there is
+    /// one. `Ok(None)` means "need more bytes"; a decode error means the
+    /// stream is desynchronized and the connection must be dropped.
+    pub fn extract(&mut self) -> io::Result<Option<WireMsg>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap());
+        if len < 2 || len > MAX_FRAME {
+            return Err(bad("bad frame length"));
+        }
+        let total = 4 + len as usize;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let msg = WireMsg::decode_body(&self.buf[4..total])?;
+        self.buf.drain(..total);
+        Ok(Some(msg))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn round_trip(msg: WireMsg) {
+    fn round_trip_v(msg: WireMsg, ver: u8) {
         let mut buf = Vec::new();
-        msg.write(&mut buf).unwrap();
-        // frame length prefix is consistent
+        msg.write(&mut buf, ver).unwrap();
+        // frame length prefix is consistent and the stamp is `ver`
         let len = u32::from_le_bytes(buf[..4].try_into().unwrap());
         assert_eq!(len as usize, buf.len() - 4);
-        assert_eq!(buf[4], PROTO_VERSION);
+        assert_eq!(buf[4], ver);
         let got = WireMsg::read(&mut buf.as_slice()).unwrap();
         assert_eq!(got, msg);
     }
 
     #[test]
-    fn all_variants_round_trip() {
-        round_trip(WireMsg::Hello { ver: 1 });
-        round_trip(WireMsg::HelloAck { ver: 1 });
-        round_trip(WireMsg::InstallShard {
-            worker: 3,
-            rows: 2,
-            cols: 3,
-            data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 4.0, 1e9],
-        });
-        round_trip(WireMsg::ShardOk);
-        round_trip(WireMsg::JobStart {
-            batch: 4,
-            tau: 2e-6,
-            initial_delay: 0.125,
-            fail_after: u64::MAX,
-            time_scale: 0.0,
-            x: vec![0.5; 12],
-        });
-        round_trip(WireMsg::TaskReq);
-        round_trip(WireMsg::TaskGrant {
-            shard: 1,
-            start: 128,
-            len: 64,
-            rows: None,
-        });
-        round_trip(WireMsg::TaskGrant {
-            shard: 2,
-            start: 0,
-            len: 2,
-            rows: Some(vec![9.0; 8]),
-        });
-        round_trip(WireMsg::TaskFin);
-        round_trip(WireMsg::Chunk {
-            shard: 0,
-            start_row: 32,
-            virtual_time: 1.5,
-            virt_elapsed: 0.25,
-            products: vec![13.0, -7.0],
-        });
-        round_trip(WireMsg::JobDone {
-            rows_done: 512,
-            virtual_time: 3.25,
-            failed: true,
-        });
-        round_trip(WireMsg::Ping { seq: 42 });
-        round_trip(WireMsg::Pong { seq: 42 });
-        round_trip(WireMsg::Shutdown);
+    fn v1_variants_round_trip() {
+        round_trip_v(WireMsg::Hello { ver: 1 }, 1);
+        round_trip_v(WireMsg::HelloAck { ver: 1, credit: 0 }, 1);
+        round_trip_v(
+            WireMsg::InstallShard {
+                worker: 3,
+                rows: 2,
+                cols: 3,
+                data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 4.0, 1e9],
+            },
+            1,
+        );
+        round_trip_v(WireMsg::ShardOk, 1);
+        round_trip_v(
+            WireMsg::JobStart {
+                batch: 4,
+                tau: 2e-6,
+                initial_delay: 0.125,
+                fail_after: u64::MAX,
+                time_scale: 0.0,
+                x: vec![0.5; 12],
+                window: 0,
+                coalesce: 0,
+            },
+            1,
+        );
+        round_trip_v(WireMsg::TaskReq, 1);
+        round_trip_v(
+            WireMsg::TaskGrant {
+                shard: 1,
+                start: 128,
+                len: 64,
+                rows: None,
+            },
+            1,
+        );
+        round_trip_v(
+            WireMsg::TaskGrant {
+                shard: 2,
+                start: 0,
+                len: 2,
+                rows: Some(vec![9.0; 8]),
+            },
+            1,
+        );
+        round_trip_v(WireMsg::TaskFin { drop_queued: false }, 1);
+        round_trip_v(
+            WireMsg::Chunk {
+                shard: 0,
+                start_row: 32,
+                virtual_time: 1.5,
+                virt_elapsed: 0.25,
+                products: vec![13.0, -7.0],
+            },
+            1,
+        );
+        round_trip_v(
+            WireMsg::JobDone {
+                rows_done: 512,
+                virtual_time: 3.25,
+                failed: true,
+            },
+            1,
+        );
+        round_trip_v(WireMsg::Ping { seq: 42 }, 1);
+        round_trip_v(WireMsg::Pong { seq: 42 }, 1);
+        round_trip_v(WireMsg::Shutdown, 1);
+    }
+
+    #[test]
+    fn v2_variants_round_trip() {
+        round_trip_v(
+            WireMsg::HelloAck {
+                ver: 2,
+                credit: 64,
+            },
+            2,
+        );
+        round_trip_v(
+            WireMsg::JobStart {
+                batch: 2,
+                tau: 1e-4,
+                initial_delay: 0.5,
+                fail_after: 100,
+                time_scale: 1.0,
+                x: vec![1.0; 6],
+                window: 8,
+                coalesce: 32768,
+            },
+            2,
+        );
+        round_trip_v(WireMsg::TaskFin { drop_queued: true }, 2);
+        round_trip_v(
+            WireMsg::ShardBegin {
+                worker: 1,
+                rows: 1000,
+                cols: 200,
+            },
+            2,
+        );
+        round_trip_v(
+            WireMsg::ShardData {
+                data: vec![0.25, -1.5, 3.0],
+            },
+            2,
+        );
+        round_trip_v(WireMsg::ShardEnd, 2);
+        round_trip_v(
+            WireMsg::Chunks {
+                entries: vec![
+                    ChunkEntry {
+                        shard: 0,
+                        start_row: 0,
+                        virtual_time: 0.5,
+                        virt_elapsed: 0.25,
+                        products: vec![1.0, 2.0],
+                    },
+                    ChunkEntry {
+                        shard: 3,
+                        start_row: 64,
+                        virtual_time: 0.75,
+                        virt_elapsed: 0.125,
+                        products: vec![-4.0],
+                    },
+                ],
+            },
+            2,
+        );
+        round_trip_v(WireMsg::JobAck, 2);
+        // plain v1 shapes are also valid stamped v2
+        round_trip_v(WireMsg::Ping { seq: 7 }, 2);
+        round_trip_v(WireMsg::TaskReq, 2);
+    }
+
+    #[test]
+    fn v2_only_frames_refuse_a_v1_stamp() {
+        let mut buf = Vec::new();
+        assert!(WireMsg::JobAck.write(&mut buf, 1).is_err());
+        assert!(WireMsg::ShardEnd.write(&mut buf, 1).is_err());
+        assert!(WireMsg::Chunks { entries: vec![] }.write(&mut buf, 1).is_err());
+        assert!(buf.is_empty(), "refused frames must not emit bytes");
+
+        // and a forged v2-only type code on a v1-stamped frame is
+        // rejected by the reader
+        let mut forged = Vec::new();
+        WireMsg::JobAck.write(&mut forged, 2).unwrap();
+        forged[4] = 1; // restamp v1
+        assert!(WireMsg::read(&mut forged.as_slice()).is_err());
+    }
+
+    #[test]
+    fn hybrid_payloads_shrink_to_their_v1_shape() {
+        // a v2 peer writing at the agreed version 1 must emit byte-for-
+        // byte what a v1-only build would: pin TASK_FIN to an empty
+        // payload and JOB_START/HELLO_ACK to their v1 lengths
+        let mut fin = Vec::new();
+        WireMsg::TaskFin { drop_queued: true }.write(&mut fin, 1).unwrap();
+        assert_eq!(fin, vec![2, 0, 0, 0, 1, ty::TASK_FIN]);
+
+        let mut ack = Vec::new();
+        WireMsg::HelloAck { ver: 1, credit: 99 }.write(&mut ack, 1).unwrap();
+        // len = ver + type + magic + ver byte = 7; no credit field
+        assert_eq!(ack.len(), 4 + 7);
+        match WireMsg::read(&mut ack.as_slice()).unwrap() {
+            WireMsg::HelloAck { ver: 1, credit: 0 } => {}
+            other => panic!("wrong v1 HELLO_ACK decode: {other:?}"),
+        }
     }
 
     #[test]
@@ -502,7 +868,7 @@ mod tests {
             products: vals.clone(),
         };
         let mut buf = Vec::new();
-        msg.write(&mut buf).unwrap();
+        msg.write(&mut buf, 1).unwrap();
         match WireMsg::read(&mut buf.as_slice()).unwrap() {
             WireMsg::Chunk { products, .. } => {
                 for (a, b) in vals.iter().zip(&products) {
@@ -519,7 +885,7 @@ mod tests {
         // reorder or endianness slip is a test failure, not a silent
         // protocol break
         let mut buf = Vec::new();
-        WireMsg::Ping { seq: 0x0102 }.write(&mut buf).unwrap();
+        WireMsg::Ping { seq: 0x0102 }.write(&mut buf, 1).unwrap();
         assert_eq!(
             buf,
             vec![
@@ -534,12 +900,12 @@ mod tests {
     #[test]
     fn rejects_version_and_magic_mismatch() {
         let mut buf = Vec::new();
-        WireMsg::TaskReq.write(&mut buf).unwrap();
+        WireMsg::TaskReq.write(&mut buf, 1).unwrap();
         buf[4] = 9; // unsupported version
         assert!(WireMsg::read(&mut buf.as_slice()).is_err());
 
         let mut hello = Vec::new();
-        WireMsg::Hello { ver: 1 }.write(&mut hello).unwrap();
+        WireMsg::Hello { ver: 1 }.write(&mut hello, 1).unwrap();
         hello[6] = b'X'; // corrupt magic
         assert!(WireMsg::read(&mut hello.as_slice()).is_err());
     }
@@ -547,7 +913,7 @@ mod tests {
     #[test]
     fn rejects_truncated_and_oversized_frames() {
         let mut buf = Vec::new();
-        WireMsg::Ping { seq: 7 }.write(&mut buf).unwrap();
+        WireMsg::Ping { seq: 7 }.write(&mut buf, 1).unwrap();
         assert!(WireMsg::read(&mut buf[..buf.len() - 2].as_ref()).is_err());
 
         let huge = (MAX_FRAME + 1).to_le_bytes();
@@ -565,10 +931,53 @@ mod tests {
             data: vec![1.0; 4],
         };
         let mut buf = Vec::new();
-        msg.write(&mut buf).unwrap();
+        msg.write(&mut buf, 1).unwrap();
         // corrupt the rows field (payload starts at byte 6; worker u32,
         // then rows u32 at offset 10)
         buf[10] = 3;
         assert!(WireMsg::read(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn frame_reader_reassembles_across_arbitrary_splits() {
+        // three frames, fed one byte at a time: the reader must yield
+        // exactly those frames in order, never mid-frame garbage
+        let msgs = vec![
+            WireMsg::TaskGrant {
+                shard: 0,
+                start: 10,
+                len: 5,
+                rows: None,
+            },
+            WireMsg::TaskFin { drop_queued: true },
+            WireMsg::JobAck,
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            m.write(&mut wire, 2).unwrap();
+        }
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        for b in &wire {
+            r.push(std::slice::from_ref(b));
+            while let Some(m) = r.extract().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, msgs);
+        // and a bulk push of two frames drains both
+        let mut r = FrameReader::new();
+        r.push(&wire);
+        assert_eq!(r.extract().unwrap(), Some(msgs[0].clone()));
+        assert_eq!(r.extract().unwrap(), Some(msgs[1].clone()));
+        assert_eq!(r.extract().unwrap(), Some(msgs[2].clone()));
+        assert_eq!(r.extract().unwrap(), None);
+    }
+
+    #[test]
+    fn frame_reader_surfaces_desync_as_error() {
+        let mut r = FrameReader::new();
+        r.push(&[1, 0, 0, 0]); // len = 1 < 2: not a legal frame
+        assert!(r.extract().is_err());
     }
 }

@@ -7,12 +7,23 @@
 //! * [`framing`] — the length-prefixed, versioned, little-endian wire
 //!   format (DESIGN.md §10). No serde: every field is written by hand in
 //!   a pinned order, and the f32 payloads round-trip bit-exactly — the
-//!   cross-transport decode byte-identity claim depends on it.
+//!   cross-transport decode byte-identity claim depends on it. Protocol
+//!   v2 adds the pipelined dialect (credit-carrying `HELLO_ACK`,
+//!   coalesced `CHUNKS`, streamed `SHARD_BEGIN`/`SHARD_DATA`/`SHARD_END`
+//!   installs, the `JOB_ACK` teardown fence); v1 frames are still
+//!   written and read byte-for-byte for fallback lanes.
 //! * [`tcp`] — the cluster backend: each worker is a separate
 //!   `rateless worker` process holding its encoded shard resident
 //!   across jobs *and across reconnects*, driven by a master-side proxy
 //!   thread per lane. The scheduler's task board stays at the master, so
-//!   work-stealing decisions traverse the transport as task grants.
+//!   work-stealing decisions traverse the transport as task grants —
+//!   pushed `pipeline_depth`-deep under v2 so a WAN round trip is paid
+//!   per window, not per task; pulled one-per-round-trip on v1 lanes.
+//! * [`delay`] — the latency-injection harness: a delivery-thread
+//!   writer that delays each frame without serializing the link, used
+//!   by the transport bench and the pipelining tests to simulate WAN
+//!   RTTs on loopback.
 
+pub mod delay;
 pub mod framing;
 pub mod tcp;

@@ -5,15 +5,45 @@
 //! The master owns one **proxy thread per worker lane**. A proxy holds
 //! the lane's `TcpStream` and translates between the pool's in-memory
 //! protocol ([`TransportMsg`]) and the wire ([`WireMsg`]): a broadcast
-//! job becomes a `JOB_START` frame, and the proxy then serves the remote
-//! worker's pull loop — `TASK_REQ` frames are answered from the job's
-//! [`TaskSource`](crate::coordinator::scheduler::TaskSource), which is
-//! how **steal requests traverse the transport**: the work-stealing board
-//! stays master-side, and a grant on a *foreign* shard ships the victim's
-//! rows inline (a remote worker only holds its own shard resident).
-//! `CHUNK` frames are forwarded to the job's event channel exactly as the
-//! in-process worker would send them, including the `virt_elapsed`
-//! feedback for the EWMA speed tracker.
+//! job becomes a `JOB_START` frame, after which the lane speaks one of
+//! two dialects, agreed at HELLO time:
+//!
+//! * **v2 (credit-windowed pipeline, the default).** The worker's
+//!   `HELLO_ACK` advertises a credit window; the master pushes up to
+//!   `min(pipeline_depth, credit)` outstanding `TASK_GRANT`s without
+//!   waiting for per-task requests, and every completed task carried in
+//!   a `CHUNKS` frame replenishes one credit. Grants still come off the
+//!   job's [`TaskSource`](crate::coordinator::scheduler::TaskSource) —
+//!   the work-stealing board stays master-side, steals ship the victim's
+//!   rows inline, master-side chunk dedup and the EWMA `observe`
+//!   feedback are unchanged — but a lane at depth `d` keeps `d` tasks in
+//!   flight, so a WAN round trip is paid once per *window*, not once per
+//!   task. The worker coalesces small results into batched `CHUNKS`
+//!   frames (flush at `chunk_coalesce_bytes`, on a dry grant queue, or
+//!   at job end) to amortize framing overhead.
+//! * **v1 (pull loop).** Strict `TASK_REQ` → `TASK_GRANT`, one `CHUNK`
+//!   per task — one round trip per task. A v2 master speaks this
+//!   automatically against a v1 worker (`HELLO_ACK { ver: 1 }`), and a
+//!   worker can be pinned with `rateless worker --max-proto 1`; decoded
+//!   output is byte-identical either way.
+//!
+//! Shard installs are streamed under v2 (`SHARD_BEGIN` / `SHARD_DATA` ×
+//! n / `SHARD_END`, pieces sized by `max_frame_bytes`) so a shard larger
+//! than one frame can be installed — and re-installed on rejoin; v1
+//! lanes keep the single-frame `INSTALL_SHARD`.
+//!
+//! # Why writes never block the protocol loops
+//!
+//! Every connection end writes through a [`DelayedWriter`] delivery
+//! thread (delay 0 unless latency injection is on). Queueing a frame
+//! never blocks, so the master's grant pump and the worker's result
+//! flush can both make progress even when both socket buffers are full —
+//! the full-duplex stall (master stuck granting while the worker is
+//! stuck flushing, neither reading) is structurally impossible. The same
+//! thread is the latency-injection harness: give it a nonzero delay
+//! (master: [`TcpTunables::wire_delay`]; worker: `RATELESS_WIRE_DELAY_MS`)
+//! and every frame is *delivered* that much after it was *sent* without
+//! serializing the link — a WAN in miniature, RTT = 2 × delay.
 //!
 //! # Worker processes
 //!
@@ -21,12 +51,12 @@
 //! the bound address on stdout (`--listen 127.0.0.1:0` gives an
 //! OS-assigned port — how the loopback tests avoid collisions), and
 //! serves one master connection at a time. The encoded shard installed
-//! by `INSTALL_SHARD` stays resident across jobs **and across
-//! connections**: when a master reconnects after a network fault, the
-//! accept loop is the rejoin path. The worker runs the same virtual-time
-//! pacing loop as the in-process path (`initial_delay`, per-row `tau`,
-//! `time_scale`, `fail_after` clipping at the failure boundary), so a
-//! TCP fleet reproduces the simulator's straggler model bit-for-bit on
+//! at connect stays resident across jobs **and across connections**:
+//! when a master reconnects after a network fault, the accept loop is
+//! the rejoin path. The worker runs the same virtual-time pacing loop as
+//! the in-process path (`initial_delay`, per-row `tau`, `time_scale`,
+//! `fail_after` clipping at the failure boundary), so a TCP fleet
+//! reproduces the simulator's straggler model bit-for-bit on
 //! integer-valued data.
 //!
 //! # Failure semantics
@@ -37,11 +67,19 @@
 //! and the *next* [`broadcast`](crate::coordinator::pool::WorkerPool::broadcast)
 //! surfaces [`JobError::WorkerLost`](crate::coordinator::JobError::WorkerLost).
 //! Idle lanes are probed with `PING`/`PONG` every
-//! [`HEARTBEAT_PERIOD`] so a silently dead peer is noticed between jobs,
-//! not at the next submit. [`TcpTransport::rejoin`] reconnects a dead
-//! lane and re-installs its shard; [`kill`](crate::coordinator::pool::WorkerPool::kill)
-//! sends `SHUTDOWN`, which exits the remote process (decommission is
+//! [`TcpTunables::heartbeat_period`] so a silently dead peer is noticed
+//! between jobs, not at the next submit. [`TcpTransport::rejoin`]
+//! reconnects a dead lane and re-installs its shard;
+//! [`kill`](crate::coordinator::pool::WorkerPool::kill) sends
+//! `SHUTDOWN`, which exits the remote process (decommission is
 //! deliberate and permanent — rejoin after kill fails).
+//!
+//! Under v2 the job teardown needs a fence: the master may push grants
+//! after the worker already sent `JOB_DONE` (a `CHUNKS` arrival tops up
+//! the window before the master reads the `JOB_DONE` behind it). The
+//! master answers `JOB_DONE` with `JOB_ACK`; the worker discards stale
+//! `TASK_GRANT`/`TASK_FIN` frames until the fence so the next job starts
+//! on a clean stream.
 //!
 //! # Divergences from the in-process transport
 //!
@@ -49,68 +87,173 @@
 //!   job spends queued at the master does not count against the remote
 //!   worker's initial delay (in-process it does, via the shared `start`
 //!   Instant). Irrelevant for single-job-at-a-time runs.
-//! * Cancellation reaches a remote worker at its next `TASK_REQ` (the
-//!   master answers `TASK_FIN`), not mid-sleep.
+//! * Cancellation reaches a v1 worker at its next `TASK_REQ` (the master
+//!   answers `TASK_FIN`), and a v2 worker at its next frame drain after
+//!   the master learns of it (`TASK_FIN { drop_queued: true }` clears
+//!   the remote grant queue) — bounded by one in-flight task either way.
 //! * MDS decode output across transports matches to float tolerance,
 //!   not bitwise: the decoder uses the first `k` shards to *complete*,
 //!   an arrival-order-dependent subset (true of any two in-process runs
 //!   as well). LT and uncoded decode are bitwise identical on
 //!   integer-valued data regardless of arrival order.
 
-use std::io::{self, Write};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::framing::{WireMsg, PROTO_VERSION};
+use super::delay::{wire_delay_from_env, DelayedWriter};
+use super::framing::{ChunkEntry, FrameReader, WireMsg, MAX_FRAME, PROTO_V1, PROTO_VERSION};
+use crate::config::TransportConfig;
 use crate::coordinator::messages::{ChunkMsg, WorkerEvent};
 use crate::coordinator::pool::{Transport, TransportMsg};
-use crate::coordinator::worker::{self, JobOrder};
+use crate::coordinator::straggler::WorkerPlan;
+use crate::coordinator::worker::{self, JobOrder, JobShared};
 use crate::matrix::Matrix;
 use crate::runtime::Engine;
 
 /// Idle-lane liveness probe cadence (master → worker `PING`).
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_millis(500);
 /// How long an idle probe waits for its `PONG`.
-const PONG_TIMEOUT: Duration = Duration::from_secs(5);
+pub const PONG_TIMEOUT: Duration = Duration::from_secs(5);
 /// Shard install acknowledgement window (shards can be large).
-const INSTALL_TIMEOUT: Duration = Duration::from_secs(60);
+pub const INSTALL_TIMEOUT: Duration = Duration::from_secs(60);
 /// Per-peer connection establishment window.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 /// How long [`TcpTransport::rejoin`] waits for the lane to come back.
-const REJOIN_WAIT: Duration = Duration::from_secs(5);
+pub const REJOIN_WAIT: Duration = Duration::from_secs(5);
+
+/// Default master-side pipeline window per lane (v2).
+pub const DEFAULT_PIPELINE_DEPTH: usize = 8;
+/// Default worker-side result coalescing flush threshold (bytes).
+pub const DEFAULT_CHUNK_COALESCE_BYTES: usize = 32 * 1024;
+/// Default streamed-install piece size bound (bytes per frame).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 4 << 20;
+/// Default credit window a worker advertises in `HELLO_ACK`.
+pub const DEFAULT_WORKER_CREDIT: u32 = 64;
+
+/// Master-side transport knobs. [`Default`] reproduces the built-in
+/// constants; [`TcpTunables::from_config`] reads the `[transport]`
+/// config section. `proto_max` exists for tests and benches that pin a
+/// v2 master down to the v1 pull loop; `wire_delay` is the
+/// latency-injection knob (defaults to `RATELESS_WIRE_DELAY_MS`, which
+/// is 0 when unset).
+#[derive(Debug, Clone)]
+pub struct TcpTunables {
+    /// Max outstanding task grants per lane (capped by the worker's
+    /// advertised credit; min 1 — depth 1 degenerates to lockstep).
+    pub pipeline_depth: usize,
+    /// Worker flushes its coalesced `CHUNKS` frame at this many bytes.
+    pub chunk_coalesce_bytes: usize,
+    /// Streamed shard installs are chunked so no frame exceeds this.
+    pub max_frame_bytes: usize,
+    pub heartbeat_period: Duration,
+    pub pong_timeout: Duration,
+    pub connect_timeout: Duration,
+    pub install_timeout: Duration,
+    pub rejoin_wait: Duration,
+    /// Per-frame injected delivery delay on the master's writes.
+    pub wire_delay: Duration,
+    /// Highest protocol version the master will offer in `HELLO`.
+    pub proto_max: u8,
+}
+
+impl Default for TcpTunables {
+    fn default() -> Self {
+        Self {
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+            chunk_coalesce_bytes: DEFAULT_CHUNK_COALESCE_BYTES,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            heartbeat_period: HEARTBEAT_PERIOD,
+            pong_timeout: PONG_TIMEOUT,
+            connect_timeout: CONNECT_TIMEOUT,
+            install_timeout: INSTALL_TIMEOUT,
+            rejoin_wait: REJOIN_WAIT,
+            wire_delay: wire_delay_from_env(),
+            proto_max: PROTO_VERSION,
+        }
+    }
+}
+
+impl TcpTunables {
+    /// Build from the `[transport]` config section, clamping nonsense:
+    /// `max_frame_bytes` to `[1 KiB, MAX_FRAME]`, `pipeline_depth` to
+    /// ≥ 1, `chunk_coalesce_bytes` to ≤ `max_frame_bytes`, and every
+    /// timing to ≥ 1 ms.
+    pub fn from_config(cfg: &TransportConfig) -> Self {
+        let max_frame_bytes = cfg.max_frame_bytes.clamp(1024, MAX_FRAME as usize);
+        Self {
+            pipeline_depth: cfg.pipeline_depth.max(1),
+            chunk_coalesce_bytes: cfg.chunk_coalesce_bytes.min(max_frame_bytes),
+            max_frame_bytes,
+            heartbeat_period: Duration::from_millis(cfg.heartbeat_ms.max(1)),
+            pong_timeout: Duration::from_millis(cfg.pong_timeout_ms.max(1)),
+            connect_timeout: Duration::from_millis(cfg.connect_timeout_ms.max(1)),
+            install_timeout: Duration::from_millis(cfg.install_timeout_ms.max(1)),
+            ..Self::default()
+        }
+    }
+}
 
 fn bad(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
 }
 
-/// Master side of the handshake: send `HELLO`, agree on
-/// `min(ours, theirs)`, reject anything we cannot speak.
-fn client_handshake(stream: &mut TcpStream) -> io::Result<()> {
-    WireMsg::Hello { ver: PROTO_VERSION }.write(stream)?;
+/// Wrap the write half of `stream` in a [`DelayedWriter`] delivery
+/// thread. Always — even at zero delay — so protocol loops enqueue
+/// frames instead of blocking on a full socket buffer (see the module
+/// docs on full-duplex stalls).
+fn make_sink(stream: &TcpStream, delay: Duration) -> io::Result<DelayedWriter> {
+    Ok(DelayedWriter::spawn(stream.try_clone()?, delay))
+}
+
+/// One live master→worker connection: the read half (`stream`), the
+/// never-blocking write half (`sink`), and what the handshake agreed.
+struct Conn {
+    stream: TcpStream,
+    sink: DelayedWriter,
+    /// Agreed protocol version (`min` of the two maxima).
+    ver: u8,
+    /// Worker-advertised credit window (0 on a v1 lane).
+    credit: u32,
+}
+
+/// Master side of the handshake: offer `proto_max`, agree on
+/// `min(ours, theirs)`, reject anything we cannot speak. Returns the
+/// agreed version and the worker's advertised credit. `HELLO` is always
+/// stamped v1 — it must be readable before versions are agreed.
+fn client_handshake(stream: &mut TcpStream, proto_max: u8) -> io::Result<(u8, u32)> {
+    WireMsg::Hello { ver: proto_max }.write(stream, PROTO_V1)?;
     match WireMsg::read(stream)? {
-        WireMsg::HelloAck { ver } => {
-            let agreed = ver.min(PROTO_VERSION);
-            if agreed != PROTO_VERSION {
+        WireMsg::HelloAck { ver, credit } => {
+            let agreed = ver.min(proto_max);
+            if !(PROTO_V1..=PROTO_VERSION).contains(&agreed) {
                 return Err(bad("no common protocol version"));
             }
-            Ok(())
+            Ok((agreed, credit))
         }
         _ => Err(bad("expected HELLO_ACK")),
     }
 }
 
-fn connect_peer(addr: &str) -> io::Result<TcpStream> {
+fn connect_peer(addr: &str, tun: &TcpTunables) -> io::Result<Conn> {
     let mut last = bad("peer address resolved to nothing");
     for sock in addr.to_socket_addrs()? {
-        match TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT) {
+        match TcpStream::connect_timeout(&sock, tun.connect_timeout) {
             Ok(mut stream) => {
                 stream.set_nodelay(true)?;
-                client_handshake(&mut stream)?;
-                return Ok(stream);
+                let (ver, credit) = client_handshake(&mut stream, tun.proto_max)?;
+                let sink = make_sink(&stream, tun.wire_delay)?;
+                return Ok(Conn {
+                    stream,
+                    sink,
+                    ver,
+                    credit,
+                });
             }
             Err(e) => last = e,
         }
@@ -118,18 +261,44 @@ fn connect_peer(addr: &str) -> io::Result<TcpStream> {
     Err(last)
 }
 
-/// Ship worker `w`'s shard and wait for the ack.
-fn install_remote(stream: &mut TcpStream, w: usize, shard: &Matrix) -> io::Result<()> {
-    WireMsg::InstallShard {
-        worker: w as u32,
-        rows: shard.rows() as u32,
-        cols: shard.cols() as u32,
-        data: shard.data().to_vec(),
+/// Ship worker `w`'s shard and wait for the ack. A v2 lane streams it
+/// (`SHARD_BEGIN` / `SHARD_DATA` × n / `SHARD_END`, each data frame at
+/// most `max_frame_bytes`) so shards bigger than one frame install; a
+/// v1 lane gets the legacy single `INSTALL_SHARD`.
+fn install_remote(
+    conn: &mut Conn,
+    w: usize,
+    shard: &Matrix,
+    tun: &TcpTunables,
+) -> io::Result<()> {
+    if conn.ver >= 2 {
+        WireMsg::ShardBegin {
+            worker: w as u32,
+            rows: shard.rows() as u32,
+            cols: shard.cols() as u32,
+        }
+        .write(&mut conn.sink, conn.ver)?;
+        // 16 bytes covers the frame header + payload count field
+        let floats_per_piece = (tun.max_frame_bytes.saturating_sub(16) / 4).max(1);
+        for piece in shard.data().chunks(floats_per_piece) {
+            WireMsg::ShardData {
+                data: piece.to_vec(),
+            }
+            .write(&mut conn.sink, conn.ver)?;
+        }
+        WireMsg::ShardEnd.write(&mut conn.sink, conn.ver)?;
+    } else {
+        WireMsg::InstallShard {
+            worker: w as u32,
+            rows: shard.rows() as u32,
+            cols: shard.cols() as u32,
+            data: shard.data().to_vec(),
+        }
+        .write(&mut conn.sink, PROTO_V1)?;
     }
-    .write(stream)?;
-    stream.set_read_timeout(Some(INSTALL_TIMEOUT))?;
-    let reply = WireMsg::read(stream);
-    stream.set_read_timeout(None)?;
+    conn.stream.set_read_timeout(Some(tun.install_timeout))?;
+    let reply = WireMsg::read(&mut conn.stream);
+    conn.stream.set_read_timeout(None)?;
     match reply? {
         WireMsg::ShardOk => Ok(()),
         _ => Err(bad("expected SHARD_OK")),
@@ -148,49 +317,74 @@ enum ProxyMsg {
 pub struct TcpTransport {
     lanes: Vec<Sender<ProxyMsg>>,
     alive: Vec<Arc<AtomicBool>>,
+    protos: Vec<Arc<AtomicU8>>,
     handles: Vec<JoinHandle<()>>,
     installed: OnceLock<()>,
     peers: Vec<String>,
+    rejoin_wait: Duration,
 }
 
 impl TcpTransport {
+    /// [`connect_tuned`](Self::connect_tuned) with default knobs.
+    pub fn connect(peers: &[String]) -> anyhow::Result<Self> {
+        Self::connect_tuned(peers, TcpTunables::default())
+    }
+
     /// Connect and handshake every peer (`host:port` each), spawning one
     /// proxy thread per lane. Fails if any peer is unreachable — a fleet
     /// that starts degraded is a config error, not a runtime fault.
-    pub fn connect(peers: &[String]) -> anyhow::Result<Self> {
+    pub fn connect_tuned(peers: &[String], tun: TcpTunables) -> anyhow::Result<Self> {
+        let rejoin_wait = tun.rejoin_wait;
+        let tun = Arc::new(tun);
         let mut lanes = Vec::with_capacity(peers.len());
         let mut alive = Vec::with_capacity(peers.len());
+        let mut protos = Vec::with_capacity(peers.len());
         let mut handles = Vec::with_capacity(peers.len());
         for (w, addr) in peers.iter().enumerate() {
-            let stream = connect_peer(addr)
+            let conn = connect_peer(addr, &tun)
                 .map_err(|e| anyhow::anyhow!("worker {w} at {addr}: {e}"))?;
             let (tx, rx) = channel::<ProxyMsg>();
             let live = Arc::new(AtomicBool::new(true));
+            let proto = Arc::new(AtomicU8::new(conn.ver));
             let handle = {
                 let live = Arc::clone(&live);
+                let proto = Arc::clone(&proto);
+                let tun = Arc::clone(&tun);
                 let addr = addr.clone();
                 std::thread::Builder::new()
                     .name(format!("tcp-proxy-{w}"))
-                    .spawn(move || proxy_loop(w, &addr, stream, rx, &live))
+                    .spawn(move || proxy_loop(w, &addr, conn, rx, &live, &proto, &tun))
                     .expect("spawn tcp proxy")
             };
             lanes.push(tx);
             alive.push(live);
+            protos.push(proto);
             handles.push(handle);
         }
         crate::info!("tcp transport: {} workers connected", peers.len());
         Ok(Self {
             lanes,
             alive,
+            protos,
             handles,
             installed: OnceLock::new(),
             peers: peers.to_vec(),
+            rejoin_wait,
         })
     }
 
     /// The peer list this transport was built from.
     pub fn peers(&self) -> &[String] {
         &self.peers
+    }
+
+    /// The protocol version each lane agreed at handshake (updated on
+    /// rejoin) — how tests assert a lane really fell back to v1.
+    pub fn lane_protocols(&self) -> Vec<u8> {
+        self.protos
+            .iter()
+            .map(|p| p.load(Ordering::SeqCst))
+            .collect()
     }
 }
 
@@ -232,7 +426,7 @@ impl Transport for TcpTransport {
         if self.lanes[w].send(ProxyMsg::Rejoin).is_err() {
             return false; // proxy exited: the worker was decommissioned
         }
-        let deadline = Instant::now() + REJOIN_WAIT;
+        let deadline = Instant::now() + self.rejoin_wait;
         while Instant::now() < deadline {
             if self.alive[w].load(Ordering::SeqCst) {
                 return true;
@@ -259,31 +453,33 @@ impl Drop for TcpTransport {
 fn proxy_loop(
     w: usize,
     addr: &str,
-    stream: TcpStream,
+    conn: Conn,
     rx: Receiver<ProxyMsg>,
     alive: &AtomicBool,
+    proto: &AtomicU8,
+    tun: &TcpTunables,
 ) {
-    let mut stream = Some(stream);
+    let mut conn = Some(conn);
     let mut fleet: Option<Arc<Vec<Arc<Matrix>>>> = None;
     let mut ping_seq = 0u64;
     loop {
-        match rx.recv_timeout(HEARTBEAT_PERIOD) {
+        match rx.recv_timeout(tun.heartbeat_period) {
             Ok(ProxyMsg::Install(f)) => {
                 fleet = Some(f);
                 let fleet = fleet.as_ref().unwrap();
-                if let Some(s) = stream.as_mut() {
-                    if let Err(e) = install_remote(s, w, &fleet[w]) {
+                if let Some(c) = conn.as_mut() {
+                    if let Err(e) = install_remote(c, w, &fleet[w], tun) {
                         crate::warn_!("tcp worker {w}: shard install failed: {e}");
-                        stream = None;
+                        conn = None;
                         alive.store(false, Ordering::SeqCst);
                     }
                 }
             }
-            Ok(ProxyMsg::External(TransportMsg::Job(job))) => match stream.as_mut() {
-                Some(s) => {
-                    if let Err(e) = drive_job(w, s, fleet.as_deref(), job) {
+            Ok(ProxyMsg::External(TransportMsg::Job(job))) => match conn.as_mut() {
+                Some(c) => {
+                    if let Err(e) = drive_job(w, c, fleet.as_deref(), job, tun) {
                         crate::warn_!("tcp worker {w}: lost mid-job: {e}");
-                        stream = None;
+                        conn = None;
                         alive.store(false, Ordering::SeqCst);
                     }
                 }
@@ -295,20 +491,24 @@ fn proxy_loop(
             },
             Ok(ProxyMsg::External(TransportMsg::Exec(task))) => task(),
             Ok(ProxyMsg::External(TransportMsg::Shutdown)) => {
-                if let Some(s) = stream.as_mut() {
-                    let _ = WireMsg::Shutdown.write(s);
+                if let Some(c) = conn.as_mut() {
+                    let _ = WireMsg::Shutdown.write(&mut c.sink, c.ver);
                 }
+                // dropping the Conn joins the sink's delivery thread,
+                // which drains the queued SHUTDOWN before the fd closes
+                conn = None;
                 alive.store(false, Ordering::SeqCst);
                 return;
             }
             Ok(ProxyMsg::Rejoin) => {
-                if stream.is_some() {
+                if conn.is_some() {
                     continue; // already live
                 }
-                match reconnect(w, addr, fleet.as_deref()) {
-                    Ok(s) => {
+                match reconnect(w, addr, fleet.as_deref(), tun) {
+                    Ok(c) => {
                         crate::info!("tcp worker {w}: rejoined at {addr}");
-                        stream = Some(s);
+                        proto.store(c.ver, Ordering::SeqCst);
+                        conn = Some(c);
                         alive.store(true, Ordering::SeqCst);
                     }
                     Err(e) => crate::warn_!("tcp worker {w}: rejoin failed: {e}"),
@@ -316,11 +516,11 @@ fn proxy_loop(
             }
             Err(RecvTimeoutError::Timeout) => {
                 // idle: probe liveness so loss is noticed between jobs
-                if let Some(s) = stream.as_mut() {
+                if let Some(c) = conn.as_mut() {
                     ping_seq += 1;
-                    if let Err(e) = ping(s, ping_seq) {
+                    if let Err(e) = ping(c, ping_seq, tun) {
                         crate::warn_!("tcp worker {w}: heartbeat failed: {e}");
-                        stream = None;
+                        conn = None;
                         alive.store(false, Ordering::SeqCst);
                     }
                 }
@@ -334,19 +534,20 @@ fn reconnect(
     w: usize,
     addr: &str,
     fleet: Option<&Vec<Arc<Matrix>>>,
-) -> io::Result<TcpStream> {
-    let mut stream = connect_peer(addr)?;
+    tun: &TcpTunables,
+) -> io::Result<Conn> {
+    let mut conn = connect_peer(addr, tun)?;
     if let Some(fleet) = fleet {
-        install_remote(&mut stream, w, &fleet[w])?;
+        install_remote(&mut conn, w, &fleet[w], tun)?;
     }
-    Ok(stream)
+    Ok(conn)
 }
 
-fn ping(stream: &mut TcpStream, seq: u64) -> io::Result<()> {
-    WireMsg::Ping { seq }.write(stream)?;
-    stream.set_read_timeout(Some(PONG_TIMEOUT))?;
-    let reply = WireMsg::read(stream);
-    stream.set_read_timeout(None)?;
+fn ping(conn: &mut Conn, seq: u64, tun: &TcpTunables) -> io::Result<()> {
+    WireMsg::Ping { seq }.write(&mut conn.sink, conn.ver)?;
+    conn.stream.set_read_timeout(Some(tun.pong_timeout))?;
+    let reply = WireMsg::read(&mut conn.stream);
+    conn.stream.set_read_timeout(None)?;
     match reply? {
         WireMsg::Pong { seq: s } if s == seq => Ok(()),
         _ => Err(bad("expected matching PONG")),
@@ -364,14 +565,15 @@ fn fail_job(w: usize, job: JobOrder) {
     });
 }
 
-/// Serve one job over the wire: announce it, answer the remote pull loop
-/// from the master-side task board, forward chunks. An I/O error fails
-/// the job (Done { failed }) and the caller marks the lane dead.
+/// Serve one job over the wire, in the lane's agreed dialect. An I/O
+/// error fails the job (`Done { failed }`) and the caller marks the
+/// lane dead.
 fn drive_job(
     w: usize,
-    stream: &mut TcpStream,
+    conn: &mut Conn,
     fleet: Option<&Vec<Arc<Matrix>>>,
     job: JobOrder,
+    tun: &TcpTunables,
 ) -> io::Result<()> {
     let JobOrder {
         shared,
@@ -380,78 +582,11 @@ fn drive_job(
         tx,
     } = job;
     let s = &*shared;
-    let res: io::Result<()> = (|| {
-        WireMsg::JobStart {
-            batch: s.batch as u32,
-            tau,
-            initial_delay: plan.initial_delay,
-            fail_after: plan.fail_after.map_or(u64::MAX, |f| f as u64),
-            time_scale: s.time_scale,
-            x: (*s.x).clone(),
-        }
-        .write(stream)?;
-        loop {
-            match WireMsg::read(stream)? {
-                WireMsg::TaskReq => {
-                    let task = if s.cancel.load(Ordering::Relaxed) {
-                        None // cancellation reaches the remote as board-dry
-                    } else {
-                        s.tasks.next_task(w)
-                    };
-                    match task {
-                        None => WireMsg::TaskFin.write(stream)?,
-                        Some(t) => {
-                            let rows = if t.shard == w {
-                                None // resident shard: slice remotely
-                            } else {
-                                let fleet =
-                                    fleet.ok_or_else(|| bad("job before shard install"))?;
-                                Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
-                            };
-                            WireMsg::TaskGrant {
-                                shard: t.shard as u32,
-                                start: t.start as u32,
-                                len: t.len as u32,
-                                rows,
-                            }
-                            .write(stream)?;
-                        }
-                    }
-                }
-                WireMsg::Chunk {
-                    shard,
-                    start_row,
-                    virtual_time,
-                    virt_elapsed,
-                    products,
-                } => {
-                    let rows = products.len() / s.batch.max(1);
-                    s.tasks.observe(w, rows, virt_elapsed);
-                    let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
-                        worker: w,
-                        shard: shard as usize,
-                        start_row: start_row as usize,
-                        products,
-                        virtual_time,
-                    }));
-                }
-                WireMsg::JobDone {
-                    rows_done,
-                    virtual_time,
-                    failed,
-                } => {
-                    let _ = tx.send(WorkerEvent::Done {
-                        worker: w,
-                        rows_done: rows_done as usize,
-                        virtual_time,
-                        failed,
-                    });
-                    return Ok(());
-                }
-                _ => return Err(bad("unexpected frame during job")),
-            }
-        }
-    })();
+    let res = if conn.ver >= 2 {
+        drive_job_v2(w, conn, fleet, s, &plan, tau, &tx, tun)
+    } else {
+        drive_job_v1(w, conn, fleet, s, &plan, tau, &tx)
+    };
     if res.is_err() {
         // the remote died mid-job: synthesize the silent-death Done so
         // the collector completes from surplus chunks instead of hanging
@@ -465,13 +600,306 @@ fn drive_job(
     res
 }
 
+/// Feed one task's results into the job: EWMA speed feedback, then the
+/// same `WorkerEvent::Chunk` the in-process worker would send (the
+/// master's collector dedups by (shard, start_row, rows) as before).
+fn forward_chunk(w: usize, s: &JobShared, tx: &Sender<WorkerEvent>, c: ChunkEntry) {
+    let rows = c.products.len() / s.batch.max(1);
+    s.tasks.observe(w, rows, c.virt_elapsed);
+    let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
+        worker: w,
+        shard: c.shard as usize,
+        start_row: c.start_row as usize,
+        products: c.products,
+        virtual_time: c.virtual_time,
+    }));
+}
+
+/// Top the lane's pipeline back up to `window` outstanding grants.
+/// Sends `TASK_FIN` exactly once — `drop_queued: true` on cancellation
+/// (discard queued grants, report now), `false` on board-dry (drain
+/// queued grants first).
+#[allow(clippy::too_many_arguments)]
+fn pump_grants(
+    w: usize,
+    sink: &mut DelayedWriter,
+    ver: u8,
+    s: &JobShared,
+    fleet: Option<&Vec<Arc<Matrix>>>,
+    window: usize,
+    outstanding: &mut usize,
+    fin_sent: &mut bool,
+) -> io::Result<()> {
+    while !*fin_sent {
+        if s.cancel.load(Ordering::Relaxed) {
+            WireMsg::TaskFin { drop_queued: true }.write(sink, ver)?;
+            *fin_sent = true;
+            break;
+        }
+        if *outstanding >= window {
+            break;
+        }
+        match s.tasks.next_task(w) {
+            None => {
+                WireMsg::TaskFin { drop_queued: false }.write(sink, ver)?;
+                *fin_sent = true;
+            }
+            Some(t) => {
+                let rows = if t.shard == w {
+                    None // resident shard: slice remotely
+                } else {
+                    let fleet = fleet.ok_or_else(|| bad("job before shard install"))?;
+                    Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
+                };
+                WireMsg::TaskGrant {
+                    shard: t.shard as u32,
+                    start: t.start as u32,
+                    len: t.len as u32,
+                    rows,
+                }
+                .write(sink, ver)?;
+                *outstanding += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// v2: push up to `window` grants, replenish one credit per completed
+/// task in each `CHUNKS` arrival, fence the teardown with `JOB_ACK`.
+#[allow(clippy::too_many_arguments)]
+fn drive_job_v2(
+    w: usize,
+    conn: &mut Conn,
+    fleet: Option<&Vec<Arc<Matrix>>>,
+    s: &JobShared,
+    plan: &WorkerPlan,
+    tau: f64,
+    tx: &Sender<WorkerEvent>,
+    tun: &TcpTunables,
+) -> io::Result<()> {
+    let ver = conn.ver;
+    let window = tun.pipeline_depth.max(1).min(conn.credit.max(1) as usize);
+    WireMsg::JobStart {
+        batch: s.batch as u32,
+        tau,
+        initial_delay: plan.initial_delay,
+        fail_after: plan.fail_after.map_or(u64::MAX, |f| f as u64),
+        time_scale: s.time_scale,
+        x: (*s.x).clone(),
+        window: window as u32,
+        coalesce: tun.chunk_coalesce_bytes as u32,
+    }
+    .write(&mut conn.sink, ver)?;
+    let mut outstanding = 0usize;
+    let mut fin_sent = false;
+    pump_grants(
+        w,
+        &mut conn.sink,
+        ver,
+        s,
+        fleet,
+        window,
+        &mut outstanding,
+        &mut fin_sent,
+    )?;
+    loop {
+        match WireMsg::read(&mut conn.stream)? {
+            WireMsg::Chunks { entries } => {
+                for e in entries {
+                    forward_chunk(w, s, tx, e);
+                    outstanding = outstanding.saturating_sub(1);
+                }
+                pump_grants(
+                    w,
+                    &mut conn.sink,
+                    ver,
+                    s,
+                    fleet,
+                    window,
+                    &mut outstanding,
+                    &mut fin_sent,
+                )?;
+            }
+            // tolerated for forward-compat: a single un-coalesced chunk
+            WireMsg::Chunk {
+                shard,
+                start_row,
+                virtual_time,
+                virt_elapsed,
+                products,
+            } => {
+                forward_chunk(
+                    w,
+                    s,
+                    tx,
+                    ChunkEntry {
+                        shard,
+                        start_row,
+                        virtual_time,
+                        virt_elapsed,
+                        products,
+                    },
+                );
+                outstanding = outstanding.saturating_sub(1);
+                pump_grants(
+                    w,
+                    &mut conn.sink,
+                    ver,
+                    s,
+                    fleet,
+                    window,
+                    &mut outstanding,
+                    &mut fin_sent,
+                )?;
+            }
+            WireMsg::JobDone {
+                rows_done,
+                virtual_time,
+                failed,
+            } => {
+                let _ = tx.send(WorkerEvent::Done {
+                    worker: w,
+                    rows_done: rows_done as usize,
+                    virtual_time,
+                    failed,
+                });
+                // fence: grants pushed after the worker finished are in
+                // flight; the worker discards until it sees this
+                WireMsg::JobAck.write(&mut conn.sink, ver)?;
+                return Ok(());
+            }
+            _ => return Err(bad("unexpected frame during job")),
+        }
+    }
+}
+
+/// v1 fallback: announce the job, answer the remote pull loop from the
+/// master-side task board, forward chunks — one round trip per task.
+fn drive_job_v1(
+    w: usize,
+    conn: &mut Conn,
+    fleet: Option<&Vec<Arc<Matrix>>>,
+    s: &JobShared,
+    plan: &WorkerPlan,
+    tau: f64,
+    tx: &Sender<WorkerEvent>,
+) -> io::Result<()> {
+    WireMsg::JobStart {
+        batch: s.batch as u32,
+        tau,
+        initial_delay: plan.initial_delay,
+        fail_after: plan.fail_after.map_or(u64::MAX, |f| f as u64),
+        time_scale: s.time_scale,
+        x: (*s.x).clone(),
+        window: 0,
+        coalesce: 0,
+    }
+    .write(&mut conn.sink, PROTO_V1)?;
+    loop {
+        match WireMsg::read(&mut conn.stream)? {
+            WireMsg::TaskReq => {
+                let task = if s.cancel.load(Ordering::Relaxed) {
+                    None // cancellation reaches the remote as board-dry
+                } else {
+                    s.tasks.next_task(w)
+                };
+                match task {
+                    None => WireMsg::TaskFin { drop_queued: false }
+                        .write(&mut conn.sink, PROTO_V1)?,
+                    Some(t) => {
+                        let rows = if t.shard == w {
+                            None // resident shard: slice remotely
+                        } else {
+                            let fleet =
+                                fleet.ok_or_else(|| bad("job before shard install"))?;
+                            Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
+                        };
+                        WireMsg::TaskGrant {
+                            shard: t.shard as u32,
+                            start: t.start as u32,
+                            len: t.len as u32,
+                            rows,
+                        }
+                        .write(&mut conn.sink, PROTO_V1)?;
+                    }
+                }
+            }
+            WireMsg::Chunk {
+                shard,
+                start_row,
+                virtual_time,
+                virt_elapsed,
+                products,
+            } => forward_chunk(
+                w,
+                s,
+                tx,
+                ChunkEntry {
+                    shard,
+                    start_row,
+                    virtual_time,
+                    virt_elapsed,
+                    products,
+                },
+            ),
+            WireMsg::JobDone {
+                rows_done,
+                virtual_time,
+                failed,
+            } => {
+                let _ = tx.send(WorkerEvent::Done {
+                    worker: w,
+                    rows_done: rows_done as usize,
+                    virtual_time,
+                    failed,
+                });
+                return Ok(());
+            }
+            _ => return Err(bad("unexpected frame during job")),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Worker process side
 // ---------------------------------------------------------------------
 
+/// Worker-side tunables, set from `rateless worker` CLI flags.
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Credit window advertised in `HELLO_ACK` (`--credit`).
+    pub credit: u32,
+    /// Highest protocol version to accept (`--max-proto`; pin to 1 to
+    /// force a v2 master onto the legacy pull loop).
+    pub max_proto: u8,
+    /// Per-frame injected delivery delay on the worker's writes
+    /// (`RATELESS_WIRE_DELAY_MS`).
+    pub wire_delay: Duration,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        Self {
+            credit: DEFAULT_WORKER_CREDIT,
+            max_proto: PROTO_VERSION,
+            wire_delay: wire_delay_from_env(),
+        }
+    }
+}
+
 struct Resident {
     worker: usize,
     shard: Matrix,
+}
+
+/// Accumulator for a streamed v2 install between `SHARD_BEGIN` and
+/// `SHARD_END`.
+struct StreamingInstall {
+    worker: u32,
+    rows: u32,
+    cols: u32,
+    data: Vec<f32>,
 }
 
 enum Served {
@@ -488,6 +916,11 @@ enum Served {
 /// serves masters until one sends `SHUTDOWN`. The installed shard stays
 /// resident across connections.
 pub fn run_worker(listen: &str) -> anyhow::Result<()> {
+    run_worker_opts(listen, WorkerOpts::default())
+}
+
+/// [`run_worker`] with explicit [`WorkerOpts`].
+pub fn run_worker_opts(listen: &str, opts: WorkerOpts) -> anyhow::Result<()> {
     let listener = TcpListener::bind(listen)?;
     let addr = listener.local_addr()?;
     println!("rateless worker listening on {addr}");
@@ -505,7 +938,7 @@ pub fn run_worker(listen: &str) -> anyhow::Result<()> {
         if let Err(e) = stream.set_nodelay(true) {
             crate::warn_!("worker: set_nodelay failed: {e}");
         }
-        match serve_master(&mut stream, &engine, &mut resident) {
+        match serve_master(&mut stream, &engine, &mut resident, &opts) {
             Ok(Served::Shutdown) => {
                 crate::info!("worker: decommissioned by master");
                 return Ok(());
@@ -531,24 +964,93 @@ fn is_disconnect(e: &io::Error) -> bool {
     )
 }
 
+/// Block until one whole frame is available. All worker-side reads go
+/// through the [`FrameReader`] (never `WireMsg::read` on the raw stream)
+/// so bytes buffered by a nonblocking drain are never lost.
+fn next_frame(reader: &mut FrameReader, mut stream: &TcpStream) -> io::Result<WireMsg> {
+    loop {
+        if let Some(msg) = reader.extract()? {
+            return Ok(msg);
+        }
+        let mut tmp = [0u8; 64 * 1024];
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "peer closed",
+                ))
+            }
+            Ok(n) => reader.push(&tmp[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Drain whatever is already on the socket without blocking and return
+/// the next complete frame, if any. This is the v2 worker's poll between
+/// tasks: it keeps the grant queue topped up and sees a cancellation
+/// `TASK_FIN` at the next task boundary instead of at queue-dry.
+fn try_next_frame(
+    reader: &mut FrameReader,
+    mut stream: &TcpStream,
+) -> io::Result<Option<WireMsg>> {
+    if let Some(msg) = reader.extract()? {
+        return Ok(Some(msg));
+    }
+    stream.set_nonblocking(true)?;
+    let fill = (|| -> io::Result<()> {
+        loop {
+            let mut tmp = [0u8; 64 * 1024];
+            match stream.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed",
+                    ))
+                }
+                Ok(n) => reader.push(&tmp[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    })();
+    // always restore blocking mode — the sink's delivery thread shares
+    // the fd and write_all_retry only spins through brief flips
+    let restore = stream.set_nonblocking(false);
+    fill?;
+    restore?;
+    reader.extract()
+}
+
 fn serve_master(
     stream: &mut TcpStream,
     engine: &Engine,
     resident: &mut Option<Resident>,
+    opts: &WorkerOpts,
 ) -> io::Result<Served> {
+    let mut reader = FrameReader::new();
     // worker side of the handshake: agree on min(ours, theirs)
-    match WireMsg::read(stream)? {
+    let agreed = match next_frame(&mut reader, stream)? {
         WireMsg::Hello { ver } => {
-            let agreed = ver.min(PROTO_VERSION);
+            let agreed = ver.min(opts.max_proto);
             if agreed == 0 {
                 return Err(bad("no common protocol version"));
             }
-            WireMsg::HelloAck { ver: agreed }.write(stream)?;
+            agreed
         }
         _ => return Err(bad("expected HELLO")),
+    };
+    let mut sink = make_sink(stream, opts.wire_delay)?;
+    WireMsg::HelloAck {
+        ver: agreed,
+        credit: opts.credit,
     }
+    .write(&mut sink, agreed)?;
+    let mut streaming: Option<StreamingInstall> = None;
     loop {
-        let msg = match WireMsg::read(stream) {
+        let msg = match next_frame(&mut reader, stream) {
             Ok(m) => m,
             Err(e) if is_disconnect(&e) => return Ok(Served::Disconnected),
             Err(e) => return Err(e),
@@ -564,10 +1066,46 @@ fn serve_master(
                     worker: worker as usize,
                     shard: Matrix::from_vec(rows as usize, cols as usize, data),
                 });
-                WireMsg::ShardOk.write(stream)?;
+                WireMsg::ShardOk.write(&mut sink, agreed)?;
                 crate::info!("worker {worker}: shard resident ({rows}×{cols})");
             }
-            WireMsg::Ping { seq } => WireMsg::Pong { seq }.write(stream)?,
+            WireMsg::ShardBegin { worker, rows, cols } => {
+                let want = rows as u64 * cols as u64;
+                streaming = Some(StreamingInstall {
+                    worker,
+                    rows,
+                    cols,
+                    // cap the pre-allocation: the announced shape is
+                    // untrusted until the data actually arrives
+                    data: Vec::with_capacity(want.min(1 << 26) as usize),
+                });
+            }
+            WireMsg::ShardData { data } => {
+                let st = streaming
+                    .as_mut()
+                    .ok_or_else(|| bad("SHARD_DATA outside an install stream"))?;
+                let want = st.rows as u64 * st.cols as u64;
+                if st.data.len() as u64 + data.len() as u64 > want {
+                    return Err(bad("streamed shard overruns its announced shape"));
+                }
+                st.data.extend_from_slice(&data);
+            }
+            WireMsg::ShardEnd => {
+                let st = streaming
+                    .take()
+                    .ok_or_else(|| bad("SHARD_END outside an install stream"))?;
+                if st.data.len() as u64 != st.rows as u64 * st.cols as u64 {
+                    return Err(bad("streamed shard ended short of its shape"));
+                }
+                let (worker, rows, cols) = (st.worker, st.rows, st.cols);
+                *resident = Some(Resident {
+                    worker: worker as usize,
+                    shard: Matrix::from_vec(rows as usize, cols as usize, st.data),
+                });
+                WireMsg::ShardOk.write(&mut sink, agreed)?;
+                crate::info!("worker {worker}: shard resident ({rows}×{cols}, streamed)");
+            }
+            WireMsg::Ping { seq } => WireMsg::Pong { seq }.write(&mut sink, agreed)?,
             WireMsg::Shutdown => return Ok(Served::Shutdown),
             WireMsg::JobStart {
                 batch,
@@ -576,28 +1114,259 @@ fn serve_master(
                 fail_after,
                 time_scale,
                 x,
-            } => run_remote_job(
-                stream,
-                engine,
-                resident.as_ref(),
-                batch as usize,
-                tau,
-                initial_delay,
-                fail_after,
-                time_scale,
-                &x,
-            )?,
+                window: _,
+                coalesce,
+            } => {
+                if agreed >= 2 {
+                    run_remote_job_v2(
+                        stream,
+                        &mut sink,
+                        &mut reader,
+                        engine,
+                        resident.as_ref(),
+                        batch as usize,
+                        tau,
+                        initial_delay,
+                        fail_after,
+                        time_scale,
+                        coalesce as usize,
+                        &x,
+                    )?
+                } else {
+                    run_remote_job(
+                        stream,
+                        &mut sink,
+                        &mut reader,
+                        engine,
+                        resident.as_ref(),
+                        batch as usize,
+                        tau,
+                        initial_delay,
+                        fail_after,
+                        time_scale,
+                        &x,
+                    )?
+                }
+            }
             _ => return Err(bad("unexpected frame between jobs")),
         }
     }
 }
 
-/// The remote twin of [`worker::run_job`]: same virtual clock, same
-/// pacing, same failure-boundary clipping — but tasks are pulled over
-/// the wire instead of from a shared board.
+/// Worker-side result coalescing: buffer [`ChunkEntry`]s until `limit`
+/// bytes of frame payload accumulate, then flush one `CHUNKS` frame.
+/// A `limit` of 0 degenerates to one frame per task.
+struct Coalescer {
+    entries: Vec<ChunkEntry>,
+    bytes: usize,
+    limit: usize,
+}
+
+impl Coalescer {
+    fn new(limit: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            bytes: 0,
+            limit,
+        }
+    }
+
+    fn push(&mut self, e: ChunkEntry) {
+        self.bytes += e.wire_bytes();
+        self.entries.push(e);
+    }
+
+    fn full(&self) -> bool {
+        self.bytes >= self.limit
+    }
+
+    fn flush(&mut self, sink: &mut DelayedWriter) -> io::Result<()> {
+        if self.entries.is_empty() {
+            return Ok(());
+        }
+        self.bytes = 0;
+        WireMsg::Chunks {
+            entries: std::mem::take(&mut self.entries),
+        }
+        .write(sink, PROTO_VERSION)
+    }
+}
+
+/// One queued grant: (shard, start, len, inline rows).
+type QueuedGrant = (usize, usize, usize, Option<Vec<f32>>);
+
+/// Absorb a frame into the local grant queue. `TASK_FIN` latches `fin`;
+/// with `drop_queued` it also clears the queue (cancellation — undone
+/// work is reported as not done, exactly like the in-process worker
+/// observing `cancel` between tasks).
+fn absorb(msg: WireMsg, queue: &mut VecDeque<QueuedGrant>, fin: &mut bool) -> io::Result<()> {
+    match msg {
+        WireMsg::TaskGrant {
+            shard,
+            start,
+            len,
+            rows,
+        } => {
+            queue.push_back((shard as usize, start as usize, len as usize, rows));
+            Ok(())
+        }
+        WireMsg::TaskFin { drop_queued } => {
+            *fin = true;
+            if drop_queued {
+                queue.clear();
+            }
+            Ok(())
+        }
+        _ => Err(bad("unexpected frame during pipelined job")),
+    }
+}
+
+/// The v2 twin of [`run_remote_job`]: same virtual clock, same pacing,
+/// same failure-boundary clipping — but grants arrive unprompted into a
+/// local queue (drained nonblocking between tasks) and results leave
+/// through the [`Coalescer`].
+///
+/// Deadlock rule: the coalescer is flushed before *every* blocking read
+/// with a dry queue — buffered results are the master's only source of
+/// replenished credits, so sitting on them while waiting for grants
+/// would stall the lane.
+#[allow(clippy::too_many_arguments)]
+fn run_remote_job_v2(
+    stream: &mut TcpStream,
+    sink: &mut DelayedWriter,
+    reader: &mut FrameReader,
+    engine: &Engine,
+    resident: Option<&Resident>,
+    batch: usize,
+    tau: f64,
+    initial_delay: f64,
+    fail_after: u64,
+    time_scale: f64,
+    coalesce: usize,
+    x: &[f32],
+) -> io::Result<()> {
+    let start = Instant::now();
+    let no_cancel = AtomicBool::new(false); // cancellation arrives as TASK_FIN
+    let mut v = initial_delay;
+    let mut rows_done = 0u64;
+    let mut failed = false;
+    let mut queue: VecDeque<QueuedGrant> = VecDeque::new();
+    let mut fin = false;
+    let mut out = Coalescer::new(coalesce);
+
+    if time_scale > 0.0 {
+        worker::sleep_until(start, v * time_scale, &no_cancel);
+    }
+    'job: loop {
+        // drain everything already on the wire: tops up the queue and
+        // sees a cancellation TASK_FIN at the next task boundary
+        while let Some(msg) = try_next_frame(reader, stream)? {
+            absorb(msg, &mut queue, &mut fin)?;
+        }
+        if rows_done >= fail_after {
+            failed = true;
+            break;
+        }
+        let (shard_id, t_start, granted, inline) = match queue.pop_front() {
+            Some(t) => t,
+            None if fin => break,
+            None => {
+                // queue dry, job not over: flush results (they carry the
+                // credits that refill the pipeline), then block
+                out.flush(sink)?;
+                let msg = next_frame(reader, stream)?;
+                absorb(msg, &mut queue, &mut fin)?;
+                continue 'job;
+            }
+        };
+        let task_t0 = Instant::now();
+        let mut len = granted;
+        if fail_after != u64::MAX {
+            // die exactly at the boundary so rows_done == fail_after;
+            // the rest of the task is lost (silent death)
+            len = len.min((fail_after - rows_done) as usize);
+            if len == 0 {
+                failed = true;
+                break;
+            }
+        }
+        let computed = match &inline {
+            Some(data) => {
+                if granted == 0 || data.len() % granted != 0 {
+                    return Err(bad("inline rows shape mismatch"));
+                }
+                let cols = data.len() / granted;
+                engine.matmat_chunk(&data[..len * cols], len, cols, x, batch)
+            }
+            None => {
+                let r = resident.ok_or_else(|| bad("task before shard install"))?;
+                if shard_id != r.worker {
+                    return Err(bad("foreign-shard grant without inline rows"));
+                }
+                let block = r.shard.row_block(t_start, len);
+                engine.matmat_chunk(block, len, r.shard.cols(), x, batch)
+            }
+        };
+        let products = match computed {
+            Ok(p) => p,
+            Err(e) => {
+                crate::warn_!("remote worker: engine error: {e}; dying");
+                failed = true;
+                break;
+            }
+        };
+        rows_done += len as u64;
+        v += tau * len as f64;
+        if time_scale > 0.0 {
+            worker::sleep_until(start, v * time_scale, &no_cancel);
+        }
+        let virt_elapsed = if time_scale > 0.0 {
+            (task_t0.elapsed().as_secs_f64() / time_scale).max(tau * len as f64)
+        } else {
+            tau * len as f64
+        };
+        out.push(ChunkEntry {
+            shard: shard_id as u32,
+            start_row: t_start as u32,
+            virtual_time: v,
+            virt_elapsed,
+            products,
+        });
+        if out.full() {
+            out.flush(sink)?;
+        }
+        if len < granted {
+            failed = true;
+            break;
+        }
+    }
+    out.flush(sink)?;
+    WireMsg::JobDone {
+        rows_done,
+        virtual_time: v,
+        failed,
+    }
+    .write(sink, PROTO_VERSION)?;
+    // epilogue: the master may have pushed grants before reading our
+    // JOB_DONE — discard until its JOB_ACK fence so the next job starts
+    // on a clean stream
+    loop {
+        match next_frame(reader, stream)? {
+            WireMsg::TaskGrant { .. } | WireMsg::TaskFin { .. } => continue,
+            WireMsg::JobAck => return Ok(()),
+            _ => return Err(bad("unexpected frame in job epilogue")),
+        }
+    }
+}
+
+/// The remote twin of [`worker::run_job`] under the v1 pull loop: same
+/// virtual clock, same pacing, same failure-boundary clipping — but
+/// tasks are pulled over the wire instead of from a shared board.
 #[allow(clippy::too_many_arguments)]
 fn run_remote_job(
     stream: &mut TcpStream,
+    sink: &mut DelayedWriter,
+    reader: &mut FrameReader,
     engine: &Engine,
     resident: Option<&Resident>,
     batch: usize,
@@ -621,9 +1390,9 @@ fn run_remote_job(
             failed = true;
             break;
         }
-        WireMsg::TaskReq.write(stream)?;
-        let (shard_id, t_start, granted, inline) = match WireMsg::read(stream)? {
-            WireMsg::TaskFin => break,
+        WireMsg::TaskReq.write(sink, PROTO_V1)?;
+        let (shard_id, t_start, granted, inline) = match next_frame(reader, stream)? {
+            WireMsg::TaskFin { .. } => break,
             WireMsg::TaskGrant {
                 shard,
                 start,
@@ -685,7 +1454,7 @@ fn run_remote_job(
             virt_elapsed,
             products,
         }
-        .write(stream)?;
+        .write(sink, PROTO_V1)?;
         if len < granted {
             failed = true;
             break;
@@ -696,7 +1465,7 @@ fn run_remote_job(
         virtual_time: v,
         failed,
     }
-    .write(stream)
+    .write(sink, PROTO_V1)
 }
 
 #[cfg(test)]
@@ -710,7 +1479,7 @@ mod tests {
     /// Spawn an in-process worker "process" (thread running the real
     /// accept loop) and return its address — the unit-test twin of the
     /// spawned-binary integration test.
-    fn spawn_worker_thread() -> (String, JoinHandle<()>) {
+    fn spawn_worker_thread(opts: WorkerOpts) -> (String, JoinHandle<()>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || {
@@ -719,7 +1488,7 @@ mod tests {
             for conn in listener.incoming() {
                 let mut stream = conn.unwrap();
                 stream.set_nodelay(true).unwrap();
-                match serve_master(&mut stream, &engine, &mut resident) {
+                match serve_master(&mut stream, &engine, &mut resident, &opts) {
                     Ok(Served::Shutdown) => return,
                     Ok(Served::Disconnected) => continue,
                     Err(_) => continue,
@@ -729,15 +1498,28 @@ mod tests {
         (addr, handle)
     }
 
-    fn fleet_pool(p: usize) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>) {
+    fn fleet_pool_with(
+        p: usize,
+        opts: WorkerOpts,
+        tun: TcpTunables,
+    ) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>, Vec<u8>) {
         let (addrs, handles): (Vec<_>, Vec<_>) =
-            (0..p).map(|_| spawn_worker_thread()).unzip();
-        let transport = TcpTransport::connect(&addrs).expect("connect fleet");
+            (0..p).map(|_| spawn_worker_thread(opts.clone())).unzip();
+        let transport = TcpTransport::connect_tuned(&addrs, tun).expect("connect fleet");
+        let protos = transport.lane_protocols();
         let pool = WorkerPool::from_transport(Box::new(transport));
         let shards: Vec<Arc<Matrix>> = (0..p)
             .map(|s| Arc::new(Matrix::random_ints(8, 4, 4, 60 + s as u64)))
             .collect();
         pool.install_shards(shards.clone());
+        (pool, handles, shards, protos)
+    }
+
+    fn fleet_pool(p: usize) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>) {
+        let (pool, handles, shards, protos) =
+            fleet_pool_with(p, WorkerOpts::default(), TcpTunables::default());
+        // default × default negotiates the pipelined protocol
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
         (pool, handles, shards)
     }
 
@@ -794,13 +1576,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn tcp_fleet_serves_jobs_and_shuts_down() {
-        let p = 2;
-        let (pool, handles, shards) = fleet_pool(p);
-        assert_eq!(pool.transport_name(), "tcp");
-        run_fleet_job(&pool, p, &shards);
-        run_fleet_job(&pool, p, &shards); // shard stays resident across jobs
+    fn shutdown_fleet(pool: WorkerPool, p: usize, handles: Vec<JoinHandle<()>>) {
         for w in 0..p {
             pool.kill(w);
         }
@@ -808,6 +1584,65 @@ mod tests {
         for h in handles {
             h.join().unwrap(); // SHUTDOWN must exit the accept loop
         }
+    }
+
+    #[test]
+    fn tcp_fleet_serves_jobs_and_shuts_down() {
+        let p = 2;
+        let (pool, handles, shards) = fleet_pool(p);
+        assert_eq!(pool.transport_name(), "tcp");
+        run_fleet_job(&pool, p, &shards);
+        run_fleet_job(&pool, p, &shards); // shard stays resident across jobs
+        shutdown_fleet(pool, p, handles);
+    }
+
+    #[test]
+    fn v1_pinned_worker_served_via_pull_loop() {
+        let p = 2;
+        let opts = WorkerOpts {
+            max_proto: PROTO_V1,
+            ..WorkerOpts::default()
+        };
+        let (pool, handles, shards, protos) =
+            fleet_pool_with(p, opts, TcpTunables::default());
+        // a v2 master against v1-pinned workers must agree on v1 …
+        assert_eq!(protos, vec![PROTO_V1; p]);
+        // … and still serve jobs (legacy single-frame install + pull
+        // loop), byte-identical to what the shard computes locally
+        run_fleet_job(&pool, p, &shards);
+        run_fleet_job(&pool, p, &shards);
+        shutdown_fleet(pool, p, handles);
+    }
+
+    #[test]
+    fn streamed_install_chunks_small_frames() {
+        let p = 2;
+        // 8×4 f32 shard = 128 B of data; 64-byte frames force the
+        // streamed install to split it across several SHARD_DATA pieces
+        let tun = TcpTunables {
+            max_frame_bytes: 64,
+            ..TcpTunables::default()
+        };
+        let (pool, handles, shards, protos) =
+            fleet_pool_with(p, WorkerOpts::default(), tun);
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        run_fleet_job(&pool, p, &shards); // proves bitwise reassembly
+        shutdown_fleet(pool, p, handles);
+    }
+
+    #[test]
+    fn depth_one_pipeline_still_serves() {
+        let p = 2;
+        let tun = TcpTunables {
+            pipeline_depth: 1,
+            chunk_coalesce_bytes: 0, // flush every task
+            ..TcpTunables::default()
+        };
+        let (pool, handles, shards, protos) =
+            fleet_pool_with(p, WorkerOpts::default(), tun);
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        run_fleet_job(&pool, p, &shards);
+        shutdown_fleet(pool, p, handles);
     }
 
     #[test]

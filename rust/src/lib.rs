@@ -95,7 +95,7 @@ pub mod prelude {
     pub use crate::coordinator::pool::{Transport, WorkerPool};
     pub use crate::coordinator::scheduler::SchedulerKind;
     pub use crate::coordinator::straggler::StragglerProfile;
-    pub use crate::coordinator::transport::tcp::TcpTransport;
+    pub use crate::coordinator::transport::tcp::{TcpTransport, TcpTunables, WorkerOpts};
     pub use crate::coordinator::{Coordinator, JobError, JobResult, Strategy};
     pub use crate::matrix::Matrix;
     pub use crate::runtime::Engine;

@@ -130,8 +130,17 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("serve") => serve_cmd(args),
         Some("throughput") => throughput_cmd(args),
         Some("worker") => {
+            use rateless::coordinator::transport::tcp::{run_worker_opts, WorkerOpts};
             let listen = args.str("listen", "127.0.0.1:4000");
-            rateless::coordinator::transport::tcp::run_worker(&listen)
+            let defaults = WorkerOpts::default();
+            let opts = WorkerOpts {
+                // credit window advertised to the master (v2 pipelining)
+                credit: args.usize("credit", defaults.credit as usize) as u32,
+                // pin to 1 to force masters onto the legacy pull loop
+                max_proto: args.usize("max-proto", defaults.max_proto as usize) as u8,
+                ..defaults
+            };
+            run_worker_opts(&listen, opts)
         }
         Some(other) => anyhow::bail!("unknown subcommand {other:?}; see README"),
         None => {
@@ -409,7 +418,10 @@ fn coordinator_over(
                 peers.len(),
                 cluster.workers
             );
-            let fleet = TcpTransport::connect(peers)?;
+            // honour the [transport] pipeline/timing knobs on the wire
+            let tun =
+                rateless::coordinator::transport::tcp::TcpTunables::from_config(&cluster.transport);
+            let fleet = TcpTransport::connect_tuned(peers, tun)?;
             Coordinator::with_transport(cluster, strategy, Box::new(fleet), a)
         }
         None => Coordinator::new(cluster, strategy, engine, a),

@@ -1,0 +1,173 @@
+//! Bench: sparse CSR storage vs dense — kernel throughput across a
+//! density sweep, plus sparsity-preserving low-weight LT encoding
+//! (encoded fill-in and encode rows/s across a row-weight sweep).
+//!
+//! Emits `BENCH_sparse.json` (override the directory with
+//! `RATELESS_BENCH_DIR`). Correctness is always asserted: the CSR
+//! matmat must match the dense kernel bit-for-bit on integer data, the
+//! CSR encode must densify to exactly the dense encode, and capped
+//! encodes must respect the `w · max_row_nnz(source)` fill-in bound.
+//!
+//! The perf gate — CSR ≥ 5× dense rows/s at 1% density — prints as a
+//! warning by default and hard-asserts under `RATELESS_BENCH_STRICT=1`
+//! (at 1% density the kernel touches 100× fewer stored entries, so 5×
+//! leaves a wide margin for scalar-vs-SIMD and irregular-access costs).
+//!
+//! Knobs: `RATELESS_BENCH_SP_ROWS/_SP_COLS/_SP_BATCH` (matmat shape),
+//! `RATELESS_BENCH_SP_ENCODE_M` (encode sources), `RATELESS_BENCH_REPS`.
+
+use rateless::coding::lt::{LtCode, LtParams};
+use rateless::matrix::dataset::sparse_feature_matrix;
+use rateless::matrix::kernel::{self, Kernel};
+use rateless::matrix::{CsrMatrix, Matrix};
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::json::Json;
+use std::time::Instant;
+
+/// Best-of-`reps` wall seconds for one invocation of `f`.
+fn best_secs<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps: usize = env_or("RATELESS_BENCH_REPS", 5);
+    let rows: usize = env_or("RATELESS_BENCH_SP_ROWS", 4096);
+    let cols: usize = env_or("RATELESS_BENCH_SP_COLS", 1024);
+    let batch: usize = env_or("RATELESS_BENCH_SP_BATCH", 8);
+    let strict: usize = env_or("RATELESS_BENCH_STRICT", 0);
+
+    let kern: &dyn Kernel = kernel::active();
+    println!(
+        "sparse bench: kernel={} matmat {rows}x{cols} batch={batch} (best of {reps})",
+        kern.name()
+    );
+
+    // ---- density sweep: CSR matmat vs the dense dispatched kernel ----
+    // integer-valued data keeps f32 sums exact under any summation
+    // order, so CSR-vs-dense equality is bit-for-bit, not approximate
+    let x = Matrix::random_ints(cols, batch, 3, 2);
+    let mut sweep: Vec<Json> = Vec::new();
+    let mut speedup_at_1pct = f64::NAN;
+    for &density in &[0.01f64, 0.05, 0.20] {
+        let sp = sparse_feature_matrix(rows, cols, density, 11);
+        let dense = sp.to_dense();
+        let mut out_d = vec![0.0f32; rows * batch];
+        let s_dense = best_secs(reps, || {
+            kern.block_matmat(dense.data(), rows, cols, x.data(), batch, &mut out_d)
+        });
+        let mut out_s = Vec::new();
+        let s_csr = best_secs(reps, || {
+            out_s = sp.matmat_chunk(0, rows, x.data(), batch);
+        });
+        assert_eq!(out_s, out_d, "CSR matmat must match dense exactly at density {density}");
+        let speedup = s_dense / s_csr;
+        if density == 0.01 {
+            speedup_at_1pct = speedup;
+        }
+        println!(
+            "  density {density:.2}: nnz {} | dense {:.3e} rows/s | csr {:.3e} rows/s | speedup {speedup:.2}x",
+            sp.nnz(),
+            rows as f64 / s_dense,
+            rows as f64 / s_csr
+        );
+        sweep.push(Json::obj(vec![
+            ("density", Json::Num(density)),
+            ("nnz", Json::Int(sp.nnz() as i64)),
+            ("rows_per_s_dense", Json::Num(rows as f64 / s_dense)),
+            ("rows_per_s_csr", Json::Num(rows as f64 / s_csr)),
+            ("speedup_csr_vs_dense", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- row-weight sweep: low-weight encode keeps the output sparse ----
+    let em: usize = env_or("RATELESS_BENCH_SP_ENCODE_M", 2048);
+    let src = sparse_feature_matrix(em, cols, 0.01, 13);
+    let src_dense = src.to_dense();
+    let mut weights: Vec<Json> = Vec::new();
+    // None = the classic uncapped Robust Soliton (densest output)
+    for w in [None, Some(16usize), Some(8), Some(4)] {
+        let params = match w {
+            Some(w) => LtParams::with_alpha(2.0).with_max_weight(w),
+            None => LtParams::with_alpha(2.0),
+        };
+        let code = LtCode::new(em, params, 17);
+        let mut enc = CsrMatrix::from_dense(&Matrix::zeros(1, 1));
+        let s_enc = best_secs(reps, || {
+            enc = code.encode_csr(&src);
+        });
+        // sparsity-preservation is a hard invariant, not a perf target
+        if let Some(w) = w {
+            assert!(
+                enc.max_row_nnz() <= w * src.max_row_nnz(),
+                "w={w}: encoded row fill-in {} exceeds w * max_row_nnz = {}",
+                enc.max_row_nnz(),
+                w * src.max_row_nnz()
+            );
+        }
+        // and the CSR encode is the dense encode, bit for bit
+        assert_eq!(
+            enc.to_dense(),
+            code.encode(&src_dense),
+            "CSR encode must densify to the dense encode (w = {w:?})"
+        );
+        let enc_rows = code.num_encoded() as f64;
+        println!(
+            "  encode w={}: density {:.4} | max_row_nnz {} | {:.3e} rows/s",
+            w.map_or("none".to_string(), |w| w.to_string()),
+            enc.density(),
+            enc.max_row_nnz(),
+            enc_rows / s_enc
+        );
+        weights.push(Json::obj(vec![
+            (
+                "max_weight",
+                w.map_or(Json::Null, |w| Json::Int(w as i64)),
+            ),
+            ("encoded_density", Json::Num(enc.density())),
+            ("encoded_max_row_nnz", Json::Int(enc.max_row_nnz() as i64)),
+            ("encode_rows_per_s", Json::Num(enc_rows / s_enc)),
+        ]));
+    }
+
+    // ---- acceptance ----
+    let mut notes: Vec<String> = Vec::new();
+    if speedup_at_1pct < 5.0 {
+        notes.push(format!(
+            "CSR speedup {speedup_at_1pct:.2}x at 1% density below the 5x target on this host"
+        ));
+    }
+    for n in &notes {
+        println!("  NOTE: {n}");
+    }
+    if strict == 1 {
+        assert!(
+            speedup_at_1pct >= 5.0,
+            "strict: CSR speedup {speedup_at_1pct:.2}x at 1% density < 5x"
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sparse")),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("kernel", Json::str(kern.name())),
+        ("rows", Json::Int(rows as i64)),
+        ("cols", Json::Int(cols as i64)),
+        ("batch", Json::Int(batch as i64)),
+        ("density_sweep", Json::Arr(sweep)),
+        ("encode_m", Json::Int(em as i64)),
+        ("weight_sweep", Json::Arr(weights)),
+        (
+            "notes",
+            Json::Arr(notes.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    let path = write_json("BENCH_sparse.json", &doc)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

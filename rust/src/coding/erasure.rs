@@ -38,7 +38,7 @@
 use std::sync::Arc;
 
 use super::peeling::PeelingDecoder;
-use crate::matrix::Matrix;
+use crate::matrix::{CsrMatrix, Matrix, ShardData};
 use crate::util::threadpool::{Executor, SerialExec};
 
 /// Per-worker shard-size weights, fixed at encode time.
@@ -112,8 +112,9 @@ pub struct ShardLayout {
 
 /// Result of encoding a matrix for a worker fleet.
 pub struct EncodedShards {
-    /// One `rows × n` matrix per worker.
-    pub shards: Vec<Arc<Matrix>>,
+    /// One `rows × n` shard per worker — dense row-major or CSR
+    /// ([`ShardData`]), depending on the input storage and code.
+    pub shards: Vec<ShardData>,
     pub layout: ShardLayout,
 }
 
@@ -143,6 +144,19 @@ pub trait ErasureCode: Send + Sync {
     ) -> EncodedShards {
         let _ = exec;
         self.encode_shards(a, sizing, width)
+    }
+
+    /// Encode a CSR source. The default densifies and delegates to
+    /// [`encode_shards`](Self::encode_shards); codes whose encode
+    /// preserves sparsity (LT at `width == 1`) override this to keep the
+    /// shards CSR end-to-end — same layout, bit-identical values.
+    fn encode_shards_csr(
+        &self,
+        a: &CsrMatrix,
+        sizing: &ShardSizing,
+        width: usize,
+    ) -> EncodedShards {
+        self.encode_shards(&a.to_dense(), sizing, width)
     }
 
     /// Source rows feeding global encoded symbol `id` (for rateless codes
@@ -375,7 +389,7 @@ pub fn fountain_shards_with<C: Fountain>(
         starts.push(cuts[w]);
         shard_rows.push(count * width);
         // row-major (count, width·n) == (count·width, n): same buffer
-        shards.push(Arc::new(enc.reshape(count * width, n)));
+        shards.push(ShardData::from(enc.reshape(count * width, n)));
     }
     EncodedShards {
         shards,
@@ -423,6 +437,44 @@ impl ErasureCode for crate::coding::lt::LtCode {
         exec: &dyn Executor,
     ) -> EncodedShards {
         fountain_shards_with(self, a, sizing, width, exec)
+    }
+
+    /// LT preserves sparsity at `width == 1`: each worker's shard is
+    /// encoded directly from the CSR source via
+    /// [`encode_rows_csr`](crate::coding::lt::LtCode::encode_rows_csr),
+    /// so the shards densify the dense path bit-for-bit but store only
+    /// nonzeros. Block encoding (`width > 1`) reshapes rows into dense
+    /// super-rows, so it falls back to the densifying default.
+    fn encode_shards_csr(
+        &self,
+        a: &CsrMatrix,
+        sizing: &ShardSizing,
+        width: usize,
+    ) -> EncodedShards {
+        if width != 1 {
+            return self.encode_shards(&a.to_dense(), sizing, width);
+        }
+        let p = sizing.p();
+        assert!(p >= 1);
+        let cuts = sizing.split_points(self.num_encoded());
+        let mut starts = Vec::with_capacity(p);
+        let mut shard_rows = Vec::with_capacity(p);
+        let mut shards = Vec::with_capacity(p);
+        for w in 0..p {
+            let enc = self.encode_rows_csr(a, cuts[w] as u64, cuts[w + 1] as u64);
+            starts.push(cuts[w]);
+            shard_rows.push(enc.rows());
+            shards.push(ShardData::from(enc));
+        }
+        EncodedShards {
+            shards,
+            layout: ShardLayout {
+                starts,
+                shard_rows,
+                width: 1,
+                out_rows: a.rows(),
+            },
+        }
     }
 
     fn symbol_sources(&self, id: u64, out: &mut Vec<usize>) {
@@ -693,6 +745,53 @@ mod tests {
         assert_eq!(layout.starts[0], 0);
         assert_eq!(layout.starts[1], layout.shard_rows[0]);
         assert_eq!(layout.starts[2], layout.shard_rows[0] + layout.shard_rows[1]);
+    }
+
+    /// CSR shard encoding keeps the dense path's layout and values:
+    /// shards stay sparse, densify bit-for-bit to the dense shards, and
+    /// decode through the unchanged peeling pipeline.
+    #[test]
+    fn csr_shards_match_dense_shards_and_decode() {
+        use crate::matrix::dataset::sparse_feature_matrix;
+        let m = 96;
+        let sp = sparse_feature_matrix(m, 24, 0.1, 33);
+        let dense = sp.to_dense();
+        let sizing = ShardSizing::proportional(&[1.0, 2.0, 1.0]);
+        // the capped code drops the high-degree spike, so it needs a more
+        // generous α at small m to stay decodable (the Das et al. tradeoff)
+        for params in [
+            LtParams::with_alpha(3.5),
+            LtParams::with_alpha(5.0).with_max_weight(12),
+        ] {
+            let code = LtCode::new(m, params, 5);
+            let ds = code.encode_shards(&dense, &sizing, 1);
+            let cs = code.encode_shards_csr(&sp, &sizing, 1);
+            assert_eq!(ds.layout.starts, cs.layout.starts);
+            assert_eq!(ds.layout.shard_rows, cs.layout.shard_rows);
+            for (w, (d, c)) in ds.shards.iter().zip(&cs.shards).enumerate() {
+                assert!(c.is_csr(), "shard {w} should stay sparse");
+                let c = c.as_csr().expect("csr shard");
+                assert_eq!(c.to_dense().data(), d.data(), "shard {w}");
+            }
+            // decode from products computed on the CSR shards directly
+            let x: Vec<f32> = Matrix::random_ints(24, 1, 2, 6).data().to_vec();
+            let mut want = vec![0.0f32; m];
+            ops::block_matvec(dense.data(), m, 24, &x, &mut want);
+            let mut dec = code.new_decoder(&cs.layout, 1);
+            let mut v = 0.0f64;
+            'outer: for (w, shard) in cs.shards.iter().enumerate() {
+                let prod = shard.matvec(&x);
+                for (r, p) in prod.iter().enumerate() {
+                    v += 1.0;
+                    dec.ingest(w, r, std::slice::from_ref(p), v);
+                    if dec.is_complete() {
+                        break 'outer;
+                    }
+                }
+            }
+            assert!(dec.is_complete(), "params {params:?}: not decodable");
+            assert_eq!(dec.finish().unwrap(), want, "exact integer decode");
+        }
     }
 
     /// The parallel encode pipeline must be byte-identical to the serial

@@ -12,7 +12,7 @@
 use super::erasure::Fountain;
 use super::peeling::PeelingDecoder;
 use super::soliton::RobustSoliton;
-use crate::matrix::{kernel, Matrix};
+use crate::matrix::{kernel, CsrMatrix, Matrix};
 use crate::util::rng::{derive_seed, Rng};
 
 /// LT code parameters.
@@ -24,6 +24,12 @@ pub struct LtParams {
     pub c: f64,
     /// Robust Soliton failure bound δ.
     pub delta: f64,
+    /// Degree cap for sparsity-preserving **low-weight** encoding
+    /// (Das et al., arXiv:2301.12685): `Some(w)` truncates the Robust
+    /// Soliton to degrees ≤ w, bounding encoded-row fill-in to ~w source
+    /// rows at the cost of needing a larger α to decode. `None` is the
+    /// classic uncapped distribution.
+    pub max_weight: Option<usize>,
 }
 
 impl Default for LtParams {
@@ -32,6 +38,7 @@ impl Default for LtParams {
             alpha: 2.0,
             c: 0.03,
             delta: 0.5,
+            max_weight: None,
         }
     }
 }
@@ -42,6 +49,12 @@ impl LtParams {
             alpha,
             ..Self::default()
         }
+    }
+
+    /// Cap every encoded row at `w` source rows (low-weight encoding).
+    pub fn with_max_weight(mut self, w: usize) -> Self {
+        self.max_weight = Some(w);
+        self
     }
 }
 
@@ -57,11 +70,15 @@ pub struct LtCode {
 impl LtCode {
     pub fn new(m: usize, params: LtParams, seed: u64) -> Self {
         assert!(params.alpha >= 1.0, "alpha must be >= 1");
+        let soliton = match params.max_weight {
+            Some(w) => RobustSoliton::capped(m, params.c, params.delta, w),
+            None => RobustSoliton::new(m, params.c, params.delta),
+        };
         Self {
             m,
             params,
             seed,
-            soliton: RobustSoliton::new(m, params.c, params.delta),
+            soliton,
         }
     }
 
@@ -112,9 +129,7 @@ impl LtCode {
         let kern = kernel::active();
         self.row_indices(row_id, scratch);
         out.fill(0.0);
-        for &src in scratch.iter() {
-            kern.add_assign(out, a.row(src));
-        }
+        kern.axpy_rows(out, a.data(), a.cols(), scratch);
     }
 
     /// Encode the full matrix: `m_e × n` encoded matrix `A_e`.
@@ -135,6 +150,65 @@ impl LtCode {
         out
     }
 
+    /// Encode the full matrix from a CSR source, staying sparse.
+    pub fn encode_csr(&self, a: &CsrMatrix) -> CsrMatrix {
+        self.encode_rows_csr(a, 0, self.num_encoded() as u64)
+    }
+
+    /// Encode rows `[start, end)` of a CSR source without densifying:
+    /// each encoded row scatter-adds only the stored entries of its `d`
+    /// source rows, so cost is Σ nnz(sources) instead of `d·n`, and the
+    /// output stays CSR (fill-in ≤ Σ nnz(sources), which the low-weight
+    /// cap bounds at ~`w·max_row_nnz`).
+    ///
+    /// Per-column addition order matches the dense [`Self::encode_row`]
+    /// (sources ascend), so `encode_rows_csr(a, ..).to_dense()` is
+    /// bit-identical to `encode_range(&a.to_dense(), ..)` on any data.
+    /// Exact-zero sums are dropped — the same canonical form
+    /// [`CsrMatrix::from_dense`] produces.
+    pub fn encode_rows_csr(&self, a: &CsrMatrix, start: u64, end: u64) -> CsrMatrix {
+        assert_eq!(a.rows(), self.m, "matrix rows != code dimension");
+        assert!(start <= end);
+        let n = a.cols();
+        let rows = (end - start) as usize;
+        let mut acc = vec![0.0f32; n];
+        let mut marked = vec![false; n];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut srcs: Vec<usize> = Vec::new();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0u32);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        let (src_cols, src_vals) = (a.indices(), a.values());
+        for row_id in start..end {
+            self.row_indices(row_id, &mut srcs);
+            for &src in &srcs {
+                let (lo, hi) = a.row_range(src);
+                for k in lo..hi {
+                    let c = src_cols[k] as usize;
+                    if !marked[c] {
+                        marked[c] = true;
+                        touched.push(c as u32);
+                    }
+                    acc[c] += src_vals[k];
+                }
+            }
+            touched.sort_unstable();
+            for &c in &touched {
+                let v = acc[c as usize];
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+                acc[c as usize] = 0.0;
+                marked[c as usize] = false;
+            }
+            touched.clear();
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix::new(rows, n, indptr, indices, values)
+    }
+
     /// The encoded product symbol for a known `b = A·x`: `b_e[row_id] =
     /// Σ_{i∈S} b[i]`. Used by simulators and tests to produce encoded
     /// symbols without materializing `A_e`.
@@ -147,7 +221,10 @@ impl LtCode {
 
 impl Fountain for LtCode {
     fn fountain_name(&self) -> String {
-        format!("lt{:.2}", self.params.alpha)
+        match self.params.max_weight {
+            Some(w) => format!("lt{:.2}-w{w}", self.params.alpha),
+            None => format!("lt{:.2}", self.params.alpha),
+        }
     }
 
     fn source_symbols(&self) -> usize {
@@ -255,6 +332,48 @@ mod tests {
                 "row {row}: {via_b} vs {direct}"
             );
         }
+    }
+
+    #[test]
+    fn low_weight_cap_bounds_every_row_degree() {
+        let w = 6;
+        let code = LtCode::new(512, LtParams::with_alpha(2.0).with_max_weight(w), 11);
+        let mut idx = Vec::new();
+        for row in 0..2000u64 {
+            code.row_indices(row, &mut idx);
+            assert!(idx.len() <= w, "row {row} degree {}", idx.len());
+            assert_eq!(code.row_degree(row), idx.len());
+        }
+        assert_eq!(code.fountain_name(), "lt2.00-w6");
+        assert_eq!(LtCode::new(64, LtParams::default(), 1).fountain_name(), "lt2.00");
+    }
+
+    #[test]
+    fn csr_encode_matches_dense_encode_bit_for_bit() {
+        use crate::matrix::dataset::sparse_feature_matrix;
+        let m = 96;
+        let sp = sparse_feature_matrix(m, 40, 0.1, 21);
+        let dense = sp.to_dense();
+        for params in [
+            LtParams::with_alpha(1.5),
+            LtParams::with_alpha(1.5).with_max_weight(8),
+        ] {
+            let code = LtCode::new(m, params, 13);
+            let enc_sp = code.encode_csr(&sp);
+            let enc_dense = code.encode(&dense);
+            assert_eq!(enc_sp.rows(), code.num_encoded());
+            assert_eq!(enc_sp.to_dense(), enc_dense, "params {params:?}");
+            // range encode slices out of the same stream
+            let part = code.encode_rows_csr(&sp, 5, 25);
+            for i in 0..20 {
+                assert_eq!(part.dense_rows(i, 1), enc_dense.row(i + 5));
+            }
+        }
+        // low-weight keeps the encoded matrix sparse: fill-in per row is
+        // bounded by w · max_row_nnz of the source
+        let capped = LtCode::new(m, LtParams::with_alpha(1.5).with_max_weight(4), 13);
+        let enc = capped.encode_csr(&sp);
+        assert!(enc.max_row_nnz() <= 4 * sp.max_row_nnz());
     }
 
     /// Property sweep (hand-rolled, no proptest offline): encode→decode is

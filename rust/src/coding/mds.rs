@@ -13,13 +13,11 @@
 //! (O(k³)) and back-substitutes all m/k payload columns (O(k²·m/k)) —
 //! the complexity row "O(mk + k³)" of the paper's Table 1.
 
-use std::sync::Arc;
-
 use super::erasure::{
     BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout, ShardSizing,
 };
 use super::linsolve;
-use crate::matrix::{ops, Matrix};
+use crate::matrix::{ops, Matrix, ShardData};
 use crate::util::dist::{Sample, StdNormal};
 use crate::util::rng::{derive_seed, Rng};
 
@@ -230,7 +228,7 @@ impl ErasureCode for MdsCode {
         let p = sizing.p();
         assert_eq!(p, self.p, "MDS code was built for p = {} workers", self.p);
         assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
-        let shards: Vec<Arc<Matrix>> = self.encode(a).into_iter().map(Arc::new).collect();
+        let shards: Vec<ShardData> = self.encode(a).into_iter().map(ShardData::from).collect();
         let layout = ShardLayout {
             starts: (0..p).map(|w| w * self.block_rows).collect(),
             shard_rows: shards.iter().map(|s| s.rows()).collect(),

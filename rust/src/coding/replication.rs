@@ -5,12 +5,10 @@
 //! the first finished copy of each group. `r = 1` is the naive uncoded
 //! strategy.
 
-use std::sync::Arc;
-
 use super::erasure::{
     BlockBuffers, EncodedShards, ErasureCode, ErasureDecoder, ShardLayout, ShardSizing,
 };
-use crate::matrix::Matrix;
+use crate::matrix::{Matrix, ShardData};
 
 /// An r-replication assignment over p workers.
 #[derive(Clone, Debug)]
@@ -136,8 +134,8 @@ impl ErasureCode for RepCode {
         let p = sizing.p();
         assert_eq!(p, self.p, "replication code was built for p = {} workers", self.p);
         assert_eq!(width, 1, "fixed-rate codes use symbol width 1");
-        let shards: Vec<Arc<Matrix>> = (0..p)
-            .map(|w| Arc::new(self.encode_worker(a, w)))
+        let shards: Vec<ShardData> = (0..p)
+            .map(|w| ShardData::from(self.encode_worker(a, w)))
             .collect();
         let layout = ShardLayout {
             // a replica's local row r is globally source row group_start + r

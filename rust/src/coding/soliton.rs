@@ -36,9 +36,9 @@ pub struct RobustSoliton {
 }
 
 impl RobustSoliton {
-    /// Construct with explicit `(c, delta)`. Guidelines from MacKay (2003):
-    /// `c` around 0.01–0.1, `delta` around 0.01–0.5.
-    pub fn new(m: usize, c: f64, delta: f64) -> Self {
+    /// Unnormalized Robust Soliton weights ρ(d) + τ(d) over `1..=m`
+    /// (index 0 unused), plus `R`.
+    fn robust_weights(m: usize, c: f64, delta: f64) -> (f64, Vec<f64>) {
         assert!(m >= 2, "need at least 2 source symbols");
         assert!(c > 0.0 && delta > 0.0 && delta < 1.0);
         let r = (c * (m as f64 / delta).ln() * (m as f64).sqrt())
@@ -54,6 +54,10 @@ impl RobustSoliton {
                 *w += r * (r / delta).ln().max(0.0) / m as f64;
             }
         }
+        (r, weights)
+    }
+
+    fn from_weights(m: usize, c: f64, delta: f64, r: f64, weights: Vec<f64>) -> Self {
         let total: f64 = weights[1..].iter().sum();
         let pmf: Vec<f64> = std::iter::once(0.0)
             .chain(weights[1..].iter().map(|w| w / total))
@@ -67,6 +71,32 @@ impl RobustSoliton {
             pmf,
             alias,
         }
+    }
+
+    /// Construct with explicit `(c, delta)`. Guidelines from MacKay (2003):
+    /// `c` around 0.01–0.1, `delta` around 0.01–0.5.
+    pub fn new(m: usize, c: f64, delta: f64) -> Self {
+        let (r, weights) = Self::robust_weights(m, c, delta);
+        Self::from_weights(m, c, delta, r, weights)
+    }
+
+    /// Weight-capped Robust Soliton — the low-weight degree distribution
+    /// of Das et al. (arXiv:2301.12685): μ(d) truncated to `d ≤ w` and
+    /// renormalized, so every encoded symbol combines at most `w` source
+    /// rows and a sparse source stays ≈ `w·nnz_row`-sparse after encode.
+    ///
+    /// The price is decode overhead: the dropped tail (including the
+    /// `m/R` spike when it exceeds `w`) is what guarantees late-stage
+    /// coverage in Luby's analysis, so a capped code needs a larger α to
+    /// reach the same decode probability — the tradeoff
+    /// `benches/sparse.rs` measures.
+    pub fn capped(m: usize, c: f64, delta: f64, w: usize) -> Self {
+        assert!(w >= 1, "max weight must be at least 1");
+        let (r, mut weights) = Self::robust_weights(m, c, delta);
+        for entry in weights.iter_mut().skip(w.min(m) + 1) {
+            *entry = 0.0;
+        }
+        Self::from_weights(m, c, delta, r, weights)
     }
 
     /// Defaults used throughout the paper's experiments (c=0.03, δ=0.5 per
@@ -196,6 +226,37 @@ mod tests {
         let eps_small = rs.decoding_threshold() as f64 / 10_000.0 - 1.0;
         let eps_big = rs_big.decoding_threshold() as f64 / 1_000_000.0 - 1.0;
         assert!(eps_big < eps_small, "ε must decay with m");
+    }
+
+    #[test]
+    fn capped_distribution_is_normalized_and_respects_cap() {
+        let w = 8;
+        let rs = RobustSoliton::capped(1000, 0.03, 0.5, w);
+        let total: f64 = (1..=1000).map(|d| rs.pmf(d)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for d in (w + 1)..=1000 {
+            assert_eq!(rs.pmf(d), 0.0, "mass above cap at d={d}");
+        }
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(rs.sample(&mut rng) <= w);
+        }
+        // truncation shifts mass down relative to the uncapped shape
+        let full = RobustSoliton::new(1000, 0.03, 0.5);
+        assert!(rs.pmf(1) > full.pmf(1));
+        assert!(rs.mean_degree() <= w as f64);
+    }
+
+    #[test]
+    fn capped_with_loose_cap_equals_uncapped() {
+        let rs = RobustSoliton::capped(64, 0.03, 0.5, 64);
+        let full = RobustSoliton::new(64, 0.03, 0.5);
+        for d in 1..=64 {
+            assert_eq!(rs.pmf(d), full.pmf(d));
+        }
+        // w beyond m is clamped, not an error
+        let over = RobustSoliton::capped(64, 0.03, 0.5, 1000);
+        assert_eq!(over.pmf(64), full.pmf(64));
     }
 
     #[test]

@@ -147,6 +147,72 @@ pub struct ClusterConfig {
     /// threads (the simulation default) or TCP connections to resident
     /// `rateless worker` processes (the cluster path, paper §6.2).
     pub transport: TransportConfig,
+    /// Rateless-encoding knobs (`[coding]` section): unrestricted
+    /// robust-Soliton degrees, or the sparsity-preserving low-weight
+    /// variant with a per-row degree cap.
+    pub coding: CodingConfig,
+}
+
+/// Degree policy of the rateless encoder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncodingKind {
+    /// Unrestricted robust-Soliton degrees (the paper's construction).
+    Dense,
+    /// Weight-capped degrees (Das & Ramamoorthy, arXiv:2301.12685):
+    /// every encoded row sums at most `max_row_weight` source rows,
+    /// bounding fill-in so sparse inputs stay sparse through the encode
+    /// — at the cost of needing a larger overhead `alpha` to decode.
+    LowWeight,
+}
+
+/// Rateless-encoding knobs (`[coding]` section).
+#[derive(Debug, Clone)]
+pub struct CodingConfig {
+    pub encoding: EncodingKind,
+    /// Per-row degree cap; only consulted when
+    /// `encoding = "low-weight"`.
+    pub max_row_weight: usize,
+}
+
+impl Default for CodingConfig {
+    fn default() -> Self {
+        Self {
+            encoding: EncodingKind::Dense,
+            max_row_weight: 16,
+        }
+    }
+}
+
+impl CodingConfig {
+    /// Read a `[coding]` section; absent section = unrestricted degrees.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        let encoding = match doc.str("coding", "encoding", "dense").as_str() {
+            "dense" => EncodingKind::Dense,
+            "low-weight" | "low_weight" => EncodingKind::LowWeight,
+            other => {
+                panic!("config coding.encoding: expected dense|low-weight, got {other:?}")
+            }
+        };
+        let max_row_weight = doc.usize("coding", "max_row_weight", d.max_row_weight);
+        assert!(
+            max_row_weight >= 1,
+            "config coding.max_row_weight: must be at least 1"
+        );
+        Self {
+            encoding,
+            max_row_weight,
+        }
+    }
+
+    /// The degree cap to hand `LtParams::max_weight`: `Some(w)` iff the
+    /// low-weight encoding is selected.
+    pub fn max_weight(&self) -> Option<usize> {
+        match self.encoding {
+            EncodingKind::Dense => None,
+            EncodingKind::LowWeight => Some(self.max_row_weight),
+        }
+    }
 }
 
 /// Which backend carries jobs between the master and its workers.
@@ -305,6 +371,7 @@ impl Default for ClusterConfig {
             scheduler: SchedulerKind::Static,
             batching: BatchingConfig::default(),
             transport: TransportConfig::default(),
+            coding: CodingConfig::default(),
         }
     }
 }
@@ -342,6 +409,7 @@ impl ClusterConfig {
             },
             batching: BatchingConfig::from_doc(doc),
             transport: TransportConfig::from_doc(doc),
+            coding: CodingConfig::from_doc(doc),
         }
     }
 
@@ -539,6 +607,34 @@ alphas = [1.25, 2.0]
     fn transport_rejects_unknown_kind() {
         let doc = Doc::from_str("[transport]\nkind = \"carrier-pigeon\"\n").unwrap();
         TransportConfig::from_doc(&doc);
+    }
+
+    #[test]
+    fn coding_section_parse() {
+        // absent section: unrestricted dense encoding, no degree cap
+        let doc = Doc::from_str("[cluster]\nworkers = 4\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert_eq!(c.coding.encoding, EncodingKind::Dense);
+        assert_eq!(c.coding.max_weight(), None);
+        // low-weight with an explicit cap
+        let doc = Doc::from_str("[coding]\nencoding = \"low-weight\"\nmax_row_weight = 8\n")
+            .unwrap();
+        let c = CodingConfig::from_doc(&doc);
+        assert_eq!(c.encoding, EncodingKind::LowWeight);
+        assert_eq!(c.max_weight(), Some(8));
+        // underscore spelling is accepted; cap falls back to the default
+        let doc = Doc::from_str("[coding]\nencoding = \"low_weight\"\n").unwrap();
+        assert_eq!(CodingConfig::from_doc(&doc).max_weight(), Some(16));
+        // dense ignores a configured cap
+        let doc = Doc::from_str("[coding]\nencoding = \"dense\"\nmax_row_weight = 4\n").unwrap();
+        assert_eq!(CodingConfig::from_doc(&doc).max_weight(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "coding.encoding")]
+    fn coding_rejects_unknown_encoding() {
+        let doc = Doc::from_str("[coding]\nencoding = \"huffman\"\n").unwrap();
+        CodingConfig::from_doc(&doc);
     }
 
     #[test]

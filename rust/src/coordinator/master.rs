@@ -276,7 +276,12 @@ mod tests {
 
     /// Chunk a shard's full product into 8-row messages attributed to
     /// `worker` (≠ shard simulates stolen work).
-    fn shard_chunks(shard: &Matrix, s: usize, worker: usize, x: &[f32]) -> Vec<ChunkMsg> {
+    fn shard_chunks(
+        shard: &crate::matrix::ShardData,
+        s: usize,
+        worker: usize,
+        x: &[f32],
+    ) -> Vec<ChunkMsg> {
         let prod = shard.matvec(x);
         let rows = shard.rows();
         let mut v = 0.0;

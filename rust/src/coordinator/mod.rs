@@ -52,7 +52,7 @@ use crate::coding::replication::RepCode;
 use crate::coding::systematic::SystematicLt;
 use crate::coding::{ErasureCode, ShardLayout, ShardSizing};
 use crate::config::ClusterConfig;
-use crate::matrix::Matrix;
+use crate::matrix::{CsrMatrix, Matrix};
 use crate::runtime::Engine;
 
 /// Coding strategy for a coordinator instance.
@@ -78,7 +78,10 @@ impl Strategy {
             Strategy::Uncoded => "uncoded".into(),
             Strategy::Replication { r } => format!("rep{r}"),
             Strategy::Mds { k } => format!("mds{k}"),
-            Strategy::Lt(p) => format!("lt{:.2}", p.alpha),
+            Strategy::Lt(p) => match p.max_weight {
+                Some(w) => format!("lt{:.2}-w{w}", p.alpha),
+                None => format!("lt{:.2}", p.alpha),
+            },
             Strategy::SystematicLt(p) => format!("syslt{:.2}", p.alpha),
             Strategy::Raptor(p) => format!("raptor{:.2}", p.alpha),
         }
@@ -118,6 +121,29 @@ impl Strategy {
                 Box::new(RaptorCode::new(rows.div_ceil(sw), *params, seed)),
                 sw,
             ),
+        }
+    }
+}
+
+/// Borrowed source matrix for coordinator construction: dense row-major
+/// or CSR.
+enum MatrixSource<'a> {
+    Dense(&'a Matrix),
+    Csr(&'a CsrMatrix),
+}
+
+impl MatrixSource<'_> {
+    fn rows(&self) -> usize {
+        match self {
+            MatrixSource::Dense(a) => a.rows(),
+            MatrixSource::Csr(a) => a.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            MatrixSource::Dense(a) => a.cols(),
+            MatrixSource::Csr(a) => a.cols(),
         }
     }
 }
@@ -174,7 +200,22 @@ impl Coordinator {
         // worker a deterministic row range, bit-identical to serial), then
         // hold the finished shards for the serving phase.
         let pool = WorkerPool::prepare(cluster.workers, &engine);
-        Self::assemble(cluster, strategy, pool, a)
+        Self::assemble(cluster, strategy, pool, MatrixSource::Dense(a))
+    }
+
+    /// Like [`new`](Self::new) for a CSR source matrix. Strategies whose
+    /// encode preserves sparsity (LT at `symbol_width == 1`, see
+    /// [`ErasureCode::encode_shards_csr`]) keep the worker shards in CSR
+    /// form end-to-end — resident memory and per-row compute scale with
+    /// nnz, not `rows × cols`; other strategies densify at encode time.
+    pub fn new_csr(
+        cluster: ClusterConfig,
+        strategy: Strategy,
+        engine: Engine,
+        a: &CsrMatrix,
+    ) -> anyhow::Result<Self> {
+        let pool = WorkerPool::prepare(cluster.workers, &engine);
+        Self::assemble(cluster, strategy, pool, MatrixSource::Csr(a))
     }
 
     /// Like [`new`](Self::new), but over an explicit [`Transport`](pool::Transport)
@@ -195,14 +236,44 @@ impl Coordinator {
             transport.size(),
             cluster.workers
         );
-        Self::assemble(cluster, strategy, WorkerPool::from_transport(transport), a)
+        Self::assemble(
+            cluster,
+            strategy,
+            WorkerPool::from_transport(transport),
+            MatrixSource::Dense(a),
+        )
+    }
+
+    /// [`with_transport`](Self::with_transport) for a CSR source matrix.
+    /// CSR-preserving strategies ship their shards to the remote workers
+    /// in CSR form (the TCP transport streams the three CSR arrays
+    /// without densifying on the wire); other strategies densify at
+    /// encode time as in [`new_csr`](Self::new_csr).
+    pub fn with_transport_csr(
+        cluster: ClusterConfig,
+        strategy: Strategy,
+        transport: Box<dyn pool::Transport>,
+        a: &CsrMatrix,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            transport.size() == cluster.workers,
+            "transport has {} lanes but cluster.workers = {}",
+            transport.size(),
+            cluster.workers
+        );
+        Self::assemble(
+            cluster,
+            strategy,
+            WorkerPool::from_transport(transport),
+            MatrixSource::Csr(a),
+        )
     }
 
     fn assemble(
         cluster: ClusterConfig,
         strategy: Strategy,
         pool: WorkerPool,
-        a: &Matrix,
+        a: MatrixSource<'_>,
     ) -> anyhow::Result<Self> {
         let p = cluster.workers;
         anyhow::ensure!(p >= 1, "need at least one worker");
@@ -217,14 +288,21 @@ impl Coordinator {
             speeds.iter().all(|s| s.is_finite() && *s > 0.0),
             "worker speeds must be finite and positive: {speeds:?}"
         );
-        let (code, width) = strategy.build(a.rows(), p, cluster.symbol_width, cluster.seed);
+        let (rows, cols) = (a.rows(), a.cols());
+        let (code, width) = strategy.build(rows, p, cluster.symbol_width, cluster.seed);
         crate::info!(
             "kernel: {} (runtime dispatch, {}); transport: {}",
             crate::matrix::kernel::active().name(),
             std::env::consts::ARCH,
             pool.transport_name()
         );
-        let encoded = code.encode_shards_with(a, &ShardSizing::proportional(&speeds), width, &pool);
+        let sizing = ShardSizing::proportional(&speeds);
+        let encoded = match a {
+            // dense encode fans out over the resident worker lanes
+            MatrixSource::Dense(a) => code.encode_shards_with(a, &sizing, width, &pool),
+            // CSR encode is nnz-proportional — cheap enough to run serially
+            MatrixSource::Csr(a) => code.encode_shards_csr(a, &sizing, width),
+        };
         pool.install_shards(encoded.shards.clone());
         let layout = encoded.layout;
         let encoded_rows = encoded.shards.iter().map(|s| s.rows()).sum();
@@ -242,8 +320,8 @@ impl Coordinator {
         let scheduler = cluster.scheduler.build(&taus);
         let profile = StragglerProfile::new(cluster.delay);
         Ok(Self {
-            m: a.rows(),
-            n: a.cols(),
+            m: rows,
+            n: cols,
             cluster,
             strategy,
             code,
@@ -479,6 +557,38 @@ mod tests {
     #[test]
     fn lt_decodes() {
         check_strategy(Strategy::Lt(LtParams::with_alpha(3.0)), 128, 4);
+    }
+
+    /// CSR construction serves the same answers as dense construction —
+    /// shards stay sparse for LT at width 1 (including low-weight), and
+    /// fixed-rate codes transparently densify.
+    #[test]
+    fn csr_coordinator_decodes_like_dense() {
+        use crate::matrix::dataset::sparse_feature_matrix;
+        let m = 128;
+        let sp = sparse_feature_matrix(m, 12, 0.25, 77);
+        let dense = sp.to_dense();
+        let x = Matrix::random_vector(12, 78);
+        let want = dense.matvec(&x);
+        for strategy in [
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Strategy::Lt(LtParams::with_alpha(5.0).with_max_weight(12)),
+            Strategy::Mds { k: 3 },
+        ] {
+            let name = strategy.name();
+            let coord = Coordinator::new_csr(fast_cluster(4), strategy, Engine::Native, &sp)
+                .expect("csr coordinator");
+            let out = coord.multiply(&x).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(out.b.len(), m, "{name}");
+            for i in 0..m {
+                assert!(
+                    (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                    "{name} row {i}: {} vs {}",
+                    out.b[i],
+                    want[i]
+                );
+            }
+        }
     }
 
     #[test]

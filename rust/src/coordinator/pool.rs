@@ -54,7 +54,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use super::worker::{self, JobOrder};
-use crate::matrix::Matrix;
+use crate::matrix::ShardData;
 use crate::runtime::Engine;
 use crate::util::threadpool::Executor;
 
@@ -95,7 +95,7 @@ pub trait Transport: Send + Sync {
     /// Park the fleet's encoded shards with the workers (exactly once,
     /// one shard per lane). Panics on a second install or a length
     /// mismatch — both are coordinator bugs, not runtime conditions.
-    fn install_shards(&self, shards: Vec<Arc<Matrix>>);
+    fn install_shards(&self, shards: Vec<ShardData>);
 
     /// Hand `msg` to worker `w`'s lane. `Err` returns the message if the
     /// worker is already known to be gone, letting the caller recover
@@ -116,7 +116,7 @@ pub struct ChannelTransport {
     senders: Vec<Sender<TransportMsg>>,
     /// The fleet's resident shard list; set once by `install_shards`
     /// (after the encode, which may itself run on these threads).
-    shards: Arc<OnceLock<Vec<Arc<Matrix>>>>,
+    shards: Arc<OnceLock<Vec<ShardData>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -125,7 +125,7 @@ impl ChannelTransport {
     /// its queue (encode tasks now, jobs once shards are installed) until
     /// the transport is dropped or the worker is shut down.
     pub fn prepare(p: usize, engine: &Engine) -> Self {
-        let shards: Arc<OnceLock<Vec<Arc<Matrix>>>> = Arc::new(OnceLock::new());
+        let shards: Arc<OnceLock<Vec<ShardData>>> = Arc::new(OnceLock::new());
         let mut senders = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for w in 0..p {
@@ -169,7 +169,7 @@ impl Transport for ChannelTransport {
         self.senders.len()
     }
 
-    fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+    fn install_shards(&self, shards: Vec<ShardData>) {
         assert_eq!(shards.len(), self.senders.len(), "one shard per worker");
         if self.shards.set(shards).is_err() {
             panic!("shards already installed");
@@ -222,13 +222,13 @@ impl WorkerPool {
 
     /// Park the encoded shards in the fleet (exactly once, one shard per
     /// worker). Jobs broadcast before this panic on the worker lane.
-    pub fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+    pub fn install_shards(&self, shards: Vec<ShardData>) {
         self.transport.install_shards(shards);
     }
 
     /// One-shot convenience: spawn one in-process thread per shard with
     /// the shards resident immediately.
-    pub fn spawn(shards: Vec<Arc<Matrix>>, engine: &Engine) -> Self {
+    pub fn spawn(shards: Vec<ShardData>, engine: &Engine) -> Self {
         let pool = Self::prepare(shards.len(), engine);
         pool.install_shards(shards);
         pool
@@ -367,6 +367,7 @@ mod tests {
     use crate::coordinator::scheduler::{Scheduler, StaticScheduler};
     use crate::coordinator::straggler::WorkerPlan;
     use crate::coordinator::worker::JobShared;
+    use crate::matrix::Matrix;
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::mpsc::channel as evchannel;
     use std::time::{Duration, Instant};
@@ -402,8 +403,8 @@ mod tests {
 
     #[test]
     fn serves_sequential_jobs_with_resident_shards() {
-        let shards: Vec<Arc<Matrix>> = (0..3)
-            .map(|s| Arc::new(Matrix::random(8, 4, s as u64)))
+        let shards: Vec<ShardData> = (0..3)
+            .map(|s| ShardData::from(Matrix::random(8, 4, s as u64)))
             .collect();
         let pool = WorkerPool::spawn(shards.clone(), &Engine::Native);
         assert_eq!(pool.size(), 3);
@@ -457,8 +458,8 @@ mod tests {
         pool.run_all(tasks);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
 
-        let shards: Vec<Arc<Matrix>> = (0..3)
-            .map(|s| Arc::new(Matrix::random(8, 4, 50 + s as u64)))
+        let shards: Vec<ShardData> = (0..3)
+            .map(|s| ShardData::from(Matrix::random(8, 4, 50 + s as u64)))
             .collect();
         pool.install_shards(shards.clone());
         let x = Arc::new(vec![1.0f32; 4]);
@@ -497,8 +498,8 @@ mod tests {
 
     #[test]
     fn killed_worker_surfaces_as_broadcast_error_not_panic() {
-        let shards: Vec<Arc<Matrix>> = (0..3)
-            .map(|s| Arc::new(Matrix::random(8, 4, 10 + s as u64)))
+        let shards: Vec<ShardData> = (0..3)
+            .map(|s| ShardData::from(Matrix::random(8, 4, 10 + s as u64)))
             .collect();
         let pool = WorkerPool::spawn(shards, &Engine::Native);
         pool.kill(1);

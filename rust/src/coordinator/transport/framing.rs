@@ -77,6 +77,12 @@ pub mod ty {
     pub const SHARD_DATA: u8 = 0x06;
     /// v2: close a streamed install; the worker validates and acks.
     pub const SHARD_END: u8 = 0x07;
+    /// v2: open a streamed *CSR* shard install (shape + nnz
+    /// announcement); `SHARD_DATA_IDX` and `SHARD_DATA` frames follow.
+    pub const SHARD_BEGIN_CSR: u8 = 0x08;
+    /// v2: one piece of streamed CSR index data (`indptr` then
+    /// `indices`), ≤ `max_frame_bytes`.
+    pub const SHARD_DATA_IDX: u8 = 0x09;
     pub const JOB_START: u8 = 0x10;
     pub const TASK_REQ: u8 = 0x11;
     pub const TASK_GRANT: u8 = 0x12;
@@ -124,6 +130,14 @@ impl Enc {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
+    /// `u32` count followed by the LE u32 elements.
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
 }
 
 /// Payload reader with bounds-checked, typed field extraction.
@@ -165,6 +179,17 @@ impl<'a> Dec<'a> {
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32s(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        if n > (MAX_FRAME as usize) / 4 {
+            return Err(bad("u32 vector length exceeds frame bound"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
     fn finish(self) -> io::Result<()> {
@@ -230,6 +255,23 @@ pub enum WireMsg {
     /// the accumulated length against the announced shape and answers
     /// `SHARD_OK`.
     ShardEnd,
+    /// v2 master → worker: open a streamed install of a `rows × cols`
+    /// CSR shard with `nnz` stored entries for worker `worker`. The
+    /// three CSR arrays follow in order — `indptr` (`rows + 1` values)
+    /// then `indices` (`nnz` values) as `SHARD_DATA_IDX` frames, then
+    /// `values` (`nnz` values) as `SHARD_DATA` frames — closed by the
+    /// same `SHARD_END` as a dense stream. The shard never densifies on
+    /// the wire.
+    ShardBeginCsr {
+        worker: u32,
+        rows: u32,
+        cols: u32,
+        nnz: u64,
+    },
+    /// v2 master → worker: the next piece of a streamed CSR shard's
+    /// index data (`indptr` first, then `indices`; the receiver splits
+    /// by the announced lengths). Piece size is `max_frame_bytes`.
+    ShardDataIdx { data: Vec<u32> },
     /// Master → worker: one multiply job. `fail_after == u64::MAX` means
     /// no injected failure; `x` is the `cols × batch` row-major query
     /// block. Under v2 the frame also carries the effective credit
@@ -300,7 +342,13 @@ pub enum WireMsg {
 fn v2_only(code: u8) -> bool {
     matches!(
         code,
-        ty::SHARD_BEGIN | ty::SHARD_DATA | ty::SHARD_END | ty::CHUNKS | ty::JOB_ACK
+        ty::SHARD_BEGIN
+            | ty::SHARD_DATA
+            | ty::SHARD_END
+            | ty::SHARD_BEGIN_CSR
+            | ty::SHARD_DATA_IDX
+            | ty::CHUNKS
+            | ty::JOB_ACK
     )
 }
 
@@ -314,6 +362,8 @@ impl WireMsg {
             WireMsg::ShardBegin { .. } => ty::SHARD_BEGIN,
             WireMsg::ShardData { .. } => ty::SHARD_DATA,
             WireMsg::ShardEnd => ty::SHARD_END,
+            WireMsg::ShardBeginCsr { .. } => ty::SHARD_BEGIN_CSR,
+            WireMsg::ShardDataIdx { .. } => ty::SHARD_DATA_IDX,
             WireMsg::JobStart { .. } => ty::JOB_START,
             WireMsg::TaskReq => ty::TASK_REQ,
             WireMsg::TaskGrant { .. } => ty::TASK_GRANT,
@@ -372,6 +422,20 @@ impl WireMsg {
             }
             WireMsg::ShardData { data } => {
                 e.f32s(data);
+            }
+            WireMsg::ShardBeginCsr {
+                worker,
+                rows,
+                cols,
+                nnz,
+            } => {
+                e.u32(*worker);
+                e.u32(*rows);
+                e.u32(*cols);
+                e.u64(*nnz);
+            }
+            WireMsg::ShardDataIdx { data } => {
+                e.u32s(data);
             }
             WireMsg::JobStart {
                 batch,
@@ -529,6 +593,13 @@ impl WireMsg {
             },
             ty::SHARD_DATA => WireMsg::ShardData { data: d.f32s()? },
             ty::SHARD_END => WireMsg::ShardEnd,
+            ty::SHARD_BEGIN_CSR => WireMsg::ShardBeginCsr {
+                worker: d.u32()?,
+                rows: d.u32()?,
+                cols: d.u32()?,
+                nnz: d.u64()?,
+            },
+            ty::SHARD_DATA_IDX => WireMsg::ShardDataIdx { data: d.u32s()? },
             ty::JOB_START => {
                 let batch = d.u32()?;
                 let tau = d.f64()?;
@@ -793,6 +864,21 @@ mod tests {
         );
         round_trip_v(WireMsg::ShardEnd, 2);
         round_trip_v(
+            WireMsg::ShardBeginCsr {
+                worker: 2,
+                rows: 5000,
+                cols: 100_000,
+                nnz: 6_000_000_000, // nnz is u64: can exceed u32::MAX
+            },
+            2,
+        );
+        round_trip_v(
+            WireMsg::ShardDataIdx {
+                data: vec![0, 3, 7, u32::MAX],
+            },
+            2,
+        );
+        round_trip_v(
             WireMsg::Chunks {
                 entries: vec![
                     ChunkEntry {
@@ -825,6 +911,14 @@ mod tests {
         assert!(WireMsg::JobAck.write(&mut buf, 1).is_err());
         assert!(WireMsg::ShardEnd.write(&mut buf, 1).is_err());
         assert!(WireMsg::Chunks { entries: vec![] }.write(&mut buf, 1).is_err());
+        let csr_begin = WireMsg::ShardBeginCsr {
+            worker: 0,
+            rows: 1,
+            cols: 1,
+            nnz: 1,
+        };
+        assert!(csr_begin.write(&mut buf, 1).is_err());
+        assert!(WireMsg::ShardDataIdx { data: vec![1] }.write(&mut buf, 1).is_err());
         assert!(buf.is_empty(), "refused frames must not emit bytes");
 
         // and a forged v2-only type code on a v1-stamped frame is
@@ -893,6 +987,46 @@ mod tests {
                 1,    // version
                 0x20, // PING
                 0x02, 0x01, 0, 0, 0, 0, 0, 0, // seq LE
+            ]
+        );
+    }
+
+    #[test]
+    fn csr_install_wire_layout_is_pinned_little_endian() {
+        // pin the CSR install opener the same way as PING: field order is
+        // worker, rows, cols (u32 LE each) then nnz (u64 LE)
+        let mut buf = Vec::new();
+        WireMsg::ShardBeginCsr {
+            worker: 1,
+            rows: 2,
+            cols: 3,
+            nnz: 0x0405,
+        }
+        .write(&mut buf, 2)
+        .unwrap();
+        assert_eq!(
+            buf,
+            vec![
+                22, 0, 0, 0, // len = ver + type + 3×u32 + u64
+                2,    // version
+                0x08, // SHARD_BEGIN_CSR
+                1, 0, 0, 0, // worker LE
+                2, 0, 0, 0, // rows LE
+                3, 0, 0, 0, // cols LE
+                0x05, 0x04, 0, 0, 0, 0, 0, 0, // nnz LE
+            ]
+        );
+
+        let mut idx = Vec::new();
+        WireMsg::ShardDataIdx { data: vec![0x0102] }.write(&mut idx, 2).unwrap();
+        assert_eq!(
+            idx,
+            vec![
+                10, 0, 0, 0, // len = ver + type + count u32 + 1×u32
+                2,    // version
+                0x09, // SHARD_DATA_IDX
+                1, 0, 0, 0, // element count LE
+                0x02, 0x01, 0, 0, // element LE
             ]
         );
     }

@@ -113,7 +113,7 @@ use crate::coordinator::messages::{ChunkMsg, WorkerEvent};
 use crate::coordinator::pool::{Transport, TransportMsg};
 use crate::coordinator::straggler::WorkerPlan;
 use crate::coordinator::worker::{self, JobOrder, JobShared};
-use crate::matrix::Matrix;
+use crate::matrix::{CsrMatrix, Matrix, ShardData};
 use crate::runtime::Engine;
 
 /// Idle-lane liveness probe cadence (master → worker `PING`).
@@ -264,37 +264,86 @@ fn connect_peer(addr: &str, tun: &TcpTunables) -> io::Result<Conn> {
 /// Ship worker `w`'s shard and wait for the ack. A v2 lane streams it
 /// (`SHARD_BEGIN` / `SHARD_DATA` × n / `SHARD_END`, each data frame at
 /// most `max_frame_bytes`) so shards bigger than one frame install; a
-/// v1 lane gets the legacy single `INSTALL_SHARD`.
+/// v1 lane gets the legacy single `INSTALL_SHARD`. A CSR shard streams
+/// its three arrays (`SHARD_BEGIN_CSR`, `SHARD_DATA_IDX` pieces for
+/// `indptr` then `indices`, `SHARD_DATA` pieces for `values`) without
+/// densifying on the wire — v1 lanes predate the CSR frames, so there
+/// the shard densifies with a warning.
 fn install_remote(
     conn: &mut Conn,
     w: usize,
-    shard: &Matrix,
+    shard: &ShardData,
     tun: &TcpTunables,
 ) -> io::Result<()> {
-    if conn.ver >= 2 {
-        WireMsg::ShardBegin {
-            worker: w as u32,
-            rows: shard.rows() as u32,
-            cols: shard.cols() as u32,
-        }
-        .write(&mut conn.sink, conn.ver)?;
-        // 16 bytes covers the frame header + payload count field
-        let floats_per_piece = (tun.max_frame_bytes.saturating_sub(16) / 4).max(1);
-        for piece in shard.data().chunks(floats_per_piece) {
-            WireMsg::ShardData {
-                data: piece.to_vec(),
+    // 16 bytes covers the frame header + payload count field
+    let elems_per_piece = (tun.max_frame_bytes.saturating_sub(16) / 4).max(1);
+    match shard {
+        ShardData::Csr(c) if conn.ver >= 2 => {
+            WireMsg::ShardBeginCsr {
+                worker: w as u32,
+                rows: c.rows() as u32,
+                cols: c.cols() as u32,
+                nnz: c.nnz() as u64,
             }
             .write(&mut conn.sink, conn.ver)?;
+            // the receiver splits the u32 stream by the announced
+            // lengths, so indptr and indices can share piece framing
+            for piece in c.indptr().chunks(elems_per_piece) {
+                WireMsg::ShardDataIdx {
+                    data: piece.to_vec(),
+                }
+                .write(&mut conn.sink, conn.ver)?;
+            }
+            for piece in c.indices().chunks(elems_per_piece) {
+                WireMsg::ShardDataIdx {
+                    data: piece.to_vec(),
+                }
+                .write(&mut conn.sink, conn.ver)?;
+            }
+            for piece in c.values().chunks(elems_per_piece) {
+                WireMsg::ShardData {
+                    data: piece.to_vec(),
+                }
+                .write(&mut conn.sink, conn.ver)?;
+            }
+            WireMsg::ShardEnd.write(&mut conn.sink, conn.ver)?;
         }
-        WireMsg::ShardEnd.write(&mut conn.sink, conn.ver)?;
-    } else {
-        WireMsg::InstallShard {
-            worker: w as u32,
-            rows: shard.rows() as u32,
-            cols: shard.cols() as u32,
-            data: shard.data().to_vec(),
+        _ if conn.ver >= 2 => {
+            let m = shard.as_dense().expect("CSR shards took the arm above");
+            WireMsg::ShardBegin {
+                worker: w as u32,
+                rows: m.rows() as u32,
+                cols: m.cols() as u32,
+            }
+            .write(&mut conn.sink, conn.ver)?;
+            for piece in m.data().chunks(elems_per_piece) {
+                WireMsg::ShardData {
+                    data: piece.to_vec(),
+                }
+                .write(&mut conn.sink, conn.ver)?;
+            }
+            WireMsg::ShardEnd.write(&mut conn.sink, conn.ver)?;
         }
-        .write(&mut conn.sink, PROTO_V1)?;
+        _ => {
+            let dense;
+            let m = match shard {
+                ShardData::Dense(m) => &**m,
+                ShardData::Csr(c) => {
+                    crate::warn_!(
+                        "tcp worker {w}: v1 lane cannot stream CSR; densifying shard"
+                    );
+                    dense = c.to_dense();
+                    &dense
+                }
+            };
+            WireMsg::InstallShard {
+                worker: w as u32,
+                rows: m.rows() as u32,
+                cols: m.cols() as u32,
+                data: m.data().to_vec(),
+            }
+            .write(&mut conn.sink, PROTO_V1)?;
+        }
     }
     conn.stream.set_read_timeout(Some(tun.install_timeout))?;
     let reply = WireMsg::read(&mut conn.stream);
@@ -308,7 +357,7 @@ fn install_remote(
 enum ProxyMsg {
     /// The fleet's full shard list: install `shards[w]` remotely, keep
     /// the rest for inline steal grants.
-    Install(Arc<Vec<Arc<Matrix>>>),
+    Install(Arc<Vec<ShardData>>),
     External(TransportMsg),
     Rejoin,
 }
@@ -397,7 +446,7 @@ impl Transport for TcpTransport {
         self.lanes.len()
     }
 
-    fn install_shards(&self, shards: Vec<Arc<Matrix>>) {
+    fn install_shards(&self, shards: Vec<ShardData>) {
         assert_eq!(shards.len(), self.lanes.len(), "one shard per worker");
         if self.installed.set(()).is_err() {
             panic!("shards already installed");
@@ -460,7 +509,7 @@ fn proxy_loop(
     tun: &TcpTunables,
 ) {
     let mut conn = Some(conn);
-    let mut fleet: Option<Arc<Vec<Arc<Matrix>>>> = None;
+    let mut fleet: Option<Arc<Vec<ShardData>>> = None;
     let mut ping_seq = 0u64;
     loop {
         match rx.recv_timeout(tun.heartbeat_period) {
@@ -533,7 +582,7 @@ fn proxy_loop(
 fn reconnect(
     w: usize,
     addr: &str,
-    fleet: Option<&Vec<Arc<Matrix>>>,
+    fleet: Option<&Vec<ShardData>>,
     tun: &TcpTunables,
 ) -> io::Result<Conn> {
     let mut conn = connect_peer(addr, tun)?;
@@ -571,7 +620,7 @@ fn fail_job(w: usize, job: JobOrder) {
 fn drive_job(
     w: usize,
     conn: &mut Conn,
-    fleet: Option<&Vec<Arc<Matrix>>>,
+    fleet: Option<&Vec<ShardData>>,
     job: JobOrder,
     tun: &TcpTunables,
 ) -> io::Result<()> {
@@ -625,7 +674,7 @@ fn pump_grants(
     sink: &mut DelayedWriter,
     ver: u8,
     s: &JobShared,
-    fleet: Option<&Vec<Arc<Matrix>>>,
+    fleet: Option<&Vec<ShardData>>,
     window: usize,
     outstanding: &mut usize,
     fin_sent: &mut bool,
@@ -648,8 +697,11 @@ fn pump_grants(
                 let rows = if t.shard == w {
                     None // resident shard: slice remotely
                 } else {
+                    // steal grants ship dense rows regardless of the
+                    // victim shard's storage: the grantee computes a
+                    // contiguous row block, not a CSR window
                     let fleet = fleet.ok_or_else(|| bad("job before shard install"))?;
-                    Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
+                    Some(fleet[t.shard].dense_rows(t.start, t.len))
                 };
                 WireMsg::TaskGrant {
                     shard: t.shard as u32,
@@ -671,7 +723,7 @@ fn pump_grants(
 fn drive_job_v2(
     w: usize,
     conn: &mut Conn,
-    fleet: Option<&Vec<Arc<Matrix>>>,
+    fleet: Option<&Vec<ShardData>>,
     s: &JobShared,
     plan: &WorkerPlan,
     tau: f64,
@@ -779,7 +831,7 @@ fn drive_job_v2(
 fn drive_job_v1(
     w: usize,
     conn: &mut Conn,
-    fleet: Option<&Vec<Arc<Matrix>>>,
+    fleet: Option<&Vec<ShardData>>,
     s: &JobShared,
     plan: &WorkerPlan,
     tau: f64,
@@ -811,9 +863,10 @@ fn drive_job_v1(
                         let rows = if t.shard == w {
                             None // resident shard: slice remotely
                         } else {
+                            // steal grants densify CSR victims (see v2)
                             let fleet =
                                 fleet.ok_or_else(|| bad("job before shard install"))?;
-                            Some(fleet[t.shard].row_block(t.start, t.len).to_vec())
+                            Some(fleet[t.shard].dense_rows(t.start, t.len))
                         };
                         WireMsg::TaskGrant {
                             shard: t.shard as u32,
@@ -890,16 +943,31 @@ impl Default for WorkerOpts {
 
 struct Resident {
     worker: usize,
-    shard: Matrix,
+    shard: ShardData,
 }
 
-/// Accumulator for a streamed v2 install between `SHARD_BEGIN` and
-/// `SHARD_END`.
-struct StreamingInstall {
-    worker: u32,
-    rows: u32,
-    cols: u32,
-    data: Vec<f32>,
+/// Accumulator for a streamed v2 install between `SHARD_BEGIN` /
+/// `SHARD_BEGIN_CSR` and `SHARD_END`. A CSR stream fills its three
+/// arrays in order — `SHARD_DATA_IDX` frames feed `indptr` until it
+/// holds `rows + 1` entries and then `indices` until `nnz`, while
+/// `SHARD_DATA` frames feed `values` — so piece boundaries never need
+/// to align with array boundaries.
+enum StreamingInstall {
+    Dense {
+        worker: u32,
+        rows: u32,
+        cols: u32,
+        data: Vec<f32>,
+    },
+    Csr {
+        worker: u32,
+        rows: u32,
+        cols: u32,
+        nnz: u64,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
 }
 
 enum Served {
@@ -1064,14 +1132,18 @@ fn serve_master(
             } => {
                 *resident = Some(Resident {
                     worker: worker as usize,
-                    shard: Matrix::from_vec(rows as usize, cols as usize, data),
+                    shard: ShardData::from(Matrix::from_vec(
+                        rows as usize,
+                        cols as usize,
+                        data,
+                    )),
                 });
                 WireMsg::ShardOk.write(&mut sink, agreed)?;
                 crate::info!("worker {worker}: shard resident ({rows}×{cols})");
             }
             WireMsg::ShardBegin { worker, rows, cols } => {
                 let want = rows as u64 * cols as u64;
-                streaming = Some(StreamingInstall {
+                streaming = Some(StreamingInstall::Dense {
                     worker,
                     rows,
                     cols,
@@ -1080,31 +1152,118 @@ fn serve_master(
                     data: Vec::with_capacity(want.min(1 << 26) as usize),
                 });
             }
-            WireMsg::ShardData { data } => {
-                let st = streaming
-                    .as_mut()
-                    .ok_or_else(|| bad("SHARD_DATA outside an install stream"))?;
-                let want = st.rows as u64 * st.cols as u64;
-                if st.data.len() as u64 + data.len() as u64 > want {
-                    return Err(bad("streamed shard overruns its announced shape"));
-                }
-                st.data.extend_from_slice(&data);
-            }
-            WireMsg::ShardEnd => {
-                let st = streaming
-                    .take()
-                    .ok_or_else(|| bad("SHARD_END outside an install stream"))?;
-                if st.data.len() as u64 != st.rows as u64 * st.cols as u64 {
-                    return Err(bad("streamed shard ended short of its shape"));
-                }
-                let (worker, rows, cols) = (st.worker, st.rows, st.cols);
-                *resident = Some(Resident {
-                    worker: worker as usize,
-                    shard: Matrix::from_vec(rows as usize, cols as usize, st.data),
+            WireMsg::ShardBeginCsr {
+                worker,
+                rows,
+                cols,
+                nnz,
+            } => {
+                streaming = Some(StreamingInstall::Csr {
+                    worker,
+                    rows,
+                    cols,
+                    nnz,
+                    // same pre-allocation cap as the dense stream: the
+                    // announced nnz is untrusted until data arrives
+                    indptr: Vec::with_capacity((rows as u64 + 1).min(1 << 26) as usize),
+                    indices: Vec::with_capacity(nnz.min(1 << 26) as usize),
+                    values: Vec::with_capacity(nnz.min(1 << 26) as usize),
                 });
-                WireMsg::ShardOk.write(&mut sink, agreed)?;
-                crate::info!("worker {worker}: shard resident ({rows}×{cols}, streamed)");
             }
+            WireMsg::ShardData { data } => match streaming.as_mut() {
+                None => return Err(bad("SHARD_DATA outside an install stream")),
+                Some(StreamingInstall::Dense { rows, cols, data: acc, .. }) => {
+                    let want = *rows as u64 * *cols as u64;
+                    if acc.len() as u64 + data.len() as u64 > want {
+                        return Err(bad("streamed shard overruns its announced shape"));
+                    }
+                    acc.extend_from_slice(&data);
+                }
+                Some(StreamingInstall::Csr { nnz, values, .. }) => {
+                    if values.len() as u64 + data.len() as u64 > *nnz {
+                        return Err(bad("streamed CSR values overrun announced nnz"));
+                    }
+                    values.extend_from_slice(&data);
+                }
+            },
+            WireMsg::ShardDataIdx { data } => match streaming.as_mut() {
+                Some(StreamingInstall::Csr {
+                    rows,
+                    nnz,
+                    indptr,
+                    indices,
+                    ..
+                }) => {
+                    // fill indptr to its known length first, spill the
+                    // rest into indices — one frame may straddle both
+                    let mut data = &data[..];
+                    let ptr_want = *rows as usize + 1;
+                    if indptr.len() < ptr_want {
+                        let take = data.len().min(ptr_want - indptr.len());
+                        indptr.extend_from_slice(&data[..take]);
+                        data = &data[take..];
+                    }
+                    if indices.len() as u64 + data.len() as u64 > *nnz {
+                        return Err(bad("streamed CSR indices overrun announced nnz"));
+                    }
+                    indices.extend_from_slice(data);
+                }
+                _ => return Err(bad("SHARD_DATA_IDX outside a CSR install stream")),
+            },
+            WireMsg::ShardEnd => match streaming
+                .take()
+                .ok_or_else(|| bad("SHARD_END outside an install stream"))?
+            {
+                StreamingInstall::Dense {
+                    worker,
+                    rows,
+                    cols,
+                    data,
+                } => {
+                    if data.len() as u64 != rows as u64 * cols as u64 {
+                        return Err(bad("streamed shard ended short of its shape"));
+                    }
+                    *resident = Some(Resident {
+                        worker: worker as usize,
+                        shard: ShardData::from(Matrix::from_vec(
+                            rows as usize,
+                            cols as usize,
+                            data,
+                        )),
+                    });
+                    WireMsg::ShardOk.write(&mut sink, agreed)?;
+                    crate::info!("worker {worker}: shard resident ({rows}×{cols}, streamed)");
+                }
+                StreamingInstall::Csr {
+                    worker,
+                    rows,
+                    cols,
+                    nnz,
+                    indptr,
+                    indices,
+                    values,
+                } => {
+                    if indptr.len() as u64 != rows as u64 + 1
+                        || indices.len() as u64 != nnz
+                        || values.len() as u64 != nnz
+                    {
+                        return Err(bad("streamed CSR shard ended short of its shape"));
+                    }
+                    // the arrays came off the wire: validate every CSR
+                    // invariant instead of trusting the peer
+                    let csr =
+                        CsrMatrix::try_new(rows as usize, cols as usize, indptr, indices, values)
+                            .map_err(|e| bad(&format!("streamed CSR shard invalid: {e}")))?;
+                    *resident = Some(Resident {
+                        worker: worker as usize,
+                        shard: ShardData::from(csr),
+                    });
+                    WireMsg::ShardOk.write(&mut sink, agreed)?;
+                    crate::info!(
+                        "worker {worker}: CSR shard resident ({rows}×{cols}, nnz {nnz}, streamed)"
+                    );
+                }
+            },
             WireMsg::Ping { seq } => WireMsg::Pong { seq }.write(&mut sink, agreed)?,
             WireMsg::Shutdown => return Ok(Served::Shutdown),
             WireMsg::JobStart {
@@ -1303,8 +1462,15 @@ fn run_remote_job_v2(
                 if shard_id != r.worker {
                     return Err(bad("foreign-shard grant without inline rows"));
                 }
-                let block = r.shard.row_block(t_start, len);
-                engine.matmat_chunk(block, len, r.shard.cols(), x, batch)
+                match &r.shard {
+                    ShardData::Dense(m) => {
+                        let block = m.row_block(t_start, len);
+                        engine.matmat_chunk(block, len, m.cols(), x, batch)
+                    }
+                    // CSR shards run the sparse kernel directly — the
+                    // engine seam is a dense-buffer API (see worker.rs)
+                    ShardData::Csr(c) => Ok(c.matmat_chunk(t_start, len, x, batch)),
+                }
             }
         };
         let products = match computed {
@@ -1425,8 +1591,15 @@ fn run_remote_job(
                 if shard_id != r.worker {
                     return Err(bad("foreign-shard grant without inline rows"));
                 }
-                let block = r.shard.row_block(t_start, len);
-                engine.matmat_chunk(block, len, r.shard.cols(), x, batch)
+                match &r.shard {
+                    ShardData::Dense(m) => {
+                        let block = m.row_block(t_start, len);
+                        engine.matmat_chunk(block, len, m.cols(), x, batch)
+                    }
+                    // CSR shards run the sparse kernel directly — the
+                    // engine seam is a dense-buffer API (see worker.rs)
+                    ShardData::Csr(c) => Ok(c.matmat_chunk(t_start, len, x, batch)),
+                }
             }
         };
         let products = match computed {
@@ -1502,20 +1675,29 @@ mod tests {
         p: usize,
         opts: WorkerOpts,
         tun: TcpTunables,
-    ) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>, Vec<u8>) {
+    ) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<ShardData>, Vec<u8>) {
+        fleet_pool_shards(p, opts, tun, |s| {
+            ShardData::from(Matrix::random_ints(8, 4, 4, 60 + s as u64))
+        })
+    }
+
+    fn fleet_pool_shards(
+        p: usize,
+        opts: WorkerOpts,
+        tun: TcpTunables,
+        mk: impl Fn(usize) -> ShardData,
+    ) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<ShardData>, Vec<u8>) {
         let (addrs, handles): (Vec<_>, Vec<_>) =
             (0..p).map(|_| spawn_worker_thread(opts.clone())).unzip();
         let transport = TcpTransport::connect_tuned(&addrs, tun).expect("connect fleet");
         let protos = transport.lane_protocols();
         let pool = WorkerPool::from_transport(Box::new(transport));
-        let shards: Vec<Arc<Matrix>> = (0..p)
-            .map(|s| Arc::new(Matrix::random_ints(8, 4, 4, 60 + s as u64)))
-            .collect();
+        let shards: Vec<ShardData> = (0..p).map(mk).collect();
         pool.install_shards(shards.clone());
         (pool, handles, shards, protos)
     }
 
-    fn fleet_pool(p: usize) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<Arc<Matrix>>) {
+    fn fleet_pool(p: usize) -> (WorkerPool, Vec<JoinHandle<()>>, Vec<ShardData>) {
         let (pool, handles, shards, protos) =
             fleet_pool_with(p, WorkerOpts::default(), TcpTunables::default());
         // default × default negotiates the pipelined protocol
@@ -1523,7 +1705,7 @@ mod tests {
         (pool, handles, shards)
     }
 
-    fn run_fleet_job(pool: &WorkerPool, p: usize, shards: &[Arc<Matrix>]) {
+    fn run_fleet_job(pool: &WorkerPool, p: usize, shards: &[ShardData]) {
         let x = Arc::new(Matrix::random_int_vector(4, 4, 7));
         let shared = Arc::new(JobShared {
             x: Arc::clone(&x),
@@ -1627,6 +1809,47 @@ mod tests {
             fleet_pool_with(p, WorkerOpts::default(), tun);
         assert!(protos.iter().all(|&v| v == PROTO_VERSION));
         run_fleet_job(&pool, p, &shards); // proves bitwise reassembly
+        shutdown_fleet(pool, p, handles);
+    }
+
+    #[test]
+    fn csr_shards_stream_install_and_serve() {
+        let p = 2;
+        // 64-byte frames split each of the three CSR arrays (indptr,
+        // indices, values) across several pieces, and put the
+        // indptr → indices boundary mid-frame
+        let tun = TcpTunables {
+            max_frame_bytes: 64,
+            ..TcpTunables::default()
+        };
+        let (pool, handles, shards, protos) =
+            fleet_pool_shards(p, WorkerOpts::default(), tun, |s| {
+                let dense = Matrix::random_ints(8, 4, 4, 60 + s as u64);
+                ShardData::from(CsrMatrix::from_dense(&dense))
+            });
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        assert!(shards.iter().all(|s| s.is_csr()));
+        run_fleet_job(&pool, p, &shards); // remote CSR compute, bitwise
+        run_fleet_job(&pool, p, &shards); // CSR shard stays resident
+        shutdown_fleet(pool, p, handles);
+    }
+
+    #[test]
+    fn csr_shards_densify_for_v1_pinned_worker() {
+        // a v1 lane predates the CSR frames: the install falls back to
+        // one dense INSTALL_SHARD and jobs still decode byte-identical
+        let p = 2;
+        let opts = WorkerOpts {
+            max_proto: PROTO_V1,
+            ..WorkerOpts::default()
+        };
+        let (pool, handles, shards, protos) =
+            fleet_pool_shards(p, opts, TcpTunables::default(), |s| {
+                let dense = Matrix::random_ints(8, 4, 4, 60 + s as u64);
+                ShardData::from(CsrMatrix::from_dense(&dense))
+            });
+        assert_eq!(protos, vec![PROTO_V1; p]);
+        run_fleet_job(&pool, p, &shards);
         shutdown_fleet(pool, p, handles);
     }
 

@@ -35,7 +35,7 @@ use std::time::{Duration, Instant};
 use super::messages::{ChunkMsg, WorkerEvent};
 use super::scheduler::TaskSource;
 use super::straggler::WorkerPlan;
-use crate::matrix::Matrix;
+use crate::matrix::ShardData;
 use crate::runtime::Engine;
 
 /// The per-job state shared by the whole fleet (one allocation per job,
@@ -90,7 +90,7 @@ pub(crate) fn sleep_until(start: Instant, deadline: f64, cancel: &AtomicBool) ->
 /// report. `shards` is the whole fleet's resident shard list (stealing
 /// needs access to other workers' rows; static tasks only ever index
 /// `shards[worker]`).
-pub fn run_job(worker: usize, shards: &[Arc<Matrix>], engine: &Engine, job: JobOrder) {
+pub fn run_job(worker: usize, shards: &[ShardData], engine: &Engine, job: JobOrder) {
     let JobOrder {
         shared,
         plan,
@@ -132,8 +132,16 @@ pub fn run_job(worker: usize, shards: &[Arc<Matrix>], engine: &Engine, job: JobO
             let shard = &shards[task.shard];
             let cols = shard.cols();
             debug_assert_eq!(s.x.len(), cols * s.batch, "X shape mismatch");
-            let block = shard.row_block(task.start, len);
-            let products = match engine.matmat_chunk(block, len, cols, &s.x, s.batch) {
+            let products = match shard {
+                ShardData::Dense(m) => {
+                    engine.matmat_chunk(m.row_block(task.start, len), len, cols, &s.x, s.batch)
+                }
+                // CSR shards run the sparse kernel directly: the engine
+                // seam is a dense-buffer API, and sparsity is a CPU-side
+                // storage optimization (DESIGN.md sparse section)
+                ShardData::Csr(c) => Ok(c.matmat_chunk(task.start, len, &s.x, s.batch)),
+            };
+            let products = match products {
                 Ok(p) => p,
                 Err(e) => {
                     crate::warn_!("worker {worker}: engine error: {e}; dying");
@@ -190,6 +198,7 @@ mod tests {
     use super::*;
     use crate::coordinator::scheduler::{Scheduler, StaticScheduler, WorkStealingScheduler};
     use crate::coordinator::straggler::WorkerPlan;
+    use crate::matrix::{CsrMatrix, Matrix};
     use std::sync::mpsc::channel;
 
     fn plan(x: f64) -> WorkerPlan {
@@ -216,7 +225,7 @@ mod tests {
         })
     }
 
-    fn spawn(shards: Vec<Arc<Matrix>>, w: usize, job: JobOrder) {
+    fn spawn(shards: Vec<ShardData>, w: usize, job: JobOrder) {
         std::thread::spawn(move || run_job(w, &shards, &Engine::Native, job));
     }
 
@@ -233,7 +242,7 @@ mod tests {
             tau: 1e-6,
             tx,
         };
-        spawn(vec![Arc::clone(&shard)], 0, job);
+        spawn(vec![ShardData::from(Arc::clone(&shard))], 0, job);
         let mut got = vec![f32::NAN; 10];
         let mut done = false;
         while let Ok(ev) = rx.recv() {
@@ -285,7 +294,7 @@ mod tests {
             tau: 1e-6,
             tx,
         };
-        spawn(vec![Arc::clone(&shard)], 0, job);
+        spawn(vec![ShardData::from(Arc::clone(&shard))], 0, job);
         let mut got = vec![f32::NAN; 7 * batch];
         loop {
             match rx.recv().unwrap() {
@@ -313,6 +322,43 @@ mod tests {
         }
     }
 
+    /// A job served from a CSR shard produces bit-identical products to
+    /// the same job on the densified shard (integer data ⇒ exact).
+    #[test]
+    fn csr_shard_job_matches_dense_job_bitwise() {
+        let dense = Matrix::random_ints(9, 4, 3, 8);
+        let csr = CsrMatrix::from_dense(&dense);
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for shard in [ShardData::from(dense.clone()), ShardData::from(csr)] {
+            let (tx, rx) = channel();
+            let cancel = Arc::new(AtomicBool::new(false));
+            let shared = shared_for(&[9], 2, 1, cancel);
+            let job = JobOrder {
+                shared,
+                plan: plan(0.0),
+                tau: 1e-6,
+                tx,
+            };
+            spawn(vec![shard], 0, job);
+            let mut got = vec![f32::NAN; 9];
+            loop {
+                match rx.recv().unwrap() {
+                    WorkerEvent::Chunk(c) => {
+                        for (i, p) in c.products.iter().enumerate() {
+                            got[c.start_row + i] = *p;
+                        }
+                    }
+                    WorkerEvent::Done { rows_done, .. } => {
+                        assert_eq!(rows_done, 9);
+                        break;
+                    }
+                }
+            }
+            outs.push(got);
+        }
+        assert_eq!(outs[0], outs[1], "csr job must match dense job exactly");
+    }
+
     #[test]
     fn failure_stops_at_boundary() {
         let (tx, rx) = channel();
@@ -328,7 +374,7 @@ mod tests {
             tau: 1e-6,
             tx,
         };
-        spawn(vec![shard], 0, job);
+        spawn(vec![ShardData::from(shard)], 0, job);
         let mut rows_received = 0;
         loop {
             match rx.recv().unwrap() {
@@ -365,7 +411,7 @@ mod tests {
             tau: 1e-6,
             tx,
         };
-        spawn(vec![shard], 0, job);
+        spawn(vec![ShardData::from(shard)], 0, job);
         std::thread::sleep(Duration::from_millis(30));
         cancel.store(true, Ordering::Relaxed);
         let t0 = Instant::now();
@@ -388,8 +434,8 @@ mod tests {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let shards = vec![
-            Arc::new(Matrix::random(6, 4, 3)),
-            Arc::new(Matrix::random(8, 4, 4)),
+            ShardData::from(Matrix::random(6, 4, 3)),
+            ShardData::from(Matrix::random(8, 4, 4)),
         ];
         let sched = WorkStealingScheduler::new(&[1e-6; 2]);
         let shared = Arc::new(JobShared {

@@ -91,13 +91,15 @@ pub mod prelude {
     pub use crate::coding::peeling::PeelingDecoder;
     pub use crate::coding::soliton::RobustSoliton;
     pub use crate::coding::{ErasureCode, ErasureDecoder, Fountain, ShardSizing};
-    pub use crate::config::{ClusterConfig, TransportConfig, TransportKind, WorkloadConfig};
+    pub use crate::config::{
+        ClusterConfig, CodingConfig, EncodingKind, TransportConfig, TransportKind, WorkloadConfig,
+    };
     pub use crate::coordinator::pool::{Transport, WorkerPool};
     pub use crate::coordinator::scheduler::SchedulerKind;
     pub use crate::coordinator::straggler::StragglerProfile;
     pub use crate::coordinator::transport::tcp::{TcpTransport, TcpTunables, WorkerOpts};
     pub use crate::coordinator::{Coordinator, JobError, JobResult, Strategy};
-    pub use crate::matrix::Matrix;
+    pub use crate::matrix::{CsrMatrix, Matrix, ShardData};
     pub use crate::runtime::Engine;
     pub use crate::util::dist::DelayDist;
     pub use crate::util::rng::Rng;

@@ -17,6 +17,8 @@
 //!                                             mean dispatched batch size
 //! rateless throughput [--batches 1,8,32,128]  batched serving jobs/sec
 //!                     [--peers h1:p,h2:p,...]  ... over TCP worker processes
+//!                     [--density 0.01]         ... on a sparse CSR matrix
+//!                     [--max-weight 8]         ... with weight-capped LT rows
 //! rateless worker --listen 0.0.0.0:4000       resident TCP worker process
 //! ```
 //!
@@ -31,11 +33,11 @@
 
 use rateless::cli::Args;
 use rateless::coding::lt::LtParams;
-use rateless::config::{ClusterConfig, Doc, TransportKind, WorkloadConfig};
+use rateless::config::{ClusterConfig, CodingConfig, Doc, TransportKind, WorkloadConfig};
 use rateless::coordinator::transport::tcp::TcpTransport;
 use rateless::coordinator::{stream, Coordinator, Strategy};
 use rateless::figures;
-use rateless::matrix::{dataset, Matrix};
+use rateless::matrix::{dataset, CsrMatrix, Matrix};
 use rateless::runtime::Engine;
 
 fn main() {
@@ -198,6 +200,32 @@ fn config_run(args: &Args) -> anyhow::Result<()> {
         _ => Engine::auto(std::path::Path::new(&doc.str("run", "artifacts", "artifacts"))),
     };
     let dataset_kind = doc.str("workload", "dataset", "random");
+    let peers = match cluster.transport.kind {
+        TransportKind::Tcp => Some(cluster.transport.peers.clone()),
+        TransportKind::InProcess => None,
+    };
+    if dataset_kind == "sparse" {
+        let density = doc.f64("workload", "density", 0.05);
+        anyhow::ensure!(
+            density > 0.0 && density < 1.0,
+            "workload.density must be in (0, 1)"
+        );
+        let a =
+            dataset::sparse_feature_matrix(workload.rows, workload.cols, density, cluster.seed);
+        println!(
+            "run: {}×{} sparse matrix (nnz = {}, density = {:.4}), p={}, strategy={}, engine={}",
+            workload.rows,
+            workload.cols,
+            a.nnz(),
+            a.density(),
+            cluster.workers,
+            strategy.name(),
+            engine.name()
+        );
+        let cols = workload.cols;
+        let coord = coordinator_over_csr(cluster, strategy, engine, &a, peers.as_deref())?;
+        return run_vectors(&coord, cols, workload.vectors, |x| a.matvec(x));
+    }
     let a = match dataset_kind.as_str() {
         "features" => dataset::feature_matrix(workload.rows, workload.cols, cluster.seed),
         "identity" => Matrix::identity(workload.rows),
@@ -212,15 +240,22 @@ fn config_run(args: &Args) -> anyhow::Result<()> {
         strategy.name(),
         engine.name()
     );
-    let peers = match cluster.transport.kind {
-        TransportKind::Tcp => Some(cluster.transport.peers.clone()),
-        TransportKind::InProcess => None,
-    };
     let coord = coordinator_over(cluster, strategy, engine, &a, peers.as_deref())?;
-    for v in 0..workload.vectors.max(1) {
-        let x = Matrix::random_int_vector(workload.cols, 1, 90_000 + v as u64);
+    run_vectors(&coord, workload.cols, workload.vectors, |x| a.matvec(x))
+}
+
+/// Multiply `vectors` random integer query vectors and report per-vector
+/// latency, computations and decode stats against a reference product.
+fn run_vectors(
+    coord: &Coordinator,
+    cols: usize,
+    vectors: usize,
+    want_of: impl Fn(&[f32]) -> Vec<f32>,
+) -> anyhow::Result<()> {
+    for v in 0..vectors.max(1) {
+        let x = Matrix::random_int_vector(cols, 1, 90_000 + v as u64);
         let res = coord.multiply(&x)?;
-        let want = a.matvec(&x);
+        let want = want_of(&x);
         let err = Matrix::max_abs_diff(&res.b, &want);
         println!(
             "vector {v}: T = {:.4}s, C = {}, M' = {}, decode_cpu = {:.1}ms, max err = {err:.2e}",
@@ -336,7 +371,6 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         })
         .collect::<anyhow::Result<_>>()?;
     anyhow::ensure!(!batches.is_empty(), "--batches must name at least one width");
-    let a = Matrix::random_ints(m, n, 3, seed_of(args));
     let cluster = ClusterConfig {
         workers: p,
         tau: args.f64("tau", 2e-5),
@@ -344,9 +378,20 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         time_scale: args.f64("time-scale", 0.02),
         ..ClusterConfig::default()
     };
+    // --max-weight w caps LT encoded-row degree (low-weight encoding,
+    // Das & Ramamoorthy arXiv:2301.12685); 0 = unrestricted
+    let max_weight = args.usize("max-weight", 0);
+    let lt_params = |alpha: f64| {
+        let params = LtParams::with_alpha(alpha);
+        if max_weight >= 1 {
+            params.with_max_weight(max_weight)
+        } else {
+            params
+        }
+    };
     let strategy = match args.str("strategy", "lt").as_str() {
-        "lt" => Strategy::Lt(LtParams::with_alpha(args.f64("alpha", 2.0))),
-        "syslt" => Strategy::SystematicLt(LtParams::with_alpha(args.f64("alpha", 2.0))),
+        "lt" => Strategy::Lt(lt_params(args.f64("alpha", 2.0))),
+        "syslt" => Strategy::SystematicLt(lt_params(args.f64("alpha", 2.0))),
         "raptor" => Strategy::Raptor(Default::default()),
         "mds" => Strategy::Mds {
             k: args.usize("k", p.saturating_sub(2).max(1)),
@@ -358,6 +403,10 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("--strategy {other:?} unknown"),
     };
     let peers = peers_of(args);
+    // --density d ∈ (0, 1) swaps the dense integer matrix for a sparse
+    // CSR one; CSR-preserving strategies then store and compute shards
+    // in CSR form end-to-end
+    let density = args.f64("density", 0.0);
     println!(
         "throughput: {m}x{n}, p={p}, strategy={}, {jobs} jobs per width, \
          time_scale={}, transport={}",
@@ -365,7 +414,15 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         cluster.time_scale,
         if peers.is_some() { "tcp" } else { "inprocess" }
     );
-    let coord = coordinator_over(cluster, strategy, Engine::Native, &a, peers.as_deref())?;
+    let coord = if density > 0.0 {
+        anyhow::ensure!(density < 1.0, "--density must be in (0, 1)");
+        let a = dataset::sparse_feature_matrix(m, n, density, seed_of(args));
+        println!("sparse input: nnz = {}, density = {:.4}", a.nnz(), a.density());
+        coordinator_over_csr(cluster, strategy, Engine::Native, &a, peers.as_deref())?
+    } else {
+        let a = Matrix::random_ints(m, n, 3, seed_of(args));
+        coordinator_over(cluster, strategy, Engine::Native, &a, peers.as_deref())?
+    };
     println!("{:>6} {:>12} {:>14} {:>12}", "batch", "jobs/s", "vectors/s", "E[T] (s)");
     for &b in &batches {
         anyhow::ensure!(b >= 1, "batch widths must be >= 1");
@@ -428,6 +485,34 @@ fn coordinator_over(
     }
 }
 
+/// [`coordinator_over`] for a CSR source matrix: the in-process path
+/// uses [`Coordinator::new_csr`], the TCP path
+/// [`Coordinator::with_transport_csr`] (CSR shards stream to the remote
+/// workers without densifying on the wire).
+fn coordinator_over_csr(
+    cluster: ClusterConfig,
+    strategy: Strategy,
+    engine: Engine,
+    a: &CsrMatrix,
+    peers: Option<&[String]>,
+) -> anyhow::Result<Coordinator> {
+    match peers {
+        Some(peers) => {
+            anyhow::ensure!(
+                peers.len() == cluster.workers,
+                "peer list names {} workers but cluster.workers = {}",
+                peers.len(),
+                cluster.workers
+            );
+            let tun =
+                rateless::coordinator::transport::tcp::TcpTunables::from_config(&cluster.transport);
+            let fleet = TcpTransport::connect_tuned(peers, tun)?;
+            Coordinator::with_transport_csr(cluster, strategy, Box::new(fleet), a)
+        }
+        None => Coordinator::new_csr(cluster, strategy, engine, a),
+    }
+}
+
 /// Parse a `--peers h1:p1,h2:p2,...` flag into a peer list.
 fn peers_of(args: &Args) -> Option<Vec<String>> {
     args.opt_str("peers").map(|raw| {
@@ -438,9 +523,11 @@ fn peers_of(args: &Args) -> Option<Vec<String>> {
     })
 }
 
-/// Parse `[strategy]` from a config doc.
+/// Parse `[strategy]` from a config doc. The `[coding]` section's
+/// low-weight degree cap (if any) rides along on the LT variants.
 fn parse_strategy(doc: &Doc) -> anyhow::Result<Strategy> {
     let kind = doc.str("strategy", "kind", "lt");
+    let max_weight = CodingConfig::from_doc(doc).max_weight();
     Ok(match kind.as_str() {
         "uncoded" => Strategy::Uncoded,
         "replication" => Strategy::Replication {
@@ -453,11 +540,13 @@ fn parse_strategy(doc: &Doc) -> anyhow::Result<Strategy> {
             alpha: doc.f64("strategy", "alpha", 2.0),
             c: doc.f64("strategy", "c", 0.03),
             delta: doc.f64("strategy", "delta", 0.5),
+            max_weight,
         }),
         "systematic_lt" => Strategy::SystematicLt(LtParams {
             alpha: doc.f64("strategy", "alpha", 2.0),
             c: doc.f64("strategy", "c", 0.03),
             delta: doc.f64("strategy", "delta", 0.5),
+            max_weight,
         }),
         "raptor" => Strategy::Raptor(rateless::coding::raptor::RaptorParams {
             alpha: doc.f64("strategy", "alpha", 2.0),

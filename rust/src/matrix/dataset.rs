@@ -14,9 +14,9 @@
 //! f32 operation exact — encoded entries ≤ 3·(m/R) ≈ 10³ and products
 //! ≤ 9216·10³ ≈ 10⁷ < 2²⁴ at the paper's full EC2 scale.
 
-use super::Matrix;
+use super::{CsrMatrix, Matrix};
 use crate::util::dist::{Sample, StdNormal};
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng};
 
 /// Shape of the paper's STL-10 feature matrix (Fig. 2 / Fig. 8b).
 pub const STL10_ROWS: usize = 11760;
@@ -54,6 +54,42 @@ pub fn feature_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
     m
 }
 
+/// Deterministic sparse feature matrix in CSR form — the shared
+/// generator for sparse benches and tests (no more ad-hoc masking).
+///
+/// Per-row nonzero counts follow a truncated Pareto(α = 2.5) power law
+/// (a few heavy rows, many light ones — the shape of recommender and
+/// graph data), columns are sampled uniformly without replacement, and
+/// values are quantized to {1, 2, 3} (≤ [`FEATURE_MAX`], preserving the
+/// repo's integer-exactness convention). Overall density lands near
+/// `density`; each row depends only on `(seed, row)`, so any row range
+/// regenerates identically.
+pub fn sparse_feature_matrix(rows: usize, cols: usize, density: f64, seed: u64) -> CsrMatrix {
+    assert!((0.0..=1.0).contains(&density), "density must be in [0, 1]");
+    let target = density * cols as f64;
+    // Pareto(α) has mean α/(α−1) · x_min; α = 2.5 ⇒ x_min = 3/5 · target
+    let x_min = target * 3.0 / 5.0;
+    let cap = (8.0 * target).max(1.0);
+    let mut indptr = Vec::with_capacity(rows + 1);
+    indptr.push(0u32);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut picks: Vec<usize> = Vec::new();
+    for r in 0..rows {
+        let mut rng = Rng::new(derive_seed(seed, r as u64));
+        let u = rng.next_f64_open();
+        let nnz = ((x_min / u.powf(1.0 / 2.5)).round().min(cap) as usize).min(cols);
+        rng.sample_distinct(cols, nnz, &mut picks);
+        picks.sort_unstable();
+        for &c in &picks {
+            indices.push(c as u32);
+            values.push((1 + (rng.next_u64() % 3)) as f32);
+        }
+        indptr.push(indices.len() as u32);
+    }
+    CsrMatrix::new(rows, cols, indptr, indices, values)
+}
+
 /// Generate a binary probe vector (a thresholded "dataset row" — the
 /// paper multiplies with vectors from the same dataset).
 pub fn feature_vector(cols: usize, seed: u64) -> Vec<f32> {
@@ -85,5 +121,29 @@ mod tests {
     #[test]
     fn vector_shape() {
         assert_eq!(feature_vector(100, 3).len(), 100);
+    }
+
+    #[test]
+    fn sparse_matrix_is_deterministic_and_near_target_density() {
+        let a = sparse_feature_matrix(200, 256, 0.01, 9);
+        let b = sparse_feature_matrix(200, 256, 0.01, 9);
+        assert_eq!(a, b);
+        let d = a.density();
+        assert!((0.003..0.03).contains(&d), "density {d} far from 0.01");
+        assert!(a
+            .values()
+            .iter()
+            .all(|&v| (1.0..=FEATURE_MAX).contains(&v) && v.fract() == 0.0));
+        // power law: the heaviest row is well above the ~2.5-entry mean
+        assert!(a.max_row_nnz() > 4, "max row nnz {}", a.max_row_nnz());
+    }
+
+    #[test]
+    fn sparse_matrix_handles_degenerate_shapes() {
+        let z = sparse_feature_matrix(5, 40, 0.0, 1);
+        assert_eq!(z.nnz(), 0);
+        let full = sparse_feature_matrix(4, 8, 1.0, 2);
+        assert!(full.density() > 0.5);
+        assert_eq!(sparse_feature_matrix(0, 16, 0.1, 3).rows(), 0);
     }
 }

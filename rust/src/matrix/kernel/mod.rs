@@ -81,6 +81,93 @@ pub trait Kernel: Send + Sync {
     /// `acc += c · src` elementwise.
     fn axpy(&self, acc: &mut [f32], c: f32, src: &[f32]);
 
+    /// Sparse matvec over a CSR row window: `out[r] = Σ values[k] ·
+    /// x[indices[k]]` for `k ∈ indptr[r]..indptr[r+1]`. `indptr` holds
+    /// `out.len() + 1` offsets that are **absolute** into the full
+    /// `indices`/`values` arrays, so a row-range window of a larger
+    /// matrix passes its `indptr` slice unchanged — tasks are zero-copy.
+    ///
+    /// The default is a 4-accumulator scalar loop that every
+    /// implementation inherits: `x[indices[k]]` is a gather, which
+    /// AVX2/NEON cannot do profitably, so the vectorized sparse path is
+    /// the gather-free [`csr_block_matmat`](Self::csr_block_matmat).
+    /// On integer-exact data any accumulation order is bit-identical
+    /// (the convention the property tests pin).
+    fn csr_matvec(
+        &self,
+        indptr: &[u32],
+        indices: &[u32],
+        values: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+    ) {
+        for (r, o) in out.iter_mut().enumerate() {
+            let (s, e) = (indptr[r] as usize, indptr[r + 1] as usize);
+            let idx = &indices[s..e];
+            let val = &values[s..e];
+            let mut acc = [0.0f32; 4];
+            let chunks = idx.len() / 4 * 4;
+            let mut k = 0;
+            while k < chunks {
+                acc[0] += val[k] * x[idx[k] as usize];
+                acc[1] += val[k + 1] * x[idx[k + 1] as usize];
+                acc[2] += val[k + 2] * x[idx[k + 2] as usize];
+                acc[3] += val[k + 3] * x[idx[k + 3] as usize];
+                k += 4;
+            }
+            let mut tail = 0.0f32;
+            for j in chunks..idx.len() {
+                tail += val[j] * x[idx[j] as usize];
+            }
+            *o = (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
+        }
+    }
+
+    /// Sparse `out = block · X`: a CSR row window times the row-major
+    /// `cols × batch` query block `x`, row-major `(indptr.len() - 1) ×
+    /// batch` output. Same absolute-offset `indptr`-window contract as
+    /// [`csr_matvec`](Self::csr_matvec).
+    ///
+    /// This is the gather-free sparse hot path: each stored entry
+    /// contributes one axpy of the **contiguous** batch-length slice
+    /// `x[col·batch..]` into the output row panel, so the inner loop
+    /// rides the dispatched SIMD [`axpy`](Self::axpy) with unit-stride
+    /// loads on every architecture. `batch == 1` delegates to
+    /// `csr_matvec` (a length-1 axpy would be all call overhead).
+    fn csr_block_matmat(
+        &self,
+        indptr: &[u32],
+        indices: &[u32],
+        values: &[f32],
+        x: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        if batch == 1 {
+            return self.csr_matvec(indptr, indices, values, x, out);
+        }
+        let rows = indptr.len() - 1;
+        for r in 0..rows {
+            let orow = &mut out[r * batch..(r + 1) * batch];
+            orow.fill(0.0);
+            for k in indptr[r] as usize..indptr[r + 1] as usize {
+                let c = indices[k] as usize;
+                self.axpy(orow, values[k], &x[c * batch..(c + 1) * batch]);
+            }
+        }
+    }
+
+    /// Unit-coefficient accumulation of selected rows: `acc +=
+    /// block[r,:]` for each `r` in `rows` (flat row-major `block` of
+    /// width `cols`). The LT encoder's inner loop — an encoded row is a
+    /// binary combination of source rows, so each selected row is one
+    /// contiguous SIMD [`add_assign`](Self::add_assign).
+    fn axpy_rows(&self, acc: &mut [f32], block: &[f32], cols: usize, rows: &[usize]) {
+        for &r in rows {
+            self.add_assign(acc, &block[r * cols..(r + 1) * cols]);
+        }
+    }
+
     /// `acc += src` elementwise (decoder payload path).
     fn add_assign_f64(&self, acc: &mut [f64], src: &[f64]);
 
@@ -306,6 +393,134 @@ mod tests {
                 "{} real dot: {d} vs {dr}",
                 k.name()
             );
+        }
+    }
+
+    /// The sparse-kernel contract: on integer data, `csr_matvec` /
+    /// `csr_block_matmat` over a compressed matrix must match
+    /// densify-then-dense-op **bit for bit**, for every kernel, across
+    /// odd shapes, empty (all-zero) rows, and a fully zero matrix.
+    #[test]
+    fn sparse_ops_match_densify_then_dense_bit_for_bit() {
+        use crate::matrix::sparse::CsrMatrix;
+        use crate::matrix::Matrix;
+        let reference = &scalar::ScalarKernel;
+        let shapes = [(1usize, 1usize), (3, 7), (4, 5), (5, 16), (9, 33), (7, 65)];
+        for k in kernels_under_test() {
+            for &(rows, cols) in &shapes {
+                // knock out ~2/3 of the entries so rows have ragged nnz
+                let mut data = int_data(rows * cols, rows as u64 * 31 + cols as u64);
+                for (i, v) in data.iter_mut().enumerate() {
+                    if i % 3 != 0 {
+                        *v = 0.0;
+                    }
+                }
+                if rows > 2 {
+                    // force a genuinely empty row in the middle
+                    for v in &mut data[cols..2 * cols] {
+                        *v = 0.0;
+                    }
+                }
+                let c = CsrMatrix::from_dense(&Matrix::from_vec(rows, cols, data.clone()));
+                let x = int_data(cols, 99);
+                let mut got = vec![f32::NAN; rows];
+                let mut want = vec![0.0f32; rows];
+                k.csr_matvec(c.indptr(), c.indices(), c.values(), &x, &mut got);
+                reference.block_matvec(&data, rows, cols, &x, &mut want);
+                for i in 0..rows {
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want[i].to_bits(),
+                        "{} csr_matvec {rows}x{cols} row {i}",
+                        k.name()
+                    );
+                }
+                for &batch in &[1usize, 2, 3, 8, 17] {
+                    let xb = int_data(cols * batch, 7);
+                    let mut got = vec![f32::NAN; rows * batch];
+                    let mut want = vec![0.0f32; rows * batch];
+                    k.csr_block_matmat(c.indptr(), c.indices(), c.values(), &xb, batch, &mut got);
+                    reference.block_matmat(&data, rows, cols, &xb, batch, &mut want);
+                    for i in 0..rows * batch {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "{} csr_block_matmat {rows}x{cols} batch={batch} idx {i}",
+                            k.name()
+                        );
+                    }
+                }
+            }
+            // fully zero matrix: every CSR row is empty
+            let zeros = CsrMatrix::from_dense(&Matrix::from_vec(3, 4, vec![0.0; 12]));
+            let mut out = vec![f32::NAN; 3];
+            k.csr_matvec(zeros.indptr(), zeros.indices(), zeros.values(), &[1.0; 4], &mut out);
+            assert_eq!(out, vec![0.0; 3], "{}", k.name());
+        }
+    }
+
+    /// The zero-copy task windowing contract: an `indptr` slice with
+    /// absolute offsets plus the full `indices`/`values` computes the
+    /// same products as densifying that row range.
+    #[test]
+    fn csr_indptr_window_keeps_absolute_offsets() {
+        use crate::matrix::sparse::CsrMatrix;
+        use crate::matrix::Matrix;
+        let reference = &scalar::ScalarKernel;
+        let (rows, cols, batch) = (11usize, 13usize, 4usize);
+        let mut data = int_data(rows * cols, 17);
+        for (i, v) in data.iter_mut().enumerate() {
+            if i % 4 == 1 {
+                *v = 0.0;
+            }
+        }
+        let c = CsrMatrix::from_dense(&Matrix::from_vec(rows, cols, data.clone()));
+        let x = int_data(cols * batch, 18);
+        for k in kernels_under_test() {
+            let (start, len) = (3usize, 5usize);
+            let mut got = vec![f32::NAN; len * batch];
+            let mut want = vec![0.0f32; len * batch];
+            k.csr_block_matmat(
+                &c.indptr()[start..start + len + 1],
+                c.indices(),
+                c.values(),
+                &x,
+                batch,
+                &mut got,
+            );
+            reference.block_matmat(
+                &data[start * cols..(start + len) * cols],
+                len,
+                cols,
+                &x,
+                batch,
+                &mut want,
+            );
+            for i in 0..len * batch {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "{} idx {i}", k.name());
+            }
+        }
+    }
+
+    /// `axpy_rows` (the LT encode inner loop) must equal the explicit
+    /// per-row `add_assign` sequence, duplicates included.
+    #[test]
+    fn axpy_rows_matches_explicit_add_loop() {
+        let reference = &scalar::ScalarKernel;
+        for k in kernels_under_test() {
+            let cols = 33;
+            let block = int_data(7 * cols, 3);
+            let rows = [0usize, 2, 2, 6, 5];
+            let mut acc = int_data(cols, 4);
+            let mut want = acc.clone();
+            k.axpy_rows(&mut acc, &block, cols, &rows);
+            for &r in &rows {
+                reference.add_assign(&mut want, &block[r * cols..(r + 1) * cols]);
+            }
+            assert_eq!(acc, want, "{}", k.name());
+            // empty selection is the identity
+            k.axpy_rows(&mut acc, &block, cols, &[]);
+            assert_eq!(acc, want, "{}", k.name());
         }
     }
 

@@ -11,6 +11,8 @@ pub mod dataset;
 mod dense;
 pub mod kernel;
 pub mod ops;
+pub mod sparse;
 
 pub use aligned::AlignedBuf;
 pub use dense::Matrix;
+pub use sparse::{CsrMatrix, ShardData};

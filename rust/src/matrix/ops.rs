@@ -71,6 +71,44 @@ pub fn axpy(acc: &mut [f32], c: f32, src: &[f32]) {
     kernel::active().axpy(acc, c, src)
 }
 
+/// Sparse matvec over a CSR row window (`out.len()` rows). `indptr`
+/// offsets are absolute into the full `indices`/`values` arrays — see
+/// the `Kernel::csr_matvec` contract.
+pub fn csr_matvec(indptr: &[u32], indices: &[u32], values: &[f32], x: &[f32], out: &mut [f32]) {
+    assert_eq!(indptr.len(), out.len() + 1);
+    assert_eq!(indices.len(), values.len());
+    assert!(*indptr.last().unwrap() as usize <= values.len());
+    kernel::active().csr_matvec(indptr, indices, values, x, out)
+}
+
+/// Sparse `out = block · X` over a CSR row window against a row-major
+/// `cols × batch` query block (gather-free; see
+/// `Kernel::csr_block_matmat`).
+pub fn csr_block_matmat(
+    indptr: &[u32],
+    indices: &[u32],
+    values: &[f32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    assert!(batch >= 1);
+    assert_eq!(out.len() % batch, 0);
+    assert_eq!(indptr.len(), out.len() / batch + 1);
+    assert_eq!(indices.len(), values.len());
+    assert!(*indptr.last().unwrap() as usize <= values.len());
+    assert_eq!(x.len() % batch, 0);
+    kernel::active().csr_block_matmat(indptr, indices, values, x, batch, out)
+}
+
+/// `acc += block[r,:]` for each selected row `r` — the LT encode inner
+/// loop (unit coefficients, contiguous SIMD adds).
+pub fn axpy_rows(acc: &mut [f32], block: &[f32], cols: usize, rows: &[usize]) {
+    assert_eq!(acc.len(), cols);
+    assert_eq!(block.len() % cols.max(1), 0);
+    kernel::active().axpy_rows(acc, block, cols, rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

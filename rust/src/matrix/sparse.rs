@@ -1,0 +1,510 @@
+//! CSR sparse storage and the dense/sparse shard payload enum.
+//!
+//! The paper's motivating workloads (recommender models, graph mining,
+//! ML feature matrices) are overwhelmingly sparse; storing them dense
+//! pays `n / nnz_per_row` times the FLOPs and memory bandwidth the data
+//! needs. [`CsrMatrix`] is the classic three-array compressed sparse row
+//! layout:
+//!
+//! * `indptr` — `rows + 1` offsets, `indptr[r]..indptr[r+1]` is row
+//!   `r`'s slice of the other two arrays (`indptr[0] == 0`, monotone);
+//! * `indices` — the column of each stored entry, strictly increasing
+//!   within a row;
+//! * `values` — the entry values, in an [`AlignedBuf`] so the value
+//!   stream starts 64-byte aligned like dense shard storage (`indptr`
+//!   and `indices` are only ever read as offsets and stay plain vectors).
+//!
+//! The sparse kernels (see `matrix/kernel`) take an *indptr window* plus
+//! the **full** `indices`/`values` arrays: offsets in a window stay
+//! absolute, so slicing a row range out of a shard for one task is
+//! zero-copy — exactly how [`CsrMatrix::matmat_chunk`] feeds the worker
+//! hot loop.
+//!
+//! [`ShardData`] is the payload type threaded through
+//! `EncodedShards` → `WorkerPool::install_shards` → the worker execute
+//! path → the TCP streamed install, so a CSR shard is CSR end to end —
+//! never densified on the wire or at rest. Dense stays the default;
+//! every pre-existing call site wraps with [`ShardData::from`].
+
+use std::sync::Arc;
+
+use super::aligned::AlignedBuf;
+use super::dense::Matrix;
+use super::ops;
+
+/// Compressed sparse row matrix. Invariants (checked by [`Self::new`] /
+/// [`Self::try_new`]): `indptr.len() == rows + 1`, `indptr[0] == 0`,
+/// `indptr` monotone, `indptr[rows] == indices.len() == values.len()`,
+/// and within each row the column indices are strictly increasing and
+/// `< cols`. Explicitly stored zeros are allowed on input (the wire
+/// accepts them) but the constructors here never produce them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<u32>,
+    indices: Vec<u32>,
+    values: AlignedBuf,
+}
+
+impl CsrMatrix {
+    /// Validating constructor — the TCP install path funnels untrusted
+    /// wire bytes through here, so every invariant is an `Err`, not a
+    /// panic.
+    pub fn try_new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self, String> {
+        if indptr.len() != rows + 1 {
+            return Err(format!(
+                "indptr has {} entries, want rows + 1 = {}",
+                indptr.len(),
+                rows + 1
+            ));
+        }
+        if indptr[0] != 0 {
+            return Err("indptr[0] must be 0".to_string());
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("indptr must be monotone nondecreasing".to_string());
+        }
+        let nnz = indptr[rows] as usize;
+        if indices.len() != nnz || values.len() != nnz {
+            return Err(format!(
+                "indptr announces {nnz} entries but indices/values hold {}/{}",
+                indices.len(),
+                values.len()
+            ));
+        }
+        for r in 0..rows {
+            let row = &indices[indptr[r] as usize..indptr[r + 1] as usize];
+            if row.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("row {r}: column indices not strictly increasing"));
+            }
+            if row.last().is_some_and(|&c| c as usize >= cols) {
+                return Err(format!("row {r}: column index out of range (cols = {cols})"));
+            }
+        }
+        Ok(Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values: AlignedBuf::from_vec(values),
+        })
+    }
+
+    /// [`Self::try_new`] for trusted in-process callers.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        match Self::try_new(rows, cols, indptr, indices, values) {
+            Ok(m) => m,
+            Err(e) => panic!("invalid CSR: {e}"),
+        }
+    }
+
+    /// Compress a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Matrix) -> Self {
+        let (rows, cols) = (a.rows(), a.cols());
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0u32);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..rows {
+            for (c, &v) in a.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values: AlignedBuf::from_vec(values),
+        }
+    }
+
+    /// Build from `(row, col, value)` triplets in any order: duplicates
+    /// are summed, entries that sum to exactly zero are dropped.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f32)]) -> Self {
+        let mut t: Vec<(usize, usize, f32)> = triplets.to_vec();
+        t.sort_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0u32; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut values: Vec<f32> = Vec::with_capacity(t.len());
+        let mut i = 0;
+        while i < t.len() {
+            let (r, c, mut v) = t[i];
+            assert!(r < rows && c < cols, "triplet ({r}, {c}) out of range");
+            i += 1;
+            while i < t.len() && t[i].0 == r && t[i].1 == c {
+                v += t[i].2;
+                i += 1;
+            }
+            if v != 0.0 {
+                indices.push(c as u32);
+                values.push(v);
+                indptr[r + 1] += 1;
+            }
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values: AlignedBuf::from_vec(values),
+        }
+    }
+
+    /// Expand to a dense matrix (absent entries become 0.0).
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.dense_rows(0, self.rows))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Stored fraction: `nnz / (rows * cols)` (1.0 for an empty shape).
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// Largest per-row entry count — how low-weight encode output is
+    /// checked against its `max_row_weight` cap.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.rows)
+            .map(|r| (self.indptr[r + 1] - self.indptr[r]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn indptr(&self) -> &[u32] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Row `r`'s slice bounds into `indices`/`values`.
+    pub fn row_range(&self, r: usize) -> (usize, usize) {
+        (self.indptr[r] as usize, self.indptr[r + 1] as usize)
+    }
+
+    /// `self · x` through the dispatched sparse kernel.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows];
+        ops::csr_matvec(&self.indptr, &self.indices, &self.values, x, &mut out);
+        out
+    }
+
+    /// The worker hot path: products of rows `start .. start + len`
+    /// against the `cols × batch` query block, row-major `len × batch`
+    /// out. Zero-copy — the indptr window keeps absolute offsets, so no
+    /// index rebasing and no row extraction happens per task.
+    pub fn matmat_chunk(&self, start: usize, len: usize, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len * batch];
+        ops::csr_block_matmat(
+            &self.indptr[start..start + len + 1],
+            &self.indices,
+            &self.values,
+            x,
+            batch,
+            &mut out,
+        );
+        out
+    }
+
+    /// Rows `start .. start + len` densified into a row-major buffer —
+    /// the steal-grant path (inline rows on the wire are dense) and the
+    /// v1 install fallback.
+    pub fn dense_rows(&self, start: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len * self.cols];
+        for r in 0..len {
+            let (lo, hi) = self.row_range(start + r);
+            let row = &mut out[r * self.cols..(r + 1) * self.cols];
+            for k in lo..hi {
+                row[self.indices[k] as usize] = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// A standalone copy of rows `start .. start + len` (indptr rebased
+    /// to zero).
+    pub fn slice_rows(&self, start: usize, len: usize) -> CsrMatrix {
+        let base = self.indptr[start];
+        let indptr: Vec<u32> = self.indptr[start..start + len + 1]
+            .iter()
+            .map(|&p| p - base)
+            .collect();
+        let (lo, hi) = (self.indptr[start] as usize, self.indptr[start + len] as usize);
+        Self {
+            rows: len,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[lo..hi].to_vec(),
+            values: AlignedBuf::from_slice(&self.values[lo..hi]),
+        }
+    }
+}
+
+/// The shard payload installed on a worker: dense (the default, and the
+/// only shape most codes produce) or CSR (sparse inputs under the
+/// sparsity-preserving encodings). Cheap to clone — both arms are `Arc`s.
+#[derive(Clone, Debug)]
+pub enum ShardData {
+    Dense(Arc<Matrix>),
+    Csr(Arc<CsrMatrix>),
+}
+
+impl ShardData {
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardData::Dense(m) => m.rows(),
+            ShardData::Csr(c) => c.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            ShardData::Dense(m) => m.cols(),
+            ShardData::Csr(c) => c.cols(),
+        }
+    }
+
+    /// Stored entries (`rows * cols` for dense).
+    pub fn nnz(&self) -> usize {
+        match self {
+            ShardData::Dense(m) => m.rows() * m.cols(),
+            ShardData::Csr(c) => c.nnz(),
+        }
+    }
+
+    pub fn is_csr(&self) -> bool {
+        matches!(self, ShardData::Csr(_))
+    }
+
+    pub fn as_dense(&self) -> Option<&Arc<Matrix>> {
+        match self {
+            ShardData::Dense(m) => Some(m),
+            ShardData::Csr(_) => None,
+        }
+    }
+
+    pub fn as_csr(&self) -> Option<&Arc<CsrMatrix>> {
+        match self {
+            ShardData::Dense(_) => None,
+            ShardData::Csr(c) => Some(c),
+        }
+    }
+
+    /// The dense matrix behind this shard. Panics on a CSR shard —
+    /// a test/diagnostic accessor for call sites that are dense by
+    /// construction, not a conversion (use [`Self::dense_rows`] to
+    /// densify).
+    pub fn dense(&self) -> &Matrix {
+        self.as_dense().expect("shard is CSR, not dense")
+    }
+
+    /// The dense row-major payload. Panics on a CSR shard (see
+    /// [`Self::dense`]).
+    pub fn data(&self) -> &[f32] {
+        self.dense().data()
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            ShardData::Dense(m) => m.matvec(x),
+            ShardData::Csr(c) => c.matvec(x),
+        }
+    }
+
+    /// Rows `start .. start + len` as a dense row-major buffer, whatever
+    /// the storage — the steal-grant path ships dense rows inline either
+    /// way.
+    pub fn dense_rows(&self, start: usize, len: usize) -> Vec<f32> {
+        match self {
+            ShardData::Dense(m) => m.row_block(start, len).to_vec(),
+            ShardData::Csr(c) => c.dense_rows(start, len),
+        }
+    }
+}
+
+impl From<Arc<Matrix>> for ShardData {
+    fn from(m: Arc<Matrix>) -> Self {
+        ShardData::Dense(m)
+    }
+}
+
+impl From<Matrix> for ShardData {
+    fn from(m: Matrix) -> Self {
+        ShardData::Dense(Arc::new(m))
+    }
+}
+
+impl From<Arc<CsrMatrix>> for ShardData {
+    fn from(c: Arc<CsrMatrix>) -> Self {
+        ShardData::Csr(c)
+    }
+}
+
+impl From<CsrMatrix> for ShardData {
+    fn from(c: CsrMatrix) -> Self {
+        ShardData::Csr(Arc::new(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checkerboard(rows: usize, cols: usize) -> Matrix {
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| {
+                if (i / cols + i % cols) % 3 == 0 {
+                    (i % 7) as f32 - 3.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn dense_roundtrip_is_exact() {
+        let a = checkerboard(9, 13); // odd shape on purpose
+        let c = CsrMatrix::from_dense(&a);
+        assert_eq!(c.to_dense().data(), a.data());
+        assert!(c.density() < 0.4, "checkerboard stores under 40%");
+        // stored entries are never explicit zeros
+        assert!(c.values().iter().all(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn from_triplets_sums_duplicates_and_drops_zeros() {
+        let c = CsrMatrix::from_triplets(
+            3,
+            4,
+            &[(2, 1, 1.5), (0, 3, 2.0), (2, 1, 0.5), (1, 0, 4.0), (1, 0, -4.0)],
+        );
+        assert_eq!(c.nnz(), 2); // (1,0) cancelled to zero and was dropped
+        let d = c.to_dense();
+        assert_eq!(d.row(0)[3], 2.0);
+        assert_eq!(d.row(2)[1], 2.0);
+        assert_eq!(d.row(1), &[0.0; 4]);
+    }
+
+    #[test]
+    fn matvec_matches_dense_bit_for_bit_on_integer_data() {
+        let a = Matrix::random_ints(17, 23, 3, 42);
+        let x = Matrix::random_int_vector(23, 3, 7);
+        let c = CsrMatrix::from_dense(&a);
+        let want = a.matvec(&x);
+        let got = c.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn matmat_chunk_window_matches_dense_rows() {
+        let a = Matrix::random_ints(12, 9, 3, 5);
+        let c = CsrMatrix::from_dense(&a);
+        let batch = 4;
+        let x = Matrix::random_ints(9, batch, 3, 6);
+        let got = c.matmat_chunk(3, 5, x.data(), batch);
+        let mut want = vec![0.0f32; 5 * batch];
+        ops::block_matmat(a.row_block(3, 5), 5, 9, x.data(), batch, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_and_all_zero_rows_are_legal() {
+        let a = Matrix::from_vec(4, 3, vec![0.0; 12]);
+        let c = CsrMatrix::from_dense(&a);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.max_row_nnz(), 0);
+        assert_eq!(c.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 4]);
+        assert_eq!(c.dense_rows(1, 2), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn slice_rows_rebases_indptr() {
+        let a = checkerboard(10, 6);
+        let c = CsrMatrix::from_dense(&a);
+        let s = c.slice_rows(4, 3);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.indptr()[0], 0);
+        assert_eq!(s.dense_rows(0, 3), c.dense_rows(4, 3));
+    }
+
+    #[test]
+    fn try_new_rejects_malformed_arrays() {
+        // indptr wrong length
+        assert!(CsrMatrix::try_new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // nonzero start
+        assert!(CsrMatrix::try_new(1, 2, vec![1, 1], vec![], vec![]).is_err());
+        // non-monotone
+        assert!(CsrMatrix::try_new(2, 2, vec![0, 1, 0], vec![0], vec![1.0]).is_err());
+        // length mismatch
+        assert!(CsrMatrix::try_new(1, 2, vec![0, 2], vec![0], vec![1.0]).is_err());
+        // unsorted columns within a row
+        assert!(CsrMatrix::try_new(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err());
+        // column out of range
+        assert!(CsrMatrix::try_new(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // and the happy path with an explicit stored zero is accepted
+        assert!(CsrMatrix::try_new(1, 2, vec![0, 1], vec![1], vec![0.0]).is_ok());
+    }
+
+    #[test]
+    fn shard_data_dispatches_both_storages() {
+        let a = Matrix::random_ints(6, 5, 3, 9);
+        let x = Matrix::random_int_vector(5, 3, 4);
+        let csr = ShardData::from(CsrMatrix::from_dense(&a));
+        let dense = ShardData::from(a);
+        assert_eq!(dense.rows(), csr.rows());
+        assert_eq!(dense.cols(), csr.cols());
+        assert!(csr.is_csr() && !dense.is_csr());
+        assert!(csr.nnz() <= dense.nnz());
+        for (d, c) in dense.matvec(&x).iter().zip(csr.matvec(&x)) {
+            assert_eq!(d.to_bits(), c.to_bits());
+        }
+        assert_eq!(dense.dense_rows(2, 3), csr.dense_rows(2, 3));
+    }
+}

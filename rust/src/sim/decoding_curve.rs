@@ -27,6 +27,7 @@ pub fn decode_progress(m: usize, c: f64, delta: f64, seed: u64, max_factor: f64)
         alpha: max_factor,
         c,
         delta,
+        max_weight: None,
     };
     let code = LtCode::new(m, params, seed);
     let mut dec = PeelingDecoder::new(m, 1);

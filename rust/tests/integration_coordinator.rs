@@ -5,8 +5,10 @@
 use rateless::coding::lt::LtParams;
 use rateless::coding::raptor::RaptorParams;
 use rateless::config::ClusterConfig;
+use rateless::coordinator::scheduler::SchedulerKind;
 use rateless::coordinator::straggler::StragglerProfile;
 use rateless::coordinator::{Coordinator, JobError, JobOptions, Strategy};
+use rateless::matrix::dataset::sparse_feature_matrix;
 use rateless::matrix::Matrix;
 use rateless::runtime::Engine;
 use rateless::util::dist::DelayDist;
@@ -170,4 +172,62 @@ fn failure_tolerance_boundaries() {
     .unwrap();
     let res = lt.multiply_opts(&x, &opts).expect("LT under 2 failures");
     verify(&res, &a.matvec(&x), "lt 2 failures");
+}
+
+/// Sparse CSR coordinator end to end: uncoded, classic LT and the
+/// low-weight (degree-capped) LT all decode to the dense product, bit
+/// for bit — integer-valued data keeps every f32 sum exact, so any
+/// scheduling or summation order must still reproduce it.
+#[test]
+fn csr_coordinator_matches_dense_product_bitwise() {
+    let (m, n, p) = (192usize, 24usize, 4usize);
+    let sp = sparse_feature_matrix(m, n, 0.05, 31);
+    let dense = sp.to_dense();
+    let x = Matrix::random_int_vector(n, 3, 41);
+    let want = dense.matvec(&x);
+    for strategy in [
+        Strategy::Uncoded,
+        Strategy::Lt(LtParams::with_alpha(3.5)),
+        // the capped distribution loses its high-degree spike, so the
+        // low-weight variant needs a roomier α to stay decodable
+        Strategy::Lt(LtParams::with_alpha(5.0).with_max_weight(12)),
+    ] {
+        let tag = format!("csr {} m={m} n={n} p={p}", strategy.name());
+        let coord = Coordinator::new_csr(cluster(p), strategy, Engine::Native, &sp).expect(&tag);
+        let res = coord.multiply(&x).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(res.b.len(), want.len(), "{tag}");
+        for (i, (g, w)) in res.b.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{tag} row {i}");
+        }
+    }
+}
+
+/// Work stealing over CSR shards on a heterogeneous fleet stays
+/// byte-identical to the dense product: thieves run row-range tasks
+/// against the victim's CSR shard (stolen grants densify only on the
+/// wire), and exact integer arithmetic pins the result regardless of
+/// which worker computed which rows.
+#[test]
+fn csr_work_stealing_is_byte_identical() {
+    let (m, n, p) = (400usize, 16usize, 4usize);
+    let sp = sparse_feature_matrix(m, n, 0.05, 51);
+    let x = Matrix::random_int_vector(n, 3, 52);
+    let want = sp.to_dense().matvec(&x);
+    let mut cl = cluster(p);
+    cl.delay = DelayDist::None;
+    cl.scheduler = SchedulerKind::WorkStealing;
+    cl.speeds = vec![1.0, 1.0, 1.0, 0.25];
+    let coord = Coordinator::new_csr(
+        cl,
+        Strategy::Lt(LtParams::with_alpha(3.0)),
+        Engine::Native,
+        &sp,
+    )
+    .expect("csr stealing coordinator");
+    for j in 0..3 {
+        let res = coord.multiply(&x).expect("stealing job");
+        for (i, (g, w)) in res.b.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "job {j} row {i}");
+        }
+    }
 }

@@ -1,0 +1,200 @@
+//! Bench: Byzantine-tolerant verification overhead — wall time of a
+//! batched LT multiply with integrity checking off vs on across a
+//! spot-check sampling-rate sweep, plus a lying-worker leg proving the
+//! quarantine path recovers the honest answer.
+//!
+//! Emits `BENCH_integrity.json` (override the directory with
+//! `RATELESS_BENCH_DIR`). Correctness is always asserted: every
+//! verified run must decode bit-identical to the verification-off run
+//! (integer data keeps f32 arithmetic exact), and the lying-worker leg
+//! must quarantine the liar and still match bitwise.
+//!
+//! The perf gate — end-to-end overhead ≤ 10% at the default 5% sampling
+//! rate — prints as a warning by default and hard-asserts under
+//! `RATELESS_BENCH_STRICT=1`. The end-to-end checksum (`C·b == (CA)·X`)
+//! is O(r·(m + n)) per job against the job's O(m·n·batch) compute, and a
+//! 5% spot-check touches one chunk in twenty, so 10% leaves margin.
+//!
+//! Knobs: `RATELESS_BENCH_IV_M/_IV_N/_IV_BATCH` (job shape),
+//! `RATELESS_BENCH_REPS`.
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::straggler::{FaultKind, FaultSpec, StragglerProfile};
+use rateless::coordinator::{Coordinator, JobOptions, Strategy};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::bench::{env_or, write_json};
+use rateless::util::dist::DelayDist;
+use rateless::util::json::Json;
+use std::time::Instant;
+
+/// Best-of-`reps` wall seconds for one invocation of `f`.
+fn best_secs<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn cluster(p: usize, verify: bool, sample_rate: f64) -> ClusterConfig {
+    let mut cluster = ClusterConfig {
+        workers: p,
+        // no injected straggling and zero-scaled sleeps: wall time is
+        // pure compute + decode + verification, which is what the
+        // overhead ratio must isolate
+        delay: DelayDist::None,
+        tau: 2e-5,
+        time_scale: 0.0,
+        real_sleep: true,
+        block_fraction: 0.25,
+        seed: 7,
+        ..ClusterConfig::default()
+    };
+    cluster.integrity.enabled = verify;
+    cluster.integrity.sample_rate = sample_rate;
+    cluster
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps: usize = env_or("RATELESS_BENCH_REPS", 5);
+    let m: usize = env_or("RATELESS_BENCH_IV_M", 4096);
+    let n: usize = env_or("RATELESS_BENCH_IV_N", 512);
+    let batch: usize = env_or("RATELESS_BENCH_IV_BATCH", 4);
+    let strict: usize = env_or("RATELESS_BENCH_STRICT", 0);
+    let p = 8usize;
+
+    println!("integrity bench: {m}x{n} batch={batch} p={p} LT alpha=2.0 (best of {reps})");
+
+    // integer data: every f32 op is exact, so verified runs must match
+    // the baseline bit for bit, not approximately
+    let a = Matrix::random_ints(m, n, 3, 21);
+    let xs = Matrix::random_ints(n, batch, 3, 22);
+    let strategy = Strategy::Lt(LtParams::with_alpha(2.0));
+    let opts = JobOptions {
+        seed: Some(1),
+        profile: None,
+    };
+
+    // ---- baseline: verification off ----
+    let coord_off = Coordinator::new(cluster(p, false, 0.0), strategy.clone(), Engine::Native, &a)?;
+    let mut base = coord_off.multiply_batch_opts(&xs, &opts)?;
+    let s_off = best_secs(reps, || {
+        base = coord_off.multiply_batch_opts(&xs, &opts).expect("baseline job");
+    });
+    println!("  verify off: {:.3e} s/job ({:.3e} rows/s)", s_off, m as f64 / s_off);
+
+    // ---- sampling-rate sweep: overhead of the verified path ----
+    // rate 0.0 isolates the mandatory end-to-end checksum; 1.0 is the
+    // worst case (every chunk spot-checked)
+    let mut sweep: Vec<Json> = Vec::new();
+    let mut overhead_at_default = f64::NAN;
+    for &rate in &[0.0f64, 0.05, 0.25, 1.0] {
+        let t0 = Instant::now();
+        let coord = Coordinator::new(cluster(p, true, rate), strategy.clone(), Engine::Native, &a)?;
+        let setup = t0.elapsed().as_secs_f64();
+        let mut res = coord.multiply_batch_opts(&xs, &opts)?;
+        let s_on = best_secs(reps, || {
+            res = coord.multiply_batch_opts(&xs, &opts).expect("verified job");
+        });
+        assert_eq!(res.corrupt_chunks, 0, "honest run must not flag chunks (rate {rate})");
+        assert!(res.quarantined_workers.is_empty(), "honest run quarantined (rate {rate})");
+        for (g, w) in res.b.iter().zip(&base.b) {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "verified decode must be bit-identical to baseline (rate {rate})"
+            );
+        }
+        let overhead = s_on / s_off - 1.0;
+        if rate == 0.05 {
+            overhead_at_default = overhead;
+        }
+        println!(
+            "  verify rate {rate:.2}: {:.3e} s/job | overhead {:+.1}% | setup {:.3e} s",
+            s_on,
+            overhead * 100.0,
+            setup
+        );
+        sweep.push(Json::obj(vec![
+            ("sample_rate", Json::Num(rate)),
+            ("secs_per_job", Json::Num(s_on)),
+            ("overhead_frac", Json::Num(overhead)),
+            ("setup_secs", Json::Num(setup)),
+        ]));
+    }
+
+    // ---- lying-worker leg: quarantine recovers the honest answer ----
+    let coord = Coordinator::new(cluster(p, true, 1.0), strategy, Engine::Native, &a)?;
+    let mut lying: Vec<Json> = Vec::new();
+    for (name, kind) in [("bitflip", FaultKind::BitFlip), ("scale", FaultKind::Scale)] {
+        let opts_lie = JobOptions {
+            seed: Some(1),
+            profile: Some(StragglerProfile::none().with_fault(
+                1,
+                FaultSpec {
+                    kind,
+                    after_rows: 0,
+                },
+            )),
+        };
+        let res = coord.multiply_batch_opts(&xs, &opts_lie)?;
+        assert_eq!(res.quarantined_workers, vec![1], "{name}: liar must be quarantined");
+        assert!(res.corrupt_chunks >= 1, "{name}: corrupt chunks must be counted");
+        for (g, w) in res.b.iter().zip(&base.b) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{name}: decode must survive the liar bitwise");
+        }
+        println!(
+            "  lying worker ({name}): quarantined {:?} | corrupt chunks {} | decode bit-identical",
+            res.quarantined_workers, res.corrupt_chunks
+        );
+        lying.push(Json::obj(vec![
+            ("fault", Json::str(name)),
+            ("quarantined", Json::Int(res.quarantined_workers.len() as i64)),
+            ("corrupt_chunks", Json::Int(res.corrupt_chunks as i64)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+
+    // ---- acceptance ----
+    let mut notes: Vec<String> = Vec::new();
+    if !(overhead_at_default <= 0.10) {
+        notes.push(format!(
+            "verification overhead {:+.1}% at 5% sampling exceeds the 10% target on this host",
+            overhead_at_default * 100.0
+        ));
+    }
+    for note in &notes {
+        println!("  NOTE: {note}");
+    }
+    if strict == 1 {
+        assert!(
+            overhead_at_default <= 0.10,
+            "strict: verification overhead {:+.1}% at 5% sampling > 10%",
+            overhead_at_default * 100.0
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("integrity")),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("m", Json::Int(m as i64)),
+        ("n", Json::Int(n as i64)),
+        ("batch", Json::Int(batch as i64)),
+        ("workers", Json::Int(p as i64)),
+        ("secs_per_job_off", Json::Num(s_off)),
+        ("rate_sweep", Json::Arr(sweep)),
+        ("overhead_frac_at_default", Json::Num(overhead_at_default)),
+        ("lying_worker", Json::Arr(lying)),
+        (
+            "notes",
+            Json::Arr(notes.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    let path = write_json("BENCH_integrity.json", &doc)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

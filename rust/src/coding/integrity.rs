@@ -1,0 +1,445 @@
+//! Integrity checking for Byzantine workers: homomorphic checksums over
+//! the source matrix plus random-linear-combination spot checks of
+//! returned chunks (DESIGN.md §11).
+//!
+//! The construction follows the ABFT checksum line of work surveyed in
+//! Ramamoorthy et al. (arXiv:2002.03515): a small secret check matrix
+//! `C` (r × m, random ±1 entries derived from the cluster seed) is fixed
+//! per matrix, and `CA` (r × n) is precomputed **once** at assemble time.
+//! Because every decode output claims to be `b = A·X`, the master can
+//! verify the whole job in O(r·(m+n)·batch) — independent of the number
+//! of workers — by checking `C·b == (CA)·X` column by column. Any single
+//! corrupted row of `b` flips `C·b` in every check row with probability
+//! 1 − 2⁻ʳ, so an r of 4 already catches a lying worker with
+//! probability 15/16 per corrupted output column; the per-chunk spot
+//! checks below push detection to *before* the bad symbol ever enters
+//! the decoder.
+//!
+//! Spot checks verify returned chunks directly against the retained
+//! encoded shards (the master keeps `Arc` clones — no copy): draw random
+//! small-integer coefficients `c_j` over the chunk's rows, fold
+//! `combo = Σ c_j · A_e[row_j]` (one pass over the rows), and test
+//! `Σ c_j · p_j == combo · X` per batch column. A worker returning
+//! garbage for any sampled row fails the check with probability
+//! ≈ 1 − 1/q over the coefficient draw. This works unchanged for every
+//! code (LT, systematic LT, Raptor, MDS, replication, uncoded) because
+//! it never needs the source-row composition of an encoded row — only
+//! the encoded row itself, which the master already holds.
+//!
+//! All verification arithmetic accumulates in `f64`. On the paper's
+//! integer-valued workloads (products < 2²⁴) both sides of every check
+//! are exact, so honest workers can never fail a check; on real-valued
+//! data the comparison is relative with a configurable tolerance far
+//! above f32 kernel noise and far below any meaningful corruption.
+
+use std::sync::Arc;
+
+use crate::matrix::{CsrMatrix, Matrix, ShardData};
+use crate::util::rng::{derive_seed, Rng};
+
+/// Salt folded into the cluster seed so check-vector streams never
+/// collide with worker/job seed streams derived from the same base.
+const CHECK_SALT: u64 = 0xC0DE_C4EC_1234_ABCD;
+
+/// Outcome of one per-chunk spot check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpotCheck {
+    /// Not sampled this time (sampling rate < 1).
+    Skipped,
+    /// Sampled and consistent with the retained shard rows.
+    Pass,
+    /// Sampled and inconsistent — the computing worker is lying.
+    Fail,
+}
+
+/// Relative-tolerance comparison that treats NaN/Inf as a failure: a
+/// bit-flipped exponent can produce NaN, and `NaN > x` is false, so the
+/// check must be written as `!(diff <= bound)`.
+#[inline]
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    let diff = (a - b).abs();
+    diff <= tol * scale // false for NaN on either side
+}
+
+/// Per-matrix checksum state: the packed ±1 check matrix `C` and the
+/// precomputed fold `CA`, built once at assemble time and amortized
+/// across every job served from that matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixChecksum {
+    /// Check rows r.
+    r: usize,
+    /// Source rows m (`C` is r × m).
+    m: usize,
+    /// `C` packed as sign bits, `words_per_row` u64s per check row.
+    signs: Vec<u64>,
+    words_per_row: usize,
+    /// `C·A`, r × n row-major, accumulated and stored in f64.
+    ca: Vec<f64>,
+    n: usize,
+    tolerance: f64,
+}
+
+impl MatrixChecksum {
+    fn empty(r: usize, m: usize, n: usize, seed: u64, tolerance: f64) -> Self {
+        assert!(r >= 1, "check_rows must be >= 1");
+        let words_per_row = m.div_ceil(64);
+        let mut signs = Vec::with_capacity(r * words_per_row);
+        for j in 0..r {
+            let mut rng = Rng::new(derive_seed(seed ^ CHECK_SALT, j as u64));
+            for _ in 0..words_per_row {
+                signs.push(rng.next_u64());
+            }
+        }
+        Self {
+            r,
+            m,
+            signs,
+            words_per_row,
+            ca: vec![0.0; r * n],
+            n,
+            tolerance,
+        }
+    }
+
+    /// Sign of `C[j, i]`: +1.0 or -1.0.
+    #[inline]
+    fn sign(&self, j: usize, i: usize) -> f64 {
+        let w = self.signs[j * self.words_per_row + i / 64];
+        if (w >> (i % 64)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Build the checksum for a dense source matrix.
+    pub fn from_dense(a: &Matrix, r: usize, seed: u64, tolerance: f64) -> Self {
+        let mut cs = Self::empty(r, a.rows(), a.cols(), seed, tolerance);
+        for j in 0..r {
+            let caj = j * cs.n;
+            for i in 0..cs.m {
+                let s = cs.sign(j, i);
+                for (k, &v) in a.row(i).iter().enumerate() {
+                    cs.ca[caj + k] += s * v as f64;
+                }
+            }
+        }
+        cs
+    }
+
+    /// Build the checksum for a CSR source matrix (cost O(r·nnz)).
+    pub fn from_csr(a: &CsrMatrix, r: usize, seed: u64, tolerance: f64) -> Self {
+        let mut cs = Self::empty(r, a.rows(), a.cols(), seed, tolerance);
+        let (indices, values) = (a.indices(), a.values());
+        for j in 0..r {
+            let caj = j * cs.n;
+            for i in 0..cs.m {
+                let s = cs.sign(j, i);
+                let (lo, hi) = a.row_range(i);
+                for k in lo..hi {
+                    cs.ca[caj + indices[k] as usize] += s * values[k] as f64;
+                }
+            }
+        }
+        cs
+    }
+
+    pub fn check_rows(&self) -> usize {
+        self.r
+    }
+
+    /// Mandatory post-decode check: `C·b == (CA)·X` for every batch
+    /// column, where `b` is the decoded `m × batch` output and `x` the
+    /// `n × batch` query block (both row-major). Returns the first
+    /// violated (check_row, column) pair as an error string.
+    pub fn verify_product(&self, x: &[f32], batch: usize, b: &[f32]) -> Result<(), String> {
+        assert_eq!(b.len(), self.m * batch, "decoded output shape mismatch");
+        assert_eq!(x.len(), self.n * batch, "query block shape mismatch");
+        for j in 0..self.r {
+            for col in 0..batch {
+                let mut cb = 0.0f64;
+                for i in 0..self.m {
+                    cb += self.sign(j, i) * b[i * batch + col] as f64;
+                }
+                let caj = &self.ca[j * self.n..(j + 1) * self.n];
+                let mut cax = 0.0f64;
+                for (k, &c) in caj.iter().enumerate() {
+                    cax += c * x[k * batch + col] as f64;
+                }
+                if !close(cb, cax, self.tolerance) {
+                    return Err(format!(
+                        "end-to-end checksum violated: check row {j}, batch column {col}: \
+                         C·b = {cb}, (CA)·X = {cax}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-job spot checker: verifies sampled chunks against the retained
+/// encoded shards before they reach the decoder.
+pub struct ChunkVerifier {
+    /// The fleet's encoded shards (shared with the coordinator — no copy).
+    shards: Arc<Vec<ShardData>>,
+    /// Query block `X`, n × batch row-major (shared with the job).
+    x: Arc<Vec<f32>>,
+    batch: usize,
+    sample_rate: f64,
+    tolerance: f64,
+    rng: Rng,
+    /// Chunks actually verified (sampled).
+    pub checked: usize,
+    /// Chunks that failed verification.
+    pub failed: usize,
+}
+
+impl ChunkVerifier {
+    pub fn new(
+        shards: Arc<Vec<ShardData>>,
+        x: Arc<Vec<f32>>,
+        batch: usize,
+        sample_rate: f64,
+        tolerance: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            shards,
+            x,
+            batch,
+            sample_rate: sample_rate.clamp(0.0, 1.0),
+            tolerance,
+            rng: Rng::new(derive_seed(seed ^ CHECK_SALT, u64::MAX)),
+            checked: 0,
+            failed: 0,
+        }
+    }
+
+    /// Spot-check one returned chunk with probability `sample_rate`.
+    ///
+    /// Draws random coefficients `c_j ∈ [1, 16]` over the chunk's rows,
+    /// folds the matching shard rows into `combo = Σ c_j·A_e[row_j]`,
+    /// and tests `Σ c_j·p_j == combo·X` per batch column. Malformed
+    /// metadata (out-of-range shard/rows, ragged product length) fails
+    /// outright — it can only come from a broken or hostile worker.
+    pub fn spot_check(&mut self, shard: usize, start_row: usize, products: &[f32]) -> SpotCheck {
+        if self.sample_rate < 1.0 && self.rng.next_f64() >= self.sample_rate {
+            return SpotCheck::Skipped;
+        }
+        self.checked += 1;
+        let batch = self.batch.max(1);
+        let ok = self.recheck(shard, start_row, products, batch);
+        if !ok {
+            self.failed += 1;
+            return SpotCheck::Fail;
+        }
+        SpotCheck::Pass
+    }
+
+    fn recheck(&mut self, shard: usize, start_row: usize, products: &[f32], batch: usize) -> bool {
+        if products.is_empty() || products.len() % batch != 0 {
+            return false;
+        }
+        let rows = products.len() / batch;
+        let Some(sd) = self.shards.get(shard) else {
+            return false;
+        };
+        if start_row + rows > sd.rows() {
+            return false;
+        }
+        let n = sd.cols();
+        // random small-integer coefficients: exact in f64 on integer data
+        let coeffs: Vec<f64> = (0..rows).map(|_| (self.rng.gen_range(16) + 1) as f64).collect();
+        let mut combo = vec![0.0f64; n];
+        match sd {
+            ShardData::Dense(m) => {
+                for (j, &c) in coeffs.iter().enumerate() {
+                    for (k, &v) in m.row(start_row + j).iter().enumerate() {
+                        combo[k] += c * v as f64;
+                    }
+                }
+            }
+            ShardData::Csr(m) => {
+                let (indices, values) = (m.indices(), m.values());
+                for (j, &c) in coeffs.iter().enumerate() {
+                    let (lo, hi) = m.row_range(start_row + j);
+                    for k in lo..hi {
+                        combo[indices[k] as usize] += c * values[k] as f64;
+                    }
+                }
+            }
+        }
+        for col in 0..batch {
+            let mut lhs = 0.0f64;
+            for (j, &c) in coeffs.iter().enumerate() {
+                lhs += c * products[j * batch + col] as f64;
+            }
+            let mut rhs = 0.0f64;
+            for (k, &cv) in combo.iter().enumerate() {
+                rhs += cv * self.x[k * batch + col] as f64;
+            }
+            if !close(lhs, rhs, self.tolerance) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOL: f64 = 1e-3;
+
+    fn x_block(n: usize, batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * batch).map(|_| rng.gen_range(8) as f32).collect()
+    }
+
+    /// b = A·X for a row-major n×batch X, m×batch out.
+    fn matmat(a: &Matrix, x: &[f32], batch: usize) -> Vec<f32> {
+        let (m, n) = (a.rows(), a.cols());
+        let mut out = vec![0.0f32; m * batch];
+        for i in 0..m {
+            for col in 0..batch {
+                let mut acc = 0.0f64;
+                for k in 0..n {
+                    acc += a.row(i)[k] as f64 * x[k * batch + col] as f64;
+                }
+                out[i * batch + col] = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn end_to_end_accepts_honest_product_and_rejects_corruption() {
+        let a = Matrix::random_ints(64, 16, 3, 42);
+        let batch = 3;
+        let x = x_block(16, batch, 7);
+        let cs = MatrixChecksum::from_dense(&a, 4, 99, TOL);
+        let mut b = matmat(&a, &x, batch);
+        cs.verify_product(&x, batch, &b).expect("honest product must verify");
+        // single corrupted entry flips the checksum
+        b[17 * batch + 1] += 3.0;
+        assert!(cs.verify_product(&x, batch, &b).is_err());
+    }
+
+    #[test]
+    fn csr_checksum_matches_dense_checksum() {
+        let dense = Matrix::random_ints(48, 12, 2, 5);
+        let csr = CsrMatrix::from_dense(&dense);
+        let a = MatrixChecksum::from_dense(&dense, 3, 11, TOL);
+        let b = MatrixChecksum::from_csr(&csr, 3, 11, TOL);
+        assert_eq!(a.signs, b.signs);
+        for (x, y) in a.ca.iter().zip(&b.ca) {
+            assert_eq!(x, y, "CA must be identical for identical matrices");
+        }
+    }
+
+    #[test]
+    fn end_to_end_rejects_nan() {
+        let a = Matrix::random_ints(32, 8, 3, 1);
+        let x = x_block(8, 1, 2);
+        let cs = MatrixChecksum::from_dense(&a, 4, 3, TOL);
+        let mut b = matmat(&a, &x, 1);
+        b[5] = f32::NAN;
+        assert!(cs.verify_product(&x, 1, &b).is_err(), "NaN must not pass");
+    }
+
+    fn verifier_for(shard: &Matrix, batch: usize, seed: u64) -> (ChunkVerifier, Vec<f32>) {
+        let n = shard.cols();
+        let x = Arc::new(x_block(n, batch, seed));
+        let products = {
+            let mut out = vec![0.0f32; shard.rows() * batch];
+            for i in 0..shard.rows() {
+                for col in 0..batch {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc += shard.row(i)[k] as f64 * x[k * batch + col] as f64;
+                    }
+                    out[i * batch + col] = acc as f32;
+                }
+            }
+            out
+        };
+        let v = ChunkVerifier::new(
+            Arc::new(vec![ShardData::from(shard.clone())]),
+            Arc::clone(&x),
+            batch,
+            1.0,
+            TOL,
+            77,
+        );
+        (v, products)
+    }
+
+    #[test]
+    fn spot_check_passes_honest_chunks_and_flags_corruption() {
+        let shard = Matrix::random_ints(20, 8, 3, 4);
+        let batch = 2;
+        let (mut v, products) = verifier_for(&shard, batch, 13);
+        // honest sub-chunk
+        let chunk = &products[4 * batch..9 * batch];
+        assert_eq!(v.spot_check(0, 4, chunk), SpotCheck::Pass);
+        // bit-flipped copy
+        let mut bad = chunk.to_vec();
+        bad[3] = f32::from_bits(bad[3].to_bits() ^ (1 << 30));
+        assert_eq!(v.spot_check(0, 4, &bad), SpotCheck::Fail);
+        // scaled copy
+        let mut scaled = chunk.to_vec();
+        for p in &mut scaled {
+            *p *= 2.0;
+        }
+        assert_eq!(v.spot_check(0, 4, &scaled), SpotCheck::Fail);
+        assert_eq!(v.checked, 3);
+        assert_eq!(v.failed, 2);
+    }
+
+    #[test]
+    fn spot_check_csr_shard_matches_dense_behaviour() {
+        let dense = Matrix::random_ints(16, 6, 2, 9);
+        let csr = CsrMatrix::from_dense(&dense);
+        let batch = 1;
+        let x = Arc::new(x_block(6, batch, 21));
+        let products: Vec<f32> = dense.matvec(&x);
+        let mut v = ChunkVerifier::new(
+            Arc::new(vec![ShardData::from(csr)]),
+            Arc::clone(&x),
+            batch,
+            1.0,
+            TOL,
+            8,
+        );
+        assert_eq!(v.spot_check(0, 3, &products[3..10]), SpotCheck::Pass);
+        let mut bad = products[3..10].to_vec();
+        bad[0] += 1.0;
+        assert_eq!(v.spot_check(0, 3, &bad), SpotCheck::Fail);
+    }
+
+    #[test]
+    fn spot_check_rejects_hostile_metadata() {
+        let shard = Matrix::random_ints(10, 4, 3, 2);
+        let (mut v, products) = verifier_for(&shard, 1, 31);
+        // shard index out of range
+        assert_eq!(v.spot_check(5, 0, &products[..4]), SpotCheck::Fail);
+        // rows past the shard end
+        assert_eq!(v.spot_check(0, 8, &products[..4]), SpotCheck::Fail);
+        // empty products
+        assert_eq!(v.spot_check(0, 0, &[]), SpotCheck::Fail);
+    }
+
+    #[test]
+    fn sampling_rate_zero_skips_everything() {
+        let shard = Matrix::random_ints(10, 4, 3, 6);
+        let (mut v, products) = verifier_for(&shard, 1, 41);
+        v.sample_rate = 0.0;
+        for s in 0..8 {
+            assert_eq!(v.spot_check(0, s, &products[s..s + 1]), SpotCheck::Skipped);
+        }
+        assert_eq!(v.checked, 0);
+    }
+}

@@ -13,12 +13,14 @@
 //! | `mds`         | §2.3, §4.4    | (p,k) MDS baseline over the reals |
 //! | `replication` | §2.3, §4.5    | r-replication / uncoded baseline |
 //! | `linsolve`    | §4.4          | LU solver substrate for MDS decode |
+//! | `integrity`   | DESIGN.md §11 | homomorphic checksums + chunk spot checks |
 //!
 //! Every strategy implements [`ErasureCode`] (the three rateless variants
 //! share their plumbing via the [`Fountain`] helper trait), so the
 //! coordinator is a single generic loop over `Box<dyn ErasureCode>`.
 
 pub mod erasure;
+pub mod integrity;
 pub mod linsolve;
 pub mod lt;
 pub mod mds;

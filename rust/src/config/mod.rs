@@ -151,6 +151,65 @@ pub struct ClusterConfig {
     /// robust-Soliton degrees, or the sparsity-preserving low-weight
     /// variant with a per-row degree cap.
     pub coding: CodingConfig,
+    /// Byzantine-tolerance knobs (`[integrity]` section): homomorphic
+    /// checksum verification of decoded outputs plus sampled per-chunk
+    /// spot checks with lying-worker quarantine (DESIGN.md §11).
+    pub integrity: IntegrityConfig,
+}
+
+/// Byzantine-tolerance knobs (`[integrity]` section).
+#[derive(Debug, Clone)]
+pub struct IntegrityConfig {
+    /// Master switch: when false (the default) no checksum is built, no
+    /// chunks are spot-checked and jobs run exactly as before.
+    pub enabled: bool,
+    /// Fraction of returned chunks spot-checked against the retained
+    /// shards (0 = end-to-end checksum only, 1 = check every chunk).
+    pub sample_rate: f64,
+    /// Check rows `r` of the homomorphic checksum: an undetected
+    /// corrupted output column survives with probability 2⁻ʳ.
+    pub check_rows: usize,
+    /// Relative comparison tolerance — far above f32 kernel noise, far
+    /// below any meaningful corruption. Exact workloads can tighten it.
+    pub tolerance: f64,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            sample_rate: 0.05,
+            check_rows: 4,
+            tolerance: 1e-3,
+        }
+    }
+}
+
+impl IntegrityConfig {
+    /// Read an `[integrity]` section; absent section = verification off.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        let cfg = Self {
+            enabled: doc.bool("integrity", "enabled", d.enabled),
+            sample_rate: doc.f64("integrity", "sample_rate", d.sample_rate),
+            check_rows: doc.usize("integrity", "check_rows", d.check_rows),
+            tolerance: doc.f64("integrity", "tolerance", d.tolerance),
+        };
+        assert!(
+            (0.0..=1.0).contains(&cfg.sample_rate),
+            "config integrity.sample_rate: must be in [0, 1], got {}",
+            cfg.sample_rate
+        );
+        assert!(
+            cfg.check_rows >= 1,
+            "config integrity.check_rows: must be at least 1"
+        );
+        assert!(
+            cfg.tolerance > 0.0,
+            "config integrity.tolerance: must be positive"
+        );
+        cfg
+    }
 }
 
 /// Degree policy of the rateless encoder.
@@ -372,6 +431,7 @@ impl Default for ClusterConfig {
             batching: BatchingConfig::default(),
             transport: TransportConfig::default(),
             coding: CodingConfig::default(),
+            integrity: IntegrityConfig::default(),
         }
     }
 }
@@ -410,6 +470,7 @@ impl ClusterConfig {
             batching: BatchingConfig::from_doc(doc),
             transport: TransportConfig::from_doc(doc),
             coding: CodingConfig::from_doc(doc),
+            integrity: IntegrityConfig::from_doc(doc),
         }
     }
 
@@ -635,6 +696,35 @@ alphas = [1.25, 2.0]
     fn coding_rejects_unknown_encoding() {
         let doc = Doc::from_str("[coding]\nencoding = \"huffman\"\n").unwrap();
         CodingConfig::from_doc(&doc);
+    }
+
+    #[test]
+    fn integrity_section_parse() {
+        // absent section: verification off, conservative defaults intact
+        let doc = Doc::from_str("[cluster]\nworkers = 4\n").unwrap();
+        let c = ClusterConfig::from_doc(&doc);
+        assert!(!c.integrity.enabled);
+        assert!((c.integrity.sample_rate - 0.05).abs() < 1e-12);
+        assert_eq!(c.integrity.check_rows, 4);
+        assert!((c.integrity.tolerance - 1e-3).abs() < 1e-15);
+        // explicit section
+        let doc = Doc::from_str(
+            "[integrity]\nenabled = true\nsample_rate = 0.25\ncheck_rows = 8\n\
+             tolerance = 0.0001\n",
+        )
+        .unwrap();
+        let i = IntegrityConfig::from_doc(&doc);
+        assert!(i.enabled);
+        assert!((i.sample_rate - 0.25).abs() < 1e-12);
+        assert_eq!(i.check_rows, 8);
+        assert!((i.tolerance - 1e-4).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "integrity.sample_rate")]
+    fn integrity_rejects_out_of_range_sample_rate() {
+        let doc = Doc::from_str("[integrity]\nsample_rate = 1.5\n").unwrap();
+        IntegrityConfig::from_doc(&doc);
     }
 
     #[test]

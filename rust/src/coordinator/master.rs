@@ -13,6 +13,17 @@
 //! The loop is strategy-agnostic: all code-specific behaviour lives behind
 //! the [`ErasureDecoder`] trait object minted by the coordinator's
 //! [`ErasureCode`](crate::coding::ErasureCode).
+//!
+//! **Byzantine tolerance** (DESIGN.md §11): with verification enabled the
+//! loop spot-checks sampled chunks against the retained encoded shards
+//! *before* they reach the decoder. A failed check quarantines the
+//! computing worker's lane (all its future chunks are dropped) and
+//! retracts its past contributions by **re-accumulation**: a fresh
+//! decoder is minted from the job's decoder factory and the retained
+//! honest chunks are re-ingested. The job then completes from the
+//! fountain's surplus — the rateless advantage — while fixed-rate codes
+//! surface `Undecodable` with the quarantine set attached so the
+//! coordinator can re-dispatch.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,9 +31,10 @@ use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coding::integrity::{ChunkVerifier, SpotCheck};
 use crate::coding::ErasureDecoder;
 
-use super::messages::WorkerEvent;
+use super::messages::{ChunkMsg, WorkerEvent};
 
 /// Per-worker load statistics (paper Fig. 2 bars).
 #[derive(Clone, Debug)]
@@ -64,6 +76,11 @@ pub struct JobResult {
     pub symbols_used: usize,
     /// Wall-clock seconds the master spent in decode bookkeeping.
     pub decode_cpu: f64,
+    /// Chunks that failed an integrity spot check (0 when verification
+    /// is off — or when every worker was honest).
+    pub corrupt_chunks: usize,
+    /// Workers quarantined for failing a spot check, ascending.
+    pub quarantined_workers: Vec<usize>,
     pub per_worker: Vec<WorkerStat>,
 }
 
@@ -89,6 +106,10 @@ pub enum JobError {
     /// A worker thread was gone at submission time (decommissioned via
     /// `kill` or crashed); the job never started.
     WorkerLost { worker: usize },
+    /// The decoded output failed the mandatory end-to-end checksum
+    /// (`C·b != (CA)·X`): corruption slipped past the sampled per-chunk
+    /// spot checks and reached the decoder.
+    IntegrityFailure { detail: String },
 }
 
 impl std::fmt::Display for JobError {
@@ -103,11 +124,46 @@ impl std::fmt::Display for JobError {
             JobError::WorkerLost { worker } => {
                 write!(f, "worker {worker} is gone; job not submitted")
             }
+            JobError::IntegrityFailure { detail } => {
+                write!(f, "integrity failure: {detail}")
+            }
         }
     }
 }
 
 impl std::error::Error for JobError {}
+
+/// Mints a fresh decoder for quarantine re-accumulation (the collect
+/// loop only holds a `Box<dyn ErasureDecoder>`; the coordinator, which
+/// knows the code and layout, supplies the factory).
+pub type DecoderFactory<'a> = &'a (dyn Fn() -> Box<dyn ErasureDecoder> + 'a);
+
+/// Verification state threaded through [`collect_verified`], owned by
+/// the caller so quarantine decisions survive a re-dispatch.
+pub struct VerifyState<'a> {
+    /// Spot checker (None ⇒ verification off; the loop degenerates to
+    /// plain [`collect`] behaviour).
+    pub verifier: Option<ChunkVerifier>,
+    /// Fresh-decoder factory for the re-accumulation path.
+    pub factory: Option<DecoderFactory<'a>>,
+    /// Blacklisted lanes. Pre-seeded on re-dispatch: every chunk from
+    /// these workers is dropped on arrival.
+    pub quarantined: HashSet<usize>,
+    /// Chunks that failed a spot check, cumulative across dispatches.
+    pub corrupt_chunks: usize,
+}
+
+impl VerifyState<'_> {
+    /// Verification disabled: the zero-cost default path.
+    pub fn off() -> Self {
+        Self {
+            verifier: None,
+            factory: None,
+            quarantined: HashSet::new(),
+            corrupt_chunks: 0,
+        }
+    }
+}
 
 /// Run the master loop: collect events from `rx` for `p` workers, cancel
 /// on completion, account C, and return the job result. `taus[i]` is
@@ -123,6 +179,35 @@ pub fn collect(
     initial_delays: &[f64],
     taus: &[f64],
     batch: usize,
+) -> Result<JobResult, JobError> {
+    collect_verified(
+        decoder,
+        rx,
+        cancel,
+        p,
+        initial_delays,
+        taus,
+        batch,
+        &mut VerifyState::off(),
+    )
+}
+
+/// [`collect`] with chunk verification and lying-worker quarantine
+/// (DESIGN.md §11). With `state.verifier` set, sampled chunks are
+/// re-checked against the retained encoded shards before ingest; a
+/// failed check quarantines the worker's lane and — when a factory is
+/// available — retracts its prior contributions by rebuilding the
+/// decoder from the retained honest chunks.
+#[allow(clippy::too_many_arguments)]
+pub fn collect_verified(
+    decoder: Box<dyn ErasureDecoder>,
+    rx: &Receiver<WorkerEvent>,
+    cancel: &Arc<AtomicBool>,
+    p: usize,
+    initial_delays: &[f64],
+    taus: &[f64],
+    batch: usize,
+    state: &mut VerifyState<'_>,
 ) -> Result<JobResult, JobError> {
     let mut per_worker: Vec<WorkerStat> = initial_delays
         .iter()
@@ -148,6 +233,12 @@ pub fn collect(
     // stolen/redundant statistics would double-count — so duplicates are
     // dropped here, before any accounting.
     let mut seen: HashSet<(usize, usize, usize)> = HashSet::new();
+    // With verification + a factory, every ingested chunk is retained so
+    // a later quarantine can rebuild the decoder without the liar's
+    // contributions (re-accumulation; Arc-free but bounded by the job's
+    // ~α·m symbols, same order as the decoder's own buffers).
+    let retaining = state.verifier.is_some() && state.factory.is_some();
+    let mut retained: Vec<ChunkMsg> = Vec::new();
 
     while done_workers < p {
         let Ok(ev) = rx.recv() else {
@@ -163,12 +254,63 @@ pub fn collect(
         };
         match ev {
             WorkerEvent::Chunk(msg) => {
+                if state.quarantined.contains(&msg.worker) {
+                    continue; // blacklisted lane: drop everything it sends
+                }
                 let Some(dec) = live.as_mut() else {
                     continue; // post-cancel stragglers
                 };
                 let rows = msg.rows(batch);
                 if !seen.insert((msg.shard, msg.start_row, rows)) {
                     continue; // re-delivered chunk: already ingested
+                }
+                // spot-check BEFORE the symbols can enter the decoder
+                if let Some(ver) = state.verifier.as_mut() {
+                    let t0 = Instant::now();
+                    let check = ver.spot_check(msg.shard, msg.start_row, &msg.products);
+                    decode_cpu += t0.elapsed().as_secs_f64();
+                    if check == SpotCheck::Fail {
+                        state.corrupt_chunks += 1;
+                        state.quarantined.insert(msg.worker);
+                        crate::warn_!(
+                            "integrity: worker {} failed a spot check on shard {} rows \
+                             {}..{}; lane quarantined",
+                            msg.worker,
+                            msg.shard,
+                            msg.start_row,
+                            msg.start_row + rows
+                        );
+                        // release the key so an honest recompute of this
+                        // range (stealing / re-dispatch) is not locked out
+                        seen.remove(&(msg.shard, msg.start_row, rows));
+                        // retract the liar's past contributions: rebuild
+                        // the decoder from the retained honest chunks
+                        if let Some(factory) = state.factory {
+                            let t0 = Instant::now();
+                            let mut fresh = factory();
+                            symbols_used = 0;
+                            completing_v = f64::MIN;
+                            retained.retain(|m| {
+                                if state.quarantined.contains(&m.worker) {
+                                    seen.remove(&(m.shard, m.start_row, m.rows(batch)));
+                                    false
+                                } else {
+                                    true
+                                }
+                            });
+                            for m in &retained {
+                                let used =
+                                    fresh.ingest(m.shard, m.start_row, &m.products, m.virtual_time);
+                                symbols_used += used;
+                                if used > 0 {
+                                    completing_v = completing_v.max(m.virtual_time);
+                                }
+                            }
+                            *dec = fresh;
+                            decode_cpu += t0.elapsed().as_secs_f64();
+                        }
+                        continue;
+                    }
                 }
                 // counted here (not before the guards) so the stolen-row
                 // metric covers exactly the pre-completion work window —
@@ -189,6 +331,8 @@ pub fn collect(
                     cancel.store(true, Ordering::Relaxed);
                     // move the decoder out; keep draining Done events
                     finished = Some((latency, live.take().expect("decoder live")));
+                } else if retaining {
+                    retained.push(msg);
                 }
             }
             WorkerEvent::Done {
@@ -227,6 +371,8 @@ pub fn collect(
                 })
                 .sum();
             let out_rows = b.len() / batch.max(1);
+            let mut quarantined_workers: Vec<usize> = state.quarantined.iter().copied().collect();
+            quarantined_workers.sort_unstable();
             Ok(JobResult {
                 b,
                 batch,
@@ -236,12 +382,23 @@ pub fn collect(
                 stolen_rows,
                 symbols_used,
                 decode_cpu,
+                corrupt_chunks: state.corrupt_chunks,
+                quarantined_workers,
                 per_worker,
             })
         }
-        None => Err(JobError::Undecodable {
-            detail: live.map(|d| d.detail()).unwrap_or_default(),
-        }),
+        None => {
+            let mut detail = live.map(|d| d.detail()).unwrap_or_default();
+            if !state.quarantined.is_empty() {
+                let mut q: Vec<usize> = state.quarantined.iter().copied().collect();
+                q.sort_unstable();
+                detail = format!(
+                    "{detail}; {} corrupt chunk(s), quarantined workers {q:?}",
+                    state.corrupt_chunks
+                );
+            }
+            Err(JobError::Undecodable { detail })
+        }
     }
 }
 
@@ -398,5 +555,122 @@ mod tests {
                 "systematic MDS on integer data decodes exactly (row {i})"
             );
         }
+    }
+
+    /// The Byzantine event stream the quarantine machinery is for: one
+    /// worker sends a few honest chunks, then lies in every subsequent
+    /// one. With spot checks on, the liar is quarantined at its first
+    /// corrupt chunk, its earlier contributions are retracted by
+    /// re-accumulation, and the decode completes bit-identically to an
+    /// all-honest run from the other workers' surplus.
+    #[test]
+    fn lying_worker_is_quarantined_and_decode_matches_honest_run() {
+        let a = Matrix::random_ints(64, 6, 4, 31);
+        let x = Matrix::random_int_vector(6, 4, 32);
+        let code = LtCode::new(64, LtParams::with_alpha(3.0), 33);
+        let enc = ErasureCode::encode_shards(&code, &a, &ShardSizing::uniform(3), 1);
+        let want = a.matvec(&x);
+
+        // worker 2 lies from its 4th chunk on; its stream arrives first
+        // so the retraction path (honest chunks already ingested) fires
+        let mut events = Vec::new();
+        for (i, mut msg) in shard_chunks(&enc.shards[2], 2, 2, &x).into_iter().enumerate() {
+            if i >= 3 {
+                for p in &mut msg.products {
+                    *p *= 2.0;
+                }
+            }
+            events.push(WorkerEvent::Chunk(msg));
+        }
+        for s in 0..2 {
+            for msg in shard_chunks(&enc.shards[s], s, s, &x) {
+                events.push(WorkerEvent::Chunk(msg));
+            }
+        }
+        for w in 0..3 {
+            events.push(done(w, enc.shards[w].rows()));
+        }
+
+        let (tx, rx) = channel();
+        for ev in events {
+            tx.send(ev).unwrap();
+        }
+        drop(tx);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let factory = || code.new_decoder(&enc.layout, 1);
+        let mut state = VerifyState {
+            verifier: Some(ChunkVerifier::new(
+                Arc::new(enc.shards.clone()),
+                Arc::new(x.clone()),
+                1,
+                1.0,
+                1e-3,
+                99,
+            )),
+            factory: Some(&factory),
+            quarantined: HashSet::new(),
+            corrupt_chunks: 0,
+        };
+        let res = collect_verified(
+            code.new_decoder(&enc.layout, 1),
+            &rx,
+            &cancel,
+            3,
+            &[0.0; 3],
+            &[TAU; 3],
+            1,
+            &mut state,
+        )
+        .expect("job must complete from the honest workers' surplus");
+
+        assert_eq!(res.quarantined_workers, vec![2]);
+        assert_eq!(res.corrupt_chunks, 1, "lane is dropped after the first failure");
+        for i in 0..64 {
+            assert_eq!(
+                res.b[i].to_bits(),
+                want[i].to_bits(),
+                "decode must be bit-identical to an honest run (row {i})"
+            );
+        }
+    }
+
+    /// Without verification the same stream decodes to garbage — and the
+    /// end-to-end checksum `C·b == (CA)·X` catches it after the fact.
+    #[test]
+    fn unverified_corruption_is_caught_by_end_to_end_checksum() {
+        use crate::coding::integrity::MatrixChecksum;
+        let a = Matrix::random_ints(64, 6, 4, 31);
+        let x = Matrix::random_int_vector(6, 4, 32);
+        let code = LtCode::new(64, LtParams::with_alpha(3.0), 33);
+        let enc = ErasureCode::encode_shards(&code, &a, &ShardSizing::uniform(3), 1);
+        let want = a.matvec(&x);
+
+        let mut events = Vec::new();
+        for (i, mut msg) in shard_chunks(&enc.shards[2], 2, 2, &x).into_iter().enumerate() {
+            if i >= 3 {
+                for p in &mut msg.products {
+                    *p *= 2.0;
+                }
+            }
+            events.push(WorkerEvent::Chunk(msg));
+        }
+        for s in 0..2 {
+            for msg in shard_chunks(&enc.shards[s], s, s, &x) {
+                events.push(WorkerEvent::Chunk(msg));
+            }
+        }
+        for w in 0..3 {
+            events.push(done(w, enc.shards[w].rows()));
+        }
+        let res = collect_events(code.new_decoder(&enc.layout, 1), events, 3);
+        assert!(
+            res.b.iter().zip(&want).any(|(g, w)| g != w),
+            "corrupt symbols must actually poison the unverified decode"
+        );
+        let cs = MatrixChecksum::from_dense(&a, 4, 77, 1e-3);
+        assert!(
+            cs.verify_product(&x, 1, &res.b).is_err(),
+            "end-to-end checksum must flag the poisoned output"
+        );
     }
 }

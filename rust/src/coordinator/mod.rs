@@ -35,6 +35,7 @@ pub mod stream;
 pub mod transport;
 pub mod worker;
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -43,8 +44,9 @@ use std::time::Instant;
 pub use master::{JobError, JobResult, WorkerStat};
 use pool::WorkerPool;
 use scheduler::Scheduler;
-use straggler::StragglerProfile;
+use straggler::{StragglerProfile, WorkerPlan};
 
+use crate::coding::integrity::{ChunkVerifier, MatrixChecksum};
 use crate::coding::lt::{LtCode, LtParams};
 use crate::coding::mds::MdsCode;
 use crate::coding::raptor::{RaptorCode, RaptorParams};
@@ -52,7 +54,7 @@ use crate::coding::replication::RepCode;
 use crate::coding::systematic::SystematicLt;
 use crate::coding::{ErasureCode, ShardLayout, ShardSizing};
 use crate::config::ClusterConfig;
-use crate::matrix::{CsrMatrix, Matrix};
+use crate::matrix::{CsrMatrix, Matrix, ShardData};
 use crate::runtime::Engine;
 
 /// Coding strategy for a coordinator instance.
@@ -173,9 +175,17 @@ pub struct Coordinator {
     /// Per-worker rows per result message, aligned to the symbol width.
     /// Doubles as the work-stealing task granularity.
     block_rows: Vec<usize>,
-    /// Per-worker virtual per-row cost τ_i = τ / speed_i.
+    /// Per-worker virtual per-row cost τ_i = τ / speed_i (scaled by the
+    /// shard's fill fraction for CSR shards — per-nnz cost).
     taus: Vec<f64>,
     profile: StragglerProfile,
+    /// Master-side `Arc` clones of the installed shards, retained for
+    /// integrity spot checks (DESIGN.md §11). Free: shard payloads are
+    /// shared, not copied.
+    shards: Arc<Vec<ShardData>>,
+    /// Per-matrix homomorphic checksum (`C` + precomputed `CA`), present
+    /// iff `[integrity]` is enabled.
+    checksum: Option<MatrixChecksum>,
     m: usize,
     n: usize,
     encoded_rows: usize,
@@ -296,6 +306,18 @@ impl Coordinator {
             std::env::consts::ARCH,
             pool.transport_name()
         );
+        // Per-matrix checksum: C (secret ±1 check rows from the cluster
+        // seed) and CA, folded once here and amortized across every job
+        // (DESIGN.md §11). Built from the *source* matrix before encode.
+        let checksum = if cluster.integrity.enabled {
+            let (r, tol) = (cluster.integrity.check_rows, cluster.integrity.tolerance);
+            Some(match &a {
+                MatrixSource::Dense(d) => MatrixChecksum::from_dense(d, r, cluster.seed, tol),
+                MatrixSource::Csr(c) => MatrixChecksum::from_csr(c, r, cluster.seed, tol),
+            })
+        } else {
+            None
+        };
         let sizing = ShardSizing::proportional(&speeds);
         let encoded = match a {
             // dense encode fans out over the resident worker lanes
@@ -316,7 +338,23 @@ impl Coordinator {
                 rows.div_ceil(layout.width) * layout.width
             })
             .collect();
-        let taus: Vec<f64> = speeds.iter().map(|s| cluster.tau / s).collect();
+        // Sparse-aware τ: a CSR shard's per-row cost is per-nnz, not per
+        // dense row — scale each worker's τ_i by its shard's fill
+        // fraction so injected straggling matches what the sparse kernel
+        // actually costs (dense shards keep the paper's per-row τ).
+        let taus: Vec<f64> = speeds
+            .iter()
+            .zip(&encoded.shards)
+            .map(|(s, shard)| {
+                let density = if shard.is_csr() {
+                    let cells = (shard.rows() * shard.cols()).max(1);
+                    (shard.nnz() as f64 / cells as f64).max(1e-6)
+                } else {
+                    1.0
+                };
+                cluster.tau * density / s
+            })
+            .collect();
         let scheduler = cluster.scheduler.build(&taus);
         let profile = StragglerProfile::new(cluster.delay);
         Ok(Self {
@@ -331,6 +369,8 @@ impl Coordinator {
             block_rows,
             taus,
             profile,
+            shards: Arc::new(encoded.shards),
+            checksum,
             encoded_rows,
             jobs_served: AtomicU64::new(0),
         })
@@ -419,6 +459,14 @@ impl Coordinator {
     }
 
     /// Submit one job to the pool and run the master collect/decode loop.
+    ///
+    /// With `[integrity]` enabled the collect loop spot-checks chunks
+    /// against the retained shards, the decoded output must pass the
+    /// mandatory end-to-end checksum, and the job gets **one
+    /// re-dispatch** with the known liars pre-quarantined: rateless
+    /// codes normally absorb a quarantine from their surplus, but
+    /// fixed-rate codes (and corruption that slipped past sampling into
+    /// the decode) need the second run to complete honestly.
     fn run_job(
         &self,
         x: Arc<Vec<f32>>,
@@ -433,11 +481,78 @@ impl Coordinator {
         let profile = opts.profile.as_ref().unwrap_or(&self.profile);
         let plans = profile.draw(p, seed);
 
+        let integrity = &self.cluster.integrity;
+        let factory = || self.code.new_decoder(&self.layout, batch);
+        let mut state = if integrity.enabled {
+            master::VerifyState {
+                verifier: Some(ChunkVerifier::new(
+                    Arc::clone(&self.shards),
+                    Arc::clone(&x),
+                    batch,
+                    integrity.sample_rate,
+                    integrity.tolerance,
+                    seed,
+                )),
+                factory: Some(&factory),
+                quarantined: HashSet::new(),
+                corrupt_chunks: 0,
+            }
+        } else {
+            master::VerifyState::off()
+        };
+
+        let attempts = if integrity.enabled { 2 } else { 1 };
+        for attempt in 0..attempts {
+            match self.dispatch(&x, batch, &plans, &mut state) {
+                Ok(res) => {
+                    if let Some(cs) = &self.checksum {
+                        if let Err(detail) = cs.verify_product(&x, batch, &res.b) {
+                            if attempt + 1 < attempts {
+                                crate::warn_!(
+                                    "integrity: end-to-end checksum failed; re-dispatching \
+                                     ({detail})"
+                                );
+                                continue;
+                            }
+                            return Err(JobError::IntegrityFailure { detail });
+                        }
+                    }
+                    return Ok(res);
+                }
+                Err(JobError::Undecodable { detail })
+                    if attempt + 1 < attempts && !state.quarantined.is_empty() =>
+                {
+                    crate::warn_!(
+                        "integrity: undecodable after quarantining {:?}; re-dispatching \
+                         ({detail})",
+                        state.quarantined
+                    );
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("the final attempt always returns")
+    }
+
+    /// One dispatch: broadcast the job, run the (possibly verifying)
+    /// collect loop. Workers in `state.quarantined` receive a
+    /// die-immediately plan — their lane is blacklisted, so any work
+    /// they did would be dropped anyway; under work stealing the honest
+    /// workers drain their rows instead.
+    fn dispatch(
+        &self,
+        x: &Arc<Vec<f32>>,
+        batch: usize,
+        plans: &[WorkerPlan],
+        state: &mut master::VerifyState<'_>,
+    ) -> Result<JobResult, JobError> {
+        let p = self.cluster.workers;
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
         let start = Instant::now();
         let shared = Arc::new(worker::JobShared {
-            x,
+            x: Arc::clone(x),
             batch,
             tasks: self.scheduler.plan(&self.layout.shard_rows, &self.block_rows),
             time_scale: if self.cluster.real_sleep {
@@ -451,7 +566,15 @@ impl Coordinator {
         let orders = (0..p)
             .map(|w| worker::JobOrder {
                 shared: Arc::clone(&shared),
-                plan: plans[w],
+                plan: if state.quarantined.contains(&w) {
+                    WorkerPlan {
+                        initial_delay: 0.0,
+                        fail_after: Some(0),
+                        fault: None,
+                    }
+                } else {
+                    plans[w]
+                },
                 tau: self.taus[w],
                 tx: tx.clone(),
             })
@@ -467,7 +590,8 @@ impl Coordinator {
 
         let decoder = self.code.new_decoder(&self.layout, batch);
         let delays: Vec<f64> = plans.iter().map(|pl| pl.initial_delay).collect();
-        let result = master::collect(decoder, &rx, &cancel, p, &delays, &self.taus, batch);
+        let result =
+            master::collect_verified(decoder, &rx, &cancel, p, &delays, &self.taus, batch, state);
         // belt-and-braces: make sure no worker keeps computing for this job
         cancel.store(true, Ordering::Relaxed);
         result
@@ -953,5 +1077,196 @@ mod tests {
             "C = {} should exceed m = {m}",
             out.computations
         );
+    }
+
+    // ---- Byzantine-tolerance (DESIGN.md §11) -------------------------
+
+    use straggler::{FaultKind, FaultSpec};
+
+    fn integrity_cluster(p: usize) -> ClusterConfig {
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        cluster.integrity.enabled = true;
+        cluster.integrity.sample_rate = 1.0; // deterministic: check everything
+        cluster
+    }
+
+    fn lying_profile(worker: usize, kind: FaultKind) -> StragglerProfile {
+        StragglerProfile::none().with_fault(
+            worker,
+            FaultSpec {
+                kind,
+                after_rows: 0,
+            },
+        )
+    }
+
+    /// Acceptance criterion: with an injected lying worker (bit-flip and
+    /// value-scale), the job completes, the corrupt worker is
+    /// quarantined, and the decoded output is **bit-identical** to the
+    /// all-honest run. Integer-valued data keeps every f32/f64 operation
+    /// exact, so bitwise equality is well-defined for LT peeling.
+    #[test]
+    fn lying_worker_is_quarantined_and_output_matches_honest_run_bitwise() {
+        let (m, p) = (128usize, 4usize);
+        let a = Matrix::random_ints(m, 8, 3, 400);
+        let x = Matrix::random_int_vector(8, 3, 401);
+        let coord = Coordinator::new(
+            integrity_cluster(p),
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .expect("coordinator");
+        let honest = coord
+            .multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(5),
+                    profile: Some(StragglerProfile::none()),
+                },
+            )
+            .expect("honest run");
+        assert_eq!(honest.corrupt_chunks, 0);
+        assert!(honest.quarantined_workers.is_empty());
+        let want = a.matvec(&x);
+        for i in 0..m {
+            assert_eq!(honest.b[i].to_bits(), want[i].to_bits(), "honest row {i}");
+        }
+        for kind in [FaultKind::BitFlip, FaultKind::Scale] {
+            let out = coord
+                .multiply_opts(
+                    &x,
+                    &JobOptions {
+                        seed: Some(5),
+                        profile: Some(lying_profile(1, kind)),
+                    },
+                )
+                .unwrap_or_else(|e| panic!("{kind:?}: job must survive a liar: {e}"));
+            assert_eq!(out.quarantined_workers, vec![1], "{kind:?}");
+            assert!(out.corrupt_chunks >= 1, "{kind:?}");
+            for i in 0..m {
+                assert_eq!(
+                    out.b[i].to_bits(),
+                    honest.b[i].to_bits(),
+                    "{kind:?} row {i}: {} vs honest {}",
+                    out.b[i],
+                    honest.b[i]
+                );
+            }
+        }
+    }
+
+    /// Uncoded data has zero surplus, so quarantining the liar starves
+    /// the decoder — the re-dispatch must complete the job with the
+    /// quarantined worker's rows drained by work-stealing thieves.
+    #[test]
+    fn redispatch_completes_uncoded_job_despite_lying_worker() {
+        use scheduler::SchedulerKind;
+        let (m, p) = (64usize, 4usize);
+        let a = Matrix::random_ints(m, 8, 3, 410);
+        let x = Matrix::random_int_vector(8, 3, 411);
+        let mut cluster = integrity_cluster(p);
+        cluster.scheduler = SchedulerKind::WorkStealing;
+        cluster.block_fraction = 0.25;
+        let coord =
+            Coordinator::new(cluster, Strategy::Uncoded, Engine::Native, &a).expect("coordinator");
+        let out = coord
+            .multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(6),
+                    profile: Some(lying_profile(1, FaultKind::BitFlip)),
+                },
+            )
+            .expect("re-dispatch must complete the uncoded job");
+        assert_eq!(out.quarantined_workers, vec![1]);
+        assert!(out.corrupt_chunks >= 1);
+        // every row of the liar's 16-row shard arrived via an honest steal
+        assert!(
+            out.stolen_rows >= m / p,
+            "liar's shard must be drained by thieves, stole {}",
+            out.stolen_rows
+        );
+        let want = a.matvec(&x);
+        for i in 0..m {
+            assert_eq!(out.b[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+    }
+
+    /// MDS(k=3, p=4) tolerates one quarantined worker from its surplus
+    /// shard, like it tolerates one dead worker — no re-dispatch needed.
+    #[test]
+    fn mds_absorbs_quarantined_worker_from_surplus() {
+        let (m, p) = (66usize, 4usize);
+        let a = Matrix::random_ints(m, 8, 3, 420);
+        let x = Matrix::random_int_vector(8, 3, 421);
+        let coord = Coordinator::new(
+            integrity_cluster(p),
+            Strategy::Mds { k: 3 },
+            Engine::Native,
+            &a,
+        )
+        .expect("coordinator");
+        let out = coord
+            .multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(7),
+                    profile: Some(lying_profile(3, FaultKind::Scale)),
+                },
+            )
+            .expect("MDS absorbs one liar from surplus");
+        assert_eq!(out.quarantined_workers, vec![3]);
+        // LU decode is not bitwise-stable across shard subsets: compare
+        // with tolerance, the end-to-end checksum already ran inside.
+        let want = a.matvec(&x);
+        for i in 0..m {
+            assert!(
+                (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                out.b[i],
+                want[i]
+            );
+        }
+    }
+
+    /// CSR construction: checksum built in O(r·nnz) from the sparse
+    /// source, spot checks walk CSR shard rows, and the sparse-aware τ
+    /// scales with shard fill — the lying worker is still caught.
+    #[test]
+    fn csr_coordinator_quarantines_lying_worker() {
+        use crate::matrix::dataset::sparse_feature_matrix;
+        let (m, p) = (128usize, 4usize);
+        let sp = sparse_feature_matrix(m, 12, 0.25, 430);
+        let dense = sp.to_dense();
+        let x = Matrix::random_vector(12, 431);
+        let want = dense.matvec(&x);
+        let coord = Coordinator::new_csr(
+            integrity_cluster(p),
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &sp,
+        )
+        .expect("csr coordinator");
+        let out = coord
+            .multiply_opts(
+                &x,
+                &JobOptions {
+                    seed: Some(8),
+                    profile: Some(lying_profile(2, FaultKind::Scale)),
+                },
+            )
+            .expect("sparse job must survive a liar");
+        assert_eq!(out.quarantined_workers, vec![2]);
+        assert!(out.corrupt_chunks >= 1);
+        for i in 0..m {
+            assert!(
+                (out.b[i] - want[i]).abs() < 5e-2 * want[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                out.b[i],
+                want[i]
+            );
+        }
     }
 }

@@ -394,6 +394,7 @@ mod tests {
                 plan: WorkerPlan {
                     initial_delay: 0.0,
                     fail_after: None,
+                    fault: None,
                 },
                 tau: 1e-6,
                 tx: tx.clone(),

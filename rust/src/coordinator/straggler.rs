@@ -20,6 +20,10 @@ pub struct StragglerProfile {
     pub failures: Vec<usize>,
     /// Rows a failing worker completes before dying.
     pub fail_after_rows: usize,
+    /// Byzantine workers this job: `(worker, fault)` pairs. Unlike
+    /// `failures`, a lying worker keeps running at full speed — it just
+    /// returns corrupted products (DESIGN.md §11).
+    pub faults: Vec<(usize, FaultSpec)>,
 }
 
 impl StragglerProfile {
@@ -28,6 +32,7 @@ impl StragglerProfile {
             delay,
             failures: Vec::new(),
             fail_after_rows: 0,
+            faults: Vec::new(),
         }
     }
 
@@ -53,6 +58,13 @@ impl StragglerProfile {
         self
     }
 
+    /// Make `worker` Byzantine: it computes at full speed but corrupts
+    /// its returned products per `fault` (DESIGN.md §11 fault harness).
+    pub fn with_fault(mut self, worker: usize, fault: FaultSpec) -> Self {
+        self.faults.push((worker, fault));
+        self
+    }
+
     /// Draw the per-worker plan for one job: `(X_i, fail_after)` where
     /// `fail_after = None` means the worker is healthy.
     pub fn draw(&self, p: usize, seed: u64) -> Vec<WorkerPlan> {
@@ -65,6 +77,11 @@ impl StragglerProfile {
                         .failures
                         .contains(&w)
                         .then_some(self.fail_after_rows),
+                    fault: self
+                        .faults
+                        .iter()
+                        .find(|(fw, _)| *fw == w)
+                        .map(|(_, f)| *f),
                 }
             })
             .collect()
@@ -78,6 +95,80 @@ pub struct WorkerPlan {
     pub initial_delay: f64,
     /// Die after this many rows (None = healthy).
     pub fail_after: Option<usize>,
+    /// Lie after `fault.after_rows` rows (None = honest).
+    pub fault: Option<FaultSpec>,
+}
+
+/// How a Byzantine worker corrupts its output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip a high exponent bit in every product (silent bit rot /
+    /// hostile garbage — always a gross, detectable change, even for 0.0).
+    BitFlip,
+    /// Scale every product by 2 (a subtler, structured lie).
+    Scale,
+    /// Resend the previous chunk instead of the current one (stale
+    /// replay — exercises the master's dedup, not the checksums).
+    Replay,
+}
+
+/// One worker's injected Byzantine behaviour: after `after_rows`
+/// computed rows, every subsequent chunk is corrupted per `kind`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub after_rows: usize,
+}
+
+impl FaultSpec {
+    /// Parse `"bitflip" | "scale" | "replay"`, optionally suffixed
+    /// `":<after_rows>"` (e.g. `"scale:128"`). Unknown strings → None.
+    pub fn parse(s: &str) -> Option<FaultSpec> {
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (s, None),
+        };
+        let kind = match kind.trim().to_ascii_lowercase().as_str() {
+            "bitflip" => FaultKind::BitFlip,
+            "scale" => FaultKind::Scale,
+            "replay" => FaultKind::Replay,
+            _ => return None,
+        };
+        let after_rows = match rest {
+            Some(r) => r.trim().parse::<usize>().ok()?,
+            None => 0,
+        };
+        Some(FaultSpec { kind, after_rows })
+    }
+
+    /// The `RATELESS_FAULT` env knob (mirrors `RATELESS_WIRE_DELAY_MS`):
+    /// a remote `rateless worker` process started with e.g.
+    /// `RATELESS_FAULT=bitflip:64` lies from its 65th computed row on.
+    pub fn from_env() -> Option<FaultSpec> {
+        std::env::var("RATELESS_FAULT")
+            .ok()
+            .and_then(|v| Self::parse(&v))
+    }
+
+    /// Corrupt a finished product block in place (BitFlip/Scale; Replay
+    /// is handled by the sender, which substitutes a stale chunk).
+    pub fn corrupt_products(&self, products: &mut [f32]) {
+        match self.kind {
+            FaultKind::BitFlip => {
+                for p in products {
+                    // bit 30 = high exponent bit: 0.0 becomes 2.0, any
+                    // normal value changes by orders of magnitude
+                    *p = f32::from_bits(p.to_bits() ^ (1 << 30));
+                }
+            }
+            FaultKind::Scale => {
+                for p in products {
+                    *p *= 2.0;
+                }
+            }
+            FaultKind::Replay => {}
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +198,65 @@ mod tests {
         assert_eq!(plan[1].fail_after, Some(10));
         assert_eq!(plan[3].fail_after, Some(10));
         assert_eq!(plan[0].initial_delay, 0.0);
+    }
+
+    #[test]
+    fn faults_marked_per_worker() {
+        let spec = FaultSpec {
+            kind: FaultKind::Scale,
+            after_rows: 5,
+        };
+        let prof = StragglerProfile::none().with_fault(2, spec);
+        let plan = prof.draw(4, 1);
+        assert_eq!(plan[0].fault, None);
+        assert_eq!(plan[2].fault, Some(spec));
+    }
+
+    #[test]
+    fn fault_spec_parses_kinds_and_offsets() {
+        assert_eq!(
+            FaultSpec::parse("bitflip"),
+            Some(FaultSpec {
+                kind: FaultKind::BitFlip,
+                after_rows: 0
+            })
+        );
+        assert_eq!(
+            FaultSpec::parse("scale:128"),
+            Some(FaultSpec {
+                kind: FaultKind::Scale,
+                after_rows: 128
+            })
+        );
+        assert_eq!(
+            FaultSpec::parse("REPLAY:7"),
+            Some(FaultSpec {
+                kind: FaultKind::Replay,
+                after_rows: 7
+            })
+        );
+        assert_eq!(FaultSpec::parse("garbage"), None);
+        assert_eq!(FaultSpec::parse("scale:notanumber"), None);
+    }
+
+    #[test]
+    fn corrupt_products_changes_every_value() {
+        let spec = FaultSpec {
+            kind: FaultKind::BitFlip,
+            after_rows: 0,
+        };
+        let mut p = vec![0.0f32, 1.5, -3.0];
+        let orig = p.clone();
+        spec.corrupt_products(&mut p);
+        for (a, b) in p.iter().zip(&orig) {
+            assert_ne!(a.to_bits(), b.to_bits(), "bitflip must change the value");
+        }
+        let mut q = vec![1.0f32, -2.0];
+        FaultSpec {
+            kind: FaultKind::Scale,
+            after_rows: 0,
+        }
+        .corrupt_products(&mut q);
+        assert_eq!(q, vec![2.0, -4.0]);
     }
 }

@@ -593,12 +593,25 @@ impl WireMsg {
             },
             ty::SHARD_DATA => WireMsg::ShardData { data: d.f32s()? },
             ty::SHARD_END => WireMsg::ShardEnd,
-            ty::SHARD_BEGIN_CSR => WireMsg::ShardBeginCsr {
-                worker: d.u32()?,
-                rows: d.u32()?,
-                cols: d.u32()?,
-                nnz: d.u64()?,
-            },
+            ty::SHARD_BEGIN_CSR => {
+                let worker = d.u32()?;
+                let rows = d.u32()?;
+                let cols = d.u32()?;
+                let nnz = d.u64()?;
+                // cross-field sanity before anyone sizes buffers off the
+                // announcement: a CSR matrix cannot store more than
+                // rows·cols entries (the product cannot overflow: both
+                // factors are u32)
+                if nnz > rows as u64 * cols as u64 {
+                    return Err(bad("CSR nnz exceeds rows*cols"));
+                }
+                WireMsg::ShardBeginCsr {
+                    worker,
+                    rows,
+                    cols,
+                    nnz,
+                }
+            }
             ty::SHARD_DATA_IDX => WireMsg::ShardDataIdx { data: d.u32s()? },
             ty::JOB_START => {
                 let batch = d.u32()?;
@@ -683,15 +696,27 @@ impl WireMsg {
     }
 
     /// Read one frame from a blocking reader.
+    ///
+    /// The length prefix is peer-controlled, so the body buffer grows
+    /// in bounded gulps instead of being pre-allocated at the announced
+    /// size: a hostile peer announcing a `MAX_FRAME`-sized body and then
+    /// hanging up costs this side only the bytes actually received
+    /// (rounded up to one 64 KiB gulp), not a 1 GiB allocation.
     pub fn read(r: &mut impl Read) -> io::Result<WireMsg> {
+        const GULP: usize = 64 * 1024;
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4)?;
         let len = u32::from_le_bytes(len4);
         if len < 2 || len > MAX_FRAME {
             return Err(bad("bad frame length"));
         }
-        let mut body = vec![0u8; len as usize];
-        r.read_exact(&mut body)?;
+        let len = len as usize;
+        let mut body = Vec::with_capacity(len.min(GULP));
+        while body.len() < len {
+            let start = body.len();
+            body.resize(start + (len - start).min(GULP), 0);
+            r.read_exact(&mut body[start..])?;
+        }
         Self::decode_body(&body)
     }
 }
@@ -866,7 +891,7 @@ mod tests {
         round_trip_v(
             WireMsg::ShardBeginCsr {
                 worker: 2,
-                rows: 5000,
+                rows: 500_000,
                 cols: 100_000,
                 nnz: 6_000_000_000, // nnz is u64: can exceed u32::MAX
             },
@@ -1054,6 +1079,76 @@ mod tests {
         let mut frame = huge.to_vec();
         frame.extend_from_slice(&[1, 0x20]);
         assert!(WireMsg::read(&mut frame.as_slice()).is_err());
+    }
+
+    #[test]
+    fn huge_length_prefix_fails_fast_without_huge_allocation() {
+        // announce a MAX_FRAME-sized body but deliver only a few bytes:
+        // the reader must surface EOF after consuming what arrived, not
+        // pre-allocate the announced gigabyte and block
+        let mut frame = MAX_FRAME.to_le_bytes().to_vec();
+        frame.extend_from_slice(&[2, ty::PING, 1, 2, 3]);
+        let err = WireMsg::read(&mut frame.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn rejects_csr_announcement_with_impossible_nnz() {
+        // nnz > rows*cols can never describe a real CSR matrix; the
+        // decoder must refuse before anyone sizes buffers off it
+        let lie = WireMsg::ShardBeginCsr {
+            worker: 0,
+            rows: 4,
+            cols: 4,
+            nnz: 17,
+        };
+        let mut buf = Vec::new();
+        lie.write(&mut buf, 2).unwrap();
+        let err = WireMsg::read(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("nnz"), "got: {err}");
+
+        // the boundary nnz == rows*cols is legal (a fully dense CSR)
+        let full = WireMsg::ShardBeginCsr {
+            worker: 0,
+            rows: 4,
+            cols: 4,
+            nnz: 16,
+        };
+        let mut buf = Vec::new();
+        full.write(&mut buf, 2).unwrap();
+        assert_eq!(WireMsg::read(&mut buf.as_slice()).unwrap(), full);
+    }
+
+    #[test]
+    fn rejects_vector_count_larger_than_payload() {
+        // hand-forge a CHUNK whose products count claims far more
+        // elements than the frame carries: decode must error on the
+        // bounds check, never allocate for the phantom elements
+        let mut body = vec![1u8, ty::CHUNK];
+        body.extend_from_slice(&0u32.to_le_bytes()); // shard
+        body.extend_from_slice(&0u32.to_le_bytes()); // start_row
+        body.extend_from_slice(&0f64.to_le_bytes()); // virtual_time
+        body.extend_from_slice(&0f64.to_le_bytes()); // virt_elapsed
+        body.extend_from_slice(&1_000_000u32.to_le_bytes()); // count, no data
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        assert!(WireMsg::read(&mut frame.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_type_and_trailing_garbage() {
+        let mut frame = 3u32.to_le_bytes().to_vec();
+        frame.extend_from_slice(&[1, 0x7F, 0xAA]); // unknown type code
+        assert!(WireMsg::read(&mut frame.as_slice()).is_err());
+
+        // extra bytes after a complete payload desynchronize the
+        // stream: a frame must account for every byte it frames
+        let mut ping = Vec::new();
+        WireMsg::Ping { seq: 1 }.write(&mut ping, 1).unwrap();
+        let len = u32::from_le_bytes(ping[..4].try_into().unwrap()) + 1;
+        ping[..4].copy_from_slice(&len.to_le_bytes());
+        ping.push(0xEE);
+        assert!(WireMsg::read(&mut ping.as_slice()).is_err());
     }
 
     #[test]

@@ -111,7 +111,7 @@ use super::framing::{ChunkEntry, FrameReader, WireMsg, MAX_FRAME, PROTO_V1, PROT
 use crate::config::TransportConfig;
 use crate::coordinator::messages::{ChunkMsg, WorkerEvent};
 use crate::coordinator::pool::{Transport, TransportMsg};
-use crate::coordinator::straggler::WorkerPlan;
+use crate::coordinator::straggler::{FaultKind, FaultSpec, WorkerPlan};
 use crate::coordinator::worker::{self, JobOrder, JobShared};
 use crate::matrix::{CsrMatrix, Matrix, ShardData};
 use crate::runtime::Engine;
@@ -160,6 +160,10 @@ pub struct TcpTunables {
     pub wire_delay: Duration,
     /// Highest protocol version the master will offer in `HELLO`.
     pub proto_max: u8,
+    /// Fault-injection knob (tests/benches): corrupt chunks arriving on
+    /// lane `.0` per [`FaultSpec`] `.1` — as if that remote worker were
+    /// Byzantine, without restarting it with `RATELESS_FAULT`.
+    pub fault: Option<(usize, FaultSpec)>,
 }
 
 impl Default for TcpTunables {
@@ -175,6 +179,7 @@ impl Default for TcpTunables {
             rejoin_wait: REJOIN_WAIT,
             wire_delay: wire_delay_from_env(),
             proto_max: PROTO_VERSION,
+            fault: None,
         }
     }
 }
@@ -631,10 +636,16 @@ fn drive_job(
         tx,
     } = job;
     let s = &*shared;
+    // master-side fault injection: corrupt this lane's chunks as they
+    // arrive, as if the remote worker were Byzantine (tests/benches)
+    let fault = tun
+        .fault
+        .and_then(|(fw, f)| (fw == w).then_some(f));
+    let mut lane = LaneFault::new(fault);
     let res = if conn.ver >= 2 {
-        drive_job_v2(w, conn, fleet, s, &plan, tau, &tx, tun)
+        drive_job_v2(w, conn, fleet, s, &plan, tau, &tx, tun, &mut lane)
     } else {
-        drive_job_v1(w, conn, fleet, s, &plan, tau, &tx)
+        drive_job_v1(w, conn, fleet, s, &plan, tau, &tx, &mut lane)
     };
     if res.is_err() {
         // the remote died mid-job: synthesize the silent-death Done so
@@ -649,10 +660,59 @@ fn drive_job(
     res
 }
 
+/// Per-lane master-side fault state: rows seen so far (for `after_rows`
+/// thresholds) and the previous chunk (for `Replay`).
+struct LaneFault {
+    fault: Option<FaultSpec>,
+    rows_seen: u64,
+    last: Option<ChunkEntry>,
+}
+
+impl LaneFault {
+    fn new(fault: Option<FaultSpec>) -> Self {
+        Self {
+            fault,
+            rows_seen: 0,
+            last: None,
+        }
+    }
+
+    /// Corrupt `c` in place per the lane's fault, mirroring the
+    /// worker-side injection in `worker::run_job`.
+    fn apply(&mut self, c: &mut ChunkEntry, batch: usize) {
+        let Some(f) = self.fault else { return };
+        let before = self.rows_seen;
+        self.rows_seen += (c.products.len() / batch.max(1)) as u64;
+        if before >= f.after_rows as u64 {
+            match f.kind {
+                FaultKind::Replay => {
+                    if let Some(prev) = &self.last {
+                        *c = ChunkEntry {
+                            virtual_time: c.virtual_time,
+                            virt_elapsed: c.virt_elapsed,
+                            ..prev.clone()
+                        };
+                    }
+                }
+                _ => f.corrupt_products(&mut c.products),
+            }
+        } else if f.kind == FaultKind::Replay {
+            self.last = Some(c.clone());
+        }
+    }
+}
+
 /// Feed one task's results into the job: EWMA speed feedback, then the
 /// same `WorkerEvent::Chunk` the in-process worker would send (the
 /// master's collector dedups by (shard, start_row, rows) as before).
-fn forward_chunk(w: usize, s: &JobShared, tx: &Sender<WorkerEvent>, c: ChunkEntry) {
+fn forward_chunk(
+    w: usize,
+    s: &JobShared,
+    tx: &Sender<WorkerEvent>,
+    mut c: ChunkEntry,
+    lane: &mut LaneFault,
+) {
+    lane.apply(&mut c, s.batch);
     let rows = c.products.len() / s.batch.max(1);
     s.tasks.observe(w, rows, c.virt_elapsed);
     let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
@@ -729,6 +789,7 @@ fn drive_job_v2(
     tau: f64,
     tx: &Sender<WorkerEvent>,
     tun: &TcpTunables,
+    lane: &mut LaneFault,
 ) -> io::Result<()> {
     let ver = conn.ver;
     let window = tun.pipeline_depth.max(1).min(conn.credit.max(1) as usize);
@@ -759,7 +820,7 @@ fn drive_job_v2(
         match WireMsg::read(&mut conn.stream)? {
             WireMsg::Chunks { entries } => {
                 for e in entries {
-                    forward_chunk(w, s, tx, e);
+                    forward_chunk(w, s, tx, e, lane);
                     outstanding = outstanding.saturating_sub(1);
                 }
                 pump_grants(
@@ -792,6 +853,7 @@ fn drive_job_v2(
                         virt_elapsed,
                         products,
                     },
+                    lane,
                 );
                 outstanding = outstanding.saturating_sub(1);
                 pump_grants(
@@ -828,6 +890,7 @@ fn drive_job_v2(
 
 /// v1 fallback: announce the job, answer the remote pull loop from the
 /// master-side task board, forward chunks — one round trip per task.
+#[allow(clippy::too_many_arguments)]
 fn drive_job_v1(
     w: usize,
     conn: &mut Conn,
@@ -836,6 +899,7 @@ fn drive_job_v1(
     plan: &WorkerPlan,
     tau: f64,
     tx: &Sender<WorkerEvent>,
+    lane: &mut LaneFault,
 ) -> io::Result<()> {
     WireMsg::JobStart {
         batch: s.batch as u32,
@@ -895,6 +959,7 @@ fn drive_job_v1(
                     virt_elapsed,
                     products,
                 },
+                lane,
             ),
             WireMsg::JobDone {
                 rows_done,
@@ -929,6 +994,10 @@ pub struct WorkerOpts {
     /// Per-frame injected delivery delay on the worker's writes
     /// (`RATELESS_WIRE_DELAY_MS`).
     pub wire_delay: Duration,
+    /// Byzantine fault injection (`RATELESS_FAULT=kind[:after_rows]`):
+    /// this worker corrupts its returned chunks per the spec — the
+    /// process-level twin of `StragglerProfile::with_fault`.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for WorkerOpts {
@@ -937,6 +1006,7 @@ impl Default for WorkerOpts {
             credit: DEFAULT_WORKER_CREDIT,
             max_proto: PROTO_VERSION,
             wire_delay: wire_delay_from_env(),
+            fault: FaultSpec::from_env(),
         }
     }
 }
@@ -1290,6 +1360,7 @@ fn serve_master(
                         time_scale,
                         coalesce as usize,
                         &x,
+                        opts.fault,
                     )?
                 } else {
                     run_remote_job(
@@ -1304,6 +1375,7 @@ fn serve_master(
                         fail_after,
                         time_scale,
                         &x,
+                        opts.fault,
                     )?
                 }
             }
@@ -1403,6 +1475,7 @@ fn run_remote_job_v2(
     time_scale: f64,
     coalesce: usize,
     x: &[f32],
+    fault: Option<FaultSpec>,
 ) -> io::Result<()> {
     let start = Instant::now();
     let no_cancel = AtomicBool::new(false); // cancellation arrives as TASK_FIN
@@ -1412,6 +1485,7 @@ fn run_remote_job_v2(
     let mut queue: VecDeque<QueuedGrant> = VecDeque::new();
     let mut fin = false;
     let mut out = Coalescer::new(coalesce);
+    let mut lie = LaneFault::new(fault);
 
     if time_scale > 0.0 {
         worker::sleep_until(start, v * time_scale, &no_cancel);
@@ -1491,13 +1565,15 @@ fn run_remote_job_v2(
         } else {
             tau * len as f64
         };
-        out.push(ChunkEntry {
+        let mut entry = ChunkEntry {
             shard: shard_id as u32,
             start_row: t_start as u32,
             virtual_time: v,
             virt_elapsed,
             products,
-        });
+        };
+        lie.apply(&mut entry, batch);
+        out.push(entry);
         if out.full() {
             out.flush(sink)?;
         }
@@ -1541,12 +1617,14 @@ fn run_remote_job(
     fail_after: u64,
     time_scale: f64,
     x: &[f32],
+    fault: Option<FaultSpec>,
 ) -> io::Result<()> {
     let start = Instant::now();
     let no_cancel = AtomicBool::new(false); // cancellation arrives as TASK_FIN
     let mut v = initial_delay;
     let mut rows_done = 0u64;
     let mut failed = false;
+    let mut lie = LaneFault::new(fault);
 
     if time_scale > 0.0 {
         worker::sleep_until(start, v * time_scale, &no_cancel);
@@ -1620,12 +1698,20 @@ fn run_remote_job(
         } else {
             tau * len as f64
         };
-        WireMsg::Chunk {
+        let mut entry = ChunkEntry {
             shard: shard_id as u32,
             start_row: t_start as u32,
             virtual_time: v,
             virt_elapsed,
             products,
+        };
+        lie.apply(&mut entry, batch);
+        WireMsg::Chunk {
+            shard: entry.shard,
+            start_row: entry.start_row,
+            virtual_time: entry.virtual_time,
+            virt_elapsed: entry.virt_elapsed,
+            products: entry.products,
         }
         .write(sink, PROTO_V1)?;
         if len < granted {
@@ -1705,7 +1791,9 @@ mod tests {
         (pool, handles, shards)
     }
 
-    fn run_fleet_job(pool: &WorkerPool, p: usize, shards: &[ShardData]) {
+    /// Broadcast one job over the fleet and return the per-shard product
+    /// rows as delivered (NaN where no chunk arrived) plus the query.
+    fn run_fleet_collect(pool: &WorkerPool, p: usize) -> (Vec<Vec<f32>>, Arc<Vec<f32>>) {
         let x = Arc::new(Matrix::random_int_vector(4, 4, 7));
         let shared = Arc::new(JobShared {
             x: Arc::clone(&x),
@@ -1722,6 +1810,7 @@ mod tests {
                 plan: WorkerPlan {
                     initial_delay: 0.0,
                     fail_after: None,
+                    fault: None,
                 },
                 tau: 1e-6,
                 tx: tx.clone(),
@@ -1748,6 +1837,11 @@ mod tests {
             }
         }
         assert_eq!(done, p);
+        (got, x)
+    }
+
+    fn run_fleet_job(pool: &WorkerPool, p: usize, shards: &[ShardData]) {
+        let (got, x) = run_fleet_collect(pool, p);
         // integer data: the remote products are bitwise what the shard
         // computes locally
         for (s, shard) in shards.iter().enumerate() {
@@ -1865,6 +1959,129 @@ mod tests {
             fleet_pool_with(p, WorkerOpts::default(), tun);
         assert!(protos.iter().all(|&v| v == PROTO_VERSION));
         run_fleet_job(&pool, p, &shards);
+        shutdown_fleet(pool, p, handles);
+    }
+
+    /// Worker-process-side fault injection (the `RATELESS_FAULT` path,
+    /// here set via `WorkerOpts.fault`): every returned product is
+    /// exactly 2× the honest value, over the pipelined v2 protocol.
+    #[test]
+    fn worker_side_fault_scales_every_chunk() {
+        let p = 2;
+        let opts = WorkerOpts {
+            fault: Some(FaultSpec {
+                kind: FaultKind::Scale,
+                after_rows: 0,
+            }),
+            ..WorkerOpts::default()
+        };
+        let (pool, handles, shards, protos) = fleet_pool_with(p, opts, TcpTunables::default());
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        let (got, x) = run_fleet_collect(&pool, p);
+        for (s, shard) in shards.iter().enumerate() {
+            let want = shard.matvec(&x);
+            for r in 0..8 {
+                // integer data: the ×2 lie is bitwise-predictable
+                assert_eq!(
+                    got[s][r].to_bits(),
+                    (2.0 * want[r]).to_bits(),
+                    "shard {s} row {r}"
+                );
+            }
+        }
+        shutdown_fleet(pool, p, handles);
+    }
+
+    /// The same Byzantine worker over the legacy v1 pull loop: the fault
+    /// hook sits on the single-CHUNK path, not just the coalesced one.
+    #[test]
+    fn worker_side_fault_scales_over_v1_pull_loop() {
+        let p = 2;
+        let opts = WorkerOpts {
+            max_proto: PROTO_V1,
+            fault: Some(FaultSpec {
+                kind: FaultKind::Scale,
+                after_rows: 0,
+            }),
+            ..WorkerOpts::default()
+        };
+        let (pool, handles, shards, protos) = fleet_pool_with(p, opts, TcpTunables::default());
+        assert_eq!(protos, vec![PROTO_V1; p]);
+        let (got, x) = run_fleet_collect(&pool, p);
+        for (s, shard) in shards.iter().enumerate() {
+            let want = shard.matvec(&x);
+            for r in 0..8 {
+                assert_eq!(
+                    got[s][r].to_bits(),
+                    (2.0 * want[r]).to_bits(),
+                    "shard {s} row {r}"
+                );
+            }
+        }
+        shutdown_fleet(pool, p, handles);
+    }
+
+    /// Master-side `TcpTunables.fault` knob (mirrors `wire_delay`):
+    /// corrupts exactly the chosen lane, leaving the rest honest.
+    #[test]
+    fn master_side_fault_knob_corrupts_one_lane() {
+        let p = 2;
+        let tun = TcpTunables {
+            fault: Some((
+                1,
+                FaultSpec {
+                    kind: FaultKind::BitFlip,
+                    after_rows: 0,
+                },
+            )),
+            ..TcpTunables::default()
+        };
+        let (pool, handles, shards, protos) = fleet_pool_with(p, WorkerOpts::default(), tun);
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        let (got, x) = run_fleet_collect(&pool, p);
+        let want0 = shards[0].matvec(&x);
+        for r in 0..8 {
+            assert_eq!(got[0][r].to_bits(), want0[r].to_bits(), "lane 0 row {r}");
+        }
+        let want1 = shards[1].matvec(&x);
+        for r in 0..8 {
+            assert_ne!(
+                got[1][r].to_bits(),
+                want1[r].to_bits(),
+                "lane 1 row {r} must be bit-flipped"
+            );
+        }
+        shutdown_fleet(pool, p, handles);
+    }
+
+    /// Replay fault: after the threshold the lane resends its previous
+    /// chunk, so the later rows never arrive — the master's dedup and
+    /// the collector see a stale duplicate instead of fresh rows.
+    #[test]
+    fn replay_fault_resends_stale_rows() {
+        let p = 2;
+        let tun = TcpTunables {
+            fault: Some((
+                1,
+                FaultSpec {
+                    kind: FaultKind::Replay,
+                    after_rows: 4,
+                },
+            )),
+            ..TcpTunables::default()
+        };
+        let (pool, handles, shards, protos) = fleet_pool_with(p, WorkerOpts::default(), tun);
+        assert!(protos.iter().all(|&v| v == PROTO_VERSION));
+        let (got, x) = run_fleet_collect(&pool, p);
+        let want1 = shards[1].matvec(&x);
+        for r in 0..4 {
+            // first task honest (and recorded as the replay source)
+            assert_eq!(got[1][r].to_bits(), want1[r].to_bits(), "lane 1 row {r}");
+        }
+        for r in 4..8 {
+            // second task was replaced by a replay of rows 0..4
+            assert!(got[1][r].is_nan(), "lane 1 row {r} must never arrive");
+        }
         shutdown_fleet(pool, p, handles);
     }
 

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use super::messages::{ChunkMsg, WorkerEvent};
 use super::scheduler::TaskSource;
-use super::straggler::WorkerPlan;
+use super::straggler::{FaultKind, WorkerPlan};
 use crate::matrix::ShardData;
 use crate::runtime::Engine;
 
@@ -101,6 +101,8 @@ pub fn run_job(worker: usize, shards: &[ShardData], engine: &Engine, job: JobOrd
     let mut rows_done = 0usize;
     let mut v = plan.initial_delay;
     let mut failed = false;
+    // last honest chunk, kept only for FaultKind::Replay injection
+    let mut last_chunk: Option<ChunkMsg> = None;
 
     // initial delay X_i
     let alive = s.time_scale <= 0.0 || sleep_until(s.start, v * s.time_scale, &s.cancel);
@@ -170,13 +172,36 @@ pub fn run_job(worker: usize, shards: &[ShardData], engine: &Engine, job: JobOrd
                 tau * len as f64
             };
             s.tasks.observe(worker, len, virt_elapsed);
-            let _ = tx.send(WorkerEvent::Chunk(ChunkMsg {
+            let mut msg = ChunkMsg {
                 worker,
                 shard: task.shard,
                 start_row: task.start,
                 products,
                 virtual_time: v,
-            }));
+            };
+            // Byzantine injection (DESIGN.md §11): once `after_rows`
+            // honest rows are done this worker lies — it corrupts its
+            // products or replays its previous (stale) chunk. It keeps
+            // computing at full speed either way; detection is the
+            // master's job, not a behavioural tell.
+            if let Some(fault) = plan.fault {
+                if rows_done - len >= fault.after_rows {
+                    match fault.kind {
+                        FaultKind::Replay => {
+                            if let Some(prev) = &last_chunk {
+                                msg = ChunkMsg {
+                                    virtual_time: v,
+                                    ..prev.clone()
+                                };
+                            }
+                        }
+                        _ => fault.corrupt_products(&mut msg.products),
+                    }
+                } else if fault.kind == FaultKind::Replay {
+                    last_chunk = Some(msg.clone());
+                }
+            }
+            let _ = tx.send(WorkerEvent::Chunk(msg));
             if len < task.len {
                 // failure clipped the task; its tail dies with the worker
                 failed = true;
@@ -205,6 +230,7 @@ mod tests {
         WorkerPlan {
             initial_delay: x,
             fail_after: None,
+            fault: None,
         }
     }
 
@@ -370,6 +396,7 @@ mod tests {
             plan: WorkerPlan {
                 initial_delay: 0.0,
                 fail_after: Some(4),
+                fault: None,
             },
             tau: 1e-6,
             tx,
@@ -389,6 +416,60 @@ mod tests {
             }
         }
         assert_eq!(rows_received, 4);
+    }
+
+    /// A Byzantine plan corrupts every product past `after_rows` while
+    /// leaving the earlier rows honest — the master-side quarantine
+    /// tests build on exactly this behaviour.
+    #[test]
+    fn byzantine_plan_corrupts_products_after_threshold() {
+        use crate::coordinator::straggler::{FaultKind, FaultSpec};
+        let shard = Arc::new(Matrix::random_ints(10, 4, 3, 5));
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for fault in [
+            None,
+            Some(FaultSpec {
+                kind: FaultKind::Scale,
+                after_rows: 4,
+            }),
+        ] {
+            let (tx, rx) = channel();
+            let cancel = Arc::new(AtomicBool::new(false));
+            let shared = shared_for(&[10], 2, 1, cancel);
+            let job = JobOrder {
+                shared,
+                plan: WorkerPlan {
+                    initial_delay: 0.0,
+                    fail_after: None,
+                    fault,
+                },
+                tau: 1e-6,
+                tx,
+            };
+            spawn(vec![ShardData::from(Arc::clone(&shard))], 0, job);
+            let mut got = vec![f32::NAN; 10];
+            loop {
+                match rx.recv().unwrap() {
+                    WorkerEvent::Chunk(c) => {
+                        for (i, p) in c.products.iter().enumerate() {
+                            got[c.start_row + i] = *p;
+                        }
+                    }
+                    WorkerEvent::Done { rows_done, .. } => {
+                        assert_eq!(rows_done, 10);
+                        break;
+                    }
+                }
+            }
+            outs.push(got);
+        }
+        let (honest, lying) = (&outs[0], &outs[1]);
+        for i in 0..4 {
+            assert_eq!(honest[i], lying[i], "rows before after_rows stay honest");
+        }
+        for i in 4..10 {
+            assert_eq!(lying[i], honest[i] * 2.0, "rows after threshold are scaled");
+        }
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::coding::integrity::{ChunkVerifier, MatrixChecksum, SpotCheck};
     pub use crate::coding::lt::{LtCode, LtParams};
     pub use crate::coordinator::batcher::{
         Adaptive, BatchPolicy, BatchPolicyKind, BatchReport, Batcher, Deadline, Fixed, Request,
@@ -92,11 +93,12 @@ pub mod prelude {
     pub use crate::coding::soliton::RobustSoliton;
     pub use crate::coding::{ErasureCode, ErasureDecoder, Fountain, ShardSizing};
     pub use crate::config::{
-        ClusterConfig, CodingConfig, EncodingKind, TransportConfig, TransportKind, WorkloadConfig,
+        ClusterConfig, CodingConfig, EncodingKind, IntegrityConfig, TransportConfig,
+        TransportKind, WorkloadConfig,
     };
     pub use crate::coordinator::pool::{Transport, WorkerPool};
     pub use crate::coordinator::scheduler::SchedulerKind;
-    pub use crate::coordinator::straggler::StragglerProfile;
+    pub use crate::coordinator::straggler::{FaultKind, FaultSpec, StragglerProfile};
     pub use crate::coordinator::transport::tcp::{TcpTransport, TcpTunables, WorkerOpts};
     pub use crate::coordinator::{Coordinator, JobError, JobResult, Strategy};
     pub use crate::matrix::{CsrMatrix, Matrix, ShardData};

@@ -19,7 +19,11 @@
 //!                     [--peers h1:p,h2:p,...]  ... over TCP worker processes
 //!                     [--density 0.01]         ... on a sparse CSR matrix
 //!                     [--max-weight 8]         ... with weight-capped LT rows
+//!                     [--verify]               ... with Byzantine-tolerant
+//!                     [--sample-rate 0.05]         integrity checking on
 //! rateless worker --listen 0.0.0.0:4000       resident TCP worker process
+//!                 [--fault scale:128]          ... that lies (fault harness;
+//!                                                  env: RATELESS_FAULT)
 //! ```
 //!
 //! The simulation commands run workers as in-process threads. To run on a
@@ -132,14 +136,24 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("serve") => serve_cmd(args),
         Some("throughput") => throughput_cmd(args),
         Some("worker") => {
+            use rateless::coordinator::straggler::FaultSpec;
             use rateless::coordinator::transport::tcp::{run_worker_opts, WorkerOpts};
             let listen = args.str("listen", "127.0.0.1:4000");
+            // defaults pick up RATELESS_FAULT / RATELESS_WIRE_DELAY_MS
             let defaults = WorkerOpts::default();
+            let fault = match args.opt_str("fault") {
+                Some(raw) => Some(FaultSpec::parse(&raw).ok_or_else(|| {
+                    anyhow::anyhow!("--fault: expected bitflip|scale|replay[:after_rows], got {raw:?}")
+                })?),
+                None => defaults.fault,
+            };
             let opts = WorkerOpts {
                 // credit window advertised to the master (v2 pipelining)
                 credit: args.usize("credit", defaults.credit as usize) as u32,
                 // pin to 1 to force masters onto the legacy pull loop
                 max_proto: args.usize("max-proto", defaults.max_proto as usize) as u8,
+                // Byzantine fault harness: this worker lies on purpose
+                fault,
                 ..defaults
             };
             run_worker_opts(&listen, opts)
@@ -371,13 +385,25 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         })
         .collect::<anyhow::Result<_>>()?;
     anyhow::ensure!(!batches.is_empty(), "--batches must name at least one width");
-    let cluster = ClusterConfig {
+    let mut cluster = ClusterConfig {
         workers: p,
         tau: args.f64("tau", 2e-5),
         real_sleep: true,
         time_scale: args.f64("time-scale", 0.02),
         ..ClusterConfig::default()
     };
+    // --verify switches on Byzantine-tolerant integrity checking
+    // (homomorphic end-to-end checksum + sampled chunk spot checks);
+    // --sample-rate overrides the fraction of chunks spot-checked
+    if args.flag("verify") {
+        cluster.integrity.enabled = true;
+    }
+    let sample_rate = args.f64("sample-rate", cluster.integrity.sample_rate);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&sample_rate),
+        "--sample-rate must be in [0, 1]"
+    );
+    cluster.integrity.sample_rate = sample_rate;
     // --max-weight w caps LT encoded-row degree (low-weight encoding,
     // Das & Ramamoorthy arXiv:2301.12685); 0 = unrestricted
     let max_weight = args.usize("max-weight", 0);

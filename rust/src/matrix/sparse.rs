@@ -493,6 +493,36 @@ mod tests {
     }
 
     #[test]
+    fn try_new_rejects_hostile_wire_shapes() {
+        // every case here is reachable from attacker-controlled TCP
+        // install bytes (framing decodes the arrays, CsrMatrix::try_new
+        // is the validation gate) — all must be an Err, never a panic
+        // or an out-of-bounds slice.
+
+        // duplicate column within a row (equal adjacent indices)
+        assert!(CsrMatrix::try_new(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err());
+        // violation buried in a middle row, not the first or last
+        assert!(
+            CsrMatrix::try_new(3, 3, vec![0, 1, 3, 4], vec![0, 2, 1, 0], vec![1.0; 4]).is_err()
+        );
+        // out-of-range column in a middle row
+        assert!(
+            CsrMatrix::try_new(3, 3, vec![0, 1, 2, 3], vec![0, 3, 0], vec![1.0; 3]).is_err()
+        );
+        // indptr announces u32::MAX entries against tiny arrays: the
+        // mismatch check must fire before anything indexes by it
+        assert!(CsrMatrix::try_new(1, 2, vec![0, u32::MAX], vec![0], vec![1.0]).is_err());
+        // empty indptr must fail the length check, not panic on [0]
+        assert!(CsrMatrix::try_new(0, 0, vec![], vec![], vec![]).is_err());
+        // zero-column matrix cannot store any entry
+        assert!(CsrMatrix::try_new(1, 0, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // zero-row happy path: a single 0 offset and empty arrays
+        assert!(CsrMatrix::try_new(0, 5, vec![0], vec![], vec![]).is_ok());
+        // indices/values length disagreement (indices lies, values honest)
+        assert!(CsrMatrix::try_new(1, 4, vec![0, 2], vec![0, 1], vec![1.0]).is_err());
+    }
+
+    #[test]
     fn shard_data_dispatches_both_storages() {
         let a = Matrix::random_ints(6, 5, 3, 9);
         let x = Matrix::random_int_vector(5, 3, 4);

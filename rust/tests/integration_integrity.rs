@@ -1,0 +1,266 @@
+//! Integration: Byzantine-tolerant verification end-to-end — a lying
+//! worker on both transports, quarantined, with the decoded product
+//! bit-identical to an all-honest run.
+//!
+//! What is pinned here:
+//!
+//! * over the in-process channel transport, a worker injected with each
+//!   fault kind (bit-flip and value-scale) is caught by the chunk
+//!   spot-check, quarantined, and the job completes from the honest
+//!   workers' surplus with a **bitwise** match to the honest decode,
+//! * the same holds over real `rateless worker` TCP processes, with the
+//!   fault injected two deployment-shaped ways: the `RATELESS_FAULT`
+//!   environment knob and the `--fault` CLI flag,
+//! * the v1 pull-loop fallback (`--max-proto 1`) corrupts and
+//!   quarantines identically — fault injection is not a v2-only path,
+//! * the master-side `TcpTunables::fault` knob (corrupt a lane's chunks
+//!   as they arrive, honest worker processes) trips the same quarantine
+//!   machinery — the check does not care *where* on the path the lie
+//!   was inserted.
+//!
+//! Integer-valued data keeps every f32 sum exact, so all bit-identity
+//! assertions are exact equality, not tolerance compares.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::straggler::{FaultKind, FaultSpec, StragglerProfile};
+use rateless::coordinator::transport::tcp::{TcpTransport, TcpTunables};
+use rateless::coordinator::{Coordinator, JobOptions, Strategy};
+use rateless::matrix::Matrix;
+use rateless::runtime::Engine;
+use rateless::util::dist::DelayDist;
+
+const M: usize = 1024;
+const N: usize = 16;
+const P: usize = 4;
+
+/// A fleet of spawned `rateless worker` processes, each with its own
+/// CLI flags and environment. Killed on drop so a failing test never
+/// leaks children.
+struct Fleet {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Fleet {
+    /// One spec per worker: (extra CLI flags, extra env vars).
+    fn spawn_each(specs: &[(Vec<&str>, Vec<(&str, &str)>)]) -> Fleet {
+        let mut children = Vec::with_capacity(specs.len());
+        let mut addrs = Vec::with_capacity(specs.len());
+        for (extra_args, envs) in specs {
+            let mut cmd = Command::new(env!("CARGO_BIN_EXE_rateless"));
+            cmd.args(["worker", "--listen", "127.0.0.1:0"])
+                .args(extra_args)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null());
+            for (k, v) in envs {
+                cmd.env(k, v);
+            }
+            let mut child = cmd.spawn().expect("spawn rateless worker");
+            let mut banner = String::new();
+            BufReader::new(child.stdout.take().expect("stdout piped"))
+                .read_line(&mut banner)
+                .expect("read worker banner");
+            let addr = banner
+                .trim()
+                .strip_prefix("rateless worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected worker banner {banner:?}"))
+                .to_string();
+            children.push(child);
+            addrs.push(addr);
+        }
+        Fleet { children, addrs }
+    }
+
+    /// `p` honest workers except `liar`, which gets the given spec.
+    fn spawn_with_liar(p: usize, liar: usize, args: Vec<&str>, envs: Vec<(&str, &str)>) -> Fleet {
+        let specs: Vec<(Vec<&str>, Vec<(&str, &str)>)> = (0..p)
+            .map(|w| {
+                if w == liar {
+                    (args.clone(), envs.clone())
+                } else {
+                    (Vec::new(), Vec::new())
+                }
+            })
+            .collect();
+        Self::spawn_each(&specs)
+    }
+
+    fn connect_tuned(&self, tun: TcpTunables) -> TcpTransport {
+        TcpTransport::connect_tuned(&self.addrs, tun).expect("connect fleet")
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Every job here runs with verification on and a deterministic 100%
+/// spot-check rate: the first corrupt chunk must be caught.
+fn verified_cluster(p: usize) -> ClusterConfig {
+    let mut cluster = ClusterConfig {
+        workers: p,
+        delay: DelayDist::None,
+        tau: 1e-5,
+        block_fraction: 0.05,
+        seed: 4242,
+        real_sleep: false,
+        ..ClusterConfig::default()
+    };
+    cluster.integrity.enabled = true;
+    cluster.integrity.sample_rate = 1.0;
+    cluster
+}
+
+fn problem() -> (Matrix, Vec<f32>) {
+    let a = Matrix::random_ints(M, N, 3, 81);
+    let x = Matrix::random_int_vector(N, 1, 82);
+    (a, x)
+}
+
+/// The all-honest reference decode (in-process, verification on). The
+/// existing transport integration suite pins TCP ≡ channel bitwise, so
+/// this is the honest answer for both transports.
+fn honest_decode(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let coord = Coordinator::new(
+        verified_cluster(P),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        a,
+    )
+    .expect("honest coordinator");
+    let res = coord.multiply(x).expect("honest multiply");
+    assert_eq!(res.corrupt_chunks, 0, "honest run must not flag chunks");
+    assert!(res.quarantined_workers.is_empty());
+    for (r, (rv, wv)) in res.b.iter().zip(&a.matvec(x)).enumerate() {
+        assert_eq!(rv.to_bits(), wv.to_bits(), "honest decode wrong at row {r}");
+    }
+    res.b
+}
+
+fn assert_caught_liar(
+    tag: &str,
+    liar: usize,
+    res: &rateless::coordinator::JobResult,
+    honest: &[f32],
+) {
+    assert_eq!(
+        res.quarantined_workers,
+        vec![liar],
+        "{tag}: the liar must be quarantined"
+    );
+    assert!(res.corrupt_chunks >= 1, "{tag}: corrupt chunks must be counted");
+    for (r, (rv, hv)) in res.b.iter().zip(honest).enumerate() {
+        assert_eq!(
+            rv.to_bits(),
+            hv.to_bits(),
+            "{tag}: row {r} differs from the honest decode"
+        );
+    }
+}
+
+/// Channel transport: both fault kinds, injected via the straggler
+/// profile (how the in-process simulator models a Byzantine node).
+#[test]
+fn channel_transport_quarantines_both_fault_kinds() {
+    let (a, x) = problem();
+    let honest = honest_decode(&a, &x);
+    let coord = Coordinator::new(
+        verified_cluster(P),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Engine::Native,
+        &a,
+    )
+    .expect("coordinator");
+    for (tag, kind) in [("bitflip", FaultKind::BitFlip), ("scale", FaultKind::Scale)] {
+        let opts = JobOptions {
+            seed: None,
+            profile: Some(StragglerProfile::none().with_fault(
+                1,
+                FaultSpec {
+                    kind,
+                    after_rows: 0,
+                },
+            )),
+        };
+        let res = coord.multiply_opts(&x, &opts).expect("job with a liar");
+        assert_caught_liar(tag, 1, &res, &honest);
+    }
+}
+
+fn run_tcp_with_liar(fleet: &Fleet, tun: TcpTunables, a: &Matrix, x: &[f32]) ->
+    rateless::coordinator::JobResult
+{
+    let coord = Coordinator::with_transport(
+        verified_cluster(P),
+        Strategy::Lt(LtParams::with_alpha(2.0)),
+        Box::new(fleet.connect_tuned(tun)),
+        a,
+    )
+    .expect("tcp coordinator");
+    coord.multiply(x).expect("tcp job with a liar")
+}
+
+/// TCP, fault injected by the `RATELESS_FAULT` environment knob on one
+/// worker process (bit-flip from the first computed row).
+#[test]
+fn tcp_env_fault_bitflip_is_quarantined() {
+    let (a, x) = problem();
+    let honest = honest_decode(&a, &x);
+    let fleet = Fleet::spawn_with_liar(P, 1, vec![], vec![("RATELESS_FAULT", "bitflip")]);
+    let res = run_tcp_with_liar(&fleet, TcpTunables::default(), &a, &x);
+    assert_caught_liar("tcp env bitflip", 1, &res, &honest);
+}
+
+/// TCP, fault injected by the `--fault` CLI flag (value-scale).
+#[test]
+fn tcp_cli_fault_scale_is_quarantined() {
+    let (a, x) = problem();
+    let honest = honest_decode(&a, &x);
+    let fleet = Fleet::spawn_with_liar(P, 2, vec!["--fault", "scale"], vec![]);
+    let res = run_tcp_with_liar(&fleet, TcpTunables::default(), &a, &x);
+    assert_caught_liar("tcp cli scale", 2, &res, &honest);
+}
+
+/// The v1 pull-loop fallback carries the fault and the quarantine the
+/// same way: pin the liar to `--max-proto 1` so its lane negotiates v1.
+#[test]
+fn tcp_v1_pull_loop_fault_is_quarantined() {
+    let (a, x) = problem();
+    let honest = honest_decode(&a, &x);
+    let fleet =
+        Fleet::spawn_with_liar(P, 0, vec!["--max-proto", "1", "--fault", "bitflip"], vec![]);
+    let res = run_tcp_with_liar(&fleet, TcpTunables::default(), &a, &x);
+    assert_caught_liar("tcp v1 bitflip", 0, &res, &honest);
+}
+
+/// Master-side injection: honest worker processes, but the master's
+/// `TcpTunables::fault` knob corrupts lane 3's chunks as they arrive —
+/// the spot-check cannot tell where the lie happened and quarantines
+/// the lane all the same.
+#[test]
+fn tcp_master_side_fault_knob_is_quarantined() {
+    let (a, x) = problem();
+    let honest = honest_decode(&a, &x);
+    let fleet = Fleet::spawn_with_liar(P, 0, vec![], vec![]); // all honest
+    let tun = TcpTunables {
+        fault: Some((
+            3,
+            FaultSpec {
+                kind: FaultKind::Scale,
+                after_rows: 0,
+            },
+        )),
+        ..TcpTunables::default()
+    };
+    let res = run_tcp_with_liar(&fleet, tun, &a, &x);
+    assert_caught_liar("tcp master-side scale", 3, &res, &honest);
+}

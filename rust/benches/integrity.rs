@@ -157,6 +157,9 @@ fn main() -> anyhow::Result<()> {
             ("corrupt_chunks", Json::Int(res.corrupt_chunks as i64)),
             ("bit_identical", Json::Bool(true)),
         ]));
+        // quarantine memory persists across jobs: pardon the lane so the
+        // next fault kind is caught fresh rather than pre-blacklisted
+        assert!(coord.pardon_worker(1), "{name}: pardon the quarantined lane");
     }
 
     // ---- acceptance ----

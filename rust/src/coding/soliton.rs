@@ -259,6 +259,55 @@ mod tests {
         assert_eq!(over.pmf(64), full.pmf(64));
     }
 
+    /// Property sweep over a grid of `(m, w)`: for every capped
+    /// distribution, (1) the pmf is a probability distribution (sums to
+    /// 1, non-negative), (2) no mass sits above the cap, and (3) a cap at
+    /// or beyond `m` is the identity — exactly the invariants the
+    /// low-weight LT encoder assumes.
+    #[test]
+    fn capped_properties_hold_across_parameter_grid() {
+        for &m in &[2usize, 7, 64, 257, 1000] {
+            let full = RobustSoliton::new(m, 0.03, 0.5);
+            for &w in &[1usize, 2, 3, 8, 25, m - 1, m, m + 50] {
+                if w < 1 {
+                    continue;
+                }
+                let rs = RobustSoliton::capped(m, 0.03, 0.5, w);
+                let total: f64 = (1..=m).map(|d| rs.pmf(d)).sum();
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "m={m} w={w}: pmf sums to {total}"
+                );
+                for d in 1..=m {
+                    let p = rs.pmf(d);
+                    assert!(p >= 0.0 && p.is_finite(), "m={m} w={w} d={d}: pmf {p}");
+                    if d > w {
+                        assert_eq!(p, 0.0, "m={m} w={w}: mass above cap at d={d}");
+                    }
+                }
+                if w >= m {
+                    for d in 1..=m {
+                        assert_eq!(
+                            rs.pmf(d),
+                            full.pmf(d),
+                            "m={m} w={w} d={d}: loose cap must be the identity"
+                        );
+                    }
+                } else {
+                    // truncation renormalizes upward below the cap
+                    assert!(rs.pmf(1) >= full.pmf(1), "m={m} w={w}");
+                    assert!(rs.mean_degree() <= w as f64 + 1e-12, "m={m} w={w}");
+                }
+                // the sampler respects the cap too
+                let mut rng = Rng::new(crate::util::rng::derive_seed(99, (m * 131 + w) as u64));
+                for _ in 0..500 {
+                    let d = rs.sample(&mut rng);
+                    assert!(d >= 1 && d <= w.min(m), "m={m} w={w}: sampled {d}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn small_m_edge_cases() {
         for &m in &[2usize, 3, 5] {

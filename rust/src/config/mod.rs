@@ -492,6 +492,17 @@ pub struct WorkloadConfig {
     pub vectors: usize,
     /// Number of trials for error bars.
     pub trials: usize,
+    /// Iterative driver for `rateless iterate`: "power" (dominant
+    /// eigenpair of a symmetric matrix) or "gd" (least-squares gradient
+    /// descent).
+    pub algorithm: String,
+    /// Round budget for the iterative drivers.
+    pub rounds: usize,
+    /// Convergence tolerance on the per-round iterate drift (∞-norm).
+    pub tolerance: f64,
+    /// Gradient-descent step size; 0 means "auto" (use the generated
+    /// problem's power-of-two step below 1/λmax).
+    pub step: f64,
 }
 
 impl Default for WorkloadConfig {
@@ -501,6 +512,10 @@ impl Default for WorkloadConfig {
             cols: 10000,
             vectors: 1,
             trials: 10,
+            algorithm: "power".to_string(),
+            rounds: 50,
+            tolerance: 1e-6,
+            step: 0.0,
         }
     }
 }
@@ -508,11 +523,32 @@ impl Default for WorkloadConfig {
 impl WorkloadConfig {
     pub fn from_doc(doc: &Doc) -> Self {
         let d = Self::default();
+        let algorithm = doc.str("workload", "algorithm", &d.algorithm);
+        assert!(
+            matches!(algorithm.as_str(), "power" | "gd"),
+            "config workload.algorithm: expected power|gd, got {algorithm:?}"
+        );
+        let rounds = doc.usize("workload", "rounds", d.rounds);
+        assert!(rounds > 0, "config workload.rounds must be positive");
+        let tolerance = doc.f64("workload", "tolerance", d.tolerance);
+        assert!(
+            tolerance > 0.0 && tolerance.is_finite(),
+            "config workload.tolerance must be positive and finite"
+        );
+        let step = doc.f64("workload", "step", d.step);
+        assert!(
+            step >= 0.0 && step.is_finite(),
+            "config workload.step must be non-negative and finite"
+        );
         Self {
             rows: doc.usize("workload", "rows", d.rows),
             cols: doc.usize("workload", "cols", d.cols),
             vectors: doc.usize("workload", "vectors", d.vectors),
             trials: doc.usize("workload", "trials", d.trials),
+            algorithm,
+            rounds,
+            tolerance,
+            step,
         }
     }
 }
@@ -557,6 +593,31 @@ alphas = [1.25, 2.0]
         assert_eq!(doc.f64_list("lt", "alphas", &[]), vec![1.25, 2.0]);
         // defaults for absent keys
         assert_eq!(doc.usize("workload", "trials", 10), 10);
+        // iterative keys default sensibly when absent
+        assert_eq!(w.algorithm, "power");
+        assert_eq!(w.rounds, 50);
+        assert!((w.tolerance - 1e-6).abs() < 1e-18);
+        assert_eq!(w.step, 0.0);
+    }
+
+    #[test]
+    fn workload_iterative_keys_parse() {
+        let doc = Doc::from_str(
+            "[workload]\nrows = 64\ncols = 64\nalgorithm = \"gd\"\nrounds = 80\ntolerance = 1e-7\nstep = 0.00048828125\n",
+        )
+        .unwrap();
+        let w = WorkloadConfig::from_doc(&doc);
+        assert_eq!(w.algorithm, "gd");
+        assert_eq!(w.rounds, 80);
+        assert!((w.tolerance - 1e-7).abs() < 1e-19);
+        assert!((w.step - 1.0 / 2048.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "workload.algorithm")]
+    fn workload_algorithm_is_validated() {
+        let doc = Doc::from_str("[workload]\nalgorithm = \"newton\"\n").unwrap();
+        WorkloadConfig::from_doc(&doc);
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub mod worker;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 pub use master::{JobError, JobResult, WorkerStat};
@@ -160,6 +160,131 @@ pub struct JobOptions {
     pub profile: Option<StragglerProfile>,
 }
 
+/// What an iterative driver tells [`Coordinator::run_rounds`] after
+/// seeing one round's decoded product.
+pub enum RoundControl {
+    /// Keep iterating with `x` as the next query vector; `error` is the
+    /// driver's convergence metric after this round (recorded in the
+    /// [`RunReport`]).
+    Next { x: Vec<f32>, error: f64 },
+    /// The run converged this round.
+    Converged { error: f64 },
+}
+
+/// Statistics of one round of an iterative run — the per-round slice of
+/// the paper's E[T]/E[C] story. A round can merge several jobs (gradient
+/// descent does `A·x` then `Aᵀ·r`): latencies and counters sum,
+/// quarantine sets union.
+#[derive(Clone, Debug)]
+pub struct RoundStat {
+    pub round: usize,
+    /// Jobs merged into this round.
+    pub jobs: usize,
+    /// Summed job latency T in virtual seconds.
+    pub latency: f64,
+    /// Total encoded-row computations C across the round's jobs.
+    pub computations: usize,
+    /// Rows computed beyond the uncoded minimum (per-round E[Z] proxy).
+    pub redundant_rows: usize,
+    /// Rows that arrived through stolen tasks.
+    pub stolen_rows: usize,
+    /// Chunks that failed an integrity spot check this round.
+    pub corrupt_chunks: usize,
+    /// Workers quarantined as of this round, ascending.
+    pub quarantined_workers: Vec<usize>,
+    /// Driver convergence metric after this round (algorithm-specific:
+    /// Rayleigh-quotient drift for power iteration, max |gradient| for
+    /// gradient descent).
+    pub error: f64,
+}
+
+/// Aggregated per-round report of an iterative run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub rounds: Vec<RoundStat>,
+    /// Whether the driver declared convergence within its round budget.
+    pub converged: bool,
+    /// Σ round latencies through the converging round, in virtual
+    /// seconds — the bench headline "time to converge". 0 until
+    /// [`mark_converged`](Self::mark_converged).
+    pub time_to_converge: f64,
+}
+
+impl RunReport {
+    /// Fold one job's result into round `round`, merging with an
+    /// existing entry for the same round (multi-job rounds) or appending
+    /// a new one. `error` overwrites the round's metric — callers pass
+    /// the latest value, which after the round's final job is the one
+    /// that matters.
+    pub fn record(&mut self, round: usize, res: &JobResult, error: f64) {
+        if let Some(last) = self.rounds.last_mut() {
+            if last.round == round {
+                last.jobs += 1;
+                last.latency += res.latency;
+                last.computations += res.computations;
+                last.redundant_rows += res.redundant_rows;
+                last.stolen_rows += res.stolen_rows;
+                last.corrupt_chunks += res.corrupt_chunks;
+                for &w in &res.quarantined_workers {
+                    if !last.quarantined_workers.contains(&w) {
+                        last.quarantined_workers.push(w);
+                    }
+                }
+                last.quarantined_workers.sort_unstable();
+                last.error = error;
+                return;
+            }
+        }
+        self.rounds.push(RoundStat {
+            round,
+            jobs: 1,
+            latency: res.latency,
+            computations: res.computations,
+            redundant_rows: res.redundant_rows,
+            stolen_rows: res.stolen_rows,
+            corrupt_chunks: res.corrupt_chunks,
+            quarantined_workers: res.quarantined_workers.clone(),
+            error,
+        });
+    }
+
+    /// Declare the run converged at the last recorded round and freeze
+    /// `time_to_converge` at the latency sum so far.
+    pub fn mark_converged(&mut self) {
+        self.converged = true;
+        self.time_to_converge = self.total_latency();
+    }
+
+    /// Σ latency over every recorded round (virtual seconds).
+    pub fn total_latency(&self) -> f64 {
+        self.rounds.iter().map(|r| r.latency).sum()
+    }
+
+    /// Rounds executed (some may merge several jobs).
+    pub fn rounds_run(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Mean redundant rows per round as a fraction of `m` — the
+    /// iterative analogue of [`JobResult::redundant_frac`].
+    pub fn mean_redundant_frac(&self, m: usize) -> f64 {
+        if self.rounds.is_empty() || m == 0 {
+            return 0.0;
+        }
+        let per_round: f64 = self
+            .rounds
+            .iter()
+            .map(|r| r.redundant_rows as f64 / r.jobs.max(1) as f64)
+            .sum();
+        per_round / (self.rounds.len() * m) as f64
+    }
+
+    /// Total rows arriving via stolen tasks across the run.
+    pub fn total_stolen_rows(&self) -> usize {
+        self.rounds.iter().map(|r| r.stolen_rows).sum()
+    }
+}
+
 /// The master node: owns the encoded-shard layout, the dispatch
 /// scheduler and a persistent worker pool, and serves (possibly
 /// concurrent, possibly batched) multiply jobs.
@@ -186,6 +311,11 @@ pub struct Coordinator {
     /// Per-matrix homomorphic checksum (`C` + precomputed `CA`), present
     /// iff `[integrity]` is enabled.
     checksum: Option<MatrixChecksum>,
+    /// Quarantine memory: lanes caught lying stay blacklisted across
+    /// `run_job` calls — a liar in round k is still distrusted in round
+    /// k+1 of an iterative workload — until explicitly pardoned
+    /// ([`pardon_worker`](Self::pardon_worker)).
+    quarantined: Mutex<HashSet<usize>>,
     m: usize,
     n: usize,
     encoded_rows: usize,
@@ -371,6 +501,7 @@ impl Coordinator {
             profile,
             shards: Arc::new(encoded.shards),
             checksum,
+            quarantined: Mutex::new(HashSet::new()),
             encoded_rows,
             jobs_served: AtomicU64::new(0),
         })
@@ -429,6 +560,28 @@ impl Coordinator {
         self.pool.transport_name()
     }
 
+    /// Lanes currently held in quarantine memory (ascending). These were
+    /// caught lying by an integrity spot check in some earlier job and
+    /// stay blacklisted — dispatched a die-immediately plan, chunks
+    /// dropped on arrival — until [`pardon_worker`](Self::pardon_worker).
+    pub fn quarantined_workers(&self) -> Vec<usize> {
+        let guard = self.quarantined.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut q: Vec<usize> = guard.iter().copied().collect();
+        q.sort_unstable();
+        q
+    }
+
+    /// Forgive a quarantined lane: jobs submitted after this call trust
+    /// worker `w` again (until it is caught lying again). Returns whether
+    /// the worker was actually in quarantine. The operator-facing escape
+    /// hatch for a repaired or replaced node.
+    pub fn pardon_worker(&self, w: usize) -> bool {
+        self.quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&w)
+    }
+
     /// Multiply a single vector with default per-job options.
     pub fn multiply(&self, x: &[f32]) -> Result<JobResult, JobError> {
         self.multiply_opts(x, &JobOptions::default())
@@ -437,7 +590,25 @@ impl Coordinator {
     /// Multiply `A · x` across the worker fleet.
     pub fn multiply_opts(&self, x: &[f32], opts: &JobOptions) -> Result<JobResult, JobError> {
         assert_eq!(x.len(), self.n, "vector length mismatch");
-        self.run_job(Arc::new(x.to_vec()), 1, opts)
+        self.run_job(Arc::new(x.to_vec()), 1, opts, None)
+    }
+
+    /// Multiply with an explicit round index — the iterative-workload
+    /// entry point. The round pins the straggler profile's per-round
+    /// variation (see [`StragglerProfile::slowdown_factors`]): a rotating
+    /// slowdown slows worker `(round + phase) % p`, so consecutive rounds
+    /// of a power-iteration or gradient-descent run straggle a
+    /// *different* worker each time. Plain [`multiply_opts`](Self::multiply_opts)
+    /// uses the job counter as the round, so one-shot jobs see the same
+    /// rotation without threading an index.
+    pub fn multiply_round(
+        &self,
+        x: &[f32],
+        round: usize,
+        opts: &JobOptions,
+    ) -> Result<JobResult, JobError> {
+        assert_eq!(x.len(), self.n, "vector length mismatch");
+        self.run_job(Arc::new(x.to_vec()), 1, opts, Some(round))
     }
 
     /// Multiply a batch of query vectors in one job: `xs` is `n × batch`
@@ -455,7 +626,39 @@ impl Coordinator {
     ) -> Result<JobResult, JobError> {
         assert_eq!(xs.rows(), self.n, "X row count must equal A's columns");
         assert!(xs.cols() >= 1, "need at least one query vector");
-        self.run_job(Arc::new(xs.data().to_vec()), xs.cols(), opts)
+        self.run_job(Arc::new(xs.data().to_vec()), xs.cols(), opts, None)
+    }
+
+    /// Drive an iterative workload over the resident shards: each round
+    /// multiplies `A` by the current iterate and hands the decoded
+    /// product to `step`, which returns the next iterate or declares
+    /// convergence. Per-round [`JobResult`]s aggregate into the returned
+    /// [`RunReport`]; the encoded shards are installed once and reused
+    /// every round (the paper's motivating amortization).
+    pub fn run_rounds(
+        &self,
+        x0: Vec<f32>,
+        max_rounds: usize,
+        opts: &JobOptions,
+        mut step: impl FnMut(usize, &JobResult) -> RoundControl,
+    ) -> Result<RunReport, JobError> {
+        let mut report = RunReport::default();
+        let mut x = x0;
+        for round in 0..max_rounds {
+            let res = self.multiply_round(&x, round, opts)?;
+            match step(round, &res) {
+                RoundControl::Next { x: next, error } => {
+                    report.record(round, &res, error);
+                    x = next;
+                }
+                RoundControl::Converged { error } => {
+                    report.record(round, &res, error);
+                    report.mark_converged();
+                    break;
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// Submit one job to the pool and run the master collect/decode loop.
@@ -466,12 +669,20 @@ impl Coordinator {
     /// re-dispatch** with the known liars pre-quarantined: rateless
     /// codes normally absorb a quarantine from their surplus, but
     /// fixed-rate codes (and corruption that slipped past sampling into
-    /// the decode) need the second run to complete honestly.
+    /// the decode) need the second run to complete honestly. Lanes
+    /// quarantined by *earlier* jobs are pre-seeded from the
+    /// coordinator's quarantine memory, and new catches are written back,
+    /// so a liar stays blacklisted until pardoned.
+    ///
+    /// `round` pins the straggler profile's per-round variation for
+    /// iterative workloads; one-shot jobs (`None`) use the job counter,
+    /// so a rotating slowdown still rotates across successive jobs.
     fn run_job(
         &self,
         x: Arc<Vec<f32>>,
         batch: usize,
         opts: &JobOptions,
+        round: Option<usize>,
     ) -> Result<JobResult, JobError> {
         let p = self.cluster.workers;
         let job_idx = self.jobs_served.fetch_add(1, Ordering::Relaxed);
@@ -480,7 +691,23 @@ impl Coordinator {
             .unwrap_or_else(|| crate::util::rng::derive_seed(self.cluster.seed, 1000 + job_idx));
         let profile = opts.profile.as_ref().unwrap_or(&self.profile);
         let plans = profile.draw(p, seed);
+        // Fold this round's compute slowdowns into the dispatched τ_i:
+        // the slow lane really paces slower (locally and over the wire),
+        // the EWMA speed tracker observes it, and the master's
+        // computation clamp charges it honestly.
+        let round_idx = round.unwrap_or(job_idx as usize);
+        let eff_taus: Vec<f64> = self
+            .taus
+            .iter()
+            .zip(profile.slowdown_factors(p, round_idx))
+            .map(|(t, s)| t * s)
+            .collect();
 
+        let remembered: HashSet<usize> = self
+            .quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
         let integrity = &self.cluster.integrity;
         let factory = || self.code.new_decoder(&self.layout, batch);
         let mut state = if integrity.enabled {
@@ -494,7 +721,7 @@ impl Coordinator {
                     seed,
                 )),
                 factory: Some(&factory),
-                quarantined: HashSet::new(),
+                quarantined: remembered,
                 corrupt_chunks: 0,
             }
         } else {
@@ -502,8 +729,9 @@ impl Coordinator {
         };
 
         let attempts = if integrity.enabled { 2 } else { 1 };
+        let mut outcome: Option<Result<JobResult, JobError>> = None;
         for attempt in 0..attempts {
-            match self.dispatch(&x, batch, &plans, &mut state) {
+            match self.dispatch(&x, batch, &plans, &eff_taus, &mut state) {
                 Ok(res) => {
                     if let Some(cs) = &self.checksum {
                         if let Err(detail) = cs.verify_product(&x, batch, &res.b) {
@@ -514,10 +742,12 @@ impl Coordinator {
                                 );
                                 continue;
                             }
-                            return Err(JobError::IntegrityFailure { detail });
+                            outcome = Some(Err(JobError::IntegrityFailure { detail }));
+                            break;
                         }
                     }
-                    return Ok(res);
+                    outcome = Some(Ok(res));
+                    break;
                 }
                 Err(JobError::Undecodable { detail })
                     if attempt + 1 < attempts && !state.quarantined.is_empty() =>
@@ -529,10 +759,21 @@ impl Coordinator {
                     );
                     continue;
                 }
-                Err(e) => return Err(e),
+                Err(e) => {
+                    outcome = Some(Err(e));
+                    break;
+                }
             }
         }
-        unreachable!("the final attempt always returns")
+        // Persist the quarantine verdicts regardless of how the job
+        // ended: a caught liar must not be re-trusted by the next job.
+        if !state.quarantined.is_empty() {
+            self.quarantined
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .extend(state.quarantined.iter().copied());
+        }
+        outcome.expect("the final attempt always resolves")
     }
 
     /// One dispatch: broadcast the job, run the (possibly verifying)
@@ -545,6 +786,7 @@ impl Coordinator {
         x: &Arc<Vec<f32>>,
         batch: usize,
         plans: &[WorkerPlan],
+        taus: &[f64],
         state: &mut master::VerifyState<'_>,
     ) -> Result<JobResult, JobError> {
         let p = self.cluster.workers;
@@ -575,7 +817,7 @@ impl Coordinator {
                 } else {
                     plans[w]
                 },
-                tau: self.taus[w],
+                tau: taus[w],
                 tx: tx.clone(),
             })
             .collect();
@@ -591,7 +833,7 @@ impl Coordinator {
         let decoder = self.code.new_decoder(&self.layout, batch);
         let delays: Vec<f64> = plans.iter().map(|pl| pl.initial_delay).collect();
         let result =
-            master::collect_verified(decoder, &rx, &cancel, p, &delays, &self.taus, batch, state);
+            master::collect_verified(decoder, &rx, &cancel, p, &delays, taus, batch, state);
         // belt-and-braces: make sure no worker keeps computing for this job
         cancel.store(true, Ordering::Relaxed);
         result
@@ -1153,6 +1395,110 @@ mod tests {
                     out.b[i],
                     honest.b[i]
                 );
+            }
+            // the catch persists across jobs — pardon so the next fault
+            // kind is caught fresh rather than pre-blacklisted
+            assert_eq!(coord.quarantined_workers(), vec![1], "{kind:?}: memory");
+            assert!(coord.pardon_worker(1), "{kind:?}: pardon");
+        }
+        assert!(coord.quarantined_workers().is_empty());
+    }
+
+    /// Quarantine memory (ROADMAP PR 9 item): a liar caught in job k is
+    /// *still quarantined* in job k+1 — dispatched a die-immediately
+    /// plan, zero new corrupt chunks because its lane never computes —
+    /// and the job completes honestly without it. `pardon_worker`
+    /// restores trust; a re-offending liar is caught again.
+    #[test]
+    fn liar_stays_quarantined_across_jobs_until_pardoned() {
+        let (m, p) = (128usize, 4usize);
+        let a = Matrix::random_ints(m, 8, 3, 440);
+        let x = Matrix::random_int_vector(8, 3, 441);
+        let want = a.matvec(&x);
+        let coord = Coordinator::new(
+            integrity_cluster(p),
+            Strategy::Lt(LtParams::with_alpha(3.0)),
+            Engine::Native,
+            &a,
+        )
+        .expect("coordinator");
+
+        // job k: worker 1 lies and is caught
+        let lie = JobOptions {
+            seed: Some(9),
+            profile: Some(lying_profile(1, FaultKind::BitFlip)),
+        };
+        let caught = coord.multiply_opts(&x, &lie).expect("job k survives the liar");
+        assert_eq!(caught.quarantined_workers, vec![1]);
+        assert!(caught.corrupt_chunks >= 1);
+        assert_eq!(coord.quarantined_workers(), vec![1]);
+
+        // job k+1: an HONEST profile — but the liar stays blacklisted,
+        // so its lane does no work and no new corruption is even possible
+        let honest = JobOptions {
+            seed: Some(10),
+            profile: Some(StragglerProfile::none()),
+        };
+        let next = coord.multiply_opts(&x, &honest).expect("job k+1 completes without the liar");
+        assert_eq!(next.quarantined_workers, vec![1], "quarantine must persist into job k+1");
+        assert_eq!(next.corrupt_chunks, 0, "a dead lane cannot emit corrupt chunks");
+        assert_eq!(next.per_worker[1].rows_done, 0, "quarantined lane must not compute");
+        for i in 0..m {
+            assert_eq!(next.b[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+
+        // pardoned: the worker is trusted and computes again
+        assert!(coord.pardon_worker(1));
+        assert!(!coord.pardon_worker(1), "double pardon is a no-op");
+        let back = coord.multiply_opts(&x, &honest).expect("post-pardon job");
+        assert!(back.quarantined_workers.is_empty());
+        assert!(back.per_worker[1].rows_done > 0, "pardoned worker must compute");
+
+        // and a re-offence is caught again
+        let again = coord.multiply_opts(&x, &lie).expect("re-offence survives");
+        assert_eq!(again.quarantined_workers, vec![1]);
+        assert_eq!(coord.quarantined_workers(), vec![1]);
+    }
+
+    /// A rotating compute slowdown is visible end to end: the slow lane
+    /// of the round really pays factor× τ per row, so under static
+    /// dispatch its rows dominate the round latency, and the slow slot
+    /// moves with the round index.
+    #[test]
+    fn rotating_slowdown_slows_a_different_worker_each_round() {
+        let (m, p) = (256usize, 4usize);
+        let a = Matrix::random_ints(m, 8, 3, 450);
+        let x = Matrix::random_int_vector(8, 3, 451);
+        let mut cluster = fast_cluster(p);
+        cluster.delay = DelayDist::None;
+        let coord =
+            Coordinator::new(cluster, Strategy::Uncoded, Engine::Native, &a).expect("coordinator");
+        let profile = StragglerProfile::none().with_rotating_slowdown(4.0, 0);
+        let opts = JobOptions {
+            seed: Some(11),
+            profile: Some(profile),
+        };
+        let honest_opts = JobOptions {
+            seed: Some(11),
+            profile: Some(StragglerProfile::none()),
+        };
+        let baseline = coord
+            .multiply_round(&x, 0, &honest_opts)
+            .expect("baseline round");
+        for round in 0..p {
+            let out = coord.multiply_round(&x, round, &opts).expect("slow round");
+            // uncoded static dispatch waits for every shard: the round's
+            // slow worker sets T ≈ 4·τ·(m/p), 4× the homogeneous round
+            assert!(
+                out.latency > 2.0 * baseline.latency,
+                "round {round}: slowdown must dominate latency ({} vs baseline {})",
+                out.latency,
+                baseline.latency
+            );
+            // the slow lane still finishes its shard (uncoded needs it)
+            assert_eq!(out.per_worker[round].rows_done, m / p, "round {round}");
+            for i in 0..m {
+                assert_eq!(out.b[i].to_bits(), baseline.b[i].to_bits(), "round {round} row {i}");
             }
         }
     }

@@ -387,6 +387,46 @@ mod tests {
         assert_eq!((stolen.start, stolen.len), (2, 2));
     }
 
+    /// Regression for the rotating-straggler workload: when the slow
+    /// worker *changes between rounds*, the persistent EWMA must unlearn
+    /// the old straggler and re-target the new one — victim selection in
+    /// round k+1 follows the observations of round k+1, not round k.
+    #[test]
+    fn ewma_retargets_the_new_slow_worker_when_the_straggler_rotates() {
+        let sched = WorkStealingScheduler::new(&[1.0; 3]);
+        // round k: worker 1 is the 10×-slow straggler
+        for _ in 0..10 {
+            sched.speeds().observe(1, 10.0);
+        }
+        let src = sched.plan(&[2, 4, 4], &[2, 2, 2]);
+        assert_eq!(src.next_task(0).unwrap().shard, 0);
+        assert_eq!(
+            src.next_task(0).unwrap().shard,
+            1,
+            "round k: steal from the observed straggler"
+        );
+        // rotation: worker 1 recovers, worker 2 becomes the straggler.
+        // Feed the next round's observations through the board's own
+        // observe() path (rows × per-row), as the worker loop does.
+        let src = sched.plan(&[2, 4, 4], &[2, 2, 2]);
+        for _ in 0..10 {
+            src.observe(1, 2, 2.0); // back to 1.0 per row
+            src.observe(2, 2, 20.0); // now 10.0 per row
+        }
+        let taus = sched.speeds().snapshot();
+        assert!(
+            taus[2] > 5.0 && taus[1] < 2.0,
+            "EWMA must have re-targeted: τ̂ = {taus:?}"
+        );
+        let src = sched.plan(&[2, 4, 4], &[2, 2, 2]);
+        assert_eq!(src.next_task(0).unwrap().shard, 0);
+        assert_eq!(
+            src.next_task(0).unwrap().shard,
+            2,
+            "round k+1: steal from the NEW straggler"
+        );
+    }
+
     #[test]
     fn ewma_converges_toward_observations() {
         let sp = EwmaSpeeds::new(&[1.0]);

@@ -24,6 +24,29 @@ pub struct StragglerProfile {
     /// `failures`, a lying worker keeps running at full speed — it just
     /// returns corrupted products (DESIGN.md §11).
     pub faults: Vec<(usize, FaultSpec)>,
+    /// Fixed per-worker compute slowdowns: `(worker, factor)` pairs. The
+    /// worker's per-row cost τ_i is multiplied by `factor` (> 1 ⇒
+    /// slower), so the slowdown is visible to the work-stealing EWMA
+    /// speed tracker — unlike an initial delay, which only shifts X_i.
+    pub slowdowns: Vec<(usize, f64)>,
+    /// Per-round straggler variation for iterative workloads: each round
+    /// a *different* worker runs `factor`× slower (see
+    /// [`slowdown_factors`](Self::slowdown_factors)). `None` ⇒ static
+    /// behaviour.
+    pub rotation: Option<RotatingSlowdown>,
+}
+
+/// A rotating compute slowdown: in round `k`, worker
+/// `(k + phase) % p` pays `factor`× its nominal per-row cost. Models the
+/// cloud reality the paper's iterative use case faces — which node
+/// straggles changes from round to round, so a static assignment tuned
+/// for round k is wrong by round k+1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RotatingSlowdown {
+    /// τ multiplier for the slow worker of the round (e.g. 3.0).
+    pub factor: f64,
+    /// Offset into the rotation (worker `(round + phase) % p` is slow).
+    pub phase: usize,
 }
 
 impl StragglerProfile {
@@ -33,6 +56,8 @@ impl StragglerProfile {
             failures: Vec::new(),
             fail_after_rows: 0,
             faults: Vec::new(),
+            slowdowns: Vec::new(),
+            rotation: None,
         }
     }
 
@@ -63,6 +88,40 @@ impl StragglerProfile {
     pub fn with_fault(mut self, worker: usize, fault: FaultSpec) -> Self {
         self.faults.push((worker, fault));
         self
+    }
+
+    /// Slow `worker`'s per-row cost by `factor` (every round/job).
+    pub fn with_slowdown(mut self, worker: usize, factor: f64) -> Self {
+        assert!(factor.is_finite() && factor > 0.0, "slowdown factor must be positive");
+        self.slowdowns.push((worker, factor));
+        self
+    }
+
+    /// Rotate a `factor`× compute slowdown across the fleet: round `k`
+    /// slows worker `(k + phase) % p`.
+    pub fn with_rotating_slowdown(mut self, factor: f64, phase: usize) -> Self {
+        assert!(factor.is_finite() && factor > 0.0, "slowdown factor must be positive");
+        self.rotation = Some(RotatingSlowdown { factor, phase });
+        self
+    }
+
+    /// Multiplicative τ factors for one round (1.0 = nominal speed).
+    /// The coordinator folds these into the per-lane τ it dispatches, so
+    /// the slowdown reaches the workers' pacing, the EWMA speed tracker,
+    /// and the master's computation clamp — with no wire change.
+    pub fn slowdown_factors(&self, p: usize, round: usize) -> Vec<f64> {
+        let mut factors = vec![1.0; p];
+        for &(w, s) in &self.slowdowns {
+            if w < p {
+                factors[w] *= s;
+            }
+        }
+        if let Some(rot) = self.rotation {
+            if p > 0 {
+                factors[(round + rot.phase) % p] *= rot.factor;
+            }
+        }
+        factors
     }
 
     /// Draw the per-worker plan for one job: `(X_i, fail_after)` where
@@ -210,6 +269,45 @@ mod tests {
         let plan = prof.draw(4, 1);
         assert_eq!(plan[0].fault, None);
         assert_eq!(plan[2].fault, Some(spec));
+    }
+
+    #[test]
+    fn slowdown_factors_default_to_nominal() {
+        let prof = StragglerProfile::none();
+        assert_eq!(prof.slowdown_factors(4, 0), vec![1.0; 4]);
+        assert_eq!(prof.slowdown_factors(4, 17), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn static_slowdown_marks_one_worker_every_round() {
+        let prof = StragglerProfile::none().with_slowdown(2, 3.0);
+        for round in 0..5 {
+            let f = prof.slowdown_factors(4, round);
+            assert_eq!(f, vec![1.0, 1.0, 3.0, 1.0], "round {round}");
+        }
+    }
+
+    #[test]
+    fn rotating_slowdown_moves_each_round_and_wraps() {
+        let prof = StragglerProfile::none().with_rotating_slowdown(3.0, 1);
+        for round in 0..8 {
+            let f = prof.slowdown_factors(4, round);
+            let slow = (round + 1) % 4;
+            for (w, &x) in f.iter().enumerate() {
+                let want = if w == slow { 3.0 } else { 1.0 };
+                assert_eq!(x, want, "round {round} worker {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_composes_with_static_slowdowns() {
+        let prof = StragglerProfile::none()
+            .with_slowdown(0, 2.0)
+            .with_rotating_slowdown(3.0, 0);
+        // round 0: worker 0 carries both the static 2× and the rotating 3×
+        assert_eq!(prof.slowdown_factors(2, 0), vec![6.0, 1.0]);
+        assert_eq!(prof.slowdown_factors(2, 1), vec![2.0, 3.0]);
     }
 
     #[test]

@@ -70,6 +70,19 @@
 //! live system; `rateless loadbalance` and `cargo bench --bench
 //! loadbalance` compare LT / MDS / replication / uncoded against it,
 //! reporting latency and redundant-row counts.
+//!
+//! ## Iterative coded ML workloads
+//!
+//! The paper's motivating regime — the *same* matrix multiplied by a
+//! sequence of dependent vectors — lives in [`workload`]: coded power
+//! iteration ([`workload::power_iteration`]) and coded gradient descent
+//! ([`workload::gradient_descent`]) drive
+//! [`Coordinator::run_rounds`](coordinator::Coordinator::run_rounds)
+//! over resident shards, with per-round straggler rotation
+//! ([`coordinator::straggler::StragglerProfile::with_rotating_slowdown`])
+//! and a dyadic *exact mode* that makes every coded round byte-identical
+//! to a serial reference. `rateless iterate` and `cargo bench --bench
+//! iterative` sweep strategies × fleets on time-to-converge.
 
 pub mod cli;
 pub mod coding;
@@ -80,6 +93,7 @@ pub mod matrix;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -100,9 +114,15 @@ pub mod prelude {
     pub use crate::coordinator::scheduler::SchedulerKind;
     pub use crate::coordinator::straggler::{FaultKind, FaultSpec, StragglerProfile};
     pub use crate::coordinator::transport::tcp::{TcpTransport, TcpTunables, WorkerOpts};
-    pub use crate::coordinator::{Coordinator, JobError, JobResult, Strategy};
+    pub use crate::coordinator::{
+        Coordinator, JobError, JobResult, RoundControl, RoundStat, RunReport, Strategy,
+    };
     pub use crate::matrix::{CsrMatrix, Matrix, ShardData};
     pub use crate::runtime::Engine;
     pub use crate::util::dist::DelayDist;
     pub use crate::util::rng::Rng;
+    pub use crate::workload::{
+        gradient_descent, power_iteration, GdOptions, GdOutcome, IterateMode, PowerOptions,
+        PowerOutcome,
+    };
 }

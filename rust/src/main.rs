@@ -24,6 +24,12 @@
 //! rateless worker --listen 0.0.0.0:4000       resident TCP worker process
 //!                 [--fault scale:128]          ... that lies (fault harness;
 //!                                                  env: RATELESS_FAULT)
+//! rateless iterate [--algorithm power|gd]     iterative coded ML workload over
+//!                  [--m 512 --n 16 --p 4]      resident shards: power iteration
+//!                  [--rounds 60 --tolerance 1e-6]  or least-squares gradient
+//!                  [--strategy lt --alpha 3.0]     descent, vs analytic answers
+//!                  [--rotate 3.0]              ... with a rotating straggler
+//!                  [--exact-bits 10]           ... on the dyadic exact grid
 //! ```
 //!
 //! The simulation commands run workers as in-process threads. To run on a
@@ -135,6 +141,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("stream") => stream_cmd(args),
         Some("serve") => serve_cmd(args),
         Some("throughput") => throughput_cmd(args),
+        Some("iterate") => iterate_cmd(args),
         Some("worker") => {
             use rateless::coordinator::straggler::FaultSpec;
             use rateless::coordinator::transport::tcp::{run_worker_opts, WorkerOpts};
@@ -162,7 +169,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         None => {
             println!(
                 "rateless — LT-coded distributed matrix-vector multiplication\n\
-                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | serve | throughput | worker"
+                 subcommands: quickstart | run | figures | loadbalance | experiment | failures | stream | serve | throughput | iterate | worker"
             );
             Ok(())
         }
@@ -475,6 +482,197 @@ fn throughput_cmd(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// Iterative coded ML workload: coded power iteration (dominant
+/// eigenpair of a synthetic SPD matrix with analytically known spectrum)
+/// or coded gradient descent (least squares with a known integer
+/// argmin), driven round by round over resident shards. `--rotate f`
+/// straggles a *different* worker by `f×` each round — the regime where
+/// rateless codes beat static assignment; `--exact-bits b` switches the
+/// iterate onto the dyadic grid for bit-reproducible rounds.
+fn iterate_cmd(args: &Args) -> anyhow::Result<()> {
+    use rateless::coordinator::straggler::StragglerProfile;
+    use rateless::coordinator::JobOptions;
+    use rateless::util::dist::DelayDist;
+    use rateless::workload::{
+        gradient_descent, power_iteration, GdOptions, IterateMode, PowerOptions,
+    };
+
+    let doc = match args.opt_str("config") {
+        Some(path) => Doc::from_file(&path)?,
+        None => Doc::from_str("")?,
+    };
+    let wl = WorkloadConfig::from_doc(&doc);
+    let algorithm = args.str("algorithm", &wl.algorithm);
+    let rounds = args.usize("rounds", wl.rounds);
+    let tolerance = args.f64("tolerance", wl.tolerance);
+    let p = args.usize("p", 4);
+    let seed = seed_of(args);
+    anyhow::ensure!(rounds > 0, "--rounds must be positive");
+    anyhow::ensure!(
+        tolerance > 0.0 && tolerance.is_finite(),
+        "--tolerance must be positive"
+    );
+
+    let exact_bits = args.usize("exact-bits", 0);
+    let mode = if exact_bits > 0 {
+        IterateMode::Exact {
+            frac_bits: exact_bits as u32,
+        }
+    } else {
+        IterateMode::L2
+    };
+
+    let mut cluster = ClusterConfig {
+        workers: p,
+        tau: args.f64("tau", 2e-5),
+        delay: DelayDist::None,
+        real_sleep: true,
+        time_scale: args.f64("time-scale", 0.0),
+        seed,
+        ..ClusterConfig::default()
+    };
+    if args.flag("stealing") {
+        cluster.scheduler = rateless::coordinator::scheduler::SchedulerKind::WorkStealing;
+    }
+
+    let alpha = args.f64("alpha", 3.0);
+    let max_weight = args.usize("max-weight", 0);
+    let lt = if max_weight >= 1 {
+        LtParams::with_alpha(alpha).with_max_weight(max_weight)
+    } else {
+        LtParams::with_alpha(alpha)
+    };
+    let strategy = match args.str("strategy", "lt").as_str() {
+        "lt" => Strategy::Lt(lt),
+        "syslt" => Strategy::SystematicLt(lt),
+        "mds" => Strategy::Mds {
+            k: args.usize("k", p.saturating_sub(1).max(1)),
+        },
+        "rep" => Strategy::Replication {
+            r: args.usize("r", 2),
+        },
+        "uncoded" => Strategy::Uncoded,
+        other => anyhow::bail!("--strategy {other:?} unknown"),
+    };
+
+    // per-round straggler variation: --rotate f slows worker
+    // (round % p) by f×, moving every round
+    let rotate = args.f64("rotate", 0.0);
+    let job = JobOptions {
+        seed: Some(seed),
+        profile: if rotate > 1.0 {
+            Some(StragglerProfile::new(DelayDist::None).with_rotating_slowdown(rotate, 0))
+        } else {
+            None
+        },
+    };
+
+    match algorithm.as_str() {
+        "power" => {
+            let m = args.usize("m", 512);
+            anyhow::ensure!(m >= 2 && m % 2 == 0, "--m must be even (spd_matrix)");
+            let (a, lambda, v1) = dataset::spd_matrix(m, seed);
+            println!(
+                "iterate power: {m}x{m} SPD (λ1 = {lambda}), p={p}, strategy={}, \
+                 rotate={rotate}, mode={mode:?}",
+                strategy.name()
+            );
+            let coord = Coordinator::new(cluster, strategy, Engine::Native, &a)?;
+            // strictly positive start: settles on +v1, never -v1
+            let x0: Vec<f32> = Matrix::random_vector(m, seed ^ 0x9e37)
+                .iter()
+                .map(|v| v.abs() + 0.1)
+                .collect();
+            let out = power_iteration(
+                &coord,
+                &PowerOptions {
+                    max_rounds: rounds,
+                    tolerance,
+                    mode,
+                    seed,
+                    x0: Some(x0),
+                    job,
+                },
+            )?;
+            for r in &out.report.rounds {
+                println!(
+                    "round {:>3}: T = {:.4}s  C = {:>7}  redundant = {:>6}  stolen = {:>6}  drift = {:.3e}",
+                    r.round, r.latency, r.computations, r.redundant_rows, r.stolen_rows, r.error
+                );
+            }
+            let verr = Matrix::max_abs_diff(&out.eigenvector, &v1);
+            println!(
+                "converged = {} in {} rounds, time-to-converge = {:.4}s (virtual)",
+                out.report.converged,
+                out.report.rounds_run(),
+                out.report.time_to_converge
+            );
+            println!(
+                "λ̂ = {:.9} (analytic {lambda}, rel err {:.2e}); max |v̂ - v1| = {verr:.2e}",
+                out.eigenvalue,
+                (out.eigenvalue - lambda).abs() / lambda
+            );
+            Ok(())
+        }
+        "gd" => {
+            let m = args.usize("m", 512);
+            let n = args.usize("n", 16);
+            let prob = dataset::regression_problem(m, n, seed);
+            let step = {
+                let flag = args.f64("step", wl.step);
+                if flag > 0.0 {
+                    flag
+                } else {
+                    prob.step
+                }
+            };
+            println!(
+                "iterate gd: {m}x{n} least squares, p={p}, strategy={}, step={step:.3e}, \
+                 rotate={rotate}, mode={mode:?}",
+                strategy.name()
+            );
+            // A and Aᵀ as two resident shard sets over two fleets
+            let coord_a =
+                Coordinator::new(cluster.clone(), strategy.clone(), Engine::Native, &prob.a)?;
+            let coord_at =
+                Coordinator::new(cluster, strategy, Engine::Native, &prob.a.transpose())?;
+            let out = gradient_descent(
+                &coord_a,
+                &coord_at,
+                &prob.y,
+                &vec![0.0f32; n],
+                &GdOptions {
+                    max_rounds: rounds,
+                    tolerance,
+                    step,
+                    mode,
+                    job,
+                },
+            )?;
+            for r in &out.report.rounds {
+                println!(
+                    "round {:>3}: T = {:.4}s  C = {:>7}  redundant = {:>6}  stolen = {:>6}  drift = {:.3e}",
+                    r.round, r.latency, r.computations, r.redundant_rows, r.stolen_rows, r.error
+                );
+            }
+            let xerr = Matrix::max_abs_diff(&out.x, &prob.x_star);
+            println!(
+                "converged = {} in {} rounds ({} jobs), time-to-converge = {:.4}s (virtual)",
+                out.report.converged,
+                out.report.rounds_run(),
+                out.report.rounds.iter().map(|r| r.jobs).sum::<usize>(),
+                out.report.time_to_converge
+            );
+            println!(
+                "max |x̂ - x*| = {xerr:.2e}, final max|∇| = {:.2e}",
+                out.grad_norm
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("--algorithm {other:?} unknown (power|gd)"),
+    }
 }
 
 fn seed_of(args: &Args) -> u64 {

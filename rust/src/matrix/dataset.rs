@@ -97,6 +97,105 @@ pub fn feature_vector(cols: usize, seed: u64) -> Vec<f32> {
     m.data().iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect()
 }
 
+/// Symmetric positive-definite integer matrix with an **analytically
+/// known dominant eigenpair** — the ground truth for coded power
+/// iteration. Returns `(A, λ₁, v₁)` with `v₁` unit-norm.
+///
+/// Construction: `A = a·I + b·𝟙𝟙ᵀ + c·wwᵀ` with `a=2, b=3, c=1` and `w`
+/// a *balanced* ±1 vector (`wᵀ𝟙 = 0`, positions seeded). The spectrum is
+/// then exact: λ₁ = a + b·m on eigenvector `𝟙/√m`, λ₂ = a + c·m on
+/// `w/√m`, and λ = a on the rest — an eigengap ratio λ₂/λ₁ → 1/3, so
+/// power iteration contracts by ~3× per round and reaches 1e-6 in ~13
+/// rounds at any size. Entries are the integers {2, 4, 6} (diagonal 6),
+/// so every f32 product stays exact far past the paper's scales, and
+/// `A` is entrywise positive ⇒ the iteration converges to `+v₁`
+/// (Perron–Frobenius), never the sign flip.
+pub fn spd_matrix(m: usize, seed: u64) -> (Matrix, f64, Vec<f32>) {
+    assert!(m >= 2 && m % 2 == 0, "spd_matrix needs even m >= 2");
+    const DIAG: f64 = 2.0; // a
+    const ONES: f64 = 3.0; // b
+    const BAL: f64 = 1.0; // c
+    let mut w = vec![-1.0f32; m];
+    let mut rng = Rng::new(seed);
+    let mut picks: Vec<usize> = Vec::new();
+    rng.sample_distinct(m, m / 2, &mut picks);
+    for &i in &picks {
+        w[i] = 1.0;
+    }
+    let mut a = Matrix::zeros(m, m);
+    for i in 0..m {
+        let wi = w[i] as f64;
+        let row = a.row_mut(i);
+        for (j, slot) in row.iter_mut().enumerate() {
+            let mut v = ONES + BAL * wi * w[j] as f64;
+            if i == j {
+                v += DIAG;
+            }
+            *slot = v as f32;
+        }
+    }
+    let lambda = DIAG + ONES * m as f64;
+    let inv = (1.0 / (m as f64).sqrt()) as f32;
+    (a, lambda, vec![inv; m])
+}
+
+/// A synthetic least-squares instance with a **known closed-form
+/// solution** — the ground truth for coded gradient descent.
+pub struct RegressionProblem {
+    /// The m×n design matrix (integer entries; top block `s·Iₙ`).
+    pub a: Matrix,
+    /// Targets `y = A·x*`, computed exactly in integers.
+    pub y: Vec<f32>,
+    /// The planted solution — also the LS argmin: the system is
+    /// consistent and `A` has full column rank, so
+    /// `argmin ‖Ax − y‖² = x*` with zero residual.
+    pub x_star: Vec<f32>,
+    /// A safe power-of-two GD step: `step ≤ 1/‖AᵀA‖∞ ≤ 1/λmax(AᵀA)`,
+    /// so `x ← x − step·Aᵀ(Ax − y)` contracts in every eigendirection.
+    /// Power-of-two so the exact-mode (dyadic) harness multiplies
+    /// without rounding.
+    pub step: f64,
+}
+
+/// Build a [`RegressionProblem`]: `A` stacks `s·Iₙ` (the anchor that
+/// guarantees full column rank and dominates the spectrum — `AᵀA =
+/// s²·I + RᵀR` is well-conditioned, so plain GD converges in tens of
+/// rounds) over `m − n` random integer feature rows in {0..3}, and
+/// plants an integer `x*` in [-2, 2]. All integer: `y` and every
+/// gradient evaluated at an integer iterate are f32-exact.
+pub fn regression_problem(m: usize, n: usize, seed: u64) -> RegressionProblem {
+    assert!(n >= 1 && m >= n, "need m >= n >= 1");
+    let mut rng = Rng::new(seed);
+    // s² ≥ ‖RᵀR‖∞ (entries ≤ 3 ⇒ row sums ≤ 9·n·(m−n)) keeps κ(AᵀA) ≤ 2
+    let s = ((9.0 * n as f64 * (m - n) as f64).sqrt().ceil()).max(n as f64);
+    let mut a = Matrix::zeros(m, n);
+    for i in 0..n {
+        a.row_mut(i)[i] = s as f32;
+    }
+    for i in n..m {
+        for v in a.row_mut(i) {
+            *v = rng.gen_range(4) as f32;
+        }
+    }
+    let x_star: Vec<f32> = (0..n).map(|_| rng.gen_range(5) as f32 - 2.0).collect();
+    let y = a.matvec(&x_star);
+    // λmax(AᵀA) ≤ ‖AᵀA‖∞, computed exactly in f64 on the integer data
+    let mut bound = 0.0f64;
+    for j in 0..n {
+        let mut row_sum = 0.0f64;
+        for k in 0..n {
+            let mut v = 0.0f64;
+            for i in 0..m {
+                v += a.row(i)[j] as f64 * a.row(i)[k] as f64;
+            }
+            row_sum += v.abs();
+        }
+        bound = bound.max(row_sum);
+    }
+    let step = 0.5f64.powi(bound.log2().ceil() as i32);
+    RegressionProblem { a, y, x_star, step }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +235,75 @@ mod tests {
             .all(|&v| (1.0..=FEATURE_MAX).contains(&v) && v.fract() == 0.0));
         // power law: the heaviest row is well above the ~2.5-entry mean
         assert!(a.max_row_nnz() > 4, "max row nnz {}", a.max_row_nnz());
+    }
+
+    #[test]
+    fn spd_matrix_has_the_claimed_exact_eigenpairs() {
+        for &m in &[8usize, 64] {
+            let (a, lambda, v1) = spd_matrix(m, 5);
+            assert_eq!(lambda, 2.0 + 3.0 * m as f64);
+            // symmetric, entries in {2, 4, 6}, diagonal 6
+            for i in 0..m {
+                assert_eq!(a.row(i)[i], 6.0);
+                for j in 0..m {
+                    assert_eq!(a.row(i)[j], a.row(j)[i], "symmetry ({i},{j})");
+                    assert!([2.0, 4.0].contains(&a.row(i)[j]) || i == j);
+                }
+            }
+            // A·𝟙 = λ₁·𝟙 exactly (integer arithmetic, f32-exact)
+            let ones = vec![1.0f32; m];
+            let got = a.matvec(&ones);
+            for (i, &g) in got.iter().enumerate() {
+                assert_eq!(g.to_bits(), (lambda as f32).to_bits(), "row {i}");
+            }
+            // second eigenpair: A·w = (2 + m)·w exactly, recovering w
+            // from the off-diagonal structure (a_ij = 3 + w_i·w_j)
+            let w: Vec<f32> = (0..m)
+                .map(|i| if i == 0 { 1.0 } else { a.row(0)[i] - 3.0 })
+                .collect();
+            let wv = a.matvec(&w);
+            for i in 0..m {
+                assert_eq!(wv[i], (2.0 + m as f64) as f32 * w[i], "w row {i}");
+            }
+            assert_eq!(v1.len(), m);
+            let norm: f64 = v1.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            assert!((norm - 1.0).abs() < 1e-6, "v1 norm² {norm}");
+        }
+    }
+
+    #[test]
+    fn regression_problem_is_consistent_with_known_argmin() {
+        let prob = regression_problem(64, 8, 13);
+        assert_eq!(prob.a.rows(), 64);
+        assert_eq!(prob.a.cols(), 8);
+        // y = A·x* exactly ⇒ the gradient at x* is exactly zero
+        let yy = prob.a.matvec(&prob.x_star);
+        for (g, w) in yy.iter().zip(&prob.y) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let t = prob.a.transpose();
+        let r: Vec<f32> = yy.iter().zip(&prob.y).map(|(a, b)| a - b).collect();
+        assert!(t.matvec(&r).iter().all(|&g| g == 0.0));
+        // the step is a power of two and ≤ 1/λmax(AᵀA)
+        assert!(prob.step > 0.0);
+        assert_eq!(prob.step.log2().fract(), 0.0, "step must be a power of two");
+        let mut bound = 0.0f64;
+        for j in 0..8 {
+            let mut row = 0.0f64;
+            for k in 0..8 {
+                let mut v = 0.0f64;
+                for i in 0..64 {
+                    v += prob.a.row(i)[j] as f64 * prob.a.row(i)[k] as f64;
+                }
+                row += v.abs();
+            }
+            bound = bound.max(row);
+        }
+        assert!(prob.step * bound <= 1.0 + 1e-12, "step {} bound {bound}", prob.step);
+        // deterministic per seed
+        let again = regression_problem(64, 8, 13);
+        assert_eq!(prob.a, again.a);
+        assert_eq!(prob.x_star, again.x_star);
     }
 
     #[test]

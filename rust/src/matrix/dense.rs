@@ -158,6 +158,21 @@ impl Matrix {
         )
     }
 
+    /// Transpose into a new matrix. Iterative least-squares workloads
+    /// encode both `A` and `Aᵀ` once as separate resident shard sets
+    /// (each round needs `A·x` then `Aᵀ·r`); the copy happens once at
+    /// setup, off the per-round latency path.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                out.data[j * self.rows + i] = v;
+            }
+        }
+        out
+    }
+
     /// Dense matrix-vector product `A·x` (single-threaded reference).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols, "vector length != cols");
@@ -233,6 +248,20 @@ mod tests {
         let sl = m.slice_rows(1, 3);
         assert_eq!(sl.rows(), 2);
         assert_eq!(sl.row(0), &[10., 11.]);
+    }
+
+    #[test]
+    fn transpose_roundtrips_and_matches_matvec() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 2);
+        assert_eq!(t.row(0), &[1., 4.]);
+        assert_eq!(t.row(2), &[3., 6.]);
+        assert_eq!(t.transpose(), a);
+        // (Aᵀ·y)[j] == Σ_i A[i][j]·y[i]
+        let y = vec![1.0f32, -2.0];
+        assert_eq!(t.matvec(&y), vec![-7.0, -8.0, -9.0]);
     }
 
     #[test]

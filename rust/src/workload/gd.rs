@@ -1,0 +1,275 @@
+//! Coded gradient descent for linear least squares
+//! `min_x ‖A·x − y‖²`: each round runs two coded multiplies — the
+//! forward pass `A·x` and the backward pass `Aᵀ·r̂` on the rescaled
+//! residual — against **two** coordinators holding `A` and `Aᵀ` as
+//! separate resident shard sets (encoded and installed once at setup;
+//! see [`Matrix::transpose`]). Both jobs of a round share the round
+//! index, so a rotating straggler profile slows the *same* worker for
+//! the forward and backward pass and moves on the next round, and both
+//! [`JobResult`]s merge into one [`RoundStat`].
+//!
+//! The residual is rescaled by a power of two `σ = pow2_scale(max|r|)`
+//! before the backward multiply and the gradient rebuilt as
+//! `g = σ·(Aᵀ·r̂)`. The rescale is exact (powers of two), keeps the
+//! backward products inside f32's exact-integer range in exact mode,
+//! and is harmless in float mode. Iterates accumulate in f64 (float
+//! mode) or on the dyadic grid (exact mode); convergence is declared
+//! when the iterate drift `step·max|g|` falls to the tolerance.
+
+use crate::coordinator::{Coordinator, JobError, JobOptions, JobResult, RunReport};
+use crate::matrix::Matrix;
+
+use super::{dyadic_quantize, pow2_scale, IterateMode};
+
+#[allow(unused_imports)] // doc link
+use crate::coordinator::RoundStat;
+
+/// Options for [`gradient_descent`].
+#[derive(Clone, Debug)]
+pub struct GdOptions {
+    /// Round budget; `converged = false` in the report if the drift
+    /// tolerance is not reached within it.
+    pub max_rounds: usize,
+    /// Convergence threshold on the per-round iterate drift
+    /// `step · max|gradient|`.
+    pub tolerance: f64,
+    /// Step size. [`dataset::regression_problem`] supplies a
+    /// power-of-two step below `1/λmax(AᵀA)` — required for exact-mode
+    /// bit-reproducibility, merely sensible otherwise.
+    ///
+    /// [`dataset::regression_problem`]: crate::matrix::dataset::regression_problem
+    pub step: f64,
+    /// Iterate arithmetic: f64 accumulation or dyadic grid.
+    pub mode: IterateMode,
+    /// Per-job options (strategy overrides, straggler profile, …).
+    pub job: JobOptions,
+}
+
+impl Default for GdOptions {
+    fn default() -> Self {
+        Self {
+            max_rounds: 200,
+            tolerance: 1e-7,
+            step: 1.0 / 1024.0,
+            mode: IterateMode::L2,
+            job: JobOptions::default(),
+        }
+    }
+}
+
+/// Result of a [`gradient_descent`] run.
+#[derive(Clone, Debug)]
+pub struct GdOutcome {
+    /// Per-round aggregation; each round merges the forward and backward
+    /// job (`jobs == 2` per [`RoundStat`]).
+    pub report: RunReport,
+    /// Final iterate.
+    pub x: Vec<f32>,
+    /// Final `max|gradient|`.
+    pub grad_norm: f64,
+    /// Raw decoded forward products `A·x_k` per round (byte-identity
+    /// hook, like [`PowerOutcome::products`](super::PowerOutcome)).
+    pub products: Vec<Vec<f32>>,
+    /// Raw decoded backward products `Aᵀ·r̂_k` per round.
+    pub gradients: Vec<Vec<f32>>,
+}
+
+/// One round of the shared master-side math, exactly as both the coded
+/// driver and the serial reference perform it: residual, power-of-two
+/// rescale, optional dyadic quantization. Returning `(r̂, σ)`.
+fn scaled_residual(ax: &[f32], y: &[f32], mode: IterateMode) -> (Vec<f32>, f64) {
+    debug_assert_eq!(ax.len(), y.len());
+    let r: Vec<f32> = ax.iter().zip(y).map(|(a, b)| a - b).collect();
+    let max = r.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+    let sigma = pow2_scale(max);
+    let inv = (1.0 / sigma) as f32;
+    let mut rhat: Vec<f32> = r.iter().map(|&v| v * inv).collect();
+    if let IterateMode::Exact { frac_bits } = mode {
+        rhat = dyadic_quantize(&rhat, frac_bits);
+    }
+    (rhat, sigma)
+}
+
+/// Apply one gradient update to the iterate, per mode. `bwd` is the raw
+/// backward product `Aᵀ·r̂`; the true gradient is `σ·bwd` (up to the
+/// constant factor 2, folded into the step by convention). Returns
+/// `max|gradient|`.
+fn apply_update(
+    x64: &mut [f64],
+    xf: &mut Vec<f32>,
+    bwd: &[f32],
+    sigma: f64,
+    step: f64,
+    mode: IterateMode,
+) -> f64 {
+    let mut grad_inf = 0.0f64;
+    match mode {
+        IterateMode::L2 => {
+            for (xj, &bj) in x64.iter_mut().zip(bwd) {
+                let g = bj as f64 * sigma;
+                grad_inf = grad_inf.max(g.abs());
+                *xj -= step * g;
+            }
+            *xf = x64.iter().map(|&v| v as f32).collect();
+        }
+        IterateMode::Exact { frac_bits } => {
+            let q = (2.0f64).powi(frac_bits as i32);
+            for (xj, &bj) in xf.iter_mut().zip(bwd) {
+                let g = bj as f64 * sigma;
+                grad_inf = grad_inf.max(g.abs());
+                // exact: dyadic xj minus power-of-two-scaled dyadic g,
+                // re-quantized to the grid
+                *xj = ((((*xj as f64) - step * g) * q).round() / q) as f32;
+            }
+            for (a, &b) in x64.iter_mut().zip(xf.iter()) {
+                *a = b as f64;
+            }
+        }
+    }
+    grad_inf
+}
+
+/// Run coded gradient descent: `coord_a` serves `A·x`, `coord_at`
+/// serves `Aᵀ·r̂`. The two coordinators must hold transposed shapes of
+/// the same matrix.
+pub fn gradient_descent(
+    coord_a: &Coordinator,
+    coord_at: &Coordinator,
+    y: &[f32],
+    x0: &[f32],
+    opts: &GdOptions,
+) -> Result<GdOutcome, JobError> {
+    let m = coord_a.m();
+    let n = coord_a.n();
+    assert_eq!(coord_at.m(), n, "Aᵀ row count must equal A's columns");
+    assert_eq!(coord_at.n(), m, "Aᵀ column count must equal A's rows");
+    assert_eq!(y.len(), m, "y length mismatch");
+    assert_eq!(x0.len(), n, "x0 length mismatch");
+    assert!(opts.step > 0.0 && opts.step.is_finite(), "bad step size");
+    assert!(opts.max_rounds > 0, "need at least one round");
+
+    let mut xf: Vec<f32> = match opts.mode {
+        IterateMode::L2 => x0.to_vec(),
+        IterateMode::Exact { frac_bits } => dyadic_quantize(x0, frac_bits),
+    };
+    let mut x64: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
+    let mut grad_norm = f64::INFINITY;
+    let mut report = RunReport::default();
+    let mut products: Vec<Vec<f32>> = Vec::new();
+    let mut gradients: Vec<Vec<f32>> = Vec::new();
+
+    for round in 0..opts.max_rounds {
+        let fwd: JobResult = coord_a.multiply_round(&xf, round, &opts.job)?;
+        let (rhat, sigma) = scaled_residual(&fwd.b, y, opts.mode);
+        let bwd: JobResult = coord_at.multiply_round(&rhat, round, &opts.job)?;
+
+        grad_norm = apply_update(&mut x64, &mut xf, &bwd.b, sigma, opts.step, opts.mode);
+        let drift = opts.step * grad_norm;
+        report.record(round, &fwd, drift);
+        report.record(round, &bwd, drift);
+        products.push(fwd.b);
+        gradients.push(bwd.b);
+
+        if drift <= opts.tolerance {
+            report.mark_converged();
+            break;
+        }
+    }
+
+    Ok(GdOutcome {
+        report,
+        x: xf,
+        grad_norm,
+        products,
+        gradients,
+    })
+}
+
+/// Serial single-thread reference performing the exact same per-round
+/// math as [`gradient_descent`] — the round-level correctness harness
+/// compares its product traces bitwise against the coded run. Runs
+/// exactly `rounds` rounds (no convergence cut-off). Returns
+/// `(forward products, backward products, final iterate)`.
+pub fn gd_reference(
+    a: &Matrix,
+    y: &[f32],
+    x0: &[f32],
+    rounds: usize,
+    step: f64,
+    mode: IterateMode,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>) {
+    let at = a.transpose();
+    let mut xf: Vec<f32> = match mode {
+        IterateMode::L2 => x0.to_vec(),
+        IterateMode::Exact { frac_bits } => dyadic_quantize(x0, frac_bits),
+    };
+    let mut x64: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
+    let mut products = Vec::with_capacity(rounds);
+    let mut gradients = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let fwd = a.matvec(&xf);
+        let (rhat, sigma) = scaled_residual(&fwd, y, mode);
+        let bwd = at.matvec(&rhat);
+        apply_update(&mut x64, &mut xf, &bwd, sigma, step, mode);
+        products.push(fwd);
+        gradients.push(bwd);
+    }
+    (products, gradients, xf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dataset::regression_problem;
+
+    #[test]
+    fn reference_recovers_the_closed_form_solution() {
+        let prob = regression_problem(32, 4, 11);
+        let x0 = vec![0.0f32; 4];
+        let (fwd, bwd, x) =
+            gd_reference(&prob.a, &prob.y, &x0, 200, prob.step, IterateMode::L2);
+        assert_eq!(fwd.len(), 200);
+        assert_eq!(bwd.len(), 200);
+        for (got, want) in x.iter().zip(&prob.x_star) {
+            assert!(
+                (got - want).abs() <= 1e-6,
+                "solution entry {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_mode_reference_is_deterministic_and_near_the_solution() {
+        let prob = regression_problem(32, 4, 11);
+        let x0 = vec![0.0f32; 4];
+        let mode = IterateMode::Exact { frac_bits: 8 };
+        let (f1, b1, x1) = gd_reference(&prob.a, &prob.y, &x0, 60, prob.step, mode);
+        let (f2, b2, x2) = gd_reference(&prob.a, &prob.y, &x0, 60, prob.step, mode);
+        // bitwise reproducible end to end
+        for (ra, rb) in f1.iter().zip(&f2).chain(b1.iter().zip(&b2)) {
+            for (va, vb) in ra.iter().zip(rb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        for (va, vb) in x1.iter().zip(&x2) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+        // the dyadic iterate parks within a few grid steps of x*
+        for (got, want) in x1.iter().zip(&prob.x_star) {
+            assert!(
+                (got - want).abs() <= 0.05,
+                "exact-mode entry {got} vs {want}"
+            );
+            assert_eq!((got * 256.0).fract(), 0.0, "iterate off the grid");
+        }
+    }
+
+    #[test]
+    fn scaled_residual_zeroes_out_at_the_solution() {
+        let prob = regression_problem(16, 2, 5);
+        let ax = prob.a.matvec(&prob.x_star);
+        let (rhat, sigma) = scaled_residual(&ax, &prob.y, IterateMode::L2);
+        assert_eq!(sigma, 1.0); // zero residual keeps the unit scale
+        assert!(rhat.iter().all(|&v| v == 0.0));
+    }
+}

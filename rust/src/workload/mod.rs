@@ -1,0 +1,198 @@
+//! Iterative coded ML workloads (DESIGN.md §12).
+//!
+//! The paper's motivating use case is ML training/inference: the *same*
+//! matrix `A` is multiplied by a sequence of vectors where round
+//! `k+1`'s input depends on round `k`'s decode (Lee et al.,
+//! arXiv:1512.02673; Li et al., arXiv:1609.01690). That is exactly the
+//! regime where this repo's resident-shard design pays off — `A` is
+//! encoded and shipped **once**, every round reuses the installed
+//! shards, and per-round straggler variation (a different node slow
+//! each round, [`StragglerProfile::with_rotating_slowdown`]) is what
+//! rateless codes absorb and static assignment cannot.
+//!
+//! Two drivers, both built on [`Coordinator::run_rounds`] /
+//! [`Coordinator::multiply_round`]:
+//!
+//! * [`power_iteration`] — dominant eigenpair of a symmetric `A` via
+//!   repeated multiply + normalize, Rayleigh-quotient readout.
+//! * [`gradient_descent`] — least squares `min ‖Ax − y‖²`: each round
+//!   runs `A·x` then `Aᵀ·r`, with `A` and `Aᵀ` encoded once as two
+//!   resident shard sets (two coordinators over the same fleet size).
+//!
+//! # Exact (dyadic) mode
+//!
+//! Byte-identity of every coded round against a serial single-thread
+//! reference — the round-level correctness harness — needs each round's
+//! arithmetic to be *exact*, not merely close: a float L2 normalize
+//! rounds differently under different summation orders. The exact mode
+//! therefore keeps every iterate on a **dyadic grid**: values are scaled
+//! by a power of two into `[1/2, 1]` and quantized to `frac_bits`
+//! fractional bits ([`dyadic_normalize`]). Scaling by powers of two and
+//! rounding to the grid are exact f32/f64 operations, and with integer
+//! matrices and bounded degrees every product stays below 2²⁴ — so the
+//! decoded product equals the serial matvec *bitwise*, independent of
+//! symbol arrival order, work stealing, straggler rotation or
+//! transport. (Range budget: an encoded row of weight `w` on an
+//! integer matrix with entries ≤ `a` needs `w·a·m·2^frac_bits < 2²⁴`;
+//! tests use capped LT / uncoded shapes that satisfy it with margin.)
+
+pub mod gd;
+pub mod power;
+
+pub use gd::{gd_reference, gradient_descent, GdOptions, GdOutcome};
+pub use power::{power_iteration, power_reference, PowerOptions, PowerOutcome};
+
+#[allow(unused_imports)] // doc links
+use crate::coordinator::{straggler::StragglerProfile, Coordinator};
+
+/// How an iterative driver maintains its iterate between rounds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IterateMode {
+    /// Float mode: f64 accumulation, L2 normalization — the accurate
+    /// path (convergence to analytic answers within 1e-6).
+    L2,
+    /// Dyadic exact mode: iterates quantized to `frac_bits` fractional
+    /// bits after a power-of-two rescale — the byte-identity path (see
+    /// module docs). Coarser, but every round is bit-reproducible.
+    Exact { frac_bits: u32 },
+}
+
+impl Default for IterateMode {
+    fn default() -> Self {
+        IterateMode::L2
+    }
+}
+
+/// Smallest power of two `σ` with `max_abs ≤ σ < 2·max_abs` (so
+/// `v/σ ∈ [1/2, 1]` for `|v| = max_abs`). Pure doubling/halving — no
+/// libm, bit-deterministic. Returns 1.0 for zero/non-finite input.
+pub fn pow2_scale(max_abs: f32) -> f64 {
+    let m = max_abs as f64;
+    if !(m > 0.0) || !m.is_finite() {
+        return 1.0;
+    }
+    let mut s = 1.0f64;
+    while s < m {
+        s *= 2.0;
+    }
+    while s * 0.5 >= m {
+        s *= 0.5;
+    }
+    s
+}
+
+/// Round every value to `frac_bits` fractional bits (the dyadic grid
+/// `2^-frac_bits`). Exact: scale by a power of two, `round`, scale
+/// back — no data-dependent rounding error for in-range inputs.
+pub fn dyadic_quantize(v: &[f32], frac_bits: u32) -> Vec<f32> {
+    let q = (2.0f64).powi(frac_bits as i32);
+    v.iter().map(|&x| ((x as f64 * q).round() / q) as f32).collect()
+}
+
+/// Exact-mode normalization: rescale `y` by `1/pow2_scale(max|y|)` so
+/// the largest entry lands in `[1/2, 1]`, then quantize to the dyadic
+/// grid. Replaces the L2 normalize of classic power iteration — the
+/// direction is preserved (scaling is uniform), only the length
+/// convention differs, and every operation is exact.
+pub fn dyadic_normalize(y: &[f32], frac_bits: u32) -> Vec<f32> {
+    let max = y.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if max == 0.0 || !max.is_finite() {
+        return y.to_vec();
+    }
+    let inv = 1.0 / pow2_scale(max);
+    let q = (2.0f64).powi(frac_bits as i32);
+    y.iter()
+        .map(|&x| ((x as f64 * inv * q).round() / q) as f32)
+        .collect()
+}
+
+/// Classic L2 normalization with an f64 accumulator (the float-mode
+/// path; not bit-stable across summation orders, which is exactly why
+/// exact mode exists).
+pub fn l2_normalize(y: &[f32]) -> Vec<f32> {
+    let norm = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    if norm == 0.0 || !norm.is_finite() {
+        return y.to_vec();
+    }
+    y.iter().map(|&v| (v as f64 / norm) as f32).collect()
+}
+
+/// ∞-norm of the difference between two equal-length slices, in f64.
+pub fn drift_inf(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_scale_brackets_the_max() {
+        for &(x, want) in &[
+            (1.0f32, 1.0f64),
+            (0.5, 0.5),
+            (0.75, 1.0),
+            (1.5, 2.0),
+            (2.0, 2.0),
+            (100.0, 128.0),
+            (0.1, 0.125),
+        ] {
+            assert_eq!(pow2_scale(x), want, "pow2_scale({x})");
+        }
+        assert_eq!(pow2_scale(0.0), 1.0);
+        assert_eq!(pow2_scale(f32::NAN), 1.0);
+        assert_eq!(pow2_scale(f32::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn dyadic_normalize_lands_on_the_grid_in_range() {
+        let y = vec![3.0f32, -7.5, 0.25, 193.0];
+        let out = dyadic_normalize(&y, 10);
+        let q = 1024.0f32;
+        for (i, &v) in out.iter().enumerate() {
+            assert!(v.abs() <= 1.0, "entry {i} out of range: {v}");
+            assert_eq!((v * q).fract(), 0.0, "entry {i} off-grid: {v}");
+        }
+        // max entry maps into [1/2, 1]
+        let max = out.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!((0.5..=1.0).contains(&max), "max {max}");
+        // direction preserved: ratios match up to grid resolution
+        assert!((out[3] / out[0] - 193.0 / 3.0).abs() < 0.5);
+        // idempotent: already-normalized input is a fixpoint
+        let again = dyadic_normalize(&out, 10);
+        for (a, b) in out.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dyadic_quantize_is_exact_and_idempotent() {
+        let v = vec![0.123456f32, -0.75, 2.5, 0.0];
+        let out = dyadic_quantize(&v, 8);
+        assert_eq!(out[1], -0.75); // already on the grid
+        assert_eq!(out[2], 2.5);
+        assert_eq!(out[3], 0.0);
+        let again = dyadic_quantize(&out, 8);
+        for (a, b) in out.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn l2_normalize_unit_norm() {
+        let out = l2_normalize(&[3.0, 4.0]);
+        assert!((out[0] - 0.6).abs() < 1e-6);
+        assert!((out[1] - 0.8).abs() < 1e-6);
+        assert_eq!(l2_normalize(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn drift_inf_is_the_max_abs_gap() {
+        assert_eq!(drift_inf(&[1.0, 2.0], &[1.5, 2.25]), 0.5);
+        assert_eq!(drift_inf(&[], &[]), 0.0);
+    }
+}

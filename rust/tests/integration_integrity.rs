@@ -193,6 +193,10 @@ fn channel_transport_quarantines_both_fault_kinds() {
         };
         let res = coord.multiply_opts(&x, &opts).expect("job with a liar");
         assert_caught_liar(tag, 1, &res, &honest);
+        // quarantine persists across jobs (PR 10): pardon the lane so the
+        // next fault kind is caught fresh rather than pre-blacklisted
+        assert_eq!(coord.quarantined_workers(), vec![1], "{tag}: memory");
+        assert!(coord.pardon_worker(1), "{tag}: pardon");
     }
 }
 

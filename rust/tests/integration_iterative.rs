@@ -1,0 +1,581 @@
+//! Integration: iterative coded ML workloads — the round-level
+//! correctness harness.
+//!
+//! What is pinned here:
+//!
+//! * **Accuracy.** Coded power iteration converges to the analytically
+//!   known dominant eigenpair of [`dataset::spd_matrix`] within 1e-6,
+//!   and coded gradient descent recovers the known least-squares argmin
+//!   of [`dataset::regression_problem`] within 1e-6 — on the in-process
+//!   channel transport and over real `rateless worker` TCP processes.
+//! * **Byte-identity.** In dyadic exact mode every coded round's decoded
+//!   product is **bitwise** identical to a serial single-thread
+//!   reference performing the same per-round math, for both uncoded and
+//!   (weight-capped) LT strategies, on both transports. Weight-capped LT
+//!   keeps every encoded-row product inside f32's exact-integer range
+//!   (`w·a·m·2^frac_bits < 2²⁴`), so decode is exact no matter which
+//!   symbols arrive first.
+//! * **Bit-stability.** The exact-mode trace does not change under work
+//!   stealing, under a rotating 3×-slow straggler (a different worker
+//!   slow each round), or under both at once.
+//! * **Byzantine rounds.** With integrity checking on and a worker lying
+//!   every round, round 0 catches and quarantines the liar, rounds k ≥ 1
+//!   keep it blacklisted (quarantine memory: no new corrupt chunks, the
+//!   lane stays listed), and the run still converges to the right
+//!   eigenpair.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use rateless::coding::lt::LtParams;
+use rateless::config::ClusterConfig;
+use rateless::coordinator::scheduler::SchedulerKind;
+use rateless::coordinator::straggler::{FaultKind, FaultSpec, StragglerProfile};
+use rateless::coordinator::transport::tcp::{TcpTransport, TcpTunables};
+use rateless::coordinator::{Coordinator, JobOptions, Strategy};
+use rateless::matrix::dataset;
+use rateless::runtime::Engine;
+use rateless::util::dist::DelayDist;
+use rateless::workload::{
+    gd_reference, gradient_descent, power_iteration, power_reference, GdOptions, IterateMode,
+    PowerOptions,
+};
+
+const P: usize = 4;
+
+fn fast_cluster(p: usize) -> ClusterConfig {
+    ClusterConfig {
+        workers: p,
+        delay: DelayDist::None,
+        tau: 1e-5,
+        block_fraction: 0.25,
+        seed: 4242,
+        real_sleep: false,
+        ..ClusterConfig::default()
+    }
+}
+
+fn lt3() -> Strategy {
+    Strategy::Lt(LtParams::with_alpha(3.0))
+}
+
+/// Weight-capped LT: bounds encoded-row degree so exact-mode products
+/// stay below 2²⁴ (see module docs).
+fn lt_capped(w: usize) -> Strategy {
+    Strategy::Lt(LtParams::with_alpha(3.0).with_max_weight(w))
+}
+
+/// Deterministic strictly positive start vector: positive projection on
+/// the SPD matrix's dominant eigenvector `1/√m`, so power iteration
+/// settles on `+v1`, never `-v1` — and no RNG to keep byte-identity
+/// setups trivially aligned between coded run and serial reference.
+fn positive_start(m: usize) -> Vec<f32> {
+    (0..m).map(|i| ((i % 7) + 1) as f32).collect()
+}
+
+fn job_opts() -> JobOptions {
+    JobOptions {
+        seed: Some(1),
+        profile: None,
+    }
+}
+
+fn assert_bits_eq(tag: &str, got: &[Vec<f32>], want: &[Vec<f32>]) {
+    assert_eq!(got.len(), want.len(), "{tag}: round count differs");
+    for (round, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{tag}: round {round} length");
+        for (i, (gv, wv)) in g.iter().zip(w).enumerate() {
+            assert_eq!(
+                gv.to_bits(),
+                wv.to_bits(),
+                "{tag}: round {round} entry {i}: {gv} vs {wv}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- accuracy
+
+#[test]
+fn power_iteration_converges_to_the_known_eigenpair() {
+    let m = 64;
+    let (a, lambda, v1) = dataset::spd_matrix(m, 5);
+    let coord = Coordinator::new(fast_cluster(P), lt3(), Engine::Native, &a).expect("coordinator");
+    let out = power_iteration(
+        &coord,
+        &PowerOptions {
+            max_rounds: 80,
+            tolerance: 5e-7,
+            mode: IterateMode::L2,
+            seed: 1,
+            x0: Some(positive_start(m)),
+            job: job_opts(),
+        },
+    )
+    .expect("power iteration");
+    assert!(
+        out.report.converged,
+        "did not converge in 80 rounds (last drift {:.3e})",
+        out.report.rounds.last().map(|r| r.error).unwrap_or(f64::NAN)
+    );
+    assert!(out.report.time_to_converge > 0.0);
+    assert_eq!(out.products.len(), out.report.rounds_run());
+    assert!(
+        (out.eigenvalue - lambda).abs() <= 1e-6 * lambda,
+        "eigenvalue {} vs analytic {lambda}",
+        out.eigenvalue
+    );
+    for (i, (got, want)) in out.eigenvector.iter().zip(&v1).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "eigenvector entry {i}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn gradient_descent_matches_the_closed_form_solution() {
+    let prob = dataset::regression_problem(64, 8, 11);
+    let coord_a =
+        Coordinator::new(fast_cluster(P), lt3(), Engine::Native, &prob.a).expect("coordinator A");
+    let coord_at = Coordinator::new(fast_cluster(P), lt3(), Engine::Native, &prob.a.transpose())
+        .expect("coordinator At");
+    let out = gradient_descent(
+        &coord_a,
+        &coord_at,
+        &prob.y,
+        &vec![0.0f32; 8],
+        &GdOptions {
+            max_rounds: 300,
+            tolerance: 1e-7,
+            step: prob.step,
+            mode: IterateMode::L2,
+            job: job_opts(),
+        },
+    )
+    .expect("gradient descent");
+    assert!(
+        out.report.converged,
+        "did not converge in 300 rounds (grad {:.3e})",
+        out.grad_norm
+    );
+    // each round merged its forward and backward job
+    for r in &out.report.rounds {
+        assert_eq!(r.jobs, 2, "round {} job count", r.round);
+    }
+    for (i, (got, want)) in out.x.iter().zip(&prob.x_star).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "solution entry {i}: {got} vs {want}"
+        );
+    }
+}
+
+// ------------------------------------------------------------ byte-identity
+
+#[test]
+fn exact_power_rounds_are_byte_identical_to_the_serial_reference() {
+    let m = 64;
+    let (a, _, _) = dataset::spd_matrix(m, 5);
+    let x0 = positive_start(m);
+    let mode = IterateMode::Exact { frac_bits: 10 };
+    for (tag, strategy) in [("uncoded", Strategy::Uncoded), ("lt", lt_capped(8))] {
+        let coord =
+            Coordinator::new(fast_cluster(P), strategy, Engine::Native, &a).expect("coordinator");
+        let out = power_iteration(
+            &coord,
+            &PowerOptions {
+                max_rounds: 30,
+                tolerance: 2.5 / 1024.0,
+                mode,
+                seed: 1,
+                x0: Some(x0.clone()),
+                job: job_opts(),
+            },
+        )
+        .expect("exact power iteration");
+        let rounds = out.report.rounds_run();
+        assert!(rounds >= 2, "{tag}: suspiciously few rounds");
+        let (want_products, want_x) = power_reference(&a, &x0, rounds, mode);
+        assert_bits_eq(tag, &out.products, &want_products);
+        for (i, (gv, wv)) in out.eigenvector.iter().zip(&want_x).enumerate() {
+            assert_eq!(gv.to_bits(), wv.to_bits(), "{tag}: final iterate entry {i}");
+        }
+    }
+}
+
+#[test]
+fn exact_gd_rounds_are_byte_identical_to_the_serial_reference() {
+    let prob = dataset::regression_problem(32, 4, 17);
+    let x0 = vec![0.0f32; 4];
+    let mode = IterateMode::Exact { frac_bits: 8 };
+    for (tag, strategy) in [("uncoded", Strategy::Uncoded), ("lt", lt_capped(4))] {
+        let coord_a = Coordinator::new(fast_cluster(P), strategy.clone(), Engine::Native, &prob.a)
+            .expect("coordinator A");
+        let coord_at =
+            Coordinator::new(fast_cluster(P), strategy, Engine::Native, &prob.a.transpose())
+                .expect("coordinator At");
+        let out = gradient_descent(
+            &coord_a,
+            &coord_at,
+            &prob.y,
+            &x0,
+            &GdOptions {
+                max_rounds: 40,
+                tolerance: 1e-3,
+                step: prob.step,
+                mode,
+                job: job_opts(),
+            },
+        )
+        .expect("exact gradient descent");
+        let rounds = out.report.rounds_run();
+        assert!(rounds >= 2, "{tag}: suspiciously few rounds");
+        let (want_fwd, want_bwd, want_x) =
+            gd_reference(&prob.a, &prob.y, &x0, rounds, prob.step, mode);
+        assert_bits_eq(&format!("{tag} forward"), &out.products, &want_fwd);
+        assert_bits_eq(&format!("{tag} backward"), &out.gradients, &want_bwd);
+        for (i, (gv, wv)) in out.x.iter().zip(&want_x).enumerate() {
+            assert_eq!(gv.to_bits(), wv.to_bits(), "{tag}: final iterate entry {i}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- bit-stability
+
+#[test]
+fn exact_trace_is_bit_stable_under_stealing_and_rotating_straggler() {
+    let m = 64;
+    let (a, _, _) = dataset::spd_matrix(m, 5);
+    let x0 = positive_start(m);
+    let mode = IterateMode::Exact { frac_bits: 10 };
+
+    let run = |scheduler: SchedulerKind, rotate: bool| {
+        let mut cluster = fast_cluster(P);
+        cluster.scheduler = scheduler;
+        let coord =
+            Coordinator::new(cluster, lt_capped(8), Engine::Native, &a).expect("coordinator");
+        let job = JobOptions {
+            seed: Some(1),
+            // a different worker 3×-slow every round
+            profile: if rotate {
+                Some(StragglerProfile::none().with_rotating_slowdown(3.0, 0))
+            } else {
+                None
+            },
+        };
+        power_iteration(
+            &coord,
+            &PowerOptions {
+                max_rounds: 30,
+                tolerance: 2.5 / 1024.0,
+                mode,
+                seed: 1,
+                x0: Some(x0.clone()),
+                job,
+            },
+        )
+        .expect("exact power iteration")
+    };
+
+    let base = run(SchedulerKind::Static, false);
+    assert!(base.report.rounds_run() >= 2);
+    for (tag, scheduler, rotate) in [
+        ("stealing", SchedulerKind::WorkStealing, false),
+        ("rotating straggler", SchedulerKind::Static, true),
+        ("stealing + rotation", SchedulerKind::WorkStealing, true),
+    ] {
+        let out = run(scheduler, rotate);
+        assert_bits_eq(tag, &out.products, &base.products);
+        assert_eq!(
+            out.report.converged, base.report.converged,
+            "{tag}: convergence flag changed"
+        );
+        for (i, (gv, wv)) in out.eigenvector.iter().zip(&base.eigenvector).enumerate() {
+            assert_eq!(gv.to_bits(), wv.to_bits(), "{tag}: final iterate entry {i}");
+        }
+    }
+}
+
+// ----------------------------------------------------------- Byzantine rounds
+
+#[test]
+fn quarantined_worker_rounds_still_converge_with_the_liar_remembered() {
+    let m = 64;
+    let (a, lambda, v1) = dataset::spd_matrix(m, 5);
+    let mut cluster = fast_cluster(P);
+    cluster.integrity.enabled = true;
+    cluster.integrity.sample_rate = 1.0;
+    let coord = Coordinator::new(cluster, lt3(), Engine::Native, &a).expect("coordinator");
+    // worker 1 lies from its first row, every round
+    let job = JobOptions {
+        seed: Some(1),
+        profile: Some(StragglerProfile::none().with_fault(
+            1,
+            FaultSpec {
+                kind: FaultKind::BitFlip,
+                after_rows: 0,
+            },
+        )),
+    };
+    let out = power_iteration(
+        &coord,
+        &PowerOptions {
+            max_rounds: 80,
+            tolerance: 5e-7,
+            mode: IterateMode::L2,
+            seed: 1,
+            x0: Some(positive_start(m)),
+            job,
+        },
+    )
+    .expect("power iteration with a liar");
+    assert!(out.report.converged, "liar round budget exhausted");
+    assert!(out.report.rounds_run() >= 2, "need a round after the catch");
+
+    // round 0: the liar is caught and quarantined
+    let first = &out.report.rounds[0];
+    assert!(first.corrupt_chunks >= 1, "round 0 must flag corrupt chunks");
+    assert_eq!(first.quarantined_workers, vec![1], "round 0 quarantine");
+    // rounds k >= 1: quarantine memory — the lane stays blacklisted, so
+    // its (still lying) plan never produces chunks to catch
+    for r in &out.report.rounds[1..] {
+        assert_eq!(
+            r.corrupt_chunks, 0,
+            "round {}: pre-quarantined lane produced chunks",
+            r.round
+        );
+        assert_eq!(
+            r.quarantined_workers,
+            vec![1],
+            "round {}: liar fell off the blacklist",
+            r.round
+        );
+    }
+    assert_eq!(coord.quarantined_workers(), vec![1]);
+
+    // ... and the decode is bitwise honest throughout, so accuracy holds
+    assert!(
+        (out.eigenvalue - lambda).abs() <= 1e-6 * lambda,
+        "eigenvalue {} vs analytic {lambda}",
+        out.eigenvalue
+    );
+    for (i, (got, want)) in out.eigenvector.iter().zip(&v1).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "eigenvector entry {i}: {got} vs {want}"
+        );
+    }
+    assert!(coord.pardon_worker(1));
+    assert!(coord.quarantined_workers().is_empty());
+}
+
+// -------------------------------------------------------------- TCP transport
+
+/// A fleet of spawned `rateless worker` processes, killed on drop.
+struct Fleet {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Fleet {
+    fn spawn(p: usize) -> Fleet {
+        let mut children = Vec::with_capacity(p);
+        let mut addrs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let mut child = Command::new(env!("CARGO_BIN_EXE_rateless"))
+                .args(["worker", "--listen", "127.0.0.1:0"])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn rateless worker");
+            let mut banner = String::new();
+            BufReader::new(child.stdout.take().expect("stdout piped"))
+                .read_line(&mut banner)
+                .expect("read worker banner");
+            let addr = banner
+                .trim()
+                .strip_prefix("rateless worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected worker banner {banner:?}"))
+                .to_string();
+            children.push(child);
+            addrs.push(addr);
+        }
+        Fleet { children, addrs }
+    }
+
+    fn transport(&self) -> TcpTransport {
+        TcpTransport::connect_tuned(&self.addrs, TcpTunables::default()).expect("connect fleet")
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+#[test]
+fn tcp_power_iteration_converges_and_matches_the_reference_bitwise() {
+    let m = 64;
+    let (a, lambda, v1) = dataset::spd_matrix(m, 5);
+    let x0 = positive_start(m);
+
+    // accuracy leg (L2 mode) over real worker processes
+    let fleet = Fleet::spawn(P);
+    let coord = Coordinator::with_transport(
+        fast_cluster(P),
+        lt3(),
+        Box::new(fleet.transport()),
+        &a,
+    )
+    .expect("tcp coordinator");
+    let out = power_iteration(
+        &coord,
+        &PowerOptions {
+            max_rounds: 80,
+            tolerance: 5e-7,
+            mode: IterateMode::L2,
+            seed: 1,
+            x0: Some(x0.clone()),
+            job: job_opts(),
+        },
+    )
+    .expect("tcp power iteration");
+    assert!(out.report.converged, "tcp L2 run did not converge");
+    assert!(
+        (out.eigenvalue - lambda).abs() <= 1e-6 * lambda,
+        "tcp eigenvalue {} vs analytic {lambda}",
+        out.eigenvalue
+    );
+    for (i, (got, want)) in out.eigenvector.iter().zip(&v1).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "tcp eigenvector entry {i}: {got} vs {want}"
+        );
+    }
+    drop(coord);
+    drop(fleet);
+
+    // byte-identity leg (exact mode): every TCP round bitwise equals the
+    // serial reference
+    let mode = IterateMode::Exact { frac_bits: 10 };
+    let fleet = Fleet::spawn(P);
+    let coord = Coordinator::with_transport(
+        fast_cluster(P),
+        lt_capped(8),
+        Box::new(fleet.transport()),
+        &a,
+    )
+    .expect("tcp exact coordinator");
+    let out = power_iteration(
+        &coord,
+        &PowerOptions {
+            max_rounds: 30,
+            tolerance: 2.5 / 1024.0,
+            mode,
+            seed: 1,
+            x0: Some(x0.clone()),
+            job: job_opts(),
+        },
+    )
+    .expect("tcp exact power iteration");
+    let rounds = out.report.rounds_run();
+    assert!(rounds >= 2, "tcp exact: suspiciously few rounds");
+    let (want_products, want_x) = power_reference(&a, &x0, rounds, mode);
+    assert_bits_eq("tcp exact power", &out.products, &want_products);
+    for (i, (gv, wv)) in out.eigenvector.iter().zip(&want_x).enumerate() {
+        assert_eq!(gv.to_bits(), wv.to_bits(), "tcp exact: final entry {i}");
+    }
+}
+
+#[test]
+fn tcp_gradient_descent_converges_and_matches_the_reference_bitwise() {
+    // accuracy leg (L2): A and Aᵀ each get their own worker fleet
+    let prob = dataset::regression_problem(64, 8, 11);
+    let fleet_a = Fleet::spawn(P);
+    let fleet_at = Fleet::spawn(P);
+    let coord_a = Coordinator::with_transport(
+        fast_cluster(P),
+        lt3(),
+        Box::new(fleet_a.transport()),
+        &prob.a,
+    )
+    .expect("tcp coordinator A");
+    let coord_at = Coordinator::with_transport(
+        fast_cluster(P),
+        lt3(),
+        Box::new(fleet_at.transport()),
+        &prob.a.transpose(),
+    )
+    .expect("tcp coordinator At");
+    let out = gradient_descent(
+        &coord_a,
+        &coord_at,
+        &prob.y,
+        &vec![0.0f32; 8],
+        &GdOptions {
+            max_rounds: 300,
+            tolerance: 1e-7,
+            step: prob.step,
+            mode: IterateMode::L2,
+            job: job_opts(),
+        },
+    )
+    .expect("tcp gradient descent");
+    assert!(out.report.converged, "tcp L2 gd did not converge");
+    for (i, (got, want)) in out.x.iter().zip(&prob.x_star).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "tcp solution entry {i}: {got} vs {want}"
+        );
+    }
+    drop((coord_a, coord_at));
+    drop((fleet_a, fleet_at));
+
+    // byte-identity leg (exact mode) on a smaller problem
+    let prob = dataset::regression_problem(32, 4, 17);
+    let x0 = vec![0.0f32; 4];
+    let mode = IterateMode::Exact { frac_bits: 8 };
+    let fleet_a = Fleet::spawn(P);
+    let fleet_at = Fleet::spawn(P);
+    let coord_a = Coordinator::with_transport(
+        fast_cluster(P),
+        lt_capped(4),
+        Box::new(fleet_a.transport()),
+        &prob.a,
+    )
+    .expect("tcp exact coordinator A");
+    let coord_at = Coordinator::with_transport(
+        fast_cluster(P),
+        lt_capped(4),
+        Box::new(fleet_at.transport()),
+        &prob.a.transpose(),
+    )
+    .expect("tcp exact coordinator At");
+    let out = gradient_descent(
+        &coord_a,
+        &coord_at,
+        &prob.y,
+        &x0,
+        &GdOptions {
+            max_rounds: 40,
+            tolerance: 1e-3,
+            step: prob.step,
+            mode,
+            job: job_opts(),
+        },
+    )
+    .expect("tcp exact gradient descent");
+    let rounds = out.report.rounds_run();
+    assert!(rounds >= 2, "tcp exact gd: suspiciously few rounds");
+    let (want_fwd, want_bwd, want_x) = gd_reference(&prob.a, &prob.y, &x0, rounds, prob.step, mode);
+    assert_bits_eq("tcp exact gd forward", &out.products, &want_fwd);
+    assert_bits_eq("tcp exact gd backward", &out.gradients, &want_bwd);
+    for (i, (gv, wv)) in out.x.iter().zip(&want_x).enumerate() {
+        assert_eq!(gv.to_bits(), wv.to_bits(), "tcp exact gd: final entry {i}");
+    }
+}
